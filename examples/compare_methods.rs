@@ -1,0 +1,65 @@
+//! Table-2-style comparison for one dataset/model pair, all methods —
+//! the fastest way to see the paper's headline ordering on your machine.
+//!
+//!     cargo run --release --example compare_methods -- \
+//!         --dataset synth_fmnist --model mnistnet --clients 10 --rounds 10
+
+use anyhow::Result;
+use fed3sfc::cli::Args;
+use fed3sfc::config::{CompressorKind, DatasetKind, ExperimentConfig};
+use fed3sfc::coordinator::experiment::Experiment;
+use fed3sfc::runtime::Runtime;
+use fed3sfc::simnet::NetworkModel;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1).collect::<Vec<_>>(), &[])?;
+    let dataset = DatasetKind::parse(args.get("dataset").unwrap_or("synth_mnist"))?;
+    let model = args.get("model").unwrap_or("").to_string();
+    let clients = args.get_usize("clients", 10)?;
+    let rounds = args.get_usize("rounds", 10)?;
+
+    let rt = Runtime::open(&fed3sfc::artifacts_dir())?;
+    let net = NetworkModel::edge();
+    println!(
+        "method comparison: {} / {} — {clients} clients, {rounds} rounds\n",
+        dataset.name(),
+        if model.is_empty() { dataset.default_model() } else { &model },
+    );
+    println!(
+        "{:<10} {:>10} {:>10} {:>12} {:>14} {:>12}",
+        "method", "final acc", "best acc", "ratio", "upload bytes", "comm time"
+    );
+    for method in [
+        CompressorKind::FedAvg,
+        CompressorKind::Dgc,
+        CompressorKind::SignSgd,
+        CompressorKind::Stc,
+        CompressorKind::ThreeSfc,
+    ] {
+        let cfg = ExperimentConfig {
+            dataset,
+            model: model.clone(),
+            compressor: method,
+            n_clients: clients,
+            rounds,
+            lr: 0.05,
+            eval_every: 1,
+            syn_steps: 20,
+            ..ExperimentConfig::default()
+        };
+        let mut exp = Experiment::new(cfg, &rt)?;
+        let recs = exp.run()?;
+        let last = recs.last().unwrap();
+        let t = exp.traffic;
+        println!(
+            "{:<10} {:>10.4} {:>10.4} {:>11.1}x {:>14} {:>11.1}s",
+            method.name(),
+            last.test_acc,
+            exp.metrics.best_acc(),
+            last.ratio,
+            t.up_bytes,
+            net.total_time_s(t.rounds, t.up_bytes, t.down_bytes, clients),
+        );
+    }
+    Ok(())
+}

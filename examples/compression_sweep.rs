@@ -1,0 +1,68 @@
+//! Fig-1-style sweep, CLI-configurable: accuracy-vs-round for a list of
+//! top-k rates plus 3SFC at matched budget, on any dataset/model pair.
+//!
+//!     cargo run --release --example compression_sweep -- \
+//!         --dataset synth_mnist --clients 20 --rounds 15 \
+//!         --rates 1.0,0.01,0.001
+
+use anyhow::Result;
+use fed3sfc::cli::Args;
+use fed3sfc::config::{CompressorKind, DatasetKind, ExperimentConfig};
+use fed3sfc::coordinator::experiment::Experiment;
+use fed3sfc::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1).collect::<Vec<_>>(), &[])?;
+    let dataset = DatasetKind::parse(args.get("dataset").unwrap_or("synth_mnist"))?;
+    let clients = args.get_usize("clients", 10)?;
+    let rounds = args.get_usize("rounds", 12)?;
+    let rates: Vec<f64> = args
+        .get("rates")
+        .unwrap_or("1.0,0.1,0.01,0.001")
+        .split(',')
+        .map(|s| s.parse().unwrap())
+        .collect();
+
+    let rt = Runtime::open(&fed3sfc::artifacts_dir())?;
+    println!("compression sweep on {} ({clients} clients, {rounds} rounds)", dataset.name());
+
+    let run = |name: String, cfg: ExperimentConfig| -> Result<()> {
+        let mut exp = Experiment::new(cfg, &rt)?;
+        let recs = exp.run()?;
+        let accs: Vec<String> = recs.iter().map(|r| format!("{:.3}", r.test_acc)).collect();
+        println!(
+            "{name:<18} ratio {:>8.1}x  final {:.4}  series [{}]",
+            recs.last().unwrap().ratio,
+            recs.last().unwrap().test_acc,
+            accs.join(" ")
+        );
+        Ok(())
+    };
+
+    for &rate in &rates {
+        let cfg = ExperimentConfig {
+            dataset,
+            compressor: if rate >= 1.0 { CompressorKind::FedAvg } else { CompressorKind::Dgc },
+            topk_rate: rate,
+            n_clients: clients,
+            rounds,
+            lr: 0.05,
+            eval_every: 1,
+            ..ExperimentConfig::default()
+        };
+        run(format!("topk rate={rate}"), cfg)?;
+    }
+    // 3SFC reference at budget B.
+    let cfg = ExperimentConfig {
+        dataset,
+        compressor: CompressorKind::ThreeSfc,
+        n_clients: clients,
+        rounds,
+        lr: 0.05,
+        eval_every: 1,
+        syn_steps: 20,
+        ..ExperimentConfig::default()
+    };
+    run("3sfc (B)".into(), cfg)?;
+    Ok(())
+}

@@ -1,0 +1,220 @@
+"""AOT compiler: lower every (model × fed-op × shape variant) to HLO text.
+
+Build-time only — ``make artifacts`` runs this once; rust never imports
+python. The interchange format is HLO **text** (``as_hlo_text()``), NOT a
+serialized ``HloModuleProto``: jax ≥ 0.5 emits protos with 64-bit
+instruction ids which xla_extension 0.5.1 (the version the published `xla`
+crate binds) rejects; the text parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Outputs, under ``artifacts/``:
+  * ``<model>__<op>.hlo.txt``  one per op variant
+  * ``<model>.init.bin``       packed He-normal initial weights (f32 LE)
+  * ``manifest.json``          every shape the rust side needs
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import fedops, models
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+# Per-model static batch sizes (train / eval).
+TRAIN_BATCH = {"mlp_small": 16}
+EVAL_BATCH = {"mlp_small": 50}
+DEFAULT_TRAIN_BATCH = 32
+DEFAULT_EVAL_BATCH = 100
+
+# Which local-iteration counts K get a train artifact (Table 4 ablates K).
+TRAIN_KS = {
+    "mlp_small": (1, 5, 10),
+    "mlp10": (1, 5, 10),
+    "mlp26": (1, 5, 10),
+    "mnistnet": (1, 5, 10),
+    "convnet": (1, 5, 10),
+    "resnet8_c10": (1, 5, 10),
+    "resnet8_c20": (1, 5, 10),
+    "regnet_c10": (1, 5, 10),
+    "regnet_c20": (1, 5, 10),
+}
+# Synthetic-sample counts m (communication budget B, 2B, 4B ~ m=1,2,4).
+SYN_MS = (1, 2, 4)
+# Fused-encoder step counts (perf pass): one dispatch runs S Adam steps.
+SYN_OPT_S = (10, 20, 40)
+# FedSynth unroll depths (Figs 2-3 sweep on mlp_small; Table 1 pairs use 4).
+FEDSYNTH_KS = {
+    "mlp_small": (1, 2, 4, 8, 16),
+    "mlp10": (4,),
+    "mlp26": (4,),
+    "mnistnet": (4,),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_op_table(md: models.ModelDef):
+    """Yield (op_name, fn, arg_specs, meta) for one model."""
+    P = md.n_params
+    ins = md.input_shape
+    C = md.n_classes
+    bt = TRAIN_BATCH.get(md.name, DEFAULT_TRAIN_BATCH)
+    be = EVAL_BATCH.get(md.name, DEFAULT_EVAL_BATCH)
+    scalar = _spec(())
+
+    for k in TRAIN_KS.get(md.name, (5,)):
+        yield (
+            f"train_k{k}",
+            fedops.make_local_train(md, k),
+            [_spec((P,)), _spec((k, bt) + ins), _spec((k, bt), I32), scalar],
+            {"kind": "train", "k": k, "batch": bt},
+        )
+    if md.name == "mlp_small":
+        yield (
+            "grad",
+            fedops.make_grad_batch(md),
+            [_spec((P,)), _spec((bt,) + ins), _spec((bt,), I32)],
+            {"kind": "grad", "batch": bt},
+        )
+    for m in SYN_MS:
+        yield (
+            f"syn_step_m{m}",
+            fedops.make_syn_step(md),
+            [
+                _spec((P,)),
+                _spec((P,)),
+                _spec((m,) + ins),
+                _spec((m, C)),
+                scalar,
+                scalar,
+            ],
+            {"kind": "syn_step", "m": m},
+        )
+        yield (
+            f"syn_grad_m{m}",
+            fedops.make_syn_grad(md),
+            [_spec((P,)), _spec((m,) + ins), _spec((m, C))],
+            {"kind": "syn_grad", "m": m},
+        )
+        for s in SYN_OPT_S:
+            yield (
+                f"syn_opt_m{m}_s{s}",
+                fedops.make_syn_opt(md, s),
+                [
+                    _spec((P,)),
+                    _spec((P,)),
+                    _spec((m,) + ins),
+                    _spec((m, C)),
+                    scalar,
+                    scalar,
+                ],
+                {"kind": "syn_opt", "m": m, "k": s},
+            )
+    yield (
+        "eval",
+        fedops.make_eval_batch(md),
+        [_spec((P,)), _spec((be,) + ins), _spec((be,), I32)],
+        {"kind": "eval", "batch": be},
+    )
+    for k in FEDSYNTH_KS.get(md.name, ()):
+        m = 1
+        yield (
+            f"fedsynth_k{k}_m{m}",
+            fedops.make_fedsynth_step(md, k),
+            [
+                _spec((P,)),
+                _spec((P,)),
+                _spec((k, m) + ins),
+                _spec((k, m, C)),
+                scalar,
+                scalar,
+            ],
+            {"kind": "fedsynth", "k": k, "m": m},
+        )
+        yield (
+            f"fedsynth_apply_k{k}_m{m}",
+            fedops.make_fedsynth_apply(md, k),
+            [_spec((P,)), _spec((k, m) + ins), _spec((k, m, C)), scalar],
+            {"kind": "fedsynth_apply", "k": k, "m": m},
+        )
+
+
+def lower_model(md: models.ModelDef, out_dir: str, manifest: dict, only=None):
+    ops = {}
+    for op_name, fn, specs, meta in build_op_table(md):
+        if only and op_name not in only:
+            continue
+        fname = f"{md.name}__{op_name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        meta = dict(meta)
+        meta["file"] = fname
+        ops[op_name] = meta
+        print(
+            f"  {md.name:12s} {op_name:18s} {len(text)/1024:8.1f} KiB"
+            f"  {time.time()-t0:5.1f}s",
+            flush=True,
+        )
+    init = md.init(seed=0)
+    init_file = f"{md.name}.init.bin"
+    init.tofile(os.path.join(out_dir, init_file))
+    manifest["models"][md.name] = {
+        "params": md.n_params,
+        "input_shape": list(md.input_shape),
+        "n_classes": md.n_classes,
+        "train_batch": TRAIN_BATCH.get(md.name, DEFAULT_TRAIN_BATCH),
+        "eval_batch": EVAL_BATCH.get(md.name, DEFAULT_EVAL_BATCH),
+        "init": init_file,
+        "ops": ops,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--models",
+        default="",
+        help="comma-separated subset of model names (default: all)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    want = [m for m in args.models.split(",") if m] or None
+
+    manifest = {"version": 1, "models": {}}
+    t0 = time.time()
+    for md in models.ALL_MODELS:
+        if want and md.name not in want:
+            continue
+        print(f"model {md.name}  P={md.n_params}", flush=True)
+        lower_model(md, args.out_dir, manifest)
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"done in {time.time()-t0:.0f}s -> {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

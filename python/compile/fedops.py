@@ -1,0 +1,257 @@
+"""L2: federated ops — the functions the rust coordinator executes.
+
+Each op is a pure jax function over flat parameter vectors, lowered once to
+HLO text by :mod:`compile.aot`. Shapes are static per artifact; the rust
+side picks the right variant from the manifest.
+
+Ops
+---
+``local_train_K``   K SGD steps over pre-batched local data (lax.scan) —
+                    produces the model delta every compressor consumes.
+``grad_batch``      one-batch gradient (tests + FedSynth target).
+``syn_step``        ONE optimization step of the 3SFC encoder: gradient of
+                    ``1 - |cos(∇_w F(D_syn, w), g_t)| + λ‖D_syn‖²`` wrt the
+                    synthetic features (second-order autodiff through the
+                    model). rust loops this S times (Algorithm 1, line 7).
+``syn_grad``        decoder: ∇_w F(D_syn, w) (Eq. 10; rust applies s).
+``eval_batch``      (Σ loss, #correct) over an eval batch.
+``fedsynth_step``   the multi-step L2-matching baseline (FedSynth, Table 1 /
+                    Figs 2–3): unrolled K_sim inner SGD on per-step synthetic
+                    batches, ‖simulated Δw − g_t‖² objective, plus per-step
+                    gradient norms to reproduce the Fig 3 explosion series.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .models import ModelDef
+
+
+def _ce_loss(model: ModelDef, w, x, y_soft):
+    """Cross-entropy against soft labels (one-hot for real data)."""
+    logits = model.apply(w, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.sum(y_soft * logp, axis=-1))
+
+
+def make_loss_hard(model: ModelDef):
+    def loss(w, x, y):
+        y1 = jax.nn.one_hot(y, model.n_classes, dtype=jnp.float32)
+        return _ce_loss(model, w, x, y1)
+
+    return loss
+
+
+# ------------------------------------------------------------ local train
+
+def make_local_train(model: ModelDef, k: int):
+    """(w[P], xs[K,B,*in], ys[K,B]i32, lr) -> w' after K SGD steps."""
+    loss = make_loss_hard(model)
+
+    def step(w, batch):
+        x, y = batch
+        g = jax.grad(loss)(w, x, y)
+        # L1 axpy kernel: w <- w - lr*g (lr closed over via carry aux)
+        return w, g
+
+    def fn(w, xs, ys, lr):
+        def body(carry, batch):
+            wc = carry
+            x, y = batch
+            g = jax.grad(loss)(wc, x, y)
+            wc = kernels.axpy(-lr, g, wc)
+            return wc, jnp.float32(0.0)
+
+        w_out, _ = jax.lax.scan(body, w, (xs, ys))
+        return (w_out,)
+
+    return fn
+
+
+# ------------------------------------------------------------- grad batch
+
+def make_grad_batch(model: ModelDef):
+    """(w, x[B,*in], y[B]i32) -> (g[P],)."""
+    loss = make_loss_hard(model)
+
+    def fn(w, x, y):
+        return (jax.grad(loss)(w, x, y),)
+
+    return fn
+
+
+# ------------------------------------------------------- 3SFC encoder step
+
+def _syn_objective(model: ModelDef, w, g_target, dx, dy_logits, lam):
+    """Eq. 9: 1 - |cos(∇_w F(D_syn, w), g+e)| + λ‖D_syn‖²."""
+    y_soft = jax.nn.softmax(dy_logits)
+    g = jax.grad(_ce_loss, argnums=1)(model, w, dx, y_soft)
+    cos = kernels.cosine(g, g_target)
+    reg = lam * (kernels.sumsq(dx.ravel()) + kernels.sumsq(dy_logits.ravel()))
+    return 1.0 - jnp.abs(cos) + reg, cos
+
+
+def make_syn_step(model: ModelDef):
+    """(w, g_t[P], dx[m,*in], dy[m,C], lr_syn, lam) -> (dx', dy', cos).
+
+    One SGD step on the synthetic features. Differentiates THROUGH the
+    model's gradient — all L1 kernels carry second-order-capable vjps.
+    """
+
+    def fn(w, g_target, dx, dy_logits, lr_syn, lam):
+        def obj(dx_, dy_):
+            v, cos = _syn_objective(model, w, g_target, dx_, dy_logits=dy_, lam=lam)
+            return v, cos
+
+        (val, cos), grads = jax.value_and_grad(obj, argnums=(0, 1), has_aux=True)(
+            dx, dy_logits
+        )
+        gdx, gdy = grads
+        dx2 = dx - lr_syn * gdx
+        dy2 = dy_logits - lr_syn * gdy
+        return dx2, dy2, cos
+
+    return fn
+
+
+def make_syn_opt(model: ModelDef, s_steps: int):
+    """Fused 3SFC encoder: S Adam steps on the similarity objective in ONE
+    dispatch (perf pass, EXPERIMENTS §Perf).
+
+    (w, g_t[P], dx[m,*in], dy[m,C], lr_syn, lam)
+        -> (dx', dy', best_dx, best_dy, best_cos, last_cos)
+
+    Equivalent to looping the single `syn_step` artifact S times with
+    host-side Adam, but avoids S× re-uploading w and g_t (2·4P bytes per
+    step) and S× dispatch latency. Adam state lives in the scan carry;
+    the best-|cos| iterate is tracked in-graph.
+    """
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    def fn(w, g_target, dx, dy_logits, lr_syn, lam):
+        alpha = lr_syn / 50.0  # same mapping as the rust host loop
+
+        def obj(dx_, dy_):
+            v, cos = _syn_objective(model, w, g_target, dx_, dy_logits=dy_, lam=lam)
+            return v, cos
+
+        def body(carry, t):
+            dx_, dy_, mx, vx, my, vy, bdx, bdy, bcos = carry
+            (_, cos), (gdx, gdy) = jax.value_and_grad(
+                obj, argnums=(0, 1), has_aux=True
+            )(dx_, dy_)
+            better = jnp.abs(cos) > bcos
+            bdx = jnp.where(better, dx_, bdx)
+            bdy = jnp.where(better, dy_, bdy)
+            bcos = jnp.maximum(bcos, jnp.abs(cos))
+            mx = b1 * mx + (1 - b1) * gdx
+            vx = b2 * vx + (1 - b2) * gdx * gdx
+            my = b1 * my + (1 - b1) * gdy
+            vy = b2 * vy + (1 - b2) * gdy * gdy
+            tf = t.astype(jnp.float32) + 1.0
+            cx = mx / (1 - b1**tf)
+            cvx = vx / (1 - b2**tf)
+            cy = my / (1 - b1**tf)
+            cvy = vy / (1 - b2**tf)
+            dx_ = dx_ - alpha * cx / (jnp.sqrt(cvx) + eps)
+            dy_ = dy_ - alpha * cy / (jnp.sqrt(cvy) + eps)
+            return (dx_, dy_, mx, vx, my, vy, bdx, bdy, bcos), cos
+
+        z = jnp.zeros_like
+        carry0 = (dx, dy_logits, z(dx), z(dx), z(dy_logits), z(dy_logits),
+                  dx, dy_logits, jnp.float32(-1.0))
+        carry, coses = jax.lax.scan(body, carry0, jnp.arange(s_steps))
+        dx_f, dy_f, _, _, _, _, bdx, bdy, bcos = carry
+        return dx_f, dy_f, bdx, bdy, bcos, coses[-1]
+
+    return fn
+
+
+def make_syn_grad(model: ModelDef):
+    """Decoder / finalizer: (w, dx, dy) -> (∇_w F(D_syn, w),)."""
+
+    def fn(w, dx, dy_logits):
+        y_soft = jax.nn.softmax(dy_logits)
+        return (jax.grad(_ce_loss, argnums=1)(model, w, dx, y_soft),)
+
+    return fn
+
+
+# ------------------------------------------------------------------- eval
+
+def make_eval_batch(model: ModelDef):
+    """(w, x[B,*in], y[B]i32) -> (Σ loss, #correct) both f32."""
+
+    def fn(w, x, y):
+        logits = model.apply(w, x)
+        logp = jax.nn.log_softmax(logits)
+        y1 = jax.nn.one_hot(y, model.n_classes, dtype=jnp.float32)
+        losses = -jnp.sum(y1 * logp, axis=-1)
+        correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+        return jnp.sum(losses), correct
+
+    return fn
+
+
+def make_fedsynth_apply(model: ModelDef, k_sim: int):
+    """FedSynth decoder: (w, dxs[K,m,*in], dys[K,m,C], lr_inner) -> (Δw,).
+
+    Replays the K_sim-step inner simulation on the synthetic batches and
+    returns the simulated model delta ``w - w_K`` (the server's
+    reconstruction of the client's accumulated gradient).
+    """
+
+    def fn(w, dxs, dys, lr_inner):
+        wc = w
+        for j in range(k_sim):
+            y_soft = jax.nn.softmax(dys[j])
+            g = jax.grad(_ce_loss, argnums=1)(model, wc, dxs[j], y_soft)
+            wc = kernels.axpy(-lr_inner, g, wc)
+        return (w - wc,)
+
+    return fn
+
+
+# -------------------------------------------------- FedSynth baseline step
+
+def make_fedsynth_step(model: ModelDef, k_sim: int):
+    """Multi-step L2 distillation baseline (the one that collapses).
+
+    (w, g_t, dxs[K,m,*in], dys[K,m,C], lr_inner, lr_syn)
+        -> (dxs', dys', fit, norms[K])
+
+    Simulates K_sim inner SGD steps, each on its own synthetic batch
+    (matching FedSynth's per-step distilled batches), minimizes
+    ‖(w - w_K) - g_t‖², and reports ‖∂fit/∂dxs[j]‖ per step j — the Fig 3
+    gradient-explosion series.
+    """
+
+    def fit(dxs, dys):
+        wc = None
+        wc = w_holder[0]
+        for j in range(k_sim):
+            y_soft = jax.nn.softmax(dys[j])
+            g = jax.grad(_ce_loss, argnums=1)(model, wc, dxs[j], y_soft)
+            wc = wc - lr_holder[0] * g
+        delta = w_holder[0] - wc
+        return kernels.sumsq(delta - g_holder[0])
+
+    # Holders let us keep `fit` a function of (dxs, dys) only; rebound per call.
+    w_holder, g_holder, lr_holder = [None], [None], [None]
+
+    def fn(w, g_target, dxs, dys, lr_inner, lr_syn):
+        w_holder[0] = w
+        g_holder[0] = g_target
+        lr_holder[0] = lr_inner
+        val, grads = jax.value_and_grad(fit, argnums=(0, 1))(dxs, dys)
+        gdx, gdy = grads
+        # Per-step gradient magnitude wrt the step's synthetic batch (Fig 3).
+        norms = jnp.sqrt(jnp.sum(gdx.reshape(k_sim, -1) ** 2, axis=-1))
+        dxs2 = dxs - lr_syn * gdx
+        dys2 = dys - lr_syn * gdy
+        return dxs2, dys2, val, norms
+
+    return fn

@@ -1,0 +1,12 @@
+"""L1: Pallas kernels for the 3SFC compute hot-spots.
+
+Exports the tiled/fused kernels used by the L2 fed-ops. All kernels run
+``interpret=True`` (CPU PJRT) and carry ``custom_vjp`` rules built from the
+same kernels, so the encoder's second-order objective differentiates cleanly.
+"""
+
+from .elementwise import axpy, scale
+from .matmul import matmul
+from .reduce import cosine, dot3, sumsq
+
+__all__ = ["axpy", "scale", "matmul", "cosine", "dot3", "sumsq"]

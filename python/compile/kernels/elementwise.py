@@ -1,0 +1,73 @@
+"""L1 Pallas kernels: elementwise flat-vector updates.
+
+:func:`axpy` (``y + alpha * x``) is the SGD/error-feedback workhorse — every
+local training step, every EF accumulation, and the decoder's ``s * g`` scale
+are this shape. One streaming VMEM pass, lane-aligned chunks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .reduce import dot3
+
+_CHUNK = 32768
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _axpy_kernel(alpha_ref, x_ref, y_ref, o_ref):
+    o_ref[...] = y_ref[...] + alpha_ref[0, 0] * x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def _axpy_pallas(alpha: jax.Array, x: jax.Array, y: jax.Array, chunk: int):
+    n = x.shape[0]
+    npad = _ceil_to(max(n, 1), chunk)
+    xq = jnp.pad(x, (0, npad - n)).reshape(npad // chunk, chunk)
+    yq = jnp.pad(y, (0, npad - n)).reshape(npad // chunk, chunk)
+    aq = jnp.reshape(alpha.astype(jnp.float32), (1, 1))
+    out = pl.pallas_call(
+        _axpy_kernel,
+        grid=(npad // chunk,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, chunk), lambda i: (i, 0)),
+            pl.BlockSpec((1, chunk), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((npad // chunk, chunk), jnp.float32),
+        interpret=True,
+    )(aq, xq, yq)
+    return out.reshape(npad)[:n]
+
+
+@jax.custom_vjp
+def axpy(alpha: jax.Array, x: jax.Array, y: jax.Array) -> jax.Array:
+    """``y + alpha * x`` over flat f32 vectors (alpha is a scalar)."""
+    chunk = min(_CHUNK, _ceil_to(max(x.shape[0], 1), 128))
+    return _axpy_pallas(alpha, x, y, chunk)
+
+
+def _axpy_fwd(alpha, x, y):
+    return axpy(alpha, x, y), (alpha, x)
+
+
+def _axpy_bwd(res, g):
+    alpha, x = res
+    d, _, _ = dot3(g, x)          # dα = <g, x> (fused kernel, differentiable)
+    return d, alpha * g, g
+
+
+axpy.defvjp(_axpy_fwd, _axpy_bwd)
+
+
+def scale(s: jax.Array, x: jax.Array) -> jax.Array:
+    """``s * x`` as axpy against a zero vector (keeps one code path hot)."""
+    return axpy(s, x, jnp.zeros_like(x))

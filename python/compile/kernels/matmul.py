@@ -1,0 +1,96 @@
+"""L1 Pallas kernel: tiled matrix multiply.
+
+The dense layers of every model in this repo go through :func:`matmul`
+instead of ``jnp.dot`` so that the hot path is an explicitly tiled kernel.
+
+TPU mapping (see DESIGN.md §8): the grid walks (M/bm, N/bn) output tiles and
+streams the full K dimension through VMEM per tile; ``bm``/``bn`` default to
+the MXU-native 128. On this image the kernel runs with ``interpret=True``
+(CPU PJRT cannot execute Mosaic custom-calls) — correctness is validated
+against the pure-jnp oracle in :mod:`compile.kernels.ref`, TPU efficiency is
+estimated analytically in EXPERIMENTS.md §Perf.
+
+Differentiation: :func:`matmul` carries a ``jax.custom_vjp`` whose backward
+pass is built from :func:`matmul` itself (on transposes), so it is
+differentiable to arbitrary order — the 3SFC encoder needs second-order
+(gradient of a gradient) and this is where that bottoms out.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-shaped tile. Shrunk automatically for small operands.
+_BM = 128
+_BN = 128
+# Lane-aligned K padding (TPU VPU lanes = 128, sublanes = 8).
+_KALIGN = 8
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _mm_kernel(x_ref, w_ref, o_ref):
+    """One (bm, bn) output tile: full-K contraction held in VMEM."""
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def _matmul_pallas(x: jax.Array, w: jax.Array, bm: int, bn: int) -> jax.Array:
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {x.shape} @ {w.shape}"
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(k, _KALIGN)
+    xq = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wq = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    out = pl.pallas_call(
+        _mm_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, kp), lambda i, j: (i, 0)),
+            pl.BlockSpec((kp, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xq, wq)
+    return out[:m, :n]
+
+
+def _pick_block(dim: int, pref: int) -> int:
+    """Largest TPU-plausible tile ≤ pref covering `dim` (multiple of 8)."""
+    if dim >= pref:
+        return pref
+    return max(8, _ceil_to(dim, 8))
+
+
+@jax.custom_vjp
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """``x @ w`` via the tiled Pallas kernel. f32 in, f32 out."""
+    bm = _pick_block(x.shape[0], _BM)
+    bn = _pick_block(w.shape[1], _BN)
+    return _matmul_pallas(x, w, bm, bn)
+
+
+def _matmul_fwd(x, w):
+    return matmul(x, w), (x, w)
+
+
+def _matmul_bwd(res, g):
+    x, w = res
+    # Backward is two more tiled matmuls — recursively differentiable,
+    # which is what lets the 3SFC encoder take grad-of-grad through the
+    # model's dense layers.
+    dx = matmul(g, w.T)
+    dw = matmul(x.T, g)
+    return dx, dw
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

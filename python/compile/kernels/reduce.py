@@ -1,0 +1,137 @@
+"""L1 Pallas kernels: fused flat-vector reductions.
+
+The 3SFC encoder's objective is built on ``cos(a, b)`` over *flattened
+parameter-sized* vectors (P can be hundreds of thousands of floats). Three
+separate reductions (a·b, ‖a‖², ‖b‖²) would read HBM three times; the paper's
+CUDA implementation fuses them, and so do we: :func:`dot3` streams both
+vectors once through VMEM in lane-aligned chunks and accumulates all three
+scalars in a single pass.
+
+``interpret=True`` (CPU PJRT); the grid is sequential in interpret mode so
+the read-modify-write accumulation into the (1, 3) output block is exact.
+
+Both kernels carry ``custom_vjp`` rules whose backward passes are plain
+elementwise expressions — differentiable again, which the encoder's
+second-order objective requires.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Chunk of the flat vector staged into VMEM per grid step: 8 sublanes x 128
+# lanes x 32 = 32768 f32 = 128 KiB per operand — comfortably inside the
+# ~16 MiB VMEM budget together with double-buffering.
+_CHUNK = 32768
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _dot3_kernel(a_ref, b_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    o_ref[0, 0] += jnp.sum(a * b)
+    o_ref[0, 1] += jnp.sum(a * a)
+    o_ref[0, 2] += jnp.sum(b * b)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def _dot3_pallas(a: jax.Array, b: jax.Array, chunk: int):
+    n = a.shape[0]
+    npad = _ceil_to(max(n, 1), chunk)
+    aq = jnp.pad(a, (0, npad - n)).reshape(npad // chunk, chunk)
+    bq = jnp.pad(b, (0, npad - n)).reshape(npad // chunk, chunk)
+    out = pl.pallas_call(
+        _dot3_kernel,
+        grid=(npad // chunk,),
+        in_specs=[
+            pl.BlockSpec((1, chunk), lambda i: (i, 0)),
+            pl.BlockSpec((1, chunk), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 3), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 3), jnp.float32),
+        interpret=True,
+    )(aq, bq)
+    return out[0, 0], out[0, 1], out[0, 2]
+
+
+@jax.custom_vjp
+def dot3(a: jax.Array, b: jax.Array):
+    """Fused single-pass ``(a·b, ‖a‖², ‖b‖²)`` over flat f32 vectors."""
+    chunk = min(_CHUNK, _ceil_to(max(a.shape[0], 1), 128))
+    return _dot3_pallas(a, b, chunk)
+
+
+def _dot3_fwd(a, b):
+    return dot3(a, b), (a, b)
+
+
+def _dot3_bwd(res, cts):
+    a, b = res
+    gd, gna, gnb = cts
+    da = gd * b + 2.0 * gna * a
+    db = gd * a + 2.0 * gnb * b
+    return da, db
+
+
+dot3.defvjp(_dot3_fwd, _dot3_bwd)
+
+
+def _sumsq_kernel(a_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...]
+    o_ref[0, 0] += jnp.sum(a * a)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def _sumsq_pallas(a: jax.Array, chunk: int):
+    n = a.shape[0]
+    npad = _ceil_to(max(n, 1), chunk)
+    aq = jnp.pad(a, (0, npad - n)).reshape(npad // chunk, chunk)
+    out = pl.pallas_call(
+        _sumsq_kernel,
+        grid=(npad // chunk,),
+        in_specs=[pl.BlockSpec((1, chunk), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=True,
+    )(aq)
+    return out[0, 0]
+
+
+@jax.custom_vjp
+def sumsq(a: jax.Array):
+    """``‖a‖²`` over a flat f32 vector, single VMEM pass."""
+    chunk = min(_CHUNK, _ceil_to(max(a.shape[0], 1), 128))
+    return _sumsq_pallas(a, chunk)
+
+
+def _sumsq_fwd(a):
+    return sumsq(a), (a,)
+
+
+def _sumsq_bwd(res, ct):
+    (a,) = res
+    return (2.0 * ct * a,)
+
+
+sumsq.defvjp(_sumsq_fwd, _sumsq_bwd)
+
+
+def cosine(a: jax.Array, b: jax.Array, eps: float = 1e-12):
+    """Cosine similarity of two flat vectors via the fused reduction."""
+    d, na2, nb2 = dot3(a, b)
+    return d * jax.lax.rsqrt(na2 * nb2 + eps)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every L1 kernel.
+
+These are the correctness ground truth: pytest asserts each Pallas kernel
+(and its first/second-order gradients) matches the oracle to f32 tolerance
+across hypothesis-driven shape sweeps.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def dot3(a: jax.Array, b: jax.Array):
+    return jnp.sum(a * b), jnp.sum(a * a), jnp.sum(b * b)
+
+
+def sumsq(a: jax.Array):
+    return jnp.sum(a * a)
+
+
+def axpy(alpha: jax.Array, x: jax.Array, y: jax.Array) -> jax.Array:
+    return y + alpha * x
+
+
+def scale(s: jax.Array, x: jax.Array) -> jax.Array:
+    return s * x
+
+
+def cosine(a: jax.Array, b: jax.Array, eps: float = 1e-12):
+    return jnp.sum(a * b) * jax.lax.rsqrt(jnp.sum(a * a) * jnp.sum(b * b) + eps)

@@ -1,0 +1,275 @@
+"""L2: model zoo over FLAT parameter vectors.
+
+Every model is a pure function ``apply(w_flat, x) -> logits`` where
+``w_flat: f32[P]`` is the packed parameter vector. The rust coordinator only
+ever sees flat vectors — packing/unpacking lives here, recorded in the
+artifact manifest so both sides agree on ``P``.
+
+Dense layers go through the L1 Pallas ``matmul`` kernel; convolutions use
+``lax.conv_general_dilated`` (XLA's conv is already the fused hot path — the
+paper's models are conv/dense mixes and the compressor math, not the conv,
+is the contribution).
+
+Models (paper → here, scaled for the 1-CPU testbed; see DESIGN.md §3):
+  * ``mlp_small``  — 64→32→8, test/CI-sized.
+  * ``mlp10/26``   — 784→250→{10,26}; ≈199k params like the paper's MLP.
+  * ``mnistnet``   — 2 conv + 2 fc on 28×28×1 (paper's MnistNet).
+  * ``convnet``    — 4 conv + 1 fc on 16×16×3 (paper's ConvNet, 32→16 px).
+  * ``resnet8``    — stem + 3 residual blocks, no BN (paper removes BN).
+  * ``regnet_tiny``— stem + 2 grouped-conv bottleneck blocks, no BN.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import kernels
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: tuple
+    fan_in: int  # for He-normal init
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelDef:
+    """A model: flat-param apply fn + metadata the manifest exports."""
+
+    name: str
+    input_shape: tuple  # per-sample shape, e.g. (784,) or (28, 28, 1)
+    n_classes: int
+    params: tuple  # tuple[ParamSpec]
+    apply: Callable  # (w_flat, x_batch) -> logits
+
+    @property
+    def n_params(self) -> int:
+        return int(sum(int(np.prod(p.shape)) for p in self.params))
+
+    def unpack(self, w: jax.Array) -> list:
+        out, off = [], 0
+        for p in self.params:
+            n = int(np.prod(p.shape))
+            out.append(w[off : off + n].reshape(p.shape))
+            off += n
+        return out
+
+    def init(self, seed: int = 0) -> np.ndarray:
+        """He-normal packed init, deterministic; exported as .init.bin."""
+        rng = np.random.default_rng(seed)
+        chunks = []
+        for p in self.params:
+            if len(p.shape) == 1:  # biases start at zero
+                chunks.append(np.zeros(p.shape, np.float32))
+            else:
+                std = float(np.sqrt(2.0 / max(p.fan_in, 1)))
+                chunks.append(
+                    rng.normal(0.0, std, size=p.shape).astype(np.float32)
+                )
+        return np.concatenate([c.ravel() for c in chunks])
+
+
+# ---------------------------------------------------------------- helpers
+
+def _dense(x, w, b):
+    return kernels.matmul(x, w) + b
+
+
+def _conv(x, k, stride=1, padding="SAME", groups=1):
+    return jax.lax.conv_general_dilated(
+        x,
+        k,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
+    )
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def _gap(x):  # global average pool NHWC -> NC
+    return jnp.mean(x, axis=(1, 2))
+
+
+# ------------------------------------------------------------------ MLPs
+
+def make_mlp(name: str, d_in: int, d_hidden: int, n_classes: int) -> ModelDef:
+    params = (
+        ParamSpec("w1", (d_in, d_hidden), d_in),
+        ParamSpec("b1", (d_hidden,), d_in),
+        ParamSpec("w2", (d_hidden, n_classes), d_hidden),
+        ParamSpec("b2", (n_classes,), d_hidden),
+    )
+
+    def apply(w, x):
+        md = _REGISTRY[name]
+        w1, b1, w2, b2 = md.unpack(w)
+        h = jax.nn.relu(_dense(x, w1, b1))
+        return _dense(h, w2, b2)
+
+    return ModelDef(name, (d_in,), n_classes, params, apply)
+
+
+# -------------------------------------------------------------- MnistNet
+
+def make_mnistnet(name: str, n_classes: int) -> ModelDef:
+    # 28x28x1 -> conv5 8 -> pool -> conv5 16 -> pool -> fc64 -> fc C
+    params = (
+        ParamSpec("c1", (5, 5, 1, 8), 25),
+        ParamSpec("cb1", (8,), 25),
+        ParamSpec("c2", (5, 5, 8, 16), 200),
+        ParamSpec("cb2", (16,), 200),
+        ParamSpec("w1", (4 * 4 * 16, 64), 256),
+        ParamSpec("b1", (64,), 256),
+        ParamSpec("w2", (64, n_classes), 64),
+        ParamSpec("b2", (n_classes,), 64),
+    )
+
+    def apply(w, x):
+        md = _REGISTRY[name]
+        c1, cb1, c2, cb2, w1, b1, w2, b2 = md.unpack(w)
+        h = jax.nn.relu(_conv(x, c1, padding="VALID") + cb1)  # 24
+        h = _maxpool2(h)  # 12
+        h = jax.nn.relu(_conv(h, c2, padding="VALID") + cb2)  # 8
+        h = _maxpool2(h)  # 4
+        h = h.reshape(h.shape[0], -1)
+        h = jax.nn.relu(_dense(h, w1, b1))
+        return _dense(h, w2, b2)
+
+    return ModelDef(name, (28, 28, 1), n_classes, params, apply)
+
+
+# --------------------------------------------------------------- ConvNet
+
+def make_convnet(name: str, n_classes: int) -> ModelDef:
+    # 16x16x3: 4 conv (3x3) + 1 fc, pools after conv2 and conv4.
+    params = (
+        ParamSpec("c1", (3, 3, 3, 16), 27),
+        ParamSpec("cb1", (16,), 27),
+        ParamSpec("c2", (3, 3, 16, 16), 144),
+        ParamSpec("cb2", (16,), 144),
+        ParamSpec("c3", (3, 3, 16, 32), 144),
+        ParamSpec("cb3", (32,), 144),
+        ParamSpec("c4", (3, 3, 32, 32), 288),
+        ParamSpec("cb4", (32,), 288),
+        ParamSpec("w1", (4 * 4 * 32, n_classes), 512),
+        ParamSpec("b1", (n_classes,), 512),
+    )
+
+    def apply(w, x):
+        md = _REGISTRY[name]
+        c1, cb1, c2, cb2, c3, cb3, c4, cb4, w1, b1 = md.unpack(w)
+        h = jax.nn.relu(_conv(x, c1) + cb1)
+        h = jax.nn.relu(_conv(h, c2) + cb2)
+        h = _maxpool2(h)  # 8
+        h = jax.nn.relu(_conv(h, c3) + cb3)
+        h = jax.nn.relu(_conv(h, c4) + cb4)
+        h = _maxpool2(h)  # 4
+        h = h.reshape(h.shape[0], -1)
+        return _dense(h, w1, b1)
+
+    return ModelDef(name, (16, 16, 3), n_classes, params, apply)
+
+
+# --------------------------------------------------------------- ResNet8
+
+def make_resnet8(name: str, n_classes: int) -> ModelDef:
+    # Stem + 3 residual blocks (2 convs each), no BN (paper removes BN), GAP.
+    width = 16
+    ps = [ParamSpec("stem", (3, 3, 3, width), 27), ParamSpec("stemb", (width,), 27)]
+    for b in range(3):
+        for c in range(2):
+            ps.append(ParamSpec(f"r{b}c{c}", (3, 3, width, width), 9 * width))
+            ps.append(ParamSpec(f"r{b}cb{c}", (width,), 9 * width))
+    ps.append(ParamSpec("fc", (width, n_classes), width))
+    ps.append(ParamSpec("fcb", (n_classes,), width))
+    params = tuple(ps)
+
+    def apply(w, x):
+        md = _REGISTRY[name]
+        u = md.unpack(w)
+        h = jax.nn.relu(_conv(x, u[0]) + u[1])
+        i = 2
+        for _ in range(3):
+            r = jax.nn.relu(_conv(h, u[i]) + u[i + 1])
+            r = _conv(r, u[i + 2]) + u[i + 3]
+            h = jax.nn.relu(h + r)
+            i += 4
+        h = _gap(h)
+        return _dense(h, u[i], u[i + 1])
+
+    return ModelDef(name, (16, 16, 3), n_classes, params, apply)
+
+
+# ----------------------------------------------------------- RegNet-tiny
+
+def make_regnet_tiny(name: str, n_classes: int) -> ModelDef:
+    # Stem + 2 bottleneck blocks with grouped 3x3 (groups=4), no BN, GAP.
+    win, wmid, groups = 16, 32, 4
+    ps = [ParamSpec("stem", (3, 3, 3, win), 27), ParamSpec("stemb", (win,), 27)]
+    for b in range(2):
+        ps.append(ParamSpec(f"b{b}p1", (1, 1, win, wmid), win))
+        ps.append(ParamSpec(f"b{b}pb1", (wmid,), win))
+        ps.append(
+            ParamSpec(f"b{b}g", (3, 3, wmid // groups, wmid), 9 * wmid // groups)
+        )
+        ps.append(ParamSpec(f"b{b}gb", (wmid,), 9 * wmid // groups))
+        ps.append(ParamSpec(f"b{b}p2", (1, 1, wmid, win), wmid))
+        ps.append(ParamSpec(f"b{b}pb2", (win,), wmid))
+    ps.append(ParamSpec("fc", (win, n_classes), win))
+    ps.append(ParamSpec("fcb", (n_classes,), win))
+    params = tuple(ps)
+
+    def apply(w, x):
+        md = _REGISTRY[name]
+        u = md.unpack(w)
+        h = jax.nn.relu(_conv(x, u[0]) + u[1])
+        i = 2
+        for _ in range(2):
+            r = jax.nn.relu(_conv(h, u[i]) + u[i + 1])
+            r = jax.nn.relu(_conv(r, u[i + 2], groups=groups) + u[i + 3])
+            r = _conv(r, u[i + 4]) + u[i + 5]
+            h = jax.nn.relu(h + r)
+            i += 6
+        h = _gap(h)
+        return _dense(h, u[i], u[i + 1])
+
+    return ModelDef(name, (16, 16, 3), n_classes, params, apply)
+
+
+# --------------------------------------------------------------- registry
+
+_REGISTRY: dict = {}
+
+
+def _register(md: ModelDef) -> ModelDef:
+    _REGISTRY[md.name] = md
+    return md
+
+
+MLP_SMALL = _register(make_mlp("mlp_small", 64, 32, 8))
+MLP10 = _register(make_mlp("mlp10", 784, 250, 10))
+MLP26 = _register(make_mlp("mlp26", 784, 250, 26))
+MNISTNET = _register(make_mnistnet("mnistnet", 10))
+CONVNET = _register(make_convnet("convnet", 10))
+RESNET8_C10 = _register(make_resnet8("resnet8_c10", 10))
+RESNET8_C20 = _register(make_resnet8("resnet8_c20", 20))
+REGNET_C10 = _register(make_regnet_tiny("regnet_c10", 10))
+REGNET_C20 = _register(make_regnet_tiny("regnet_c20", 20))
+
+ALL_MODELS: Sequence[ModelDef] = tuple(_REGISTRY.values())
+
+
+def get(name: str) -> ModelDef:
+    return _REGISTRY[name]

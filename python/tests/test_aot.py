@@ -1,0 +1,59 @@
+"""AOT pipeline: op tables are complete and HLO text round-trips."""
+
+import json
+import os
+
+import jax
+import pytest
+
+from compile import aot, models
+
+
+def test_op_table_covers_required_ops():
+    for md in models.ALL_MODELS:
+        ops = {name for name, *_ in aot.build_op_table(md)}
+        assert "eval" in ops
+        assert any(o.startswith("train_k") for o in ops)
+        for m in aot.SYN_MS:
+            assert f"syn_step_m{m}" in ops
+            assert f"syn_grad_m{m}" in ops
+
+
+def test_fedsynth_ops_paired():
+    md = models.get("mlp_small")
+    ops = {name for name, *_ in aot.build_op_table(md)}
+    for k in aot.FEDSYNTH_KS["mlp_small"]:
+        assert f"fedsynth_k{k}_m1" in ops
+        assert f"fedsynth_apply_k{k}_m1" in ops
+
+
+def test_hlo_text_is_parseable_format():
+    """Lower one small op and sanity-check the HLO text structure."""
+    md = models.get("mlp_small")
+    table = {name: (fn, specs) for name, fn, specs, _ in aot.build_op_table(md)}
+    fn, specs = table["eval"]
+    text = aot.to_hlo_text(jax.jit(fn).lower(*specs))
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # return_tuple=True → root is a tuple
+    assert "tuple(" in text or "tuple (" in text
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+    reason="artifacts not built",
+)
+def test_manifest_matches_registry():
+    path = os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")
+    with open(path) as f:
+        manifest = json.load(f)
+    for name, entry in manifest["models"].items():
+        md = models.get(name)
+        assert entry["params"] == md.n_params
+        assert tuple(entry["input_shape"]) == md.input_shape
+        assert entry["n_classes"] == md.n_classes
+        d = os.path.dirname(path)
+        for op in entry["ops"].values():
+            assert os.path.exists(os.path.join(d, op["file"])), op["file"]
+        init = os.path.join(d, entry["init"])
+        assert os.path.getsize(init) == 4 * md.n_params

@@ -1,0 +1,107 @@
+//! Hot-path microbenchmarks — the perf pass baseline (EXPERIMENTS §Perf).
+//!
+//! L3 host paths: top-k selection, axpy/EF accumulation, cosine metric,
+//! aggregation; runtime paths: literal marshalling, local_train /
+//! syn_step / syn_grad / eval executions on mlp10 (the paper-scale MLP).
+
+use fed3sfc::bench::{report, time_it};
+use fed3sfc::runtime::{FedOps, Runtime};
+use fed3sfc::util::rng::Rng;
+use fed3sfc::util::vecmath;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::open(&fed3sfc::artifacts_dir())?;
+    let ops = FedOps::new(&rt, "mlp10")?;
+    let model = ops.model;
+    let n = model.params;
+    println!("== hot-path microbenchmarks (P = {n}) ==\n");
+
+    let mut rng = Rng::new(1);
+    let mut g = vec![0.0f32; n];
+    rng.fill_normal(&mut g, 0.01);
+    let mut ef = vec![0.0f32; n];
+
+    println!("-- L3 host paths --");
+    report(
+        "topk_indices k=P/250 (DGC select)",
+        &time_it(3, 20, || {
+            std::hint::black_box(vecmath::topk_indices(&g, n / 250));
+        }),
+    );
+    report(
+        "axpy (EF accumulate)",
+        &time_it(3, 50, || {
+            vecmath::axpy(1.0, &g, &mut ef);
+        }),
+    );
+    report(
+        "cosine (efficiency metric)",
+        &time_it(3, 50, || {
+            std::hint::black_box(vecmath::cosine(&g, &ef));
+        }),
+    );
+    report(
+        "weighted aggregation of 10 clients",
+        &time_it(3, 20, || {
+            let mut agg = vec![0.0f32; n];
+            for _ in 0..10 {
+                vecmath::weighted_add(&mut agg, &g, 0.1);
+            }
+            std::hint::black_box(agg);
+        }),
+    );
+
+    println!("\n-- runtime paths (PJRT CPU, mlp10) --");
+    let w = rt.manifest.load_init(model)?;
+    let k = 5;
+    let b = model.train_batch;
+    let mut xs = vec![0.0f32; k * b * model.feature_len()];
+    rng.fill_normal(&mut xs, 1.0);
+    let ys: Vec<i32> = (0..k * b).map(|i| (i % model.n_classes) as i32).collect();
+    report(
+        "local_train K=5 (B=32)",
+        &time_it(2, 10, || {
+            std::hint::black_box(ops.local_train(k, &w, &xs, &ys, 0.05).unwrap());
+        }),
+    );
+
+    let target = {
+        let wl = ops.local_train(k, &w, &xs, &ys, 0.05)?;
+        vecmath::sub(&w, &wl)
+    };
+    let mut dx = vec![0.0f32; model.feature_len()];
+    rng.fill_normal(&mut dx, 0.5);
+    let dy = vec![0.0f32; model.n_classes];
+    report(
+        "syn_step m=1 (2nd-order encoder step)",
+        &time_it(2, 10, || {
+            std::hint::black_box(
+                ops.syn_step(1, &w, &target, &dx, &dy, 5.0, 0.0).unwrap(),
+            );
+        }),
+    );
+    report(
+        "syn_grad m=1 (decoder)",
+        &time_it(2, 10, || {
+            std::hint::black_box(ops.syn_grad(1, &w, &dx, &dy).unwrap());
+        }),
+    );
+
+    let be = model.eval_batch;
+    let mut xe = vec![0.0f32; be * model.feature_len()];
+    rng.fill_normal(&mut xe, 1.0);
+    let ye: Vec<i32> = (0..be).map(|i| (i % model.n_classes) as i32).collect();
+    report(
+        "eval_batch (B=100)",
+        &time_it(2, 10, || {
+            std::hint::black_box(ops.eval_batch(&w, &xe, &ye).unwrap());
+        }),
+    );
+
+    let st = rt.stats();
+    println!(
+        "\nruntime totals: {} compiles {:.0} ms, {} execs {:.0} ms",
+        st.compiles, st.compile_ms, st.executions, st.execute_ms
+    );
+    Ok(())
+}

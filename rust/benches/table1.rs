@@ -1,0 +1,72 @@
+//! Table 1: FedSynth (multi-step distillation) barely optimizes the model
+//! at high compression, while FedAvg trains fine — the preliminary
+//! experiment that justifies excluding FedSynth from Table 2.
+//!
+//! Pairs (paper): MNIST+MLP, EMNIST+MLP, FMNIST+MLP, FMNIST+MnistNet,
+//! 10 clients. Scale knobs: ROUNDS (10), CLIENTS (10), TRAIN (1200).
+
+use fed3sfc::bench::{env_usize, Table};
+use fed3sfc::config::{CompressorKind, DatasetKind, ExperimentConfig};
+use fed3sfc::coordinator::experiment::Experiment;
+use fed3sfc::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rounds = env_usize("ROUNDS", 5);
+    let clients = env_usize("CLIENTS", 6);
+    let train = env_usize("TRAIN", 700);
+    let rt = Runtime::open(&fed3sfc::artifacts_dir())?;
+
+    let pairs: [(&str, DatasetKind, &str); 4] = [
+        ("MNIST+MLP", DatasetKind::SynthMnist, "mlp10"),
+        ("EMNIST+MLP", DatasetKind::SynthEmnist, "mlp26"),
+        ("FMNIST+MLP", DatasetKind::SynthFmnist, "mlp10"),
+        ("FMNIST+Mnistnet", DatasetKind::SynthFmnist, "mnistnet"),
+    ];
+
+    println!("== Table 1: FedSynth preliminary ({clients} clients, {rounds} rounds) ==\n");
+    let t = Table::new(&[18, 16, 22, 14]);
+    t.row(&[
+        "Dataset+Model".into(),
+        "FedAvg (1x)".into(),
+        "FedSynth (ratio)".into(),
+        "3SFC (ratio)".into(),
+    ]);
+    t.sep();
+    for (label, ds, model) in pairs {
+        let mut accs = Vec::new();
+        for method in [
+            CompressorKind::FedAvg,
+            CompressorKind::FedSynth,
+            CompressorKind::ThreeSfc,
+        ] {
+            let cfg = ExperimentConfig {
+                name: format!("t1-{label}-{}", method.name()),
+                dataset: ds,
+                model: model.to_string(),
+                compressor: method,
+                n_clients: clients,
+                rounds,
+                train_samples: train,
+                test_samples: 300,
+                lr: 0.05,
+                eval_every: rounds,
+                syn_steps: 20,
+                fedsynth_ksim: 4,
+                fedsynth_steps: 20,
+                ..ExperimentConfig::default()
+            };
+            let mut exp = Experiment::new(cfg, &rt)?;
+            let recs = exp.run()?;
+            let last = recs.last().unwrap();
+            accs.push((last.test_acc, last.ratio));
+        }
+        t.row(&[
+            label.into(),
+            format!("{:.4}", accs[0].0),
+            format!("{:.4} ({:.0}x)", accs[1].0, accs[1].1),
+            format!("{:.4} ({:.0}x)", accs[2].0, accs[2].1),
+        ]);
+    }
+    println!("\nexpected shape: FedSynth lags FedAvg and 3SFC at comparable extreme ratios (Table 1).");
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! Table 3: dedicated STC vs 3SFC comparison — 3SFC with doubled (2×B)
+//! and quadrupled (4×B) budgets still compresses far more than STC's 32×
+//! while matching or beating its accuracy.
+//!
+//! Scale knobs: ROUNDS (8), CLIENTS (10), TRAIN (1200), PAIRS (all|mlp).
+
+use fed3sfc::bench::{env_usize, Table};
+use fed3sfc::config::{CompressorKind, DatasetKind, ExperimentConfig};
+use fed3sfc::coordinator::experiment::Experiment;
+use fed3sfc::runtime::Runtime;
+
+fn pairs(which: &str) -> Vec<(&'static str, DatasetKind, &'static str)> {
+    let mlp = vec![
+        ("MNIST+MLP", DatasetKind::SynthMnist, "mlp10"),
+        ("EMNIST+MLP", DatasetKind::SynthEmnist, "mlp26"),
+        ("FMNIST+MLP", DatasetKind::SynthFmnist, "mlp10"),
+    ];
+    if which == "mlp" {
+        return mlp;
+    }
+    let mut all = mlp;
+    all.extend([
+        ("FMNIST+Mnistnet", DatasetKind::SynthFmnist, "mnistnet"),
+        ("Cifar10+ResNet", DatasetKind::SynthCifar10, "resnet8_c10"),
+        ("Cifar10+RegNet", DatasetKind::SynthCifar10, "regnet_c10"),
+        ("Cifar100+ResNet", DatasetKind::SynthCifar100, "resnet8_c20"),
+        ("Cifar100+RegNet", DatasetKind::SynthCifar100, "regnet_c20"),
+    ]);
+    all
+}
+
+fn main() -> anyhow::Result<()> {
+    let rounds = env_usize("ROUNDS", 5);
+    let clients = env_usize("CLIENTS", 6);
+    let train = env_usize("TRAIN", 700);
+    let which = std::env::var("PAIRS").unwrap_or_else(|_| "mlp".into());
+    let rt = Runtime::open(&fed3sfc::artifacts_dir())?;
+
+    println!("== Table 3: STC vs 3SFC at 2xB and 4xB ({clients} clients, {rounds} rounds) ==\n");
+    let t = Table::new(&[18, 20, 20, 20]);
+    t.row(&[
+        "Dataset+Model".into(),
+        "STC".into(),
+        "3SFC (2xB)".into(),
+        "3SFC (4xB)".into(),
+    ]);
+    t.sep();
+
+    for (label, ds, model) in pairs(&which) {
+        let mut cells = vec![label.to_string()];
+        for (method, budget) in [
+            (CompressorKind::Stc, 1usize),
+            (CompressorKind::ThreeSfc, 2),
+            (CompressorKind::ThreeSfc, 4),
+        ] {
+            let cfg = ExperimentConfig {
+                name: format!("t3-{label}-{}-{budget}", method.name()),
+                dataset: ds,
+                model: model.to_string(),
+                compressor: method,
+                budget_mult: budget,
+                n_clients: clients,
+                rounds,
+                train_samples: train,
+                test_samples: 300,
+                lr: 0.05,
+                eval_every: rounds,
+                syn_steps: 20,
+                ..ExperimentConfig::default()
+            };
+            let mut exp = Experiment::new(cfg, &rt)?;
+            let recs = exp.run()?;
+            let last = recs.last().unwrap();
+            cells.push(format!("{:.4} ({:.0}x)", last.test_acc, last.ratio));
+        }
+        t.row(&cells);
+    }
+    println!("\nexpected shape (paper Table 3): 3SFC(2B/4B) ~ or > STC with a much higher ratio.");
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Table 4: 3SFC ablation — error feedback on/off, budget B/2B/4B, local
+//! iterations K ∈ {1, 5, 10}.
+//!
+//! Scale knobs: ROUNDS (10), CLIENTS (10), TRAIN (1200), PAIRS (mlp|all).
+
+use fed3sfc::bench::{env_usize, Table};
+use fed3sfc::config::{DatasetKind, ExperimentConfig};
+use fed3sfc::coordinator::experiment::Experiment;
+use fed3sfc::runtime::Runtime;
+
+struct Variant {
+    label: &'static str,
+    ef: bool,
+    budget: usize,
+    k: usize,
+}
+
+fn main() -> anyhow::Result<()> {
+    let rounds = env_usize("ROUNDS", 5);
+    let clients = env_usize("CLIENTS", 6);
+    let train = env_usize("TRAIN", 700);
+    let which = std::env::var("PAIRS").unwrap_or_else(|_| "mlp".into());
+    let rt = Runtime::open(&fed3sfc::artifacts_dir())?;
+
+    let variants = [
+        Variant { label: "3SFC w/ EF (base)", ef: true, budget: 1, k: 5 },
+        Variant { label: "3SFC w/o EF", ef: false, budget: 1, k: 5 },
+        Variant { label: "3SFC w/ EF (2xB)", ef: true, budget: 2, k: 5 },
+        Variant { label: "3SFC w/ EF (4xB)", ef: true, budget: 4, k: 5 },
+        Variant { label: "3SFC w/ EF (K=1)", ef: true, budget: 1, k: 1 },
+        Variant { label: "3SFC w/ EF (K=10)", ef: true, budget: 1, k: 10 },
+    ];
+
+    let mut pairs: Vec<(&str, DatasetKind, &str)> = vec![
+        ("MNIST+MLP", DatasetKind::SynthMnist, "mlp10"),
+        ("EMNIST+MLP", DatasetKind::SynthEmnist, "mlp26"),
+        ("FMNIST+MLP", DatasetKind::SynthFmnist, "mlp10"),
+    ];
+    if which == "all" {
+        pairs.extend([
+            ("FMNIST+Mnistnet", DatasetKind::SynthFmnist, "mnistnet"),
+            ("Cifar10+ConvNet", DatasetKind::SynthCifar10, "convnet"),
+            ("Cifar10+ResNet", DatasetKind::SynthCifar10, "resnet8_c10"),
+            ("Cifar100+RegNet", DatasetKind::SynthCifar100, "regnet_c20"),
+        ]);
+    }
+
+    println!("== Table 4: 3SFC ablation ({clients} clients, {rounds} rounds) ==\n");
+    let mut widths = vec![20usize];
+    widths.extend(std::iter::repeat(18).take(pairs.len()));
+    let t = Table::new(&widths);
+    let mut header = vec!["Variant".to_string()];
+    header.extend(pairs.iter().map(|p| p.0.to_string()));
+    t.row(&header);
+    t.sep();
+
+    for v in &variants {
+        let mut cells = vec![v.label.to_string()];
+        for (label, ds, model) in &pairs {
+            let cfg = ExperimentConfig {
+                name: format!("t4-{label}-{}", v.label),
+                dataset: *ds,
+                model: model.to_string(),
+                error_feedback: v.ef,
+                budget_mult: v.budget,
+                k_local: v.k,
+                n_clients: clients,
+                rounds,
+                train_samples: train,
+                test_samples: 300,
+                lr: 0.05,
+                eval_every: rounds,
+                syn_steps: 20,
+                ..ExperimentConfig::default()
+            };
+            let mut exp = Experiment::new(cfg, &rt)?;
+            let recs = exp.run()?;
+            cells.push(format!("{:.4}", recs.last().unwrap().test_acc));
+        }
+        t.row(&cells);
+    }
+    println!("\nexpected shape (paper Table 4): w/o EF degrades sharply; 2xB/4xB and K=10 improve; K=1 degrades.");
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! Bench harness (offline replacement for `criterion`): timing with
+//! warmup + repeated samples, and fixed-width table printing shared by
+//! every `benches/*.rs` target (`harness = false`).
+
+use std::time::Instant;
+
+use crate::util::stats::OnlineStats;
+
+/// Time `f` with `warmup` throwaway calls and `iters` measured calls.
+pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> OnlineStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut stats = OnlineStats::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        stats.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    stats
+}
+
+/// Print a `name  mean ± std ms  (min..max, n)` line.
+pub fn report(name: &str, stats: &OnlineStats) {
+    println!(
+        "{name:<44} {:>9.3} ms ± {:>7.3}  (min {:.3}, max {:.3}, n={})",
+        stats.mean(),
+        stats.std(),
+        stats.min(),
+        stats.max(),
+        stats.count()
+    );
+}
+
+/// Fixed-width table printer for paper-style rows.
+pub struct Table {
+    widths: Vec<usize>,
+}
+
+impl Table {
+    pub fn new(widths: &[usize]) -> Table {
+        Table { widths: widths.to_vec() }
+    }
+
+    pub fn row(&self, cells: &[String]) {
+        let mut line = String::new();
+        for (i, cell) in cells.iter().enumerate() {
+            let w = self.widths.get(i).copied().unwrap_or(12);
+            line.push_str(&format!("{cell:<w$} "));
+        }
+        println!("{}", line.trim_end());
+    }
+
+    pub fn sep(&self) {
+        let total: usize = self.widths.iter().sum::<usize>() + self.widths.len();
+        println!("{}", "-".repeat(total));
+    }
+}
+
+/// `ENV`-style knob for scaling bench workloads, e.g. `ROUNDS=40`.
+pub fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_collects_samples() {
+        let stats = time_it(1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(stats.count(), 5);
+        assert!(stats.mean() >= 0.0);
+    }
+
+    #[test]
+    fn env_knob_defaults() {
+        assert_eq!(env_usize("FED3SFC_DEFINITELY_UNSET", 7), 7);
+    }
+}

@@ -1,0 +1,117 @@
+//! Hand-rolled CLI argument parser (offline substrate for `clap`).
+//!
+//! Grammar: `fed3sfc <subcommand> [--key value | --key=value | --flag] ...`
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    /// Parse argv (excluding program name). Keys listed in `flag_names`
+    /// are boolean flags; everything else starting with `--` takes a value.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        argv: I,
+        flag_names: &[&str],
+    ) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = it.next().unwrap();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&rest) {
+                    out.flags.push(rest.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow!("option --{rest} needs a value"))?;
+                    out.options.insert(rest.to_string(), v);
+                }
+            } else if tok.starts_with('-') && tok.len() > 1 {
+                bail!("short options not supported: {tok}");
+            } else {
+                out.positionals.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = Args::parse(
+            argv(&["run", "--rounds", "20", "--dataset=mnist", "--verbose", "pos"]),
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.subcommand, "run");
+        assert_eq!(a.get("rounds"), Some("20"));
+        assert_eq!(a.get("dataset"), Some("mnist"));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positionals, vec!["pos"]);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(argv(&["run", "--rounds"]), &[]).is_err());
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = Args::parse(argv(&["x", "--n", "7", "--lr", "0.5"]), &[]).unwrap();
+        assert_eq!(a.get_usize("n", 1).unwrap(), 7);
+        assert_eq!(a.get_f64("lr", 0.0).unwrap(), 0.5);
+        assert_eq!(a.get_usize("absent", 3).unwrap(), 3);
+        assert!(a.get_usize("lr", 1).is_err());
+    }
+}

@@ -1,0 +1,98 @@
+//! FedSynth baseline (Hu et al. 2022): multi-step data distillation.
+//!
+//! The contrast class for 3SFC (paper §2, Table 1, Figs 2–3): distill the
+//! accumulated gradient into K_sim per-step synthetic batches by
+//! simulating K_sim inner SGD steps and minimizing the **L2 distance**
+//! between the simulated and real model deltas. The deep unroll is what
+//! makes it slow and collapse-prone — `last_step_norms` exposes the
+//! per-step gradient magnitudes so the Fig 3 explosion series can be
+//! reproduced.
+
+use anyhow::{bail, Result};
+
+use super::{Compressor, DecodeCtx, EncodeCtx, Payload};
+
+pub struct FedSynth {
+    /// Inner simulation depth K_sim (the paper's collapses at 128).
+    pub k_sim: usize,
+    /// Samples per simulated step.
+    pub m: usize,
+    /// Outer distillation iterations.
+    pub steps: usize,
+    pub lr_inner: f32,
+    pub lr_syn: f32,
+    /// ‖∂fit/∂dxs[j]‖ per step j from the last encode (Fig 3).
+    pub last_step_norms: Vec<f32>,
+    /// Final fit loss ‖Δw_sim − g‖² from the last encode (Fig 2).
+    pub last_fit: f32,
+}
+
+impl FedSynth {
+    pub fn new(k_sim: usize, m: usize, steps: usize, lr_inner: f32, lr_syn: f32) -> FedSynth {
+        assert!(k_sim >= 1 && m >= 1 && steps >= 1);
+        FedSynth {
+            k_sim,
+            m,
+            steps,
+            lr_inner,
+            lr_syn,
+            last_step_norms: Vec::new(),
+            last_fit: f32::NAN,
+        }
+    }
+}
+
+impl Compressor for FedSynth {
+    fn name(&self) -> String {
+        format!("fedsynth(K={},S={})", self.k_sim, self.steps)
+    }
+
+    fn encode(&mut self, ctx: &mut EncodeCtx, target: &[f32]) -> Result<(Payload, Vec<f32>)> {
+        let model = ctx.ops.model;
+        let d = model.feature_len();
+        let c = model.n_classes;
+        let mut dxs = vec![0.0f32; self.k_sim * self.m * d];
+        ctx.rng.fill_normal(&mut dxs, 0.5);
+        let mut dys = vec![0.0f32; self.k_sim * self.m * c];
+
+        let mut fit = f32::NAN;
+        for _ in 0..self.steps {
+            let (ndxs, ndys, f, norms) = ctx.ops.fedsynth_step(
+                self.k_sim,
+                self.m,
+                ctx.w_global,
+                target,
+                &dxs,
+                &dys,
+                self.lr_inner,
+                self.lr_syn,
+            )?;
+            dxs = ndxs;
+            dys = ndys;
+            fit = f;
+            self.last_step_norms = norms;
+        }
+        self.last_fit = fit;
+
+        let recon = ctx.ops.fedsynth_apply(
+            self.k_sim,
+            self.m,
+            ctx.w_global,
+            &dxs,
+            &dys,
+            self.lr_inner,
+        )?;
+        Ok((
+            Payload::SynMulti { k: self.k_sim, m: self.m, dxs, dys },
+            recon,
+        ))
+    }
+
+    fn decode(&self, ctx: &DecodeCtx, payload: &Payload) -> Result<Vec<f32>> {
+        let Payload::SynMulti { k, m, dxs, dys } = payload else {
+            bail!("fedsynth got {:?}", payload.kind());
+        };
+        ctx.ops
+            .fedsynth_apply(*k, *m, ctx.w_global, dxs, dys, self.lr_inner)
+    }
+}

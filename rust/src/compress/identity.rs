@@ -1,0 +1,31 @@
+//! FedAvg "compressor": the identity (1× baseline of every table).
+
+use anyhow::Result;
+
+use super::{Compressor, DecodeCtx, EncodeCtx, Payload};
+
+#[derive(Default)]
+pub struct Identity;
+
+impl Identity {
+    pub fn new() -> Identity {
+        Identity
+    }
+}
+
+impl Compressor for Identity {
+    fn name(&self) -> String {
+        "fedavg".into()
+    }
+
+    fn encode(&mut self, _ctx: &mut EncodeCtx, target: &[f32]) -> Result<(Payload, Vec<f32>)> {
+        Ok((Payload::Dense { g: target.to_vec() }, target.to_vec()))
+    }
+
+    fn decode(&self, _ctx: &DecodeCtx, payload: &Payload) -> Result<Vec<f32>> {
+        match payload {
+            Payload::Dense { g } => Ok(g.clone()),
+            _ => anyhow::bail!("identity got {:?}", payload.kind()),
+        }
+    }
+}

@@ -1,0 +1,96 @@
+//! The compressor zoo: the paper's contribution (3SFC) and every
+//! competitor it is evaluated against (Table 2): FedAvg (identity), DGC
+//! (top-k sparsification), signSGD (1-bit + scale), STC (ternary top-k),
+//! and the FedSynth multi-step distillation baseline (Table 1, Figs 2–3).
+//!
+//! Contract: `encode` maps the EF-corrected accumulated gradient
+//! `target = g + e` to a wire [`Payload`] **and** the reconstruction the
+//! decoder would produce (the simulation computes it once; `decode` is the
+//! server-side path and tests assert the two agree bit-for-bit). The
+//! coordinator owns the error-feedback state (Eq. 6).
+
+pub mod fedsynth;
+pub mod identity;
+pub mod payload;
+pub mod signsgd;
+pub mod stc;
+pub mod threesfc;
+pub mod topk;
+
+use anyhow::Result;
+
+pub use fedsynth::FedSynth;
+pub use identity::Identity;
+pub use payload::Payload;
+pub use signsgd::SignSgd;
+pub use stc::Stc;
+pub use threesfc::ThreeSfc;
+pub use topk::TopK;
+
+use crate::config::{CompressorKind, ExperimentConfig};
+use crate::model::ModelInfo;
+use crate::runtime::FedOps;
+use crate::util::rng::Rng;
+
+/// Everything a compressor may need while encoding on a client.
+pub struct EncodeCtx<'a, 'b> {
+    /// Fed-op facade for the experiment's model (3SFC / FedSynth need it).
+    pub ops: &'a FedOps<'b>,
+    /// Current global weights w^t (the encoder optimizes at w^t, Eq. 7).
+    pub w_global: &'a [f32],
+    /// Per-client stream for synthetic-feature init.
+    pub rng: &'a mut Rng,
+}
+
+/// Server-side decode context (Eq. 10 needs w^t and the shared model).
+pub struct DecodeCtx<'a, 'b> {
+    pub ops: &'a FedOps<'b>,
+    pub w_global: &'a [f32],
+}
+
+/// A gradient compressor (client encoder + server decoder).
+pub trait Compressor {
+    fn name(&self) -> String;
+
+    /// Compress `target = g + e`. Returns (wire payload, reconstruction).
+    fn encode(&mut self, ctx: &mut EncodeCtx, target: &[f32]) -> Result<(Payload, Vec<f32>)>;
+
+    /// Server-side reconstruction of the gradient from the payload.
+    fn decode(&self, ctx: &DecodeCtx, payload: &Payload) -> Result<Vec<f32>>;
+}
+
+/// Build the compressor an [`ExperimentConfig`] asks for.
+///
+/// Budget protocol (paper §6.1): DGC is given the *same byte budget* as
+/// 3SFC at the same multiplier; signSGD/STC sit at their natural 32× rate
+/// unless `topk_rate` overrides DGC explicitly (Fig 1 sweeps).
+pub fn build(cfg: &ExperimentConfig, model: &ModelInfo) -> Box<dyn Compressor> {
+    let n = model.params;
+    match cfg.compressor {
+        CompressorKind::FedAvg => Box::new(Identity::new()),
+        CompressorKind::Dgc => {
+            let k = if cfg.topk_rate > 0.0 {
+                ((n as f64 * cfg.topk_rate).round() as usize).clamp(1, n)
+            } else {
+                // Match 3SFC's wire bytes: top-k costs 8 bytes/coordinate.
+                (model.syn_payload_bytes(cfg.syn_m()) / 8).clamp(1, n)
+            };
+            Box::new(TopK::new(k))
+        }
+        CompressorKind::SignSgd => Box::new(SignSgd::new()),
+        CompressorKind::Stc => Box::new(Stc::with_rate(n, 1.0 / 32.0)),
+        CompressorKind::ThreeSfc => Box::new(ThreeSfc::new(
+            cfg.syn_m(),
+            cfg.syn_steps,
+            cfg.lr_syn,
+            cfg.lambda,
+        )),
+        CompressorKind::FedSynth => Box::new(FedSynth::new(
+            cfg.fedsynth_ksim,
+            1,
+            cfg.fedsynth_steps,
+            cfg.fedsynth_lr_inner,
+            cfg.fedsynth_lr_syn,
+        )),
+    }
+}

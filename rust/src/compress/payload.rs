@@ -1,0 +1,105 @@
+//! Wire payloads with exact byte accounting.
+//!
+//! Every experiment reports "compression rate" = wire bytes / 4P (Eq. 1);
+//! the numbers below are what a real implementation would put on the wire.
+
+/// What a client uploads for one round.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    /// Uncompressed gradient (FedAvg).
+    Dense { g: Vec<f32> },
+    /// Top-k values + u32 indices (DGC).
+    TopK { n: usize, idx: Vec<u32>, val: Vec<f32> },
+    /// Sign bit per coordinate + one f32 scale (signSGD w/ EF).
+    Sign { n: usize, bits: Vec<u8>, scale: f32 },
+    /// STC: top-k indices + sign bitset over those k + mean magnitude μ.
+    Ternary { n: usize, idx: Vec<u32>, neg: Vec<u8>, mu: f32 },
+    /// 3SFC: m synthetic samples (inputs + label logits) + scale s.
+    Syn { m: usize, dx: Vec<f32>, dy: Vec<f32>, s: f32 },
+    /// FedSynth: K_sim per-step synthetic batches (no scale).
+    SynMulti { k: usize, m: usize, dxs: Vec<f32>, dys: Vec<f32> },
+}
+
+impl Payload {
+    /// Exact upload size in bytes.
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            Payload::Dense { g } => 4 * g.len(),
+            Payload::TopK { idx, val, .. } => 4 * idx.len() + 4 * val.len(),
+            Payload::Sign { bits, .. } => bits.len() + 4,
+            Payload::Ternary { idx, neg, .. } => 4 * idx.len() + neg.len() + 4,
+            Payload::Syn { dx, dy, .. } => 4 * dx.len() + 4 * dy.len() + 4,
+            Payload::SynMulti { dxs, dys, .. } => 4 * dxs.len() + 4 * dys.len(),
+        }
+    }
+
+    /// Compression rate vs a dense f32 gradient of `n_params` (Eq. 1).
+    pub fn rate(&self, n_params: usize) -> f64 {
+        self.wire_bytes() as f64 / (4.0 * n_params as f64)
+    }
+
+    /// `1 / rate` — the "compression ratio ×" the paper's tables print.
+    pub fn ratio(&self, n_params: usize) -> f64 {
+        1.0 / self.rate(n_params).max(1e-300)
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Payload::Dense { .. } => "dense",
+            Payload::TopK { .. } => "topk",
+            Payload::Sign { .. } => "sign",
+            Payload::Ternary { .. } => "ternary",
+            Payload::Syn { .. } => "syn",
+            Payload::SynMulti { .. } => "syn_multi",
+        }
+    }
+}
+
+/// Pack sign bits (true = negative) into a byte vector, LSB-first.
+pub fn pack_bits(signs: impl Iterator<Item = bool>, n: usize) -> Vec<u8> {
+    let mut out = vec![0u8; n.div_ceil(8)];
+    for (i, s) in signs.enumerate() {
+        if s {
+            out[i / 8] |= 1 << (i % 8);
+        }
+    }
+    out
+}
+
+/// Read bit `i` from a packed bitset.
+#[inline]
+pub fn get_bit(bits: &[u8], i: usize) -> bool {
+    bits[i / 8] & (1 << (i % 8)) != 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_accounting() {
+        let p = Payload::Dense { g: vec![0.0; 100] };
+        assert_eq!(p.wire_bytes(), 400);
+        assert_eq!(p.rate(100), 1.0);
+
+        let p = Payload::TopK { n: 100, idx: vec![0; 5], val: vec![0.0; 5] };
+        assert_eq!(p.wire_bytes(), 40);
+        assert_eq!(p.ratio(100), 10.0);
+
+        let p = Payload::Sign { n: 100, bits: vec![0; 13], scale: 1.0 };
+        assert_eq!(p.wire_bytes(), 17);
+
+        let p = Payload::Syn { m: 1, dx: vec![0.0; 64], dy: vec![0.0; 8], s: 1.0 };
+        assert_eq!(p.wire_bytes(), 4 * (64 + 8 + 1));
+    }
+
+    #[test]
+    fn bit_packing_roundtrip() {
+        let signs = [true, false, false, true, true, false, true, false, true];
+        let bits = pack_bits(signs.iter().copied(), signs.len());
+        assert_eq!(bits.len(), 2);
+        for (i, &s) in signs.iter().enumerate() {
+            assert_eq!(get_bit(&bits, i), s);
+        }
+    }
+}

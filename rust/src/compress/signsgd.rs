@@ -1,0 +1,44 @@
+//! signSGD with error feedback (Bernstein et al. 2018 + Karimireddy et
+//! al. 2019): one sign bit per coordinate plus a single scale, the mean
+//! |target| — the scale that makes sign compression an EF-contraction.
+
+use anyhow::{bail, Result};
+
+use super::payload::{get_bit, pack_bits};
+use super::{Compressor, DecodeCtx, EncodeCtx, Payload};
+
+#[derive(Default)]
+pub struct SignSgd;
+
+impl SignSgd {
+    pub fn new() -> SignSgd {
+        SignSgd
+    }
+}
+
+impl Compressor for SignSgd {
+    fn name(&self) -> String {
+        "signsgd".into()
+    }
+
+    fn encode(&mut self, _ctx: &mut EncodeCtx, target: &[f32]) -> Result<(Payload, Vec<f32>)> {
+        let n = target.len();
+        let scale = target.iter().map(|v| v.abs() as f64).sum::<f64>() / n.max(1) as f64;
+        let scale = scale as f32;
+        let bits = pack_bits(target.iter().map(|&v| v < 0.0), n);
+        let recon: Vec<f32> = target
+            .iter()
+            .map(|&v| if v < 0.0 { -scale } else { scale })
+            .collect();
+        Ok((Payload::Sign { n, bits, scale }, recon))
+    }
+
+    fn decode(&self, _ctx: &DecodeCtx, payload: &Payload) -> Result<Vec<f32>> {
+        let Payload::Sign { n, bits, scale } = payload else {
+            bail!("signsgd got {:?}", payload.kind());
+        };
+        Ok((0..*n)
+            .map(|i| if get_bit(bits, i) { -scale } else { *scale })
+            .collect())
+    }
+}

@@ -1,0 +1,52 @@
+//! DGC-style top-k sparsification (Lin et al. 2017) — the paper's main
+//! equal-budget competitor. Sends the k largest-magnitude coordinates;
+//! error feedback (kept by the coordinator) supplies the momentum-style
+//! correction of the dropped mass.
+
+use anyhow::{bail, Result};
+
+use super::{Compressor, DecodeCtx, EncodeCtx, Payload};
+use crate::util::vecmath;
+
+pub struct TopK {
+    k: usize,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> TopK {
+        assert!(k >= 1);
+        TopK { k }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+}
+
+impl Compressor for TopK {
+    fn name(&self) -> String {
+        format!("dgc(k={})", self.k)
+    }
+
+    fn encode(&mut self, _ctx: &mut EncodeCtx, target: &[f32]) -> Result<(Payload, Vec<f32>)> {
+        let k = self.k.min(target.len());
+        let idx = vecmath::topk_indices(target, k);
+        let val: Vec<f32> = idx.iter().map(|&i| target[i as usize]).collect();
+        let mut recon = vec![0.0f32; target.len()];
+        for (&i, &v) in idx.iter().zip(val.iter()) {
+            recon[i as usize] = v;
+        }
+        Ok((Payload::TopK { n: target.len(), idx, val }, recon))
+    }
+
+    fn decode(&self, _ctx: &DecodeCtx, payload: &Payload) -> Result<Vec<f32>> {
+        let Payload::TopK { n, idx, val } = payload else {
+            bail!("topk got {:?}", payload.kind());
+        };
+        let mut g = vec![0.0f32; *n];
+        for (&i, &v) in idx.iter().zip(val.iter()) {
+            g[i as usize] = v;
+        }
+        Ok(g)
+    }
+}

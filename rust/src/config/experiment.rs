@@ -1,0 +1,353 @@
+//! Typed experiment configuration — the single source of truth a run,
+//! example, or bench consumes. Built from a TOML preset and/or CLI flags.
+
+use anyhow::{bail, Result};
+
+use super::toml::{parse_toml, TomlDoc};
+
+/// Which procedural dataset to synthesize (paper → substitution, DESIGN §3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DatasetKind {
+    SynthMnist,
+    SynthEmnist,
+    SynthFmnist,
+    SynthCifar10,
+    SynthCifar100,
+    /// 64-d toy set matching `mlp_small` (tests / CI).
+    SynthSmall,
+}
+
+impl DatasetKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "synth_mnist" | "mnist" => DatasetKind::SynthMnist,
+            "synth_emnist" | "emnist" => DatasetKind::SynthEmnist,
+            "synth_fmnist" | "fmnist" => DatasetKind::SynthFmnist,
+            "synth_cifar10" | "cifar10" => DatasetKind::SynthCifar10,
+            "synth_cifar100" | "cifar100" => DatasetKind::SynthCifar100,
+            "synth_small" | "small" => DatasetKind::SynthSmall,
+            _ => bail!("unknown dataset '{s}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DatasetKind::SynthMnist => "synth_mnist",
+            DatasetKind::SynthEmnist => "synth_emnist",
+            DatasetKind::SynthFmnist => "synth_fmnist",
+            DatasetKind::SynthCifar10 => "synth_cifar10",
+            DatasetKind::SynthCifar100 => "synth_cifar100",
+            DatasetKind::SynthSmall => "synth_small",
+        }
+    }
+
+    pub fn n_classes(&self) -> usize {
+        match self {
+            DatasetKind::SynthEmnist => 26,
+            DatasetKind::SynthCifar100 => 20, // 100→20 scale-down, DESIGN §3
+            DatasetKind::SynthSmall => 8,
+            _ => 10,
+        }
+    }
+
+    /// Per-sample feature length (matches the manifest input shapes).
+    pub fn feature_len(&self) -> usize {
+        match self {
+            DatasetKind::SynthMnist | DatasetKind::SynthEmnist | DatasetKind::SynthFmnist => 784,
+            DatasetKind::SynthCifar10 | DatasetKind::SynthCifar100 => 16 * 16 * 3,
+            DatasetKind::SynthSmall => 64,
+        }
+    }
+
+    /// Image layout (h, w, c); 1×d×1 for flat sets.
+    pub fn image_dims(&self) -> (usize, usize, usize) {
+        match self {
+            DatasetKind::SynthMnist | DatasetKind::SynthEmnist | DatasetKind::SynthFmnist => {
+                (28, 28, 1)
+            }
+            DatasetKind::SynthCifar10 | DatasetKind::SynthCifar100 => (16, 16, 3),
+            DatasetKind::SynthSmall => (1, 64, 1),
+        }
+    }
+
+    /// Default model key for this dataset (paper's main pairings).
+    pub fn default_model(&self) -> &'static str {
+        match self {
+            DatasetKind::SynthMnist | DatasetKind::SynthFmnist => "mlp10",
+            DatasetKind::SynthEmnist => "mlp26",
+            DatasetKind::SynthCifar10 => "convnet",
+            DatasetKind::SynthCifar100 => "resnet8_c20",
+            DatasetKind::SynthSmall => "mlp_small",
+        }
+    }
+}
+
+/// Compression method (the paper's competitor zoo + the contribution).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CompressorKind {
+    /// FedAvg — no compression (1× baseline).
+    FedAvg,
+    /// DGC-style top-k sparsification with error feedback.
+    Dgc,
+    /// signSGD with error feedback (1 bit + scale).
+    SignSgd,
+    /// STC — top-k + mean-magnitude ternarization + EF.
+    Stc,
+    /// 3SFC — the paper's single-step synthetic-features compressor.
+    ThreeSfc,
+    /// FedSynth — multi-step L2 data-distillation baseline (Table 1).
+    FedSynth,
+}
+
+impl CompressorKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "fedavg" | "none" => CompressorKind::FedAvg,
+            "dgc" | "topk" => CompressorKind::Dgc,
+            "signsgd" | "sign" => CompressorKind::SignSgd,
+            "stc" => CompressorKind::Stc,
+            "3sfc" | "threesfc" => CompressorKind::ThreeSfc,
+            "fedsynth" => CompressorKind::FedSynth,
+            _ => bail!("unknown compressor '{s}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CompressorKind::FedAvg => "fedavg",
+            CompressorKind::Dgc => "dgc",
+            CompressorKind::SignSgd => "signsgd",
+            CompressorKind::Stc => "stc",
+            CompressorKind::ThreeSfc => "3sfc",
+            CompressorKind::FedSynth => "fedsynth",
+        }
+    }
+}
+
+/// Full experiment description. Defaults mirror the paper's §6.1 settings
+/// (lr=0.01, K=5, λ=0, EF on) at the scaled-down workload sizes of DESIGN §3.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub dataset: DatasetKind,
+    /// Manifest model key; empty → dataset default.
+    pub model: String,
+    pub n_clients: usize,
+    pub rounds: usize,
+    /// Local SGD iterations per round (paper K; artifacts exist for 1/5/10).
+    pub k_local: usize,
+    pub lr: f32,
+    pub compressor: CompressorKind,
+    /// Budget multiplier: 1→m=1 synthetic sample, 2→m=2, 4→m=4 (Tables 3/4).
+    pub budget_mult: usize,
+    /// 3SFC encoder iterations S (Algorithm 1 line 7).
+    pub syn_steps: usize,
+    pub lr_syn: f32,
+    /// λ regularization in Eq. 7 (paper uses 0).
+    pub lambda: f32,
+    /// Error feedback on/off (Table 4 ablation).
+    pub error_feedback: bool,
+    /// Explicit top-k rate for DGC; 0 → match 3SFC's byte budget (paper's
+    /// "same compression rate" protocol).
+    pub topk_rate: f64,
+    /// Dirichlet concentration for the non-i.i.d. partition (Fig 5).
+    pub alpha: f64,
+    /// Total training samples synthesized across clients.
+    pub train_samples: usize,
+    pub test_samples: usize,
+    pub seed: u64,
+    pub eval_every: usize,
+    /// FedSynth settings (Table 1 / Figs 2–3).
+    pub fedsynth_ksim: usize,
+    pub fedsynth_lr_inner: f32,
+    pub fedsynth_steps: usize,
+    pub fedsynth_lr_syn: f32,
+    /// Optional metrics JSONL path ("" → none).
+    pub metrics_path: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "default".into(),
+            dataset: DatasetKind::SynthMnist,
+            model: String::new(),
+            n_clients: 10,
+            rounds: 30,
+            k_local: 5,
+            lr: 0.01,
+            compressor: CompressorKind::ThreeSfc,
+            budget_mult: 1,
+            syn_steps: 30,
+            lr_syn: 5.0,
+            lambda: 0.0,
+            error_feedback: true,
+            topk_rate: 0.0,
+            alpha: 0.5,
+            train_samples: 2000,
+            test_samples: 500,
+            seed: 42,
+            eval_every: 1,
+            fedsynth_ksim: 4,
+            fedsynth_lr_inner: 0.01,
+            fedsynth_steps: 30,
+            fedsynth_lr_syn: 0.5,
+            metrics_path: String::new(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Resolved model key (dataset default when unset).
+    pub fn model_key(&self) -> &str {
+        if self.model.is_empty() {
+            self.dataset.default_model()
+        } else {
+            &self.model
+        }
+    }
+
+    /// Synthetic sample count m for 3SFC at this budget multiplier.
+    pub fn syn_m(&self) -> usize {
+        match self.budget_mult {
+            0 | 1 => 1,
+            2 => 2,
+            _ => 4,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.n_clients == 0 {
+            bail!("n_clients must be > 0");
+        }
+        if self.rounds == 0 {
+            bail!("rounds must be > 0");
+        }
+        if !matches!(self.k_local, 1 | 5 | 10) {
+            bail!("k_local must be 1, 5 or 10 (artifacts exist for these)");
+        }
+        if !matches!(self.budget_mult, 1 | 2 | 4) {
+            bail!("budget_mult must be 1, 2 or 4");
+        }
+        if self.lr <= 0.0 || self.lr_syn <= 0.0 {
+            bail!("learning rates must be positive");
+        }
+        if self.alpha <= 0.0 {
+            bail!("dirichlet alpha must be positive");
+        }
+        if self.train_samples < self.n_clients {
+            bail!("need at least one training sample per client");
+        }
+        Ok(())
+    }
+
+    /// Apply a parsed TOML document on top of the current values.
+    pub fn apply_toml(&mut self, doc: &TomlDoc) -> Result<()> {
+        for (k, v) in doc {
+            match k.as_str() {
+                "name" => self.name = v.as_str()?.to_string(),
+                "dataset" => self.dataset = DatasetKind::parse(v.as_str()?)?,
+                "model" => self.model = v.as_str()?.to_string(),
+                "n_clients" | "clients" => self.n_clients = v.as_i64()? as usize,
+                "rounds" => self.rounds = v.as_i64()? as usize,
+                "k_local" | "k" => self.k_local = v.as_i64()? as usize,
+                "lr" => self.lr = v.as_f64()? as f32,
+                "compressor" | "method" => {
+                    self.compressor = CompressorKind::parse(v.as_str()?)?
+                }
+                "budget_mult" => self.budget_mult = v.as_i64()? as usize,
+                "syn_steps" => self.syn_steps = v.as_i64()? as usize,
+                "lr_syn" => self.lr_syn = v.as_f64()? as f32,
+                "lambda" => self.lambda = v.as_f64()? as f32,
+                "error_feedback" | "ef" => self.error_feedback = v.as_bool()?,
+                "topk_rate" => self.topk_rate = v.as_f64()?,
+                "alpha" => self.alpha = v.as_f64()?,
+                "train_samples" => self.train_samples = v.as_i64()? as usize,
+                "test_samples" => self.test_samples = v.as_i64()? as usize,
+                "seed" => self.seed = v.as_i64()? as u64,
+                "eval_every" => self.eval_every = v.as_i64()? as usize,
+                "fedsynth_ksim" => self.fedsynth_ksim = v.as_i64()? as usize,
+                "fedsynth_lr_inner" => self.fedsynth_lr_inner = v.as_f64()? as f32,
+                "fedsynth_steps" => self.fedsynth_steps = v.as_i64()? as usize,
+                "fedsynth_lr_syn" => self.fedsynth_lr_syn = v.as_f64()? as f32,
+                "metrics_path" => self.metrics_path = v.as_str()?.to_string(),
+                other => bail!("unknown config key '{other}'"),
+            }
+        }
+        Ok(())
+    }
+
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let doc = parse_toml(text)?;
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_toml(&doc)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_toml_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml_str(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_validates() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let cfg = ExperimentConfig::from_toml_str(
+            r#"
+            name = "t2-mnist"
+            dataset = "synth_mnist"
+            compressor = "dgc"
+            n_clients = 20
+            rounds = 10
+            k = 5
+            lr = 0.01
+            ef = true
+            alpha = 0.5
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.name, "t2-mnist");
+        assert_eq!(cfg.dataset, DatasetKind::SynthMnist);
+        assert_eq!(cfg.compressor, CompressorKind::Dgc);
+        assert_eq!(cfg.n_clients, 20);
+        assert_eq!(cfg.model_key(), "mlp10");
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.k_local = 3;
+        assert!(cfg.validate().is_err());
+        cfg.k_local = 5;
+        cfg.budget_mult = 3;
+        assert!(cfg.validate().is_err());
+        assert!(ExperimentConfig::from_toml_str("bogus_key = 1").is_err());
+    }
+
+    #[test]
+    fn dataset_metadata_consistent() {
+        for ds in [
+            DatasetKind::SynthMnist,
+            DatasetKind::SynthEmnist,
+            DatasetKind::SynthFmnist,
+            DatasetKind::SynthCifar10,
+            DatasetKind::SynthCifar100,
+            DatasetKind::SynthSmall,
+        ] {
+            let (h, w, c) = ds.image_dims();
+            assert_eq!(h * w * c, ds.feature_len(), "{ds:?}");
+            assert!(ds.n_classes() >= 2);
+            assert!(DatasetKind::parse(ds.name()).unwrap() == ds);
+        }
+    }
+}

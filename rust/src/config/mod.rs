@@ -1,0 +1,8 @@
+//! Configuration system: a TOML-subset parser plus the typed
+//! [`ExperimentConfig`] every runner/bench consumes.
+
+pub mod experiment;
+pub mod toml;
+
+pub use experiment::{CompressorKind, DatasetKind, ExperimentConfig};
+pub use toml::{parse_toml, TomlValue};

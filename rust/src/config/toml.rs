@@ -1,0 +1,218 @@
+//! TOML-subset parser (offline substrate for the `toml` crate).
+//!
+//! Supported grammar — everything the experiment presets use:
+//! `[table]` / `[a.b]` headers, `key = value` with string, integer, float,
+//! boolean and flat-array values, `#` comments, blank lines.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+    pub fn as_i64(&self) -> Result<i64> {
+        match self {
+            TomlValue::Int(i) => Ok(*i),
+            _ => bail!("expected integer, got {self:?}"),
+        }
+    }
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            TomlValue::Float(f) => Ok(*f),
+            TomlValue::Int(i) => Ok(*i as f64),
+            _ => bail!("expected float, got {self:?}"),
+        }
+    }
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+}
+
+/// Flat map of `table.key -> value` (root keys have no prefix).
+pub type TomlDoc = BTreeMap<String, TomlValue>;
+
+pub fn parse_toml(input: &str) -> Result<TomlDoc> {
+    let mut doc = TomlDoc::new();
+    let mut prefix = String::new();
+    for (lineno, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow!("line {}: unclosed table header", lineno + 1))?
+                .trim();
+            if name.is_empty() {
+                bail!("line {}: empty table name", lineno + 1);
+            }
+            prefix = format!("{name}.");
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            bail!("line {}: empty key", lineno + 1);
+        }
+        let val = parse_value(line[eq + 1..].trim())
+            .map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+        doc.insert(format!("{prefix}{key}"), val);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let end = inner
+            .find('"')
+            .ok_or_else(|| anyhow!("unterminated string"))?;
+        return Ok(TomlValue::Str(inner[..end].to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow!("unterminated array"))?;
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(TomlValue::Arr(items));
+    }
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(i) = s.parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("cannot parse value '{s}'")
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_tables_and_scalars() {
+        let doc = parse_toml(
+            r#"
+            # experiment preset
+            name = "table2"
+            rounds = 40        # scaled down
+            lr = 0.01
+            non_iid = true
+
+            [dataset]
+            kind = "synth_mnist"
+            alpha = 0.5
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc["name"], TomlValue::Str("table2".into()));
+        assert_eq!(doc["rounds"], TomlValue::Int(40));
+        assert_eq!(doc["lr"], TomlValue::Float(0.01));
+        assert_eq!(doc["non_iid"], TomlValue::Bool(true));
+        assert_eq!(doc["dataset.kind"], TomlValue::Str("synth_mnist".into()));
+        assert_eq!(doc["dataset.alpha"], TomlValue::Float(0.5));
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let doc = parse_toml("ks = [1, 5, 10]\nnames = [\"a\", \"b\"]").unwrap();
+        assert_eq!(
+            doc["ks"],
+            TomlValue::Arr(vec![
+                TomlValue::Int(1),
+                TomlValue::Int(5),
+                TomlValue::Int(10)
+            ])
+        );
+        assert_eq!(
+            doc["names"],
+            TomlValue::Arr(vec![
+                TomlValue::Str("a".into()),
+                TomlValue::Str("b".into())
+            ])
+        );
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = parse_toml("k = \"a#b\"").unwrap();
+        assert_eq!(doc["k"], TomlValue::Str("a#b".into()));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_toml("[unclosed").is_err());
+        assert!(parse_toml("novalue").is_err());
+        assert!(parse_toml("k = ").is_err());
+    }
+}

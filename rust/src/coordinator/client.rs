@@ -1,0 +1,33 @@
+//! Per-client state: local data sampler, error-feedback memory, RNG.
+
+use crate::data::{ClientSampler, Dataset};
+use crate::util::rng::Rng;
+
+pub struct ClientState {
+    pub id: usize,
+    pub sampler: ClientSampler,
+    /// Error-feedback memory e_i^t (Eq. 6). All-zero when EF is disabled.
+    pub ef: Vec<f32>,
+    /// Client-local stream (synthetic-feature init etc.).
+    pub rng: Rng,
+    /// |D_i| — aggregation weight (the paper's weighted average G).
+    pub n_samples: usize,
+}
+
+impl ClientState {
+    pub fn new(id: usize, indices: Vec<u32>, n_params: usize, root_rng: &Rng) -> ClientState {
+        let n_samples = indices.len();
+        ClientState {
+            id,
+            sampler: ClientSampler::new(indices, root_rng.split(0xC11E00 + id as u64)),
+            ef: vec![0.0f32; n_params],
+            rng: root_rng.split(0xC11EFF + id as u64),
+            n_samples,
+        }
+    }
+
+    /// Sample the K×B local batches for one round.
+    pub fn sample_round(&mut self, ds: &Dataset, k: usize, b: usize) -> (Vec<f32>, Vec<i32>) {
+        self.sampler.sample_batches(ds, k, b)
+    }
+}

@@ -1,0 +1,198 @@
+//! The experiment driver: wires dataset → partition → clients → compressor
+//! → server into the paper's training loop (Algorithm 1).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::compress::{self, Compressor, EncodeCtx};
+use crate::config::{CompressorKind, ExperimentConfig};
+use crate::coordinator::{ClientState, MetricsSink, Server, Traffic};
+use crate::data::{dirichlet_partition, Dataset};
+use crate::runtime::{FedOps, Runtime};
+use crate::util::rng::Rng;
+use crate::util::vecmath;
+
+/// One round's observables.
+#[derive(Clone, Copy, Debug)]
+pub struct RoundRecord {
+    pub round: usize,
+    pub test_acc: f64,
+    pub test_loss: f64,
+    pub up_bytes_round: u64,
+    pub up_bytes_cum: u64,
+    /// Mean per-client compression efficiency cos(ĝ, g+e) (Fig 7).
+    pub efficiency: f64,
+    /// Compression ratio (× vs dense) of this round's payloads.
+    pub ratio: f64,
+    pub wall_ms: f64,
+}
+
+/// A fully-wired FL experiment.
+pub struct Experiment<'a> {
+    pub cfg: ExperimentConfig,
+    pub ops: FedOps<'a>,
+    pub server: Server,
+    pub clients: Vec<ClientState>,
+    pub compressor: Box<dyn Compressor>,
+    pub train: Dataset,
+    pub test: Dataset,
+    pub traffic: Traffic,
+    pub metrics: MetricsSink,
+}
+
+impl<'a> Experiment<'a> {
+    pub fn new(cfg: ExperimentConfig, rt: &'a Runtime) -> Result<Experiment<'a>> {
+        cfg.validate()?;
+        let ops = FedOps::new(rt, cfg.model_key())?;
+        let model = ops.model;
+        anyhow::ensure!(
+            model.feature_len() == cfg.dataset.feature_len(),
+            "model {} expects {} features, dataset {} provides {}",
+            model.name,
+            model.feature_len(),
+            cfg.dataset.name(),
+            cfg.dataset.feature_len()
+        );
+        anyhow::ensure!(
+            model.n_classes == cfg.dataset.n_classes(),
+            "model/dataset class count mismatch"
+        );
+
+        let root = Rng::new(cfg.seed);
+        // Same task (class templates) for both splits, disjoint sample streams.
+        let train = Dataset::generate_split(cfg.dataset, cfg.train_samples, cfg.seed, 0);
+        let test = Dataset::generate_split(cfg.dataset, cfg.test_samples, cfg.seed, 1);
+        let mut part_rng = root.split(0x9A87_1710);
+        let parts = dirichlet_partition(&train, cfg.n_clients, cfg.alpha, &mut part_rng);
+        let clients: Vec<ClientState> = parts
+            .into_iter()
+            .enumerate()
+            .map(|(i, idxs)| ClientState::new(i, idxs, model.params, &root))
+            .collect();
+
+        let w0 = rt.manifest.load_init(model)?;
+        let compressor = compress::build(&cfg, model);
+        let metrics = MetricsSink::new(&cfg.metrics_path)?;
+        Ok(Experiment {
+            cfg,
+            ops,
+            server: Server::new(w0),
+            clients,
+            compressor,
+            train,
+            test,
+            traffic: Traffic::default(),
+            metrics,
+        })
+    }
+
+    /// Run one communication round; returns the record (evaluation only on
+    /// eval rounds, otherwise acc/loss copy the previous record).
+    pub fn run_round(&mut self) -> Result<RoundRecord> {
+        let t0 = Instant::now();
+        let cfg = &self.cfg;
+        let model = self.ops.model;
+        let k = cfg.k_local;
+        let b = model.train_batch;
+        let w_global = self.server.w.clone();
+
+        let mut recons: Vec<Vec<f32>> = Vec::with_capacity(self.clients.len());
+        let mut weights: Vec<f32> = Vec::with_capacity(self.clients.len());
+        let mut round_bytes = 0u64;
+        let mut eff_sum = 0.0f64;
+        let mut ratio = 0.0f64;
+
+        for client in &mut self.clients {
+            // 1. Local training (Algorithm 1, lines 3-5).
+            let (xs, ys) = client.sample_round(&self.train, k, b);
+            let w_local = self.ops.local_train(k, &w_global, &xs, &ys, cfg.lr)?;
+            let g = vecmath::sub(&w_global, &w_local);
+
+            // 2. Error-feedback target (Eq. 6).
+            let mut target = g;
+            if cfg.error_feedback {
+                vecmath::add_assign(&mut target, &client.ef);
+            }
+
+            // 3. Compress.
+            let mut ctx = EncodeCtx {
+                ops: &self.ops,
+                w_global: &w_global,
+                rng: &mut client.rng,
+            };
+            let (payload, recon) = self.compressor.encode(&mut ctx, &target)?;
+
+            // 4. EF update: e ← target − ĝ.
+            if cfg.error_feedback {
+                client.ef = vecmath::sub(&target, &recon);
+            }
+
+            // 5. Traffic + efficiency accounting.
+            round_bytes += payload.wire_bytes() as u64;
+            ratio = payload.ratio(model.params);
+            eff_sum += vecmath::cosine(&recon, &target);
+            self.traffic.record_upload(payload.wire_bytes());
+
+            recons.push(recon);
+            weights.push(client.n_samples as f32);
+        }
+
+        // 6. Server aggregation + global step (Eq. 3).
+        self.server.apply_round(&recons, &weights);
+        self.traffic
+            .record_broadcast(model.params, self.clients.len());
+        self.traffic.end_round();
+
+        // 7. Evaluation.
+        let round = self.server.round;
+        let (test_loss, test_acc) = if round % self.cfg.eval_every.max(1) == 0 {
+            let (l, a) = self
+                .ops
+                .eval_dataset(&self.server.w, &self.test.features, &self.test.labels)?;
+            (l, a)
+        } else {
+            self.metrics
+                .last()
+                .map(|r| (r.test_loss, r.test_acc))
+                .unwrap_or((f64::NAN, f64::NAN))
+        };
+
+        let rec = RoundRecord {
+            round,
+            test_acc,
+            test_loss,
+            up_bytes_round: round_bytes,
+            up_bytes_cum: self.traffic.up_bytes,
+            efficiency: eff_sum / self.clients.len() as f64,
+            ratio,
+            wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+        };
+        self.metrics.push(rec)?;
+        Ok(rec)
+    }
+
+    /// Run the configured number of rounds; returns all records.
+    pub fn run(&mut self) -> Result<Vec<RoundRecord>> {
+        for _ in 0..self.cfg.rounds {
+            self.run_round()?;
+        }
+        self.metrics.flush()?;
+        Ok(self.metrics.records.clone())
+    }
+
+    /// Convenience label "method (ratio×)" like the paper's tables.
+    pub fn label(&self) -> String {
+        let ratio = self
+            .metrics
+            .last()
+            .map(|r| r.ratio)
+            .unwrap_or(f64::NAN);
+        format!("{} ({:.1}x)", self.compressor.name(), ratio)
+    }
+
+    /// Compressor-kind accessor for reporting.
+    pub fn kind(&self) -> CompressorKind {
+        self.cfg.compressor
+    }
+}

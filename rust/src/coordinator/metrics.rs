@@ -1,0 +1,64 @@
+//! Metrics sink: per-round records, optional JSONL file output.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+
+use anyhow::Result;
+
+use crate::util::json::ObjWriter;
+
+use super::experiment::RoundRecord;
+
+pub struct MetricsSink {
+    file: Option<BufWriter<File>>,
+    pub records: Vec<RoundRecord>,
+}
+
+impl MetricsSink {
+    /// `path = ""` keeps records in memory only.
+    pub fn new(path: &str) -> Result<MetricsSink> {
+        let file = if path.is_empty() {
+            None
+        } else {
+            Some(BufWriter::new(File::create(path)?))
+        };
+        Ok(MetricsSink { file, records: Vec::new() })
+    }
+
+    pub fn push(&mut self, rec: RoundRecord) -> Result<()> {
+        if let Some(f) = &mut self.file {
+            let line = ObjWriter::new()
+                .int("round", rec.round as i64)
+                .num("test_acc", rec.test_acc)
+                .num("test_loss", rec.test_loss)
+                .int("up_bytes_round", rec.up_bytes_round as i64)
+                .int("up_bytes_cum", rec.up_bytes_cum as i64)
+                .num("efficiency", rec.efficiency)
+                .num("ratio", rec.ratio)
+                .num("wall_ms", rec.wall_ms)
+                .finish();
+            writeln!(f, "{line}")?;
+        }
+        self.records.push(rec);
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        if let Some(f) = &mut self.file {
+            f.flush()?;
+        }
+        Ok(())
+    }
+
+    pub fn last(&self) -> Option<&RoundRecord> {
+        self.records.last()
+    }
+
+    /// Best (max) test accuracy seen.
+    pub fn best_acc(&self) -> f64 {
+        self.records
+            .iter()
+            .map(|r| r.test_acc)
+            .fold(f64::NAN, f64::max)
+    }
+}

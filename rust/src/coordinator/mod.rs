@@ -1,0 +1,20 @@
+//! The federated-learning coordinator (L3): clients, server, round
+//! scheduler, traffic accounting and metrics — the system the paper's
+//! compressors plug into.
+//!
+//! One process simulates the cluster (exactly like the paper's testbed,
+//! §5: "evaluated on a simulated 40 clients cluster"), but messages,
+//! byte accounting and client/server state are kept strictly separate so
+//! the compressors see the same interface a distributed deployment would.
+
+pub mod client;
+pub mod experiment;
+pub mod metrics;
+pub mod server;
+pub mod traffic;
+
+pub use client::ClientState;
+pub use experiment::{Experiment, RoundRecord};
+pub use metrics::MetricsSink;
+pub use server::Server;
+pub use traffic::Traffic;

@@ -1,0 +1,49 @@
+//! The FL server: holds the global model and applies the aggregated
+//! (reconstructed) gradients — Eq. 3/6.
+
+use crate::util::vecmath;
+
+pub struct Server {
+    /// Global flat weights w^t.
+    pub w: Vec<f32>,
+    pub round: usize,
+}
+
+impl Server {
+    pub fn new(w0: Vec<f32>) -> Server {
+        Server { w: w0, round: 0 }
+    }
+
+    /// Aggregate reconstructed gradients with the given weights (the paper's
+    /// G: weighted average, Σ weights normalized to 1) and step the model:
+    /// `w ← w − Σ_i λ_i ĝ_i`.
+    pub fn apply_round(&mut self, recons: &[Vec<f32>], weights: &[f32]) {
+        assert_eq!(recons.len(), weights.len());
+        assert!(!recons.is_empty());
+        let total: f64 = weights.iter().map(|&w| w as f64).sum();
+        assert!(total > 0.0);
+        let mut agg = vec![0.0f32; self.w.len()];
+        for (g, &wt) in recons.iter().zip(weights.iter()) {
+            vecmath::weighted_add(&mut agg, g, (wt as f64 / total) as f32);
+        }
+        vecmath::axpy(-1.0, &agg, &mut self.w);
+        self.round += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weighted_average_step() {
+        let mut s = Server::new(vec![1.0, 1.0]);
+        let g1 = vec![1.0f32, 0.0];
+        let g2 = vec![0.0f32, 2.0];
+        s.apply_round(&[g1, g2], &[3.0, 1.0]);
+        // agg = 0.75*[1,0] + 0.25*[0,2] = [0.75, 0.5]
+        assert!((s.w[0] - 0.25).abs() < 1e-6);
+        assert!((s.w[1] - 0.5).abs() < 1e-6);
+        assert_eq!(s.round, 1);
+    }
+}

@@ -1,0 +1,51 @@
+//! Communication accounting: exact bytes on the (simulated) wire.
+
+/// Cumulative traffic for one experiment.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Traffic {
+    /// Client→server payload bytes (the compressed uploads).
+    pub up_bytes: u64,
+    /// Server→client bytes (dense global-model broadcasts).
+    pub down_bytes: u64,
+    pub rounds: u64,
+}
+
+impl Traffic {
+    pub fn record_upload(&mut self, bytes: usize) {
+        self.up_bytes += bytes as u64;
+    }
+
+    pub fn record_broadcast(&mut self, n_params: usize, n_clients: usize) {
+        self.down_bytes += (4 * n_params * n_clients) as u64;
+    }
+
+    pub fn end_round(&mut self) {
+        self.rounds += 1;
+    }
+
+    /// Mean upload bytes per round.
+    pub fn up_per_round(&self) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            self.up_bytes as f64 / self.rounds as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accounting() {
+        let mut t = Traffic::default();
+        t.record_upload(100);
+        t.record_upload(50);
+        t.record_broadcast(10, 3);
+        t.end_round();
+        assert_eq!(t.up_bytes, 150);
+        assert_eq!(t.down_bytes, 120);
+        assert_eq!(t.up_per_round(), 150.0);
+    }
+}

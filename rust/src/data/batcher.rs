@@ -1,0 +1,98 @@
+//! Per-client batch sampling for the local-training fed-op.
+//!
+//! `local_train_K` consumes pre-batched tensors `xs: [K, B, ...]`,
+//! `ys: [K, B]`. The sampler cycles through the client's local indices
+//! with reshuffling on wrap-around (sampling without replacement per
+//! epoch), matching the usual DataLoader semantics.
+
+use crate::data::Dataset;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct ClientSampler {
+    indices: Vec<u32>,
+    cursor: usize,
+    rng: Rng,
+}
+
+impl ClientSampler {
+    pub fn new(mut indices: Vec<u32>, mut rng: Rng) -> Self {
+        assert!(!indices.is_empty(), "client has no data");
+        rng.shuffle(&mut indices);
+        ClientSampler { indices, cursor: 0, rng }
+    }
+
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    fn next_index(&mut self) -> u32 {
+        if self.cursor >= self.indices.len() {
+            self.rng.shuffle(&mut self.indices);
+            self.cursor = 0;
+        }
+        let i = self.indices[self.cursor];
+        self.cursor += 1;
+        i
+    }
+
+    /// Fill `k` batches of `b` samples: returns (xs, ys) flat buffers of
+    /// shapes [k*b*d] and [k*b].
+    pub fn sample_batches(
+        &mut self,
+        ds: &Dataset,
+        k: usize,
+        b: usize,
+    ) -> (Vec<f32>, Vec<i32>) {
+        let d = ds.d;
+        let mut xs = vec![0.0f32; k * b * d];
+        let mut ys = vec![0i32; k * b];
+        for s in 0..k * b {
+            let idx = self.next_index() as usize;
+            xs[s * d..(s + 1) * d].copy_from_slice(ds.sample(idx));
+            ys[s] = ds.label(idx);
+        }
+        (xs, ys)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DatasetKind;
+
+    #[test]
+    fn batches_have_right_shape_and_content() {
+        let ds = Dataset::generate(DatasetKind::SynthSmall, 30, 1);
+        let mut s = ClientSampler::new((0..30).collect(), Rng::new(2));
+        let (xs, ys) = s.sample_batches(&ds, 3, 8);
+        assert_eq!(xs.len(), 3 * 8 * ds.d);
+        assert_eq!(ys.len(), 24);
+        assert!(ys.iter().all(|&y| (y as usize) < ds.n_classes));
+    }
+
+    #[test]
+    fn epoch_without_replacement() {
+        let ds = Dataset::generate(DatasetKind::SynthSmall, 16, 1);
+        let mut s = ClientSampler::new((0..16).collect(), Rng::new(3));
+        let (_, ys) = s.sample_batches(&ds, 1, 16);
+        let mut seen: Vec<i32> = ys.clone();
+        seen.sort_unstable();
+        let mut expect: Vec<i32> = (0..16).map(|i| ds.label(i)).collect();
+        expect.sort_unstable();
+        assert_eq!(seen, expect, "one epoch must visit each sample once");
+    }
+
+    #[test]
+    fn tiny_client_wraps_around() {
+        let ds = Dataset::generate(DatasetKind::SynthSmall, 4, 1);
+        let mut s = ClientSampler::new(vec![0, 1, 2, 3], Rng::new(4));
+        let (xs, ys) = s.sample_batches(&ds, 2, 16); // 32 draws from 4 samples
+        assert_eq!(xs.len(), 2 * 16 * ds.d);
+        assert_eq!(ys.len(), 32);
+    }
+}

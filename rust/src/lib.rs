@@ -1,0 +1,54 @@
+//! # fed3sfc
+//!
+//! Production-quality reproduction of *"Communication-efficient Federated
+//! Learning with Single-Step Synthetic Features Compressor for Faster
+//! Convergence"* (Zhou et al., 2023).
+//!
+//! Three-layer architecture (see `DESIGN.md`):
+//!
+//! * **L3 (this crate)** — the federated-learning coordinator: clients,
+//!   server, round scheduler, the full compressor zoo (FedAvg / DGC /
+//!   signSGD / STC / 3SFC / FedSynth), error-feedback state, non-i.i.d.
+//!   data partitioning, traffic accounting, metrics, config and CLI.
+//! * **L2 (python/compile)** — jax fed-ops over flat parameter vectors,
+//!   AOT-lowered once to HLO text artifacts (`make artifacts`).
+//! * **L1 (python/compile/kernels)** — Pallas kernels (tiled matmul, fused
+//!   reductions, axpy) with second-order-capable custom vjps.
+//!
+//! At run time the rust binary loads `artifacts/*.hlo.txt` through the PJRT
+//! CPU client (`xla` crate) — python never runs on the round path.
+
+pub mod bench;
+pub mod cli;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod model;
+pub mod runtime;
+pub mod simnet;
+pub mod testing;
+pub mod util;
+
+pub use coordinator::experiment::{Experiment, RoundRecord};
+pub use runtime::Runtime;
+
+/// Default location of the AOT artifact directory, overridable with the
+/// `FED3SFC_ARTIFACTS` environment variable (used by tests/benches so they
+/// work from any cwd).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("FED3SFC_ARTIFACTS") {
+        return p.into();
+    }
+    // Walk up from cwd looking for `artifacts/manifest.json`.
+    let mut d = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = d.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !d.pop() {
+            return "artifacts".into();
+        }
+    }
+}

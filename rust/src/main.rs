@@ -1,0 +1,194 @@
+//! fed3sfc CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   run            run one FL experiment (flags or --config preset)
+//!   partition-viz  print the Fig-5-style Dirichlet partition histogram
+//!   list-models    list models/ops available in the artifact manifest
+//!   info           runtime/platform details
+//!
+//! Example:
+//!   fed3sfc run --dataset synth_mnist --compressor 3sfc --clients 10 \
+//!               --rounds 30 --k 5 --metrics run.jsonl
+
+use anyhow::{bail, Result};
+
+use fed3sfc::cli::Args;
+use fed3sfc::config::{CompressorKind, DatasetKind, ExperimentConfig};
+use fed3sfc::coordinator::experiment::Experiment;
+use fed3sfc::data::{dirichlet_partition, Dataset};
+use fed3sfc::runtime::Runtime;
+use fed3sfc::simnet::NetworkModel;
+use fed3sfc::util::rng::Rng;
+
+const USAGE: &str = "\
+fed3sfc — Single-Step Synthetic Features Compressor for federated learning
+
+USAGE: fed3sfc <run|partition-viz|list-models|info> [--options]
+
+run options:
+  --config PATH          TOML preset (flags below override it)
+  --dataset NAME         synth_mnist|synth_emnist|synth_fmnist|synth_cifar10|synth_cifar100|synth_small
+  --model NAME           manifest model key (default: dataset pairing)
+  --compressor NAME      fedavg|dgc|signsgd|stc|3sfc|fedsynth
+  --clients N --rounds N --k {1|5|10} --lr F
+  --budget-mult {1|2|4}  3SFC budget B, 2B, 4B (m = 1,2,4 samples)
+  --syn-steps N --lr-syn F --lambda F
+  --no-ef                disable error feedback (Table 4 ablation)
+  --topk-rate F          explicit DGC rate (Fig 1 sweeps)
+  --alpha F              Dirichlet concentration (default 0.5)
+  --train-samples N --test-samples N --seed N --eval-every N
+  --metrics PATH         write per-round JSONL
+
+partition-viz options: --dataset --clients --alpha --samples --seed
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(argv: Vec<String>) -> Result<()> {
+    let args = Args::parse(argv, &["no-ef", "help", "verbose"])?;
+    if args.has_flag("help") || args.subcommand.is_empty() {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    match args.subcommand.as_str() {
+        "run" => cmd_run(&args),
+        "partition-viz" => cmd_partition_viz(&args),
+        "list-models" => cmd_list_models(),
+        "info" => cmd_info(),
+        other => bail!("unknown subcommand '{other}' (try --help)"),
+    }
+}
+
+fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = if let Some(path) = args.get("config") {
+        ExperimentConfig::from_toml_file(path)?
+    } else {
+        ExperimentConfig::default()
+    };
+    if let Some(v) = args.get("dataset") {
+        cfg.dataset = DatasetKind::parse(v)?;
+    }
+    if let Some(v) = args.get("model") {
+        cfg.model = v.to_string();
+    }
+    if let Some(v) = args.get("compressor") {
+        cfg.compressor = CompressorKind::parse(v)?;
+    }
+    cfg.n_clients = args.get_usize("clients", cfg.n_clients)?;
+    cfg.rounds = args.get_usize("rounds", cfg.rounds)?;
+    cfg.k_local = args.get_usize("k", cfg.k_local)?;
+    cfg.lr = args.get_f64("lr", cfg.lr as f64)? as f32;
+    cfg.budget_mult = args.get_usize("budget-mult", cfg.budget_mult)?;
+    cfg.syn_steps = args.get_usize("syn-steps", cfg.syn_steps)?;
+    cfg.lr_syn = args.get_f64("lr-syn", cfg.lr_syn as f64)? as f32;
+    cfg.lambda = args.get_f64("lambda", cfg.lambda as f64)? as f32;
+    if args.has_flag("no-ef") {
+        cfg.error_feedback = false;
+    }
+    cfg.topk_rate = args.get_f64("topk-rate", cfg.topk_rate)?;
+    cfg.alpha = args.get_f64("alpha", cfg.alpha)?;
+    cfg.train_samples = args.get_usize("train-samples", cfg.train_samples)?;
+    cfg.test_samples = args.get_usize("test-samples", cfg.test_samples)?;
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    cfg.eval_every = args.get_usize("eval-every", cfg.eval_every)?;
+    if let Some(v) = args.get("metrics") {
+        cfg.metrics_path = v.to_string();
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args)?;
+    let rt = Runtime::open(&fed3sfc::artifacts_dir())?;
+    println!(
+        "fed3sfc run: {} on {} ({}), {} clients, {} rounds, K={}, method={}",
+        cfg.model_key(),
+        cfg.dataset.name(),
+        rt.platform(),
+        cfg.n_clients,
+        cfg.rounds,
+        cfg.k_local,
+        cfg.compressor.name(),
+    );
+    let mut exp = Experiment::new(cfg, &rt)?;
+    let net = NetworkModel::edge();
+    for _ in 0..exp.cfg.rounds {
+        let rec = exp.run_round()?;
+        println!(
+            "round {:>4}  acc {:.4}  loss {:.4}  up {:>10} B (cum {:>12})  eff {:.3}  ratio {:>8.1}x  {:>7.0} ms",
+            rec.round,
+            rec.test_acc,
+            rec.test_loss,
+            rec.up_bytes_round,
+            rec.up_bytes_cum,
+            rec.efficiency,
+            rec.ratio,
+            rec.wall_ms,
+        );
+    }
+    exp.metrics.flush()?;
+    let t = exp.traffic;
+    println!(
+        "done. best acc {:.4}; traffic up {} B / down {} B; modeled comm time (edge link): {:.1}s",
+        exp.metrics.best_acc(),
+        t.up_bytes,
+        t.down_bytes,
+        net.total_time_s(t.rounds, t.up_bytes, t.down_bytes, exp.clients.len()),
+    );
+    let st = rt.stats();
+    println!(
+        "runtime: {} compiles ({:.0} ms), {} executions ({:.0} ms)",
+        st.compiles, st.compile_ms, st.executions, st.execute_ms
+    );
+    Ok(())
+}
+
+fn cmd_partition_viz(args: &Args) -> Result<()> {
+    let dataset = DatasetKind::parse(args.get("dataset").unwrap_or("synth_mnist"))?;
+    let clients = args.get_usize("clients", 20)?;
+    let alpha = args.get_f64("alpha", 0.5)?;
+    let samples = args.get_usize("samples", 2000)?;
+    let seed = args.get_u64("seed", 42)?;
+    let ds = Dataset::generate(dataset, samples, seed);
+    let mut rng = Rng::new(seed).split(0x9A87_1710);
+    let parts = dirichlet_partition(&ds, clients, alpha, &mut rng);
+    println!(
+        "Dirichlet(alpha={alpha}) partition of {} ({} samples, {} classes) across {clients} clients:",
+        dataset.name(),
+        ds.n,
+        ds.n_classes
+    );
+    print!("{}", fed3sfc::data::partition::render_partition(&ds, &parts));
+    Ok(())
+}
+
+fn cmd_list_models() -> Result<()> {
+    let rt = Runtime::open(&fed3sfc::artifacts_dir())?;
+    for (name, m) in &rt.manifest.models {
+        println!(
+            "{name:<14} P={:<8} in={:?} classes={} batch={} ops: {}",
+            m.params,
+            m.input_shape,
+            m.n_classes,
+            m.train_batch,
+            m.ops.keys().cloned().collect::<Vec<_>>().join(", ")
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let dir = fed3sfc::artifacts_dir();
+    let rt = Runtime::open(&dir)?;
+    println!("artifacts: {}", dir.display());
+    println!("platform:  {}", rt.platform());
+    println!("models:    {}", rt.manifest.models.len());
+    Ok(())
+}

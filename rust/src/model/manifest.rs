@@ -1,0 +1,185 @@
+//! `artifacts/manifest.json` loader — every static shape the runtime needs.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json;
+
+/// One lowered fed-op variant.
+#[derive(Clone, Debug)]
+pub struct OpInfo {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    /// Local iterations K (train/fedsynth ops).
+    pub k: usize,
+    /// Batch size (train/grad/eval ops).
+    pub batch: usize,
+    /// Synthetic sample count m (syn/fedsynth ops).
+    pub m: usize,
+}
+
+/// One model's artifact set.
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    pub params: usize,
+    pub input_shape: Vec<usize>,
+    pub n_classes: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub init_file: String,
+    pub ops: BTreeMap<String, OpInfo>,
+}
+
+impl ModelInfo {
+    pub fn feature_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    pub fn op(&self, name: &str) -> Result<&OpInfo> {
+        self.ops
+            .get(name)
+            .ok_or_else(|| anyhow!("model '{}' has no op '{name}'", self.name))
+    }
+
+    /// 3SFC payload bytes for m synthetic samples: m·(d+C)+1 floats (Eq. 7's
+    /// ‖D‖₀ + 1 budget accounting).
+    pub fn syn_payload_bytes(&self, m: usize) -> usize {
+        4 * (m * (self.feature_len() + self.n_classes) + 1)
+    }
+
+    /// Uncompressed gradient payload (4P bytes).
+    pub fn dense_payload_bytes(&self) -> usize {
+        4 * self.params
+    }
+}
+
+/// The whole artifact directory.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelInfo>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let root = json::parse(text)?;
+        let mut models = BTreeMap::new();
+        for (name, mv) in root.req("models")?.as_obj()? {
+            let mut ops = BTreeMap::new();
+            for (op_name, ov) in mv.req("ops")?.as_obj()? {
+                ops.insert(
+                    op_name.clone(),
+                    OpInfo {
+                        name: op_name.clone(),
+                        file: ov.req("file")?.as_str()?.to_string(),
+                        kind: ov.req("kind")?.as_str()?.to_string(),
+                        k: ov.get("k").map(|v| v.as_usize()).transpose()?.unwrap_or(0),
+                        batch: ov
+                            .get("batch")
+                            .map(|v| v.as_usize())
+                            .transpose()?
+                            .unwrap_or(0),
+                        m: ov.get("m").map(|v| v.as_usize()).transpose()?.unwrap_or(0),
+                    },
+                );
+            }
+            let input_shape = mv
+                .req("input_shape")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_usize())
+                .collect::<Result<Vec<_>>>()?;
+            models.insert(
+                name.clone(),
+                ModelInfo {
+                    name: name.clone(),
+                    params: mv.req("params")?.as_usize()?,
+                    input_shape,
+                    n_classes: mv.req("n_classes")?.as_usize()?,
+                    train_batch: mv.req("train_batch")?.as_usize()?,
+                    eval_batch: mv.req("eval_batch")?.as_usize()?,
+                    init_file: mv.req("init")?.as_str()?.to_string(),
+                    ops,
+                },
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("manifest has no model '{name}'"))
+    }
+
+    /// Load a model's packed initial weights.
+    pub fn load_init(&self, model: &ModelInfo) -> Result<Vec<f32>> {
+        let path = self.dir.join(&model.init_file);
+        let bytes = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+        anyhow::ensure!(
+            bytes.len() == model.params * 4,
+            "init file {} has {} bytes, expected {}",
+            model.init_file,
+            bytes.len(),
+            model.params * 4
+        );
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{
+      "version": 1,
+      "models": {
+        "mlp_small": {
+          "params": 2344,
+          "input_shape": [64],
+          "n_classes": 8,
+          "train_batch": 16,
+          "eval_batch": 50,
+          "init": "mlp_small.init.bin",
+          "ops": {
+            "train_k5": {"file": "mlp_small__train_k5.hlo.txt", "kind": "train", "k": 5, "batch": 16},
+            "syn_step_m1": {"file": "mlp_small__syn_step_m1.hlo.txt", "kind": "syn_step", "m": 1}
+          }
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_models_and_ops() {
+        let m = Manifest::parse(Path::new("/tmp"), DOC).unwrap();
+        let mdl = m.model("mlp_small").unwrap();
+        assert_eq!(mdl.params, 2344);
+        assert_eq!(mdl.feature_len(), 64);
+        assert_eq!(mdl.op("train_k5").unwrap().k, 5);
+        assert_eq!(mdl.op("syn_step_m1").unwrap().m, 1);
+        assert!(mdl.op("nope").is_err());
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn payload_math() {
+        let m = Manifest::parse(Path::new("/tmp"), DOC).unwrap();
+        let mdl = m.model("mlp_small").unwrap();
+        assert_eq!(mdl.syn_payload_bytes(1), 4 * (64 + 8 + 1));
+        assert_eq!(mdl.dense_payload_bytes(), 4 * 2344);
+    }
+}

@@ -1,0 +1,6 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime. Parsed from `artifacts/manifest.json`.
+
+pub mod manifest;
+
+pub use manifest::{Manifest, ModelInfo, OpInfo};

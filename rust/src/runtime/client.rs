@@ -1,0 +1,93 @@
+//! The PJRT runtime handle: client + manifest + lazy executable cache.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::model::{Manifest, ModelInfo};
+
+/// Counters for the runtime hot path (perf visibility, EXPERIMENTS §Perf).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RuntimeStats {
+    pub compiles: u64,
+    pub executions: u64,
+    pub compile_ms: f64,
+    pub execute_ms: f64,
+}
+
+/// Owns the PJRT CPU client and the compiled-executable cache.
+///
+/// Single-threaded by design: the `xla` crate's client is not `Send`, and
+/// the simulated cluster schedules clients sequentially (DESIGN.md §3).
+pub struct Runtime {
+    client: PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (see [`crate::artifacts_dir`]).
+    pub fn open(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        *self.stats.borrow()
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.manifest.model(name)
+    }
+
+    /// Compile (or fetch from cache) the executable for `file`.
+    pub fn executable(&self, file: &str) -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(file) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.dir.join(file);
+        let t0 = Instant::now();
+        let proto = HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {file}"))?,
+        );
+        let mut st = self.stats.borrow_mut();
+        st.compiles += 1;
+        st.compile_ms += t0.elapsed().as_secs_f64() * 1e3;
+        self.cache.borrow_mut().insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact with the given input literals; returns the
+    /// flattened output tuple (aot.py lowers with `return_tuple=True`).
+    pub fn execute(&self, file: &str, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        let exe = self.executable(file)?;
+        let t0 = Instant::now();
+        let result = exe.execute::<Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        let mut st = self.stats.borrow_mut();
+        st.executions += 1;
+        st.execute_ms += t0.elapsed().as_secs_f64() * 1e3;
+        Ok(lit.to_tuple()?)
+    }
+}

@@ -1,0 +1,76 @@
+//! `Vec<f32>` / `Vec<i32>` ⇄ `xla::Literal` marshalling.
+
+use anyhow::{ensure, Result};
+use xla::{ElementType, Literal};
+
+fn bytes_of_f32(data: &[f32]) -> &[u8] {
+    // f32 slices are plain-old-data; reinterpret for the untyped-literal API.
+    unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) }
+}
+
+fn bytes_of_i32(data: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) }
+}
+
+/// f32 literal of the given logical shape.
+pub fn f32_literal(dims: &[usize], data: &[f32]) -> Result<Literal> {
+    let n: usize = dims.iter().product();
+    ensure!(n == data.len(), "shape {dims:?} != data len {}", data.len());
+    Ok(Literal::create_from_shape_and_untyped_data(
+        ElementType::F32,
+        dims,
+        bytes_of_f32(data),
+    )?)
+}
+
+/// i32 literal of the given logical shape.
+pub fn i32_literal(dims: &[usize], data: &[i32]) -> Result<Literal> {
+    let n: usize = dims.iter().product();
+    ensure!(n == data.len(), "shape {dims:?} != data len {}", data.len());
+    Ok(Literal::create_from_shape_and_untyped_data(
+        ElementType::S32,
+        dims,
+        bytes_of_i32(data),
+    )?)
+}
+
+/// Rank-0 f32 scalar.
+pub fn scalar_f32(v: f32) -> Result<Literal> {
+    f32_literal(&[], std::slice::from_ref(&v))
+}
+
+/// Read back a full f32 literal.
+pub fn to_f32s(lit: &Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Read back a scalar f32 literal.
+pub fn to_scalar_f32(lit: &Literal) -> Result<f32> {
+    let v = lit.to_vec::<f32>()?;
+    ensure!(v.len() == 1, "expected scalar, got {} elements", v.len());
+    Ok(v[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let data = vec![1.5f32, -2.0, 0.25, 7.0, 0.0, 9.5];
+        let lit = f32_literal(&[2, 3], &data).unwrap();
+        assert_eq!(to_f32s(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let lit = scalar_f32(3.25).unwrap();
+        assert_eq!(to_scalar_f32(&lit).unwrap(), 3.25);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(f32_literal(&[2, 2], &[1.0, 2.0, 3.0]).is_err());
+        assert!(i32_literal(&[5], &[1, 2, 3]).is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: loads AOT HLO-text artifacts and executes them.
+//!
+//! The bridge (see /opt/xla-example and DESIGN.md §2): python lowers each
+//! fed-op to HLO **text**; here `HloModuleProto::from_text_file` parses it,
+//! `PjRtClient::cpu().compile` produces an executable, and typed wrappers
+//! in [`fedops`] marshal flat `Vec<f32>`/`Vec<i32>` buffers in and out.
+//! Executables are compiled lazily and cached per op.
+
+pub mod client;
+pub mod fedops;
+pub mod literal;
+
+pub use client::Runtime;
+pub use fedops::FedOps;

@@ -1,0 +1,73 @@
+//! Network simulator: converts byte counts into wall-clock communication
+//! time under a bandwidth/latency model — the paper's motivation is that
+//! FL clients sit on slow, unreliable links (§1), so benches report the
+//! *modeled* time-to-accuracy, not just bytes.
+
+/// A symmetric-per-client link model.
+#[derive(Clone, Copy, Debug)]
+pub struct NetworkModel {
+    /// Client uplink, bits/second.
+    pub up_bps: f64,
+    /// Client downlink, bits/second.
+    pub down_bps: f64,
+    /// One-way latency, seconds.
+    pub latency_s: f64,
+}
+
+impl NetworkModel {
+    /// A typical constrained edge client: 10 Mbps up, 50 Mbps down, 30 ms.
+    pub fn edge() -> NetworkModel {
+        NetworkModel { up_bps: 10e6, down_bps: 50e6, latency_s: 0.030 }
+    }
+
+    /// Datacenter-ish link for contrast.
+    pub fn datacenter() -> NetworkModel {
+        NetworkModel { up_bps: 10e9, down_bps: 10e9, latency_s: 0.0005 }
+    }
+
+    /// Time for one synchronous round: clients transfer in parallel, so the
+    /// round cost is the slowest (= any, uniform) client's up+down time.
+    pub fn round_time_s(&self, up_bytes_per_client: f64, down_bytes_per_client: f64) -> f64 {
+        let up = 8.0 * up_bytes_per_client / self.up_bps;
+        let down = 8.0 * down_bytes_per_client / self.down_bps;
+        up + down + 2.0 * self.latency_s
+    }
+
+    /// Total modeled communication time for an experiment.
+    pub fn total_time_s(
+        &self,
+        rounds: u64,
+        up_bytes_total: u64,
+        down_bytes_total: u64,
+        n_clients: usize,
+    ) -> f64 {
+        if rounds == 0 || n_clients == 0 {
+            return 0.0;
+        }
+        let per_round_up = up_bytes_total as f64 / rounds as f64 / n_clients as f64;
+        let per_round_down = down_bytes_total as f64 / rounds as f64 / n_clients as f64;
+        rounds as f64 * self.round_time_s(per_round_up, per_round_down)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smaller_payloads_are_faster() {
+        let net = NetworkModel::edge();
+        let slow = net.round_time_s(800_000.0, 800_000.0);
+        let fast = net.round_time_s(300.0, 800_000.0);
+        assert!(fast < slow);
+        assert!(fast > 2.0 * net.latency_s);
+    }
+
+    #[test]
+    fn totals_scale_linearly_in_rounds() {
+        let net = NetworkModel::edge();
+        let t1 = net.total_time_s(10, 1_000_000, 1_000_000, 10);
+        let t2 = net.total_time_s(20, 2_000_000, 2_000_000, 10);
+        assert!((t2 / t1 - 2.0).abs() < 1e-9);
+    }
+}

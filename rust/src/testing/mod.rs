@@ -1,0 +1,3 @@
+//! Testing substrates (offline replacement for `proptest`).
+
+pub mod prop;

@@ -1,0 +1,95 @@
+//! Mini property-testing harness.
+//!
+//! `check` runs a property across many seeded cases; on failure it retries
+//! the failing case with progressively simpler sizes (shrinking-lite) and
+//! reports the smallest reproducing seed/size so the case can be replayed
+//! deterministically.
+
+use crate::util::rng::Rng;
+
+/// Per-case context handed to properties.
+pub struct Case {
+    pub rng: Rng,
+    /// Suggested problem size for this case (grows with the case index).
+    pub size: usize,
+    pub seed: u64,
+}
+
+impl Case {
+    /// Random f32 vector with values in roughly [-scale, scale].
+    pub fn vec_f32(&mut self, len: usize, scale: f32) -> Vec<f32> {
+        (0..len)
+            .map(|_| (self.rng.f32() * 2.0 - 1.0) * scale)
+            .collect()
+    }
+
+    /// Random length in [1, max].
+    pub fn len(&mut self, max: usize) -> usize {
+        1 + self.rng.below(max.max(1))
+    }
+}
+
+/// Run `cases` instances of `prop`. Panics with the failing seed/size.
+pub fn check<F>(name: &str, cases: usize, prop: F)
+where
+    F: Fn(&mut Case) -> Result<(), String>,
+{
+    for i in 0..cases {
+        let seed = 0x9E3779B97F4A7C15u64.wrapping_mul(i as u64 + 1);
+        let size = 2 + i * 7 % 97;
+        let mut case = Case { rng: Rng::new(seed), size, seed };
+        if let Err(msg) = prop(&mut case) {
+            // Shrinking-lite: try smaller sizes with the same seed to
+            // report the simplest failing configuration.
+            let mut simplest = (size, msg.clone());
+            let mut s = size;
+            while s > 2 {
+                s /= 2;
+                let mut c = Case { rng: Rng::new(seed), size: s, seed };
+                if let Err(m) = prop(&mut c) {
+                    simplest = (s, m);
+                }
+            }
+            panic!(
+                "property '{name}' failed (seed={seed:#x}, size={}): {}",
+                simplest.0, simplest.1
+            );
+        }
+    }
+}
+
+/// Assert two f32 slices are elementwise close.
+pub fn assert_close(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        if (x - y).abs() > tol * (1.0 + x.abs().max(y.abs())) {
+            return Err(format!("elem {i}: {x} vs {y}"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("reverse-reverse", 50, |c| {
+            let n = c.len(64);
+            let v = c.vec_f32(n, 1.0);
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            assert_close(&v, &w, 0.0)
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn failing_property_reports_seed() {
+        check("always-fails", 3, |_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,10 @@
+//! Shared substrates: PRNG, vector math, statistics, minimal JSON.
+//!
+//! The offline registry only carries the `xla` crate closure, so the usual
+//! `rand` / `serde_json` / `statrs` stack is reimplemented here to exactly
+//! the extent the system needs — each piece unit-tested in its module.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod vecmath;

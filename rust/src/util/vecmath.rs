@@ -1,0 +1,171 @@
+//! Flat f32 vector math — the L3 hot path.
+//!
+//! The coordinator manipulates parameter-sized vectors (P up to ~200k)
+//! every round: error-feedback accumulation, aggregation, reconstruction
+//! scaling, cosine-efficiency metrics. Loops are written 4-way unrolled
+//! over chunks so LLVM auto-vectorizes them; see EXPERIMENTS.md §Perf.
+
+/// `a · b`
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f64; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        acc[0] += a[j] as f64 * b[j] as f64;
+        acc[1] += a[j + 1] as f64 * b[j + 1] as f64;
+        acc[2] += a[j + 2] as f64 * b[j + 2] as f64;
+        acc[3] += a[j + 3] as f64 * b[j + 3] as f64;
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for j in chunks * 4..a.len() {
+        s += a[j] as f64 * b[j] as f64;
+    }
+    s
+}
+
+/// `‖a‖²`
+#[inline]
+pub fn norm2(a: &[f32]) -> f64 {
+    dot(a, a)
+}
+
+/// `‖a‖`
+#[inline]
+pub fn norm(a: &[f32]) -> f64 {
+    norm2(a).sqrt()
+}
+
+/// Cosine similarity; 0 when either vector is (near-)zero.
+pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    let na = norm2(a);
+    let nb = norm2(b);
+    if na <= 1e-30 || nb <= 1e-30 {
+        return 0.0;
+    }
+    dot(a, b) / (na.sqrt() * nb.sqrt())
+}
+
+/// `y += alpha * x`
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `y = a - b` elementwise into a fresh vector.
+pub fn sub(a: &[f32], b: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b.iter()).map(|(x, y)| x - y).collect()
+}
+
+/// `a += b`
+pub fn add_assign(a: &mut [f32], b: &[f32]) {
+    axpy(1.0, b, a)
+}
+
+/// `a *= s`
+pub fn scale_assign(a: &mut [f32], s: f32) {
+    for v in a.iter_mut() {
+        *v *= s;
+    }
+}
+
+/// Weighted accumulate: `acc += w * x` (aggregation inner loop).
+pub fn weighted_add(acc: &mut [f32], x: &[f32], w: f32) {
+    axpy(w, x, acc)
+}
+
+/// Index of the k-th largest |value| via quickselect (O(n) average).
+/// Returns the magnitude threshold; ties included above it may exceed k —
+/// callers slice to exactly k.
+pub fn kth_magnitude(values: &[f32], k: usize) -> f32 {
+    assert!(k >= 1 && k <= values.len());
+    let mut mags: Vec<f32> = values.iter().map(|v| v.abs()).collect();
+    let idx = mags.len() - k; // k-th largest == (n-k)-th smallest
+    let (_, kth, _) =
+        mags.select_nth_unstable_by(idx, |a, b| a.partial_cmp(b).unwrap());
+    *kth
+}
+
+/// Top-k indices by |value|, ascending index order. O(n + k log k).
+pub fn topk_indices(values: &[f32], k: usize) -> Vec<u32> {
+    let k = k.min(values.len()).max(1);
+    let thr = kth_magnitude(values, k);
+    let mut idx: Vec<u32> = Vec::with_capacity(k + 16);
+    // First take strictly-above-threshold, then fill ties at the threshold.
+    for (i, v) in values.iter().enumerate() {
+        if v.abs() > thr {
+            idx.push(i as u32);
+        }
+    }
+    if idx.len() < k {
+        for (i, v) in values.iter().enumerate() {
+            if v.abs() == thr {
+                idx.push(i as u32);
+                if idx.len() == k {
+                    break;
+                }
+            }
+        }
+    }
+    idx.truncate(k);
+    idx.sort_unstable();
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f32> = (0..103).map(|i| (i as f32).sin()).collect();
+        let b: Vec<f32> = (0..103).map(|i| (i as f32).cos()).collect();
+        let naive: f64 = a.iter().zip(&b).map(|(x, y)| (*x as f64) * (*y as f64)).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cosine_basics() {
+        let a = [1.0f32, 0.0];
+        let b = [0.0f32, 2.0];
+        assert!(cosine(&a, &a) > 0.999999);
+        assert!(cosine(&a, &b).abs() < 1e-9);
+        assert!(cosine(&a, &[0.0, 0.0]) == 0.0);
+    }
+
+    #[test]
+    fn axpy_works() {
+        let x = [1.0f32, 2.0, 3.0];
+        let mut y = [10.0f32, 10.0, 10.0];
+        axpy(0.5, &x, &mut y);
+        assert_eq!(y, [10.5, 11.0, 11.5]);
+    }
+
+    #[test]
+    fn topk_selects_largest_magnitudes() {
+        let v = [0.1f32, -5.0, 3.0, 0.0, -2.0, 4.0];
+        let idx = topk_indices(&v, 3);
+        assert_eq!(idx, vec![1, 2, 5]);
+    }
+
+    #[test]
+    fn topk_handles_ties_and_k_equals_n() {
+        let v = [1.0f32, 1.0, 1.0, 1.0];
+        let idx = topk_indices(&v, 2);
+        assert_eq!(idx.len(), 2);
+        let idx = topk_indices(&v, 4);
+        assert_eq!(idx, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn kth_magnitude_orders() {
+        let v = [3.0f32, -1.0, 2.0, -4.0];
+        assert_eq!(kth_magnitude(&v, 1), 4.0);
+        assert_eq!(kth_magnitude(&v, 2), 3.0);
+        assert_eq!(kth_magnitude(&v, 4), 1.0);
+    }
+}

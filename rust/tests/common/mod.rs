@@ -1,0 +1,23 @@
+//! Shared helpers for integration tests.
+//!
+//! The PJRT CPU client spins up thread pools; tests serialize runtime
+//! creation behind a global lock so parallel test threads don't stack
+//! clients (the `xla` client is !Send, so each test builds its own).
+
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use fed3sfc::runtime::Runtime;
+
+static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+
+/// Grab the runtime serialization lock (held for the whole test).
+pub fn lock() -> MutexGuard<'static, ()> {
+    match LOCK.get_or_init(|| Mutex::new(())).lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+pub fn runtime() -> Runtime {
+    Runtime::open(&fed3sfc::artifacts_dir()).expect("run `make artifacts` first")
+}

@@ -1,0 +1,222 @@
+//! Compressor zoo integration: encode/decode agreement, byte budgets,
+//! error-feedback telescoping, and the paper's budget-matching protocol.
+
+mod common;
+
+use fed3sfc::compress::{
+    Compressor, DecodeCtx, EncodeCtx, FedSynth, Identity, Payload, SignSgd, Stc, ThreeSfc, TopK,
+};
+use fed3sfc::runtime::FedOps;
+use fed3sfc::util::rng::Rng;
+use fed3sfc::util::vecmath;
+
+fn target_vec(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut v = vec![0.0f32; n];
+    rng.fill_normal(&mut v, 0.01);
+    // make it heavy-tailed like real gradients
+    for (i, x) in v.iter_mut().enumerate() {
+        if i % 97 == 0 {
+            *x *= 20.0;
+        }
+    }
+    v
+}
+
+/// encode() must return exactly what decode() reconstructs — the
+/// client-side EF update and the server-side aggregation must agree.
+fn assert_encode_decode_agree(comp: &mut dyn Compressor) {
+    let _g = common::lock();
+    let rt = common::runtime();
+    let ops = FedOps::new(&rt, "mlp_small").unwrap();
+    let w = rt.manifest.load_init(ops.model).unwrap();
+    let target = target_vec(ops.model.params, 5);
+    let mut rng = Rng::new(11);
+    let mut ctx = EncodeCtx { ops: &ops, w_global: &w, rng: &mut rng };
+    let (payload, recon) = comp.encode(&mut ctx, &target).unwrap();
+    let dctx = DecodeCtx { ops: &ops, w_global: &w };
+    let decoded = comp.decode(&dctx, &payload).unwrap();
+    assert_eq!(recon.len(), target.len());
+    for (a, b) in recon.iter().zip(decoded.iter()) {
+        assert!((a - b).abs() <= 1e-6 * (1.0 + a.abs()), "{a} vs {b}");
+    }
+}
+
+#[test]
+fn identity_roundtrip() {
+    assert_encode_decode_agree(&mut Identity::new());
+}
+
+#[test]
+fn topk_roundtrip() {
+    assert_encode_decode_agree(&mut TopK::new(37));
+}
+
+#[test]
+fn signsgd_roundtrip() {
+    assert_encode_decode_agree(&mut SignSgd::new());
+}
+
+#[test]
+fn stc_roundtrip() {
+    assert_encode_decode_agree(&mut Stc::new(53));
+}
+
+#[test]
+fn threesfc_roundtrip() {
+    assert_encode_decode_agree(&mut ThreeSfc::new(1, 5, 5.0, 0.0));
+}
+
+#[test]
+fn fedsynth_roundtrip() {
+    assert_encode_decode_agree(&mut FedSynth::new(2, 1, 3, 0.05, 0.5));
+}
+
+#[test]
+fn byte_budgets_match_paper_protocol() {
+    let _g = common::lock();
+    let rt = common::runtime();
+    let model = rt.model("mlp10").unwrap();
+    let n = model.params;
+
+    // 3SFC m=1 on the paper MLP: (784+10+1+... )·4 bytes ≈ 250× ratio.
+    let syn = Payload::Syn {
+        m: 1,
+        dx: vec![0.0; 784],
+        dy: vec![0.0; 10],
+        s: 1.0,
+    };
+    let ratio = syn.ratio(n);
+    assert!(
+        (200.0..300.0).contains(&ratio),
+        "paper reports 250x for MLP, got {ratio:.1}x"
+    );
+
+    // signSGD is pinned at ~32×.
+    let sign = Payload::Sign { n, bits: vec![0; n.div_ceil(8)], scale: 1.0 };
+    let r = sign.ratio(n);
+    assert!((30.0..33.0).contains(&r), "{r}");
+
+    // STC::with_rate(1/32) should land within 5% of 32×.
+    let stc = Stc::with_rate(n, 1.0 / 32.0);
+    let k = stc.k();
+    let tern = Payload::Ternary {
+        n,
+        idx: vec![0; k],
+        neg: vec![0; k.div_ceil(8)],
+        mu: 1.0,
+    };
+    let r = tern.ratio(n);
+    assert!((30.0..34.0).contains(&r), "{r}");
+}
+
+#[test]
+fn topk_respects_budget_and_picks_largest() {
+    let _g = common::lock();
+    let rt = common::runtime();
+    let ops = FedOps::new(&rt, "mlp_small").unwrap();
+    let w = rt.manifest.load_init(ops.model).unwrap();
+    let target = target_vec(ops.model.params, 6);
+    let mut rng = Rng::new(12);
+    let mut comp = TopK::new(10);
+    let mut ctx = EncodeCtx { ops: &ops, w_global: &w, rng: &mut rng };
+    let (payload, recon) = comp.encode(&mut ctx, &target).unwrap();
+    let Payload::TopK { idx, val, .. } = &payload else { panic!() };
+    assert_eq!(idx.len(), 10);
+    assert_eq!(val.len(), 10);
+    let kept_min = val.iter().map(|v| v.abs()).fold(f32::INFINITY, f32::min);
+    let dropped_max = target
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| !idx.contains(&(*i as u32)))
+        .map(|(_, v)| v.abs())
+        .fold(0.0f32, f32::max);
+    assert!(kept_min >= dropped_max);
+    // reconstruction error is exactly the dropped mass
+    let err = vecmath::sub(&target, &recon);
+    let e2 = vecmath::norm2(&err);
+    let t2 = vecmath::norm2(&target);
+    let kept2: f64 = val.iter().map(|&v| (v as f64) * (v as f64)).sum();
+    assert!((e2 - (t2 - kept2)).abs() < 1e-6 * t2);
+}
+
+#[test]
+fn error_feedback_telescopes() {
+    // Σ_t recon_t + e_T = Σ_t target-contributions + e_0: nothing is lost,
+    // only delayed — the EF invariant that makes compression unbiased in
+    // the limit.
+    let _g = common::lock();
+    let rt = common::runtime();
+    let ops = FedOps::new(&rt, "mlp_small").unwrap();
+    let w = rt.manifest.load_init(ops.model).unwrap();
+    let n = ops.model.params;
+    let mut comp = TopK::new(20);
+    let mut rng = Rng::new(13);
+
+    let mut ef = vec![0.0f32; n];
+    let mut sum_g = vec![0.0f32; n];
+    let mut sum_recon = vec![0.0f32; n];
+    for t in 0..5 {
+        let g = target_vec(n, 100 + t);
+        vecmath::add_assign(&mut sum_g, &g);
+        let mut target = g.clone();
+        vecmath::add_assign(&mut target, &ef);
+        let mut ctx = EncodeCtx { ops: &ops, w_global: &w, rng: &mut rng };
+        let (_, recon) = comp.encode(&mut ctx, &target).unwrap();
+        ef = vecmath::sub(&target, &recon);
+        vecmath::add_assign(&mut sum_recon, &recon);
+    }
+    // sum_recon + ef == sum_g  (telescoping)
+    let mut lhs = sum_recon.clone();
+    vecmath::add_assign(&mut lhs, &ef);
+    for (a, b) in lhs.iter().zip(sum_g.iter()) {
+        assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "{a} vs {b}");
+    }
+}
+
+#[test]
+fn threesfc_scale_is_l2_optimal() {
+    let g_syn = vec![1.0f32, 2.0, -1.0, 0.5];
+    let target = vec![2.0f32, 3.9, -2.1, 1.2];
+    let s = ThreeSfc::optimal_scale(&target, &g_syn);
+    let err = |sc: f32| -> f64 {
+        g_syn
+            .iter()
+            .zip(target.iter())
+            .map(|(g, t)| ((sc * g - t) as f64).powi(2))
+            .sum()
+    };
+    let e_star = err(s);
+    for ds in [-0.05f32, 0.05, -0.2, 0.2] {
+        assert!(e_star <= err(s + ds) + 1e-9);
+    }
+    // degenerate gradient → zero scale, no NaN
+    assert_eq!(ThreeSfc::optimal_scale(&target, &[0.0; 4]), 0.0);
+}
+
+#[test]
+fn threesfc_reconstruction_correlates_with_target() {
+    let _g = common::lock();
+    let rt = common::runtime();
+    let ops = FedOps::new(&rt, "mlp_small").unwrap();
+    let w = rt.manifest.load_init(ops.model).unwrap();
+    // realistic target: an actual local-training delta
+    let mut rng = Rng::new(21);
+    let mut x = vec![0.0f32; 5 * ops.model.train_batch * ops.model.feature_len()];
+    rng.fill_normal(&mut x, 1.0);
+    let y: Vec<i32> = (0..5 * ops.model.train_batch)
+        .map(|i| (i % ops.model.n_classes) as i32)
+        .collect();
+    let w_local = ops.local_train(5, &w, &x, &y, 0.05).unwrap();
+    let target = vecmath::sub(&w, &w_local);
+
+    let mut comp = ThreeSfc::new(1, 25, 5.0, 0.0);
+    let mut ctx = EncodeCtx { ops: &ops, w_global: &w, rng: &mut rng };
+    let (payload, recon) = comp.encode(&mut ctx, &target).unwrap();
+    let cos = vecmath::cosine(&recon, &target);
+    assert!(cos > 0.2, "3SFC reconstruction cosine too low: {cos}");
+    assert!(comp.last_cos > 0.2);
+    // scale must be applied: recon ≈ s * syn_grad
+    let Payload::Syn { s, .. } = payload else { panic!() };
+    assert!(s.is_finite() && s != 0.0);
+}

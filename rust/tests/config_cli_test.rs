@@ -1,0 +1,136 @@
+//! Config/CLI system integration: presets parse into valid experiments,
+//! every paper table's settings are expressible, errors are caught early.
+
+use fed3sfc::config::{CompressorKind, DatasetKind, ExperimentConfig};
+
+#[test]
+fn paper_table2_presets_are_expressible() {
+    // One preset per Table 2 panel cell family.
+    for (ds, model) in [
+        ("synth_mnist", "mlp10"),
+        ("synth_emnist", "mlp26"),
+        ("synth_fmnist", "mnistnet"),
+        ("synth_cifar10", "convnet"),
+        ("synth_cifar10", "resnet8_c10"),
+        ("synth_cifar10", "regnet_c10"),
+        ("synth_cifar100", "resnet8_c20"),
+        ("synth_cifar100", "regnet_c20"),
+    ] {
+        for clients in [10usize, 20, 40] {
+            for method in ["fedavg", "dgc", "signsgd", "stc", "3sfc"] {
+                let toml = format!(
+                    "dataset = \"{ds}\"\nmodel = \"{model}\"\ncompressor = \"{method}\"\n\
+                     clients = {clients}\nrounds = 5\nk = 5\nlr = 0.01\n"
+                );
+                let cfg = ExperimentConfig::from_toml_str(&toml).unwrap();
+                assert_eq!(cfg.n_clients, clients);
+                assert_eq!(cfg.model_key(), model);
+                // dataset/model shapes must agree (Experiment::new re-checks)
+                assert_eq!(
+                    cfg.dataset.feature_len() > 0,
+                    true
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn table4_ablation_settings() {
+    let base = ExperimentConfig::from_toml_str(
+        "dataset = \"synth_mnist\"\ncompressor = \"3sfc\"\nrounds = 5\n",
+    )
+    .unwrap();
+    assert!(base.error_feedback);
+    assert_eq!(base.budget_mult, 1);
+    assert_eq!(base.k_local, 5);
+
+    let no_ef = ExperimentConfig::from_toml_str(
+        "dataset = \"synth_mnist\"\ncompressor = \"3sfc\"\nrounds = 5\nef = false\n",
+    )
+    .unwrap();
+    assert!(!no_ef.error_feedback);
+
+    for (mult, m) in [(1usize, 1usize), (2, 2), (4, 4)] {
+        let cfg = ExperimentConfig::from_toml_str(&format!(
+            "dataset = \"synth_mnist\"\ncompressor = \"3sfc\"\nrounds = 5\nbudget_mult = {mult}\n"
+        ))
+        .unwrap();
+        assert_eq!(cfg.syn_m(), m);
+    }
+    for k in [1usize, 5, 10] {
+        let cfg = ExperimentConfig::from_toml_str(&format!(
+            "dataset = \"synth_mnist\"\ncompressor = \"3sfc\"\nrounds = 5\nk = {k}\n"
+        ))
+        .unwrap();
+        assert_eq!(cfg.k_local, k);
+    }
+}
+
+#[test]
+fn fig1_sweep_settings() {
+    for rate in [0.1, 0.01, 0.001] {
+        let cfg = ExperimentConfig::from_toml_str(&format!(
+            "dataset = \"synth_mnist\"\ncompressor = \"dgc\"\nrounds = 5\ntopk_rate = {rate}\n"
+        ))
+        .unwrap();
+        assert_eq!(cfg.topk_rate, rate);
+        assert_eq!(cfg.compressor, CompressorKind::Dgc);
+    }
+}
+
+#[test]
+fn invalid_configs_rejected() {
+    // K not in {1,5,10} (no artifact)
+    assert!(ExperimentConfig::from_toml_str("k = 3").is_err());
+    // unknown method/dataset/key
+    assert!(ExperimentConfig::from_toml_str("compressor = \"zip\"").is_err());
+    assert!(ExperimentConfig::from_toml_str("dataset = \"imagenet\"").is_err());
+    assert!(ExperimentConfig::from_toml_str("no_such_key = 1").is_err());
+    // bad budget multiplier
+    assert!(ExperimentConfig::from_toml_str("budget_mult = 3").is_err());
+}
+
+#[test]
+fn dataset_defaults_pair_with_manifest_models() {
+    for ds in [
+        DatasetKind::SynthMnist,
+        DatasetKind::SynthEmnist,
+        DatasetKind::SynthFmnist,
+        DatasetKind::SynthCifar10,
+        DatasetKind::SynthCifar100,
+        DatasetKind::SynthSmall,
+    ] {
+        let cfg = ExperimentConfig {
+            dataset: ds,
+            ..ExperimentConfig::default()
+        };
+        // default model key must be non-empty and stable
+        assert!(!cfg.model_key().is_empty());
+    }
+}
+
+#[test]
+fn cli_args_build_run_configs() {
+    use fed3sfc::cli::Args;
+    let argv: Vec<String> = [
+        "run",
+        "--dataset",
+        "synth_fmnist",
+        "--compressor",
+        "stc",
+        "--clients",
+        "20",
+        "--rounds",
+        "7",
+        "--no-ef",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    let args = Args::parse(argv, &["no-ef"]).unwrap();
+    assert_eq!(args.subcommand, "run");
+    assert_eq!(args.get("dataset"), Some("synth_fmnist"));
+    assert_eq!(args.get_usize("clients", 0).unwrap(), 20);
+    assert!(args.has_flag("no-ef"));
+}

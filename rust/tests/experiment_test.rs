@@ -1,0 +1,159 @@
+//! End-to-end coordinator integration on the small model: every method
+//! trains, determinism holds, EF matters, traffic accounting is exact.
+
+mod common;
+
+use fed3sfc::config::{CompressorKind, DatasetKind, ExperimentConfig};
+use fed3sfc::coordinator::experiment::Experiment;
+
+fn small_cfg(method: CompressorKind) -> ExperimentConfig {
+    ExperimentConfig {
+        dataset: DatasetKind::SynthSmall,
+        compressor: method,
+        n_clients: 4,
+        rounds: 12,
+        k_local: 5,
+        lr: 0.05,
+        syn_steps: 10,
+        train_samples: 320,
+        test_samples: 100,
+        eval_every: 12,
+        seed: 42,
+        ..ExperimentConfig::default()
+    }
+}
+
+fn run(cfg: ExperimentConfig) -> Vec<fed3sfc::RoundRecord> {
+    let rt = common::runtime();
+    let mut exp = Experiment::new(cfg, &rt).unwrap();
+    exp.run().unwrap()
+}
+
+#[test]
+fn every_method_improves_over_init() {
+    let _g = common::lock();
+    for method in [
+        CompressorKind::FedAvg,
+        CompressorKind::Dgc,
+        CompressorKind::SignSgd,
+        CompressorKind::Stc,
+        CompressorKind::ThreeSfc,
+    ] {
+        let recs = run(small_cfg(method));
+        let last = recs.last().unwrap();
+        assert!(
+            last.test_acc > 0.25,
+            "{method:?}: acc {} after {} rounds (chance = 0.125)",
+            last.test_acc,
+            recs.len()
+        );
+        assert!(last.test_loss.is_finite());
+    }
+}
+
+#[test]
+fn deterministic_replay() {
+    let _g = common::lock();
+    let a = run(small_cfg(CompressorKind::ThreeSfc));
+    let b = run(small_cfg(CompressorKind::ThreeSfc));
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b.iter()) {
+        // bitwise compare: non-eval rounds carry NaN placeholders
+        assert_eq!(x.test_acc.to_bits(), y.test_acc.to_bits());
+        assert_eq!(x.up_bytes_cum, y.up_bytes_cum);
+        assert_eq!(x.efficiency.to_bits(), y.efficiency.to_bits());
+    }
+}
+
+#[test]
+fn seeds_change_trajectories() {
+    let _g = common::lock();
+    let a = run(small_cfg(CompressorKind::ThreeSfc));
+    let mut cfg = small_cfg(CompressorKind::ThreeSfc);
+    cfg.seed = 43;
+    let b = run(cfg);
+    assert_ne!(
+        a.last().unwrap().efficiency,
+        b.last().unwrap().efficiency
+    );
+}
+
+#[test]
+fn error_feedback_ablation_changes_dynamics() {
+    // Table 4: EF off must change (and generally hurt) the trajectory.
+    let _g = common::lock();
+    let with_ef = run(small_cfg(CompressorKind::ThreeSfc));
+    let mut cfg = small_cfg(CompressorKind::ThreeSfc);
+    cfg.error_feedback = false;
+    let without = run(cfg);
+    assert_ne!(
+        with_ef.last().unwrap().test_acc,
+        without.last().unwrap().test_acc
+    );
+}
+
+#[test]
+fn traffic_accounting_is_exact() {
+    let _g = common::lock();
+    let rt = common::runtime();
+    let cfg = small_cfg(CompressorKind::ThreeSfc);
+    let rounds = cfg.rounds as u64;
+    let clients = cfg.n_clients as u64;
+    let mut exp = Experiment::new(cfg, &rt).unwrap();
+    exp.run().unwrap();
+    let model = exp.ops.model;
+    // 3SFC payload is fixed-size: m(d+C)+1 floats per client per round.
+    let per = model.syn_payload_bytes(1) as u64;
+    assert_eq!(exp.traffic.up_bytes, per * clients * rounds);
+    assert_eq!(
+        exp.traffic.down_bytes,
+        4 * model.params as u64 * clients * rounds
+    );
+    assert_eq!(exp.traffic.rounds, rounds);
+}
+
+#[test]
+fn compression_ratios_ordered_as_paper() {
+    // 3SFC (m=1) must communicate less per round than signSGD, which
+    // communicates less than FedAvg. (Table 2's ratio columns.)
+    let _g = common::lock();
+    let bytes_of = |method| {
+        let recs = run(small_cfg(method));
+        recs.last().unwrap().up_bytes_round
+    };
+    let b3 = bytes_of(CompressorKind::ThreeSfc);
+    let bs = bytes_of(CompressorKind::SignSgd);
+    let bf = bytes_of(CompressorKind::FedAvg);
+    assert!(b3 < bf, "3sfc {b3} vs fedavg {bf}");
+    assert!(bs < bf);
+}
+
+#[test]
+fn efficiency_metric_in_range() {
+    let _g = common::lock();
+    let recs = run(small_cfg(CompressorKind::Dgc));
+    for r in &recs {
+        assert!((-1.0..=1.0).contains(&r.efficiency), "{}", r.efficiency);
+        assert!(r.efficiency > 0.0, "top-k efficiency must be positive");
+    }
+}
+
+#[test]
+fn metrics_jsonl_roundtrip() {
+    let _g = common::lock();
+    let dir = std::env::temp_dir().join("fed3sfc_test_metrics.jsonl");
+    let mut cfg = small_cfg(CompressorKind::Dgc);
+    cfg.rounds = 3;
+    cfg.metrics_path = dir.to_str().unwrap().to_string();
+    let _ = run(cfg);
+    let text = std::fs::read_to_string(&dir).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 3);
+    for line in lines {
+        let v = fed3sfc::util::json::parse(line).unwrap();
+        assert!(v.get("round").is_some());
+        assert!(v.get("test_acc").is_some());
+        assert!(v.get("up_bytes_cum").is_some());
+    }
+    std::fs::remove_file(dir).ok();
+}

@@ -1,0 +1,234 @@
+//! Property tests (hand-rolled harness, see `testing::prop`) over the
+//! coordinator's pure invariants — no PJRT needed, so these are fast and
+//! run hundreds of cases.
+
+use fed3sfc::compress::payload::{get_bit, pack_bits};
+use fed3sfc::compress::Payload;
+use fed3sfc::config::DatasetKind;
+use fed3sfc::data::{dirichlet_partition, ClientSampler, Dataset};
+use fed3sfc::testing::prop::{assert_close, check};
+use fed3sfc::util::rng::Rng;
+use fed3sfc::util::vecmath;
+
+#[test]
+fn prop_topk_reconstruction_is_best_k_term_approx() {
+    check("topk-optimal", 120, |c| {
+        let n = 4 + c.len(400);
+        let v = c.vec_f32(n, 2.0);
+        let k = 1 + c.rng.below(n);
+        let idx = vecmath::topk_indices(&v, k);
+        if idx.len() != k.min(n) {
+            return Err(format!("got {} indices, want {}", idx.len(), k));
+        }
+        // Any coordinate kept must dominate any dropped coordinate.
+        let kept: Vec<f32> = idx.iter().map(|&i| v[i as usize].abs()).collect();
+        let min_kept = kept.iter().cloned().fold(f32::INFINITY, f32::min);
+        for (i, x) in v.iter().enumerate() {
+            if !idx.contains(&(i as u32)) && x.abs() > min_kept + 1e-6 {
+                return Err(format!("dropped {} > kept {}", x.abs(), min_kept));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kth_magnitude_matches_sort() {
+    check("kth-magnitude", 120, |c| {
+        let n = 1 + c.len(200);
+        let v = c.vec_f32(n, 3.0);
+        let k = 1 + c.rng.below(n);
+        let got = vecmath::kth_magnitude(&v, k);
+        let mut mags: Vec<f32> = v.iter().map(|x| x.abs()).collect();
+        mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let want = mags[k - 1];
+        if (got - want).abs() > 1e-6 {
+            return Err(format!("{got} vs {want}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bitset_roundtrip() {
+    check("bitset", 100, |c| {
+        let n = c.len(300);
+        let signs: Vec<bool> = (0..n).map(|_| c.rng.f64() < 0.5).collect();
+        let bits = pack_bits(signs.iter().copied(), n);
+        for (i, &s) in signs.iter().enumerate() {
+            if get_bit(&bits, i) != s {
+                return Err(format!("bit {i}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dot_is_bilinear() {
+    check("dot-bilinear", 80, |c| {
+        let n = c.len(256);
+        let a = c.vec_f32(n, 1.0);
+        let b = c.vec_f32(n, 1.0);
+        let d = c.vec_f32(n, 1.0);
+        let lhs = vecmath::dot(&a, &vecmath::sub(&b, &d));
+        let rhs = vecmath::dot(&a, &b) - vecmath::dot(&a, &d);
+        if (lhs - rhs).abs() > 1e-3 {
+            return Err(format!("{lhs} vs {rhs}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_axpy_linearity() {
+    check("axpy-linear", 80, |c| {
+        let n = c.len(256);
+        let x = c.vec_f32(n, 1.0);
+        let y = c.vec_f32(n, 1.0);
+        let alpha = (c.rng.f32() - 0.5) * 4.0;
+        let mut got = y.clone();
+        vecmath::axpy(alpha, &x, &mut got);
+        let want: Vec<f32> = x.iter().zip(y.iter()).map(|(a, b)| b + alpha * a).collect();
+        assert_close(&got, &want, 1e-6)
+    });
+}
+
+#[test]
+fn prop_partition_is_exact_cover() {
+    check("partition-cover", 25, |c| {
+        let n = 50 + c.len(300);
+        let clients = 2 + c.rng.below(12);
+        let alpha = 0.1 + c.rng.f64() * 5.0;
+        let ds = Dataset::generate(DatasetKind::SynthSmall, n, c.seed);
+        let mut rng = Rng::new(c.seed ^ 1);
+        let parts = dirichlet_partition(&ds, clients, alpha, &mut rng);
+        let mut seen = vec![0u8; n];
+        for p in &parts {
+            if p.is_empty() {
+                return Err("empty client".into());
+            }
+            for &i in p {
+                seen[i as usize] += 1;
+            }
+        }
+        if seen.iter().any(|&s| s != 1) {
+            return Err("not an exact cover".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sampler_epoch_is_permutation() {
+    check("sampler-epoch", 40, |c| {
+        let n = 4 + c.len(60);
+        let ds = Dataset::generate(DatasetKind::SynthSmall, n, c.seed);
+        let mut s = ClientSampler::new((0..n as u32).collect(), Rng::new(c.seed));
+        let (_, ys) = s.sample_batches(&ds, 1, n);
+        let mut got: Vec<i32> = ys;
+        let mut want: Vec<i32> = (0..n).map(|i| ds.label(i)).collect();
+        got.sort_unstable();
+        want.sort_unstable();
+        if got != want {
+            return Err("epoch not a permutation".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_payload_rate_consistent_with_bytes() {
+    check("payload-rate", 60, |c| {
+        let n = 10 + c.len(10_000);
+        let k = 1 + c.rng.below(n.min(500));
+        let payloads = vec![
+            Payload::Dense { g: vec![0.0; n] },
+            Payload::TopK { n, idx: vec![0; k], val: vec![0.0; k] },
+            Payload::Sign { n, bits: vec![0; n.div_ceil(8)], scale: 1.0 },
+            Payload::Ternary { n, idx: vec![0; k], neg: vec![0; k.div_ceil(8)], mu: 1.0 },
+        ];
+        for p in payloads {
+            let r = p.rate(n);
+            let want = p.wire_bytes() as f64 / (4.0 * n as f64);
+            if (r - want).abs() > 1e-12 {
+                return Err(format!("{r} vs {want}"));
+            }
+            if (p.ratio(n) * r - 1.0).abs() > 1e-9 {
+                return Err("ratio != 1/rate".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_weighted_aggregation_is_convex() {
+    // Server output must lie in the convex hull of client reconstructions
+    // (coordinate-wise, since weights are a convex combination).
+    check("agg-convex", 60, |c| {
+        let n = c.len(64);
+        let m = 2 + c.rng.below(6);
+        let recons: Vec<Vec<f32>> = (0..m).map(|_| c.vec_f32(n, 2.0)).collect();
+        let weights: Vec<f32> = (0..m).map(|_| 0.01 + c.rng.f32()).collect();
+        let mut server = fed3sfc::coordinator::Server::new(vec![0.0; n]);
+        server.apply_round(&recons, &weights);
+        for j in 0..n {
+            let lo = recons.iter().map(|r| r[j]).fold(f32::INFINITY, f32::min);
+            let hi = recons.iter().map(|r| r[j]).fold(f32::NEG_INFINITY, f32::max);
+            let got = -server.w[j]; // w started at 0, step = -agg
+            if got < lo - 1e-4 || got > hi + 1e-4 {
+                return Err(format!("coord {j}: {got} outside [{lo}, {hi}]"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dataset_split_shares_task() {
+    // Splits of the same seed must have the same class structure: a
+    // template-matched nearest-class classifier trained on split 0
+    // transfers to split 1 far above chance.
+    check("split-task", 8, |c| {
+        let kind = DatasetKind::SynthSmall;
+        let train = Dataset::generate_split(kind, 160, c.seed, 0);
+        let test = Dataset::generate_split(kind, 80, c.seed, 1);
+        // class means from train
+        let d = train.d;
+        let mut means = vec![vec![0.0f32; d]; train.n_classes];
+        let mut counts = vec![0usize; train.n_classes];
+        for i in 0..train.n {
+            let cls = train.label(i) as usize;
+            for (m, v) in means[cls].iter_mut().zip(train.sample(i)) {
+                *m += v;
+            }
+            counts[cls] += 1;
+        }
+        for (m, &cnt) in means.iter_mut().zip(&counts) {
+            if cnt > 0 {
+                for v in m.iter_mut() {
+                    *v /= cnt as f32;
+                }
+            }
+        }
+        let mut correct = 0;
+        for i in 0..test.n {
+            let best = (0..test.n_classes)
+                .max_by(|&a, &b| {
+                    vecmath::cosine(test.sample(i), &means[a])
+                        .partial_cmp(&vecmath::cosine(test.sample(i), &means[b]))
+                        .unwrap()
+                })
+                .unwrap();
+            if best as i32 == test.label(i) {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / test.n as f64;
+        if acc < 0.5 {
+            return Err(format!("cross-split transfer acc {acc} < 0.5"));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,185 @@
+//! Runtime integration: HLO artifacts load, compile and compute the same
+//! math the python oracle verified at build time.
+
+mod common;
+
+use fed3sfc::runtime::FedOps;
+use fed3sfc::util::vecmath;
+
+fn test_batch(d: usize, b: usize, classes: usize) -> (Vec<f32>, Vec<i32>) {
+    let mut rng = fed3sfc::util::rng::Rng::new(123);
+    let mut x = vec![0.0f32; b * d];
+    rng.fill_normal(&mut x, 1.0);
+    let y: Vec<i32> = (0..b).map(|i| (i % classes) as i32).collect();
+    (x, y)
+}
+
+#[test]
+fn manifest_lists_expected_models() {
+    let _g = common::lock();
+    let rt = common::runtime();
+    for m in [
+        "mlp_small",
+        "mlp10",
+        "mlp26",
+        "mnistnet",
+        "convnet",
+        "resnet8_c10",
+        "resnet8_c20",
+        "regnet_c10",
+        "regnet_c20",
+    ] {
+        let info = rt.model(m).unwrap();
+        assert!(info.params > 0);
+        assert!(info.ops.contains_key("eval"), "{m} missing eval");
+        assert!(info.ops.contains_key("syn_step_m1"));
+    }
+    // Paper's MLP scale (Fig 1 caption: 199,210 params; same architecture).
+    assert_eq!(rt.model("mlp10").unwrap().params, 198_760);
+}
+
+#[test]
+fn local_train_k1_matches_grad_batch() {
+    // train_k1 must be exactly w - lr * grad(batch).
+    let _g = common::lock();
+    let rt = common::runtime();
+    let ops = FedOps::new(&rt, "mlp_small").unwrap();
+    let model = ops.model;
+    let w = rt.manifest.load_init(model).unwrap();
+    let (x, y) = test_batch(model.feature_len(), model.train_batch, model.n_classes);
+    let lr = 0.05f32;
+
+    let w1 = ops.local_train(1, &w, &x, &y, lr).unwrap();
+    let g = ops.grad_batch(&w, &x, &y).unwrap();
+    let mut want = w.clone();
+    vecmath::axpy(-lr, &g, &mut want);
+    for (a, b) in w1.iter().zip(want.iter()) {
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn local_training_reduces_loss() {
+    let _g = common::lock();
+    let rt = common::runtime();
+    let ops = FedOps::new(&rt, "mlp_small").unwrap();
+    let model = ops.model;
+    let mut w = rt.manifest.load_init(model).unwrap();
+    let (x, y) = test_batch(model.feature_len(), model.eval_batch, model.n_classes);
+    let (loss0, _) = ops.eval_batch(&w, &x, &y).unwrap();
+
+    // 10 rounds of K=5 training on (a subset of) the same data.
+    let (xt, yt) = test_batch(model.feature_len(), model.train_batch, model.n_classes);
+    let xs: Vec<f32> = xt.iter().cloned().cycle().take(5 * xt.len()).collect();
+    let ys: Vec<i32> = yt.iter().cloned().cycle().take(5 * yt.len()).collect();
+    for _ in 0..10 {
+        w = ops.local_train(5, &w, &xs, &ys, 0.05).unwrap();
+    }
+    let (loss1, _) = ops.eval_batch(&w, &x, &y).unwrap();
+    // Train and eval batches share the synthetic distribution shape only
+    // loosely here; the training batch loss is the real check:
+    let w0 = rt.manifest.load_init(model).unwrap();
+    let g0 = ops.grad_batch(&w0, &xt, &yt).unwrap();
+    let g1 = ops.grad_batch(&w, &xt, &yt).unwrap();
+    assert!(
+        vecmath::norm(&g1) < vecmath::norm(&g0),
+        "gradient should shrink as the batch is fit"
+    );
+    assert!(loss1.is_finite() && loss0.is_finite());
+}
+
+#[test]
+fn syn_step_improves_cosine_and_syn_grad_agrees() {
+    let _g = common::lock();
+    let rt = common::runtime();
+    let ops = FedOps::new(&rt, "mlp_small").unwrap();
+    let model = ops.model;
+    let w = rt.manifest.load_init(model).unwrap();
+
+    // Build a realistic target: one local training delta.
+    let (xt, yt) = test_batch(model.feature_len(), model.train_batch, model.n_classes);
+    let xs: Vec<f32> = xt.iter().cloned().cycle().take(5 * xt.len()).collect();
+    let ys: Vec<i32> = yt.iter().cloned().cycle().take(5 * yt.len()).collect();
+    let w_local = ops.local_train(5, &w, &xs, &ys, 0.05).unwrap();
+    let target = vecmath::sub(&w, &w_local);
+
+    let mut rng = fed3sfc::util::rng::Rng::new(7);
+    let mut dx = vec![0.0f32; model.feature_len()];
+    rng.fill_normal(&mut dx, 0.5);
+    let mut dy = vec![0.0f32; model.n_classes];
+
+    let mut first = None;
+    let mut last = 0.0f32;
+    for _ in 0..25 {
+        let (ndx, ndy, cos) = ops
+            .syn_step(1, &w, &target, &dx, &dy, 5.0, 0.0)
+            .unwrap();
+        if first.is_none() {
+            first = Some(cos.abs());
+        }
+        last = cos.abs();
+        dx = ndx;
+        dy = ndy;
+    }
+    assert!(last > first.unwrap(), "{:?} -> {last}", first);
+
+    // syn_grad at the optimized features matches the cosine the step reported.
+    let g = ops.syn_grad(1, &w, &dx, &dy).unwrap();
+    let cos_host = vecmath::cosine(&g, &target).abs() as f32;
+    assert!((cos_host - last).abs() < 0.15, "{cos_host} vs {last}");
+}
+
+#[test]
+fn eval_dataset_loops_batches_consistently() {
+    let _g = common::lock();
+    let rt = common::runtime();
+    let ops = FedOps::new(&rt, "mlp_small").unwrap();
+    let model = ops.model;
+    let w = rt.manifest.load_init(model).unwrap();
+    let b = model.eval_batch;
+    let (x, y) = test_batch(model.feature_len(), 2 * b, model.n_classes);
+    let (loss_all, acc_all) = ops.eval_dataset(&w, &x, &y).unwrap();
+
+    let (l1, c1) = ops
+        .eval_batch(&w, &x[..b * model.feature_len()], &y[..b])
+        .unwrap();
+    let (l2, c2) = ops
+        .eval_batch(&w, &x[b * model.feature_len()..], &y[b..])
+        .unwrap();
+    let want_loss = (l1 + l2) as f64 / (2 * b) as f64;
+    let want_acc = (c1 + c2) as f64 / (2 * b) as f64;
+    assert!((loss_all - want_loss).abs() < 1e-5);
+    assert!((acc_all - want_acc).abs() < 1e-9);
+}
+
+#[test]
+fn fedsynth_apply_matches_step_fit() {
+    let _g = common::lock();
+    let rt = common::runtime();
+    let ops = FedOps::new(&rt, "mlp_small").unwrap();
+    let model = ops.model;
+    let w = rt.manifest.load_init(model).unwrap();
+    let (xt, yt) = test_batch(model.feature_len(), model.train_batch, model.n_classes);
+    let xs: Vec<f32> = xt.iter().cloned().cycle().take(5 * xt.len()).collect();
+    let ys: Vec<i32> = yt.iter().cloned().cycle().take(5 * yt.len()).collect();
+    let w_local = ops.local_train(5, &w, &xs, &ys, 0.05).unwrap();
+    let target = vecmath::sub(&w, &w_local);
+
+    let k = 4;
+    let mut rng = fed3sfc::util::rng::Rng::new(9);
+    let mut dxs = vec![0.0f32; k * model.feature_len()];
+    rng.fill_normal(&mut dxs, 0.5);
+    let dys = vec![0.0f32; k * model.n_classes];
+
+    let (_, _, fit, norms) = ops
+        .fedsynth_step(k, 1, &w, &target, &dxs, &dys, 0.05, 0.0)
+        .unwrap();
+    assert_eq!(norms.len(), k);
+    let delta = ops.fedsynth_apply(k, 1, &w, &dxs, &dys, 0.05).unwrap();
+    let err = vecmath::sub(&delta, &target);
+    let want_fit = vecmath::norm2(&err) as f32;
+    assert!(
+        (fit - want_fit).abs() < 1e-3 * (1.0 + want_fit.abs()),
+        "{fit} vs {want_fit}"
+    );
+}
