@@ -4,7 +4,7 @@
 
 use anyhow::Result;
 use fed3sfc::cli::Args;
-use fed3sfc::config::{DatasetKind, ExperimentConfig};
+use fed3sfc::config::DatasetKind;
 use fed3sfc::coordinator::experiment::Experiment;
 use fed3sfc::runtime::Runtime;
 
@@ -26,19 +26,17 @@ fn main() -> Result<()> {
     ];
     println!("{:<20} {:>10} {:>10} {:>10}", "variant", "final acc", "best acc", "ratio");
     for (label, ef, budget, k) in variants {
-        let cfg = ExperimentConfig {
-            dataset,
-            error_feedback: ef,
-            budget_mult: budget,
-            k_local: k,
-            n_clients: clients,
-            rounds,
-            lr: 0.05,
-            eval_every: 1,
-            syn_steps: 20,
-            ..ExperimentConfig::default()
-        };
-        let mut exp = Experiment::new(cfg, &rt)?;
+        let mut exp = Experiment::builder()
+            .dataset(dataset)
+            .error_feedback(ef)
+            .budget_mult(budget)
+            .k_local(k)
+            .clients(clients)
+            .rounds(rounds)
+            .lr(0.05)
+            .eval_every(1)
+            .syn_steps(20)
+            .build(&rt)?;
         let recs = exp.run()?;
         let last = recs.last().unwrap();
         println!(

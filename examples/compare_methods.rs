@@ -1,15 +1,18 @@
 //! Table-2-style comparison for one dataset/model pair, all methods —
 //! the fastest way to see the paper's headline ordering on your machine.
 //!
+//! Optionally runs the whole grid under partial participation and a
+//! server optimizer, e.g.:
+//!
 //!     cargo run --release --example compare_methods -- \
-//!         --dataset synth_fmnist --model mnistnet --clients 10 --rounds 10
+//!         --dataset synth_fmnist --model mnistnet --clients 10 --rounds 10 \
+//!         --client-frac 0.5 --server-opt fedadam
 
 use anyhow::Result;
 use fed3sfc::cli::Args;
-use fed3sfc::config::{CompressorKind, DatasetKind, ExperimentConfig};
+use fed3sfc::config::{CompressorKind, DatasetKind, ServerOptKind};
 use fed3sfc::coordinator::experiment::Experiment;
 use fed3sfc::runtime::Runtime;
-use fed3sfc::simnet::NetworkModel;
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1).collect::<Vec<_>>(), &[])?;
@@ -17,13 +20,15 @@ fn main() -> Result<()> {
     let model = args.get("model").unwrap_or("").to_string();
     let clients = args.get_usize("clients", 10)?;
     let rounds = args.get_usize("rounds", 10)?;
+    let frac = args.get_f64("client-frac", 1.0)?;
+    let server_opt = ServerOptKind::parse(args.get("server-opt").unwrap_or("gd"))?;
 
     let rt = Runtime::open(&fed3sfc::artifacts_dir())?;
-    let net = NetworkModel::edge();
     println!(
-        "method comparison: {} / {} — {clients} clients, {rounds} rounds\n",
+        "method comparison: {} / {} — {clients} clients (frac {frac}), {rounds} rounds, server_opt {}\n",
         dataset.name(),
         if model.is_empty() { dataset.default_model() } else { &model },
+        server_opt.name(),
     );
     println!(
         "{:<10} {:>10} {:>10} {:>12} {:>14} {:>12}",
@@ -36,18 +41,19 @@ fn main() -> Result<()> {
         CompressorKind::Stc,
         CompressorKind::ThreeSfc,
     ] {
-        let cfg = ExperimentConfig {
-            dataset,
-            model: model.clone(),
-            compressor: method,
-            n_clients: clients,
-            rounds,
-            lr: 0.05,
-            eval_every: 1,
-            syn_steps: 20,
-            ..ExperimentConfig::default()
-        };
-        let mut exp = Experiment::new(cfg, &rt)?;
+        // client_frac < 1 implies uniform sampling (effective_schedule).
+        let mut exp = Experiment::builder()
+            .dataset(dataset)
+            .model(model.clone())
+            .compressor(method)
+            .clients(clients)
+            .rounds(rounds)
+            .lr(0.05)
+            .eval_every(1)
+            .syn_steps(20)
+            .client_frac(frac)
+            .server_opt(server_opt)
+            .build(&rt)?;
         let recs = exp.run()?;
         let last = recs.last().unwrap();
         let t = exp.traffic;
@@ -58,7 +64,7 @@ fn main() -> Result<()> {
             exp.metrics.best_acc(),
             last.ratio,
             t.up_bytes,
-            net.total_time_s(t.rounds, t.up_bytes, t.down_bytes, clients),
+            t.comm_s,
         );
     }
     Ok(())

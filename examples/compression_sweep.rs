@@ -7,8 +7,8 @@
 
 use anyhow::Result;
 use fed3sfc::cli::Args;
-use fed3sfc::config::{CompressorKind, DatasetKind, ExperimentConfig};
-use fed3sfc::coordinator::experiment::Experiment;
+use fed3sfc::config::{CompressorKind, DatasetKind};
+use fed3sfc::coordinator::experiment::{Experiment, ExperimentBuilder};
 use fed3sfc::runtime::Runtime;
 
 fn main() -> Result<()> {
@@ -26,8 +26,8 @@ fn main() -> Result<()> {
     let rt = Runtime::open(&fed3sfc::artifacts_dir())?;
     println!("compression sweep on {} ({clients} clients, {rounds} rounds)", dataset.name());
 
-    let run = |name: String, cfg: ExperimentConfig| -> Result<()> {
-        let mut exp = Experiment::new(cfg, &rt)?;
+    let run = |name: String, builder: ExperimentBuilder| -> Result<()> {
+        let mut exp = builder.build(&rt)?;
         let recs = exp.run()?;
         let accs: Vec<String> = recs.iter().map(|r| format!("{:.3}", r.test_acc)).collect();
         println!(
@@ -40,29 +40,26 @@ fn main() -> Result<()> {
     };
 
     for &rate in &rates {
-        let cfg = ExperimentConfig {
-            dataset,
-            compressor: if rate >= 1.0 { CompressorKind::FedAvg } else { CompressorKind::Dgc },
-            topk_rate: rate,
-            n_clients: clients,
-            rounds,
-            lr: 0.05,
-            eval_every: 1,
-            ..ExperimentConfig::default()
-        };
-        run(format!("topk rate={rate}"), cfg)?;
+        let method = if rate >= 1.0 { CompressorKind::FedAvg } else { CompressorKind::Dgc };
+        let builder = Experiment::builder()
+            .dataset(dataset)
+            .compressor(method)
+            .topk_rate(rate)
+            .clients(clients)
+            .rounds(rounds)
+            .lr(0.05)
+            .eval_every(1);
+        run(format!("topk rate={rate}"), builder)?;
     }
     // 3SFC reference at budget B.
-    let cfg = ExperimentConfig {
-        dataset,
-        compressor: CompressorKind::ThreeSfc,
-        n_clients: clients,
-        rounds,
-        lr: 0.05,
-        eval_every: 1,
-        syn_steps: 20,
-        ..ExperimentConfig::default()
-    };
-    run("3sfc (B)".into(), cfg)?;
+    let builder = Experiment::builder()
+        .dataset(dataset)
+        .compressor(CompressorKind::ThreeSfc)
+        .clients(clients)
+        .rounds(rounds)
+        .lr(0.05)
+        .eval_every(1)
+        .syn_steps(20);
+    run("3sfc (B)".into(), builder)?;
     Ok(())
 }

@@ -6,49 +6,49 @@
 //!
 //!     cargo run --release --example e2e_mnist_mlp            # 200 rounds
 //!     ROUNDS=50 cargo run --release --example e2e_mnist_mlp  # scaled
+//!     FRAC=50 CLIENTS=40 ... # percent participation (uniform sampling)
 //!
 //! Writes e2e_<method>.jsonl next to cwd for plotting.
 
 use fed3sfc::bench::env_usize;
-use fed3sfc::config::{CompressorKind, DatasetKind, ExperimentConfig};
+use fed3sfc::config::{CompressorKind, DatasetKind};
 use fed3sfc::coordinator::experiment::Experiment;
 use fed3sfc::runtime::Runtime;
-use fed3sfc::simnet::NetworkModel;
 
 fn main() -> anyhow::Result<()> {
     let rounds = env_usize("ROUNDS", 200);
     let clients = env_usize("CLIENTS", 20);
+    let frac_pct = env_usize("FRAC", 100);
+    let frac = (frac_pct as f64 / 100.0).clamp(0.01, 1.0);
     let rt = Runtime::open(&fed3sfc::artifacts_dir())?;
-    let net = NetworkModel::edge();
 
     for method in [CompressorKind::ThreeSfc, CompressorKind::FedAvg] {
-        let cfg = ExperimentConfig {
-            name: format!("e2e-{}", method.name()),
-            dataset: DatasetKind::SynthMnist,
-            compressor: method,
-            n_clients: clients,
-            rounds,
-            lr: 0.05,
-            k_local: 5,
-            syn_steps: 20,
-            train_samples: 2000,
-            test_samples: 500,
-            eval_every: 5,
-            metrics_path: format!("e2e_{}.jsonl", method.name()),
-            ..ExperimentConfig::default()
-        };
         println!(
-            "=== e2e: {} | mlp10 (P=198760) on synth_mnist, {clients} clients, {rounds} rounds ===",
+            "=== e2e: {} | mlp10 (P=198760) on synth_mnist, {clients} clients ({frac_pct}%), {rounds} rounds ===",
             method.name()
         );
-        let mut exp = Experiment::new(cfg, &rt)?;
+        let mut exp = Experiment::builder()
+            .name(format!("e2e-{}", method.name()))
+            .dataset(DatasetKind::SynthMnist)
+            .compressor(method)
+            .clients(clients)
+            .rounds(rounds)
+            .lr(0.05)
+            .k_local(5)
+            .syn_steps(20)
+            .train_samples(2000)
+            .test_samples(500)
+            .eval_every(5)
+            .client_frac(frac)
+            .metrics_path(format!("e2e_{}.jsonl", method.name()))
+            .build(&rt)?;
         let t0 = std::time::Instant::now();
         for i in 0..rounds {
             let r = exp.run_round()?;
             if (i + 1) % 5 == 0 || i == 0 {
                 println!(
-                    "round {:>4}  acc {:.4}  loss {:.4}  cum-up {:>12} B  eff {:.3}",
-                    r.round, r.test_acc, r.test_loss, r.up_bytes_cum, r.efficiency
+                    "round {:>4}  acc {:.4}  loss {:.4}  sel {:>3}  cum-up {:>12} B  eff {:.3}",
+                    r.round, r.test_acc, r.test_loss, r.n_selected, r.up_bytes_cum, r.efficiency
                 );
             }
         }
@@ -60,7 +60,7 @@ fn main() -> anyhow::Result<()> {
             exp.metrics.best_acc(),
             t0.elapsed().as_secs_f64(),
             t.up_bytes,
-            net.total_time_s(t.rounds, t.up_bytes, t.down_bytes, clients),
+            t.comm_s,
         );
     }
     println!("loss curves in e2e_3sfc.jsonl / e2e_fedavg.jsonl");

@@ -5,7 +5,7 @@
 //!
 //!     cargo run --release --example quickstart
 
-use fed3sfc::config::{CompressorKind, DatasetKind, ExperimentConfig};
+use fed3sfc::config::{CompressorKind, DatasetKind};
 use fed3sfc::coordinator::experiment::Experiment;
 use fed3sfc::runtime::Runtime;
 
@@ -13,36 +13,37 @@ fn main() -> anyhow::Result<()> {
     // 1. Open the AOT artifact directory (built once by `make artifacts`).
     let rt = Runtime::open(&fed3sfc::artifacts_dir())?;
 
-    // 2. Describe the experiment. Everything has paper-faithful defaults;
+    // 2. Describe the experiment. Everything has paper-faithful defaults
+    //    (full participation, unit-step server GD, edge link model);
     //    here: 4 clients, non-iid Dirichlet(0.5) split, 3SFC at budget B
     //    (one synthetic sample), error feedback on.
-    let cfg = ExperimentConfig {
-        dataset: DatasetKind::SynthSmall,
-        compressor: CompressorKind::ThreeSfc,
-        n_clients: 4,
-        rounds: 10,
-        lr: 0.05,
-        syn_steps: 15,
-        train_samples: 400,
-        test_samples: 100,
-        ..ExperimentConfig::default()
-    };
+    let mut exp = Experiment::builder()
+        .dataset(DatasetKind::SynthSmall)
+        .compressor(CompressorKind::ThreeSfc)
+        .clients(4)
+        .rounds(10)
+        .lr(0.05)
+        .syn_steps(15)
+        .train_samples(400)
+        .test_samples(100)
+        .build(&rt)?;
 
-    // 3. Run. Each round: local SGD on every client -> 3SFC encode ->
-    //    (simulated) upload -> server decode + aggregate -> global step.
-    let mut exp = Experiment::new(cfg, &rt)?;
+    // 3. Run. Each round: local SGD on every selected client -> 3SFC
+    //    encode -> (simulated) upload -> server decode + aggregate ->
+    //    server-optimizer step.
     for _ in 0..exp.cfg.rounds {
         let r = exp.run_round()?;
         println!(
-            "round {:>2}: acc {:.3}  loss {:.3}  uploaded {} B  (ratio {:.0}x, efficiency {:.2})",
-            r.round, r.test_acc, r.test_loss, r.up_bytes_round, r.ratio, r.efficiency
+            "round {:>2}: acc {:.3}  loss {:.3}  uploaded {} B  (ratio {:.0}x, efficiency {:.2}, comm {:.2}s)",
+            r.round, r.test_acc, r.test_loss, r.up_bytes_round, r.ratio, r.efficiency, r.comm_time_s
         );
     }
     println!(
-        "total upload: {} B vs {} B dense — saved {:.1}%",
+        "total upload: {} B vs {} B dense — saved {:.1}%; modeled edge-link comm {:.1}s",
         exp.traffic.up_bytes,
         exp.traffic.down_bytes,
-        100.0 * (1.0 - exp.traffic.up_bytes as f64 / exp.traffic.down_bytes as f64)
+        100.0 * (1.0 - exp.traffic.up_bytes as f64 / exp.traffic.down_bytes as f64),
+        exp.traffic.comm_s
     );
     Ok(())
 }

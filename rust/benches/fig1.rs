@@ -7,7 +7,7 @@
 //! Scale knobs (env): ROUNDS (default 12), CLIENTS (20), TRAIN (2000).
 
 use fed3sfc::bench::{env_usize, Table};
-use fed3sfc::config::{CompressorKind, DatasetKind, ExperimentConfig};
+use fed3sfc::config::{CompressorKind, DatasetKind};
 use fed3sfc::coordinator::experiment::Experiment;
 use fed3sfc::runtime::Runtime;
 
@@ -21,24 +21,19 @@ fn main() -> anyhow::Result<()> {
     let rates = [1.0f64, 0.1, 0.01, 0.001];
     let mut series: Vec<(String, Vec<f64>)> = Vec::new();
     for &rate in &rates {
-        let cfg = ExperimentConfig {
-            name: format!("fig1-rate{rate}"),
-            dataset: DatasetKind::SynthMnist,
-            compressor: if rate >= 1.0 {
-                CompressorKind::FedAvg
-            } else {
-                CompressorKind::Dgc
-            },
-            topk_rate: rate,
-            n_clients: clients,
-            rounds,
-            train_samples: train,
-            test_samples: 500,
-            lr: 0.05,
-            eval_every: 1,
-            ..ExperimentConfig::default()
-        };
-        let mut exp = Experiment::new(cfg, &rt)?;
+        let method = if rate >= 1.0 { CompressorKind::FedAvg } else { CompressorKind::Dgc };
+        let mut exp = Experiment::builder()
+            .name(format!("fig1-rate{rate}"))
+            .dataset(DatasetKind::SynthMnist)
+            .compressor(method)
+            .topk_rate(rate)
+            .clients(clients)
+            .rounds(rounds)
+            .train_samples(train)
+            .test_samples(500)
+            .lr(0.05)
+            .eval_every(1)
+            .build(&rt)?;
         let recs = exp.run()?;
         println!(
             "rate {rate:>6}: final acc {:.4}  (ratio {:.0}x)",

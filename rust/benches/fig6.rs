@@ -6,7 +6,7 @@
 //! Scale knobs: ROUNDS (12), CLIENTS (10), TRAIN (1500).
 
 use fed3sfc::bench::{env_usize, Table};
-use fed3sfc::config::{CompressorKind, DatasetKind, ExperimentConfig};
+use fed3sfc::config::{CompressorKind, DatasetKind};
 use fed3sfc::coordinator::experiment::Experiment;
 use fed3sfc::runtime::Runtime;
 
@@ -34,20 +34,18 @@ fn main() -> anyhow::Result<()> {
     ]);
     t.sep();
     for method in methods {
-        let cfg = ExperimentConfig {
-            name: format!("fig6-{}", method.name()),
-            dataset: DatasetKind::SynthMnist,
-            compressor: method,
-            n_clients: clients,
-            rounds,
-            train_samples: train,
-            test_samples: 400,
-            lr: 0.05,
-            eval_every: 1,
-            syn_steps: 30,
-            ..ExperimentConfig::default()
-        };
-        let mut exp = Experiment::new(cfg, &rt)?;
+        let mut exp = Experiment::builder()
+            .name(format!("fig6-{}", method.name()))
+            .dataset(DatasetKind::SynthMnist)
+            .compressor(method)
+            .clients(clients)
+            .rounds(rounds)
+            .train_samples(train)
+            .test_samples(400)
+            .lr(0.05)
+            .eval_every(1)
+            .syn_steps(30)
+            .build(&rt)?;
         let recs = exp.run()?;
         for r in &recs {
             t.row(&[

@@ -5,7 +5,7 @@
 //! Scale knobs: ROUNDS (15), CLIENTS (10), TRAIN (1500).
 
 use fed3sfc::bench::{env_usize, Table};
-use fed3sfc::config::{CompressorKind, DatasetKind, ExperimentConfig};
+use fed3sfc::config::{CompressorKind, DatasetKind};
 use fed3sfc::coordinator::experiment::Experiment;
 use fed3sfc::runtime::Runtime;
 
@@ -21,20 +21,18 @@ fn main() -> anyhow::Result<()> {
         CompressorKind::Dgc, // budget-matched to 3SFC by default
         CompressorKind::FedAvg,
     ] {
-        let cfg = ExperimentConfig {
-            name: format!("fig7-{}", method.name()),
-            dataset: DatasetKind::SynthMnist,
-            compressor: method,
-            n_clients: clients,
-            rounds,
-            train_samples: train,
-            test_samples: 200,
-            lr: 0.05,
-            eval_every: rounds, // efficiency is the point here
-            syn_steps: 40,
-            ..ExperimentConfig::default()
-        };
-        let mut exp = Experiment::new(cfg, &rt)?;
+        let mut exp = Experiment::builder()
+            .name(format!("fig7-{}", method.name()))
+            .dataset(DatasetKind::SynthMnist)
+            .compressor(method)
+            .clients(clients)
+            .rounds(rounds)
+            .train_samples(train)
+            .test_samples(200)
+            .lr(0.05)
+            .eval_every(rounds) // efficiency is the point here
+            .syn_steps(40)
+            .build(&rt)?;
         let recs = exp.run()?;
         series.push((
             method.name().to_string(),

@@ -6,7 +6,7 @@
 //! 10 clients. Scale knobs: ROUNDS (10), CLIENTS (10), TRAIN (1200).
 
 use fed3sfc::bench::{env_usize, Table};
-use fed3sfc::config::{CompressorKind, DatasetKind, ExperimentConfig};
+use fed3sfc::config::{CompressorKind, DatasetKind};
 use fed3sfc::coordinator::experiment::Experiment;
 use fed3sfc::runtime::Runtime;
 
@@ -39,23 +39,21 @@ fn main() -> anyhow::Result<()> {
             CompressorKind::FedSynth,
             CompressorKind::ThreeSfc,
         ] {
-            let cfg = ExperimentConfig {
-                name: format!("t1-{label}-{}", method.name()),
-                dataset: ds,
-                model: model.to_string(),
-                compressor: method,
-                n_clients: clients,
-                rounds,
-                train_samples: train,
-                test_samples: 300,
-                lr: 0.05,
-                eval_every: rounds,
-                syn_steps: 20,
-                fedsynth_ksim: 4,
-                fedsynth_steps: 20,
-                ..ExperimentConfig::default()
-            };
-            let mut exp = Experiment::new(cfg, &rt)?;
+            let mut exp = Experiment::builder()
+                .name(format!("t1-{label}-{}", method.name()))
+                .dataset(ds)
+                .model(model)
+                .compressor(method)
+                .clients(clients)
+                .rounds(rounds)
+                .train_samples(train)
+                .test_samples(300)
+                .lr(0.05)
+                .eval_every(rounds)
+                .syn_steps(20)
+                .fedsynth_ksim(4)
+                .fedsynth_steps(20)
+                .build(&rt)?;
             let recs = exp.run()?;
             let last = recs.last().unwrap();
             accs.push((last.test_acc, last.ratio));

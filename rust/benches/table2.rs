@@ -8,7 +8,7 @@
 //! Scale knobs: ROUNDS (8), CLIENTS (10), TRAIN (1200), PAIRS (all|mlp).
 
 use fed3sfc::bench::{env_usize, Table};
-use fed3sfc::config::{CompressorKind, DatasetKind, ExperimentConfig};
+use fed3sfc::config::{CompressorKind, DatasetKind};
 use fed3sfc::coordinator::experiment::Experiment;
 use fed3sfc::runtime::Runtime;
 
@@ -37,6 +37,8 @@ fn main() -> anyhow::Result<()> {
     let rounds = env_usize("ROUNDS", 5);
     let clients = env_usize("CLIENTS", 6);
     let train = env_usize("TRAIN", 700);
+    // FRAC (percent) reruns the grid under uniform partial participation.
+    let frac = (env_usize("FRAC", 100) as f64 / 100.0).clamp(0.01, 1.0);
     let which = std::env::var("PAIRS").unwrap_or_else(|_| "mlp".into());
     let rt = Runtime::open(&fed3sfc::artifacts_dir())?;
 
@@ -58,21 +60,21 @@ fn main() -> anyhow::Result<()> {
     for (label, ds, model) in pairs(&which) {
         let mut cells = vec![label.to_string()];
         for method in methods {
-            let cfg = ExperimentConfig {
-                name: format!("t2-{label}-{}", method.name()),
-                dataset: ds,
-                model: model.to_string(),
-                compressor: method,
-                n_clients: clients,
-                rounds,
-                train_samples: train,
-                test_samples: 300,
-                lr: 0.05,
-                eval_every: rounds,
-                syn_steps: 20,
-                ..ExperimentConfig::default()
-            };
-            let mut exp = Experiment::new(cfg, &rt)?;
+            // client_frac < 1 implies uniform sampling (effective_schedule).
+            let mut exp = Experiment::builder()
+                .name(format!("t2-{label}-{}", method.name()))
+                .dataset(ds)
+                .model(model)
+                .compressor(method)
+                .clients(clients)
+                .rounds(rounds)
+                .train_samples(train)
+                .test_samples(300)
+                .lr(0.05)
+                .eval_every(rounds)
+                .syn_steps(20)
+                .client_frac(frac)
+                .build(&rt)?;
             let recs = exp.run()?;
             let last = recs.last().unwrap();
             cells.push(format!("{:.4} ({:.0}x)", last.test_acc, last.ratio));

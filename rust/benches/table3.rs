@@ -5,7 +5,7 @@
 //! Scale knobs: ROUNDS (8), CLIENTS (10), TRAIN (1200), PAIRS (all|mlp).
 
 use fed3sfc::bench::{env_usize, Table};
-use fed3sfc::config::{CompressorKind, DatasetKind, ExperimentConfig};
+use fed3sfc::config::{CompressorKind, DatasetKind};
 use fed3sfc::coordinator::experiment::Experiment;
 use fed3sfc::runtime::Runtime;
 
@@ -53,22 +53,20 @@ fn main() -> anyhow::Result<()> {
             (CompressorKind::ThreeSfc, 2),
             (CompressorKind::ThreeSfc, 4),
         ] {
-            let cfg = ExperimentConfig {
-                name: format!("t3-{label}-{}-{budget}", method.name()),
-                dataset: ds,
-                model: model.to_string(),
-                compressor: method,
-                budget_mult: budget,
-                n_clients: clients,
-                rounds,
-                train_samples: train,
-                test_samples: 300,
-                lr: 0.05,
-                eval_every: rounds,
-                syn_steps: 20,
-                ..ExperimentConfig::default()
-            };
-            let mut exp = Experiment::new(cfg, &rt)?;
+            let mut exp = Experiment::builder()
+                .name(format!("t3-{label}-{}-{budget}", method.name()))
+                .dataset(ds)
+                .model(model)
+                .compressor(method)
+                .budget_mult(budget)
+                .clients(clients)
+                .rounds(rounds)
+                .train_samples(train)
+                .test_samples(300)
+                .lr(0.05)
+                .eval_every(rounds)
+                .syn_steps(20)
+                .build(&rt)?;
             let recs = exp.run()?;
             let last = recs.last().unwrap();
             cells.push(format!("{:.4} ({:.0}x)", last.test_acc, last.ratio));

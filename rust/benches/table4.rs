@@ -4,7 +4,7 @@
 //! Scale knobs: ROUNDS (10), CLIENTS (10), TRAIN (1200), PAIRS (mlp|all).
 
 use fed3sfc::bench::{env_usize, Table};
-use fed3sfc::config::{DatasetKind, ExperimentConfig};
+use fed3sfc::config::DatasetKind;
 use fed3sfc::coordinator::experiment::Experiment;
 use fed3sfc::runtime::Runtime;
 
@@ -57,23 +57,21 @@ fn main() -> anyhow::Result<()> {
     for v in &variants {
         let mut cells = vec![v.label.to_string()];
         for (label, ds, model) in &pairs {
-            let cfg = ExperimentConfig {
-                name: format!("t4-{label}-{}", v.label),
-                dataset: *ds,
-                model: model.to_string(),
-                error_feedback: v.ef,
-                budget_mult: v.budget,
-                k_local: v.k,
-                n_clients: clients,
-                rounds,
-                train_samples: train,
-                test_samples: 300,
-                lr: 0.05,
-                eval_every: rounds,
-                syn_steps: 20,
-                ..ExperimentConfig::default()
-            };
-            let mut exp = Experiment::new(cfg, &rt)?;
+            let mut exp = Experiment::builder()
+                .name(format!("t4-{label}-{}", v.label))
+                .dataset(*ds)
+                .model(*model)
+                .error_feedback(v.ef)
+                .budget_mult(v.budget)
+                .k_local(v.k)
+                .clients(clients)
+                .rounds(rounds)
+                .train_samples(train)
+                .test_samples(300)
+                .lr(0.05)
+                .eval_every(rounds)
+                .syn_steps(20)
+                .build(&rt)?;
             let recs = exp.run()?;
             cells.push(format!("{:.4}", recs.last().unwrap().test_acc));
         }

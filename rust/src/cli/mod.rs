@@ -77,6 +77,13 @@ impl Args {
             None => Ok(default),
         }
     }
+
+    pub fn get_f32(&self, name: &str, default: f32) -> Result<f32> {
+        match self.get(name) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -111,6 +118,8 @@ mod tests {
         let a = Args::parse(argv(&["x", "--n", "7", "--lr", "0.5"]), &[]).unwrap();
         assert_eq!(a.get_usize("n", 1).unwrap(), 7);
         assert_eq!(a.get_f64("lr", 0.0).unwrap(), 0.5);
+        assert_eq!(a.get_f32("lr", 0.0).unwrap(), 0.5);
+        assert_eq!(a.get_f32("absent", 2.5).unwrap(), 2.5);
         assert_eq!(a.get_usize("absent", 3).unwrap(), 3);
         assert!(a.get_usize("lr", 1).is_err());
     }

@@ -82,6 +82,97 @@ impl DatasetKind {
     }
 }
 
+/// Which clients act each round (see `coordinator::schedule`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ScheduleKind {
+    /// Every client, every round (the paper's protocol; default).
+    Full,
+    /// `⌈client_frac·n⌉` clients drawn uniformly without replacement.
+    Uniform,
+    /// Rotating cohort of `⌈client_frac·n⌉` clients.
+    RoundRobin,
+}
+
+impl ScheduleKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "full" => ScheduleKind::Full,
+            "uniform" | "random" => ScheduleKind::Uniform,
+            "round_robin" | "roundrobin" | "rr" => ScheduleKind::RoundRobin,
+            _ => bail!("unknown schedule '{s}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScheduleKind::Full => "full",
+            ScheduleKind::Uniform => "uniform",
+            ScheduleKind::RoundRobin => "round_robin",
+        }
+    }
+}
+
+/// Server-side optimizer applied to the aggregated pseudo-gradient
+/// (see `coordinator::opt`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ServerOptKind {
+    /// `w ← w − server_lr·ḡ`; `server_lr = 1` is the paper's Eq. 3 (default).
+    Gd,
+    /// Heavy-ball momentum with coefficient `server_momentum`.
+    Momentum,
+    /// FedAdam (Reddi et al.) with `adam_beta1/adam_beta2/adam_tau`.
+    FedAdam,
+}
+
+impl ServerOptKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "gd" | "sgd" => ServerOptKind::Gd,
+            "momentum" => ServerOptKind::Momentum,
+            "fedadam" | "adam" => ServerOptKind::FedAdam,
+            _ => bail!("unknown server optimizer '{s}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ServerOptKind::Gd => "gd",
+            ServerOptKind::Momentum => "momentum",
+            ServerOptKind::FedAdam => "fedadam",
+        }
+    }
+}
+
+/// Link model preset for the in-loop round-time accounting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum NetworkKind {
+    /// Constrained edge client: 10 Mbps up / 50 Mbps down / 30 ms (default).
+    Edge,
+    /// Datacenter link: 10 Gbps symmetric / 0.5 ms.
+    Datacenter,
+    /// Rates taken from `net_up_mbps`/`net_down_mbps`/`net_latency_ms`.
+    Custom,
+}
+
+impl NetworkKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "edge" => NetworkKind::Edge,
+            "datacenter" | "dc" => NetworkKind::Datacenter,
+            "custom" => NetworkKind::Custom,
+            _ => bail!("unknown network '{s}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            NetworkKind::Edge => "edge",
+            NetworkKind::Datacenter => "datacenter",
+            NetworkKind::Custom => "custom",
+        }
+    }
+}
+
 /// Compression method (the paper's competitor zoo + the contribution).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum CompressorKind {
@@ -164,6 +255,25 @@ pub struct ExperimentConfig {
     pub fedsynth_lr_syn: f32,
     /// Optional metrics JSONL path ("" → none).
     pub metrics_path: String,
+    /// Client participation schedule (`[schedule]` table).
+    pub schedule: ScheduleKind,
+    /// Fraction of clients per round for uniform/round-robin schedules.
+    pub client_frac: f64,
+    /// Server optimizer (`[server_opt]` table).
+    pub server_opt: ServerOptKind,
+    /// Server learning rate η_s (1.0 ≡ the paper's unit step).
+    pub server_lr: f32,
+    /// Heavy-ball coefficient for `server_opt = "momentum"`.
+    pub server_momentum: f32,
+    /// FedAdam first/second-moment decay and adaptivity degree τ.
+    pub adam_beta1: f32,
+    pub adam_beta2: f32,
+    pub adam_tau: f32,
+    /// Link model for in-loop round-time accounting (`[network]` table).
+    pub network: NetworkKind,
+    pub net_up_mbps: f64,
+    pub net_down_mbps: f64,
+    pub net_latency_ms: f64,
 }
 
 impl Default for ExperimentConfig {
@@ -193,6 +303,18 @@ impl Default for ExperimentConfig {
             fedsynth_steps: 30,
             fedsynth_lr_syn: 0.5,
             metrics_path: String::new(),
+            schedule: ScheduleKind::Full,
+            client_frac: 1.0,
+            server_opt: ServerOptKind::Gd,
+            server_lr: 1.0,
+            server_momentum: 0.9,
+            adam_beta1: 0.9,
+            adam_beta2: 0.99,
+            adam_tau: 1e-3,
+            network: NetworkKind::Edge,
+            net_up_mbps: 10.0,
+            net_down_mbps: 50.0,
+            net_latency_ms: 30.0,
         }
     }
 }
@@ -204,6 +326,31 @@ impl ExperimentConfig {
             self.dataset.default_model()
         } else {
             &self.model
+        }
+    }
+
+    /// The schedule the round engine actually runs: asking for partial
+    /// participation (`client_frac < 1`) without naming a schedule means
+    /// uniform sampling — so `--client-frac 0.1` alone does what it says
+    /// instead of silently keeping full participation.
+    pub fn effective_schedule(&self) -> ScheduleKind {
+        if self.schedule == ScheduleKind::Full && self.client_frac < 1.0 {
+            ScheduleKind::Uniform
+        } else {
+            self.schedule
+        }
+    }
+
+    /// The link model this config describes (presets or custom rates).
+    pub fn network_model(&self) -> crate::simnet::NetworkModel {
+        match self.network {
+            NetworkKind::Edge => crate::simnet::NetworkModel::edge(),
+            NetworkKind::Datacenter => crate::simnet::NetworkModel::datacenter(),
+            NetworkKind::Custom => crate::simnet::NetworkModel::custom(
+                self.net_up_mbps,
+                self.net_down_mbps,
+                self.net_latency_ms,
+            ),
         }
     }
 
@@ -238,6 +385,24 @@ impl ExperimentConfig {
         if self.train_samples < self.n_clients {
             bail!("need at least one training sample per client");
         }
+        if !(self.client_frac > 0.0 && self.client_frac <= 1.0) {
+            bail!("client_frac must be in (0, 1], got {}", self.client_frac);
+        }
+        if self.server_lr <= 0.0 {
+            bail!("server_lr must be positive");
+        }
+        if !(0.0..1.0).contains(&self.server_momentum) {
+            bail!("server momentum must be in [0, 1)");
+        }
+        if !(0.0..1.0).contains(&self.adam_beta1) || !(0.0..1.0).contains(&self.adam_beta2) {
+            bail!("adam betas must be in [0, 1)");
+        }
+        if self.adam_tau <= 0.0 {
+            bail!("adam tau must be positive");
+        }
+        if self.net_up_mbps <= 0.0 || self.net_down_mbps <= 0.0 || self.net_latency_ms < 0.0 {
+            bail!("network rates must be positive and latency non-negative");
+        }
         Ok(())
     }
 
@@ -271,6 +436,20 @@ impl ExperimentConfig {
                 "fedsynth_steps" => self.fedsynth_steps = v.as_i64()? as usize,
                 "fedsynth_lr_syn" => self.fedsynth_lr_syn = v.as_f64()? as f32,
                 "metrics_path" => self.metrics_path = v.as_str()?.to_string(),
+                "client_frac" | "schedule.client_frac" | "schedule.frac" => {
+                    self.client_frac = v.as_f64()?
+                }
+                "schedule.kind" => self.schedule = ScheduleKind::parse(v.as_str()?)?,
+                "server_opt.kind" => self.server_opt = ServerOptKind::parse(v.as_str()?)?,
+                "server_lr" | "server_opt.lr" => self.server_lr = v.as_f64()? as f32,
+                "server_opt.momentum" => self.server_momentum = v.as_f64()? as f32,
+                "server_opt.beta1" => self.adam_beta1 = v.as_f64()? as f32,
+                "server_opt.beta2" => self.adam_beta2 = v.as_f64()? as f32,
+                "server_opt.tau" => self.adam_tau = v.as_f64()? as f32,
+                "network.kind" => self.network = NetworkKind::parse(v.as_str()?)?,
+                "network.up_mbps" => self.net_up_mbps = v.as_f64()?,
+                "network.down_mbps" => self.net_down_mbps = v.as_f64()?,
+                "network.latency_ms" => self.net_latency_ms = v.as_f64()?,
                 other => bail!("unknown config key '{other}'"),
             }
         }
@@ -332,6 +511,75 @@ mod tests {
         cfg.budget_mult = 3;
         assert!(cfg.validate().is_err());
         assert!(ExperimentConfig::from_toml_str("bogus_key = 1").is_err());
+    }
+
+    #[test]
+    fn round_engine_toml_tables() {
+        // The acceptance scenario: 100 clients, 10% uniform sampling,
+        // FedAdam server optimizer, edge link.
+        let cfg = ExperimentConfig::from_toml_str(
+            r#"
+            clients = 100
+            rounds = 5
+
+            [schedule]
+            kind = "uniform"
+            client_frac = 0.1
+
+            [server_opt]
+            kind = "fedadam"
+            lr = 0.05
+            tau = 0.001
+
+            [network]
+            kind = "edge"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.schedule, ScheduleKind::Uniform);
+        assert_eq!(cfg.client_frac, 0.1);
+        assert_eq!(cfg.server_opt, ServerOptKind::FedAdam);
+        assert_eq!(cfg.server_lr, 0.05);
+        assert_eq!(cfg.network, NetworkKind::Edge);
+        let net = cfg.network_model();
+        assert_eq!(net.up_bps, 10e6);
+    }
+
+    #[test]
+    fn client_frac_alone_implies_uniform_sampling() {
+        let cfg = ExperimentConfig::from_toml_str("client_frac = 0.1").unwrap();
+        assert_eq!(cfg.schedule, ScheduleKind::Full);
+        assert_eq!(cfg.effective_schedule(), ScheduleKind::Uniform);
+        // Explicit schedules and full participation are left alone.
+        let full = ExperimentConfig::default();
+        assert_eq!(full.effective_schedule(), ScheduleKind::Full);
+        let rr =
+            ExperimentConfig::from_toml_str("[schedule]\nkind = \"rr\"\nclient_frac = 0.5\n")
+                .unwrap();
+        assert_eq!(rr.effective_schedule(), ScheduleKind::RoundRobin);
+    }
+
+    #[test]
+    fn custom_network_rates() {
+        let cfg = ExperimentConfig::from_toml_str(
+            "[network]\nkind = \"custom\"\nup_mbps = 2.5\ndown_mbps = 20\nlatency_ms = 80\n",
+        )
+        .unwrap();
+        let net = cfg.network_model();
+        assert_eq!(net.up_bps, 2.5e6);
+        assert_eq!(net.down_bps, 20e6);
+        assert!((net.latency_s - 0.080).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_bad_round_engine_values() {
+        assert!(ExperimentConfig::from_toml_str("client_frac = 0.0").is_err());
+        assert!(ExperimentConfig::from_toml_str("client_frac = 1.5").is_err());
+        assert!(ExperimentConfig::from_toml_str("[schedule]\nkind = \"lottery\"").is_err());
+        assert!(ExperimentConfig::from_toml_str("[server_opt]\nkind = \"lbfgs\"").is_err());
+        assert!(ExperimentConfig::from_toml_str("[server_opt]\nmomentum = 1.0").is_err());
+        assert!(ExperimentConfig::from_toml_str("[network]\nkind = \"carrier_pigeon\"").is_err());
+        assert!(ExperimentConfig::from_toml_str("server_lr = 0.0").is_err());
     }
 
     #[test]

@@ -3,6 +3,37 @@
 //! Supported grammar — everything the experiment presets use:
 //! `[table]` / `[a.b]` headers, `key = value` with string, integer, float,
 //! boolean and flat-array values, `#` comments, blank lines.
+//!
+//! # Round-engine tables
+//!
+//! Besides the root-level experiment keys (see
+//! `ExperimentConfig::apply_toml`), presets may configure the round
+//! engine with three tables:
+//!
+//! ```toml
+//! [schedule]
+//! kind = "uniform"        # full | uniform | round_robin   (default: full)
+//! client_frac = 0.1       # fraction of clients per round, in (0, 1]
+//!
+//! [server_opt]
+//! kind = "fedadam"        # gd | momentum | fedadam        (default: gd)
+//! lr = 0.05               # server learning rate η_s       (default: 1.0)
+//! momentum = 0.9          # heavy-ball β, kind = "momentum"
+//! beta1 = 0.9             # FedAdam first-moment decay
+//! beta2 = 0.99            # FedAdam second-moment decay
+//! tau = 0.001             # FedAdam adaptivity degree τ
+//!
+//! [network]
+//! kind = "edge"           # edge | datacenter | custom     (default: edge)
+//! up_mbps = 10.0          # kind = "custom" only
+//! down_mbps = 50.0
+//! latency_ms = 30.0
+//! ```
+//!
+//! `client_frac` and `server_lr` are also accepted at the root level for
+//! flat (CLI-style) presets, and `client_frac < 1` without an explicit
+//! `schedule.kind` implies uniform sampling (see
+//! `ExperimentConfig::effective_schedule`).
 
 use std::collections::BTreeMap;
 

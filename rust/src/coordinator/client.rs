@@ -12,6 +12,8 @@ pub struct ClientState {
     pub rng: Rng,
     /// |D_i| — aggregation weight (the paper's weighted average G).
     pub n_samples: usize,
+    /// Rounds this client was selected in (partial-participation stats).
+    pub rounds_participated: usize,
 }
 
 impl ClientState {
@@ -23,6 +25,7 @@ impl ClientState {
             ef: vec![0.0f32; n_params],
             rng: root_rng.split(0xC11EFF + id as u64),
             n_samples,
+            rounds_participated: 0,
         }
     }
 

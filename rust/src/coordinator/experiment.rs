@@ -1,15 +1,33 @@
-//! The experiment driver: wires dataset → partition → clients → compressor
-//! → server into the paper's training loop (Algorithm 1).
+//! The experiment driver: wires dataset → partition → scheduler → clients
+//! → compressor → server-optimizer into the paper's training loop
+//! (Algorithm 1), generalized into a composable round engine.
+//!
+//! Per round: the [`ClientScheduler`] picks the participating set, each
+//! selected client trains locally and uploads a compressed payload, the
+//! server aggregates over the *selected* clients only and steps through
+//! its [`crate::coordinator::ServerOptimizer`], and the [`NetworkModel`]
+//! converts the round's
+//! payload sizes into a modeled `comm_time_s` (slowest-selected-client
+//! semantics). Skipped clients keep all state — in particular their
+//! error-feedback memory — untouched until their next participation.
+//!
+//! Construct experiments with [`ExperimentBuilder`] (or
+//! [`Experiment::new`] from a finished [`ExperimentConfig`]).
 
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::compress::{self, Compressor, EncodeCtx};
-use crate::config::{CompressorKind, ExperimentConfig};
+use crate::config::{
+    CompressorKind, DatasetKind, ExperimentConfig, NetworkKind, ScheduleKind, ServerOptKind,
+};
+use crate::coordinator::opt::build_server_opt;
+use crate::coordinator::schedule::{build_scheduler, ClientScheduler};
 use crate::coordinator::{ClientState, MetricsSink, Server, Traffic};
 use crate::data::{dirichlet_partition, Dataset};
 use crate::runtime::{FedOps, Runtime};
+use crate::simnet::NetworkModel;
 use crate::util::rng::Rng;
 use crate::util::vecmath;
 
@@ -19,12 +37,18 @@ pub struct RoundRecord {
     pub round: usize,
     pub test_acc: f64,
     pub test_loss: f64,
+    /// Clients that participated this round (= n_clients under full
+    /// participation).
+    pub n_selected: usize,
     pub up_bytes_round: u64,
     pub up_bytes_cum: u64,
     /// Mean per-client compression efficiency cos(ĝ, g+e) (Fig 7).
     pub efficiency: f64,
-    /// Compression ratio (× vs dense) of this round's payloads.
+    /// Mean compression ratio (× vs dense) over this round's payloads.
     pub ratio: f64,
+    /// Modeled communication time for this round under the configured
+    /// link: slowest selected upload + broadcast + latency.
+    pub comm_time_s: f64,
     pub wall_ms: f64,
 }
 
@@ -34,14 +58,23 @@ pub struct Experiment<'a> {
     pub ops: FedOps<'a>,
     pub server: Server,
     pub clients: Vec<ClientState>,
+    pub scheduler: Box<dyn ClientScheduler>,
     pub compressor: Box<dyn Compressor>,
+    pub net: NetworkModel,
     pub train: Dataset,
     pub test: Dataset,
     pub traffic: Traffic,
     pub metrics: MetricsSink,
+    /// The client set of the most recent round (tests/diagnostics).
+    pub last_selected: Vec<usize>,
 }
 
 impl<'a> Experiment<'a> {
+    /// Start a fluent builder over the default (paper-faithful) config.
+    pub fn builder() -> ExperimentBuilder {
+        ExperimentBuilder::new()
+    }
+
     pub fn new(cfg: ExperimentConfig, rt: &'a Runtime) -> Result<Experiment<'a>> {
         cfg.validate()?;
         let ops = FedOps::new(rt, cfg.model_key())?;
@@ -72,23 +105,30 @@ impl<'a> Experiment<'a> {
             .collect();
 
         let w0 = rt.manifest.load_init(model)?;
+        let scheduler = build_scheduler(&cfg, &root);
+        let server = Server::with_optimizer(w0, build_server_opt(&cfg));
+        let net = cfg.network_model();
         let compressor = compress::build(&cfg, model);
         let metrics = MetricsSink::new(&cfg.metrics_path)?;
         Ok(Experiment {
             cfg,
             ops,
-            server: Server::new(w0),
+            server,
             clients,
+            scheduler,
             compressor,
+            net,
             train,
             test,
             traffic: Traffic::default(),
             metrics,
+            last_selected: Vec::new(),
         })
     }
 
     /// Run one communication round; returns the record (evaluation only on
-    /// eval rounds, otherwise acc/loss copy the previous record).
+    /// eval rounds, otherwise acc/loss carry the last evaluation — seeded
+    /// with a real round-0 evaluation of the initial weights).
     pub fn run_round(&mut self) -> Result<RoundRecord> {
         let t0 = Instant::now();
         let cfg = &self.cfg;
@@ -97,13 +137,16 @@ impl<'a> Experiment<'a> {
         let b = model.train_batch;
         let w_global = self.server.w.clone();
 
-        let mut recons: Vec<Vec<f32>> = Vec::with_capacity(self.clients.len());
-        let mut weights: Vec<f32> = Vec::with_capacity(self.clients.len());
+        let selected = self.scheduler.select(self.server.round, self.clients.len());
+        let mut recons: Vec<Vec<f32>> = Vec::with_capacity(selected.len());
+        let mut weights: Vec<f32> = Vec::with_capacity(selected.len());
+        let mut up_bytes_each: Vec<u64> = Vec::with_capacity(selected.len());
         let mut round_bytes = 0u64;
         let mut eff_sum = 0.0f64;
-        let mut ratio = 0.0f64;
+        let mut ratio_sum = 0.0f64;
 
-        for client in &mut self.clients {
+        for &ci in &selected {
+            let client = &mut self.clients[ci];
             // 1. Local training (Algorithm 1, lines 3-5).
             let (xs, ys) = client.sample_round(&self.train, k, b);
             let w_local = self.ops.local_train(k, &w_global, &xs, &ys, cfg.lr)?;
@@ -129,43 +172,55 @@ impl<'a> Experiment<'a> {
             }
 
             // 5. Traffic + efficiency accounting.
-            round_bytes += payload.wire_bytes() as u64;
-            ratio = payload.ratio(model.params);
+            let wire = payload.wire_bytes();
+            round_bytes += wire as u64;
+            up_bytes_each.push(wire as u64);
+            ratio_sum += payload.ratio(model.params);
             eff_sum += vecmath::cosine(&recon, &target);
-            self.traffic.record_upload(payload.wire_bytes());
+            self.traffic.record_upload(wire);
+            client.rounds_participated += 1;
 
             recons.push(recon);
             weights.push(client.n_samples as f32);
         }
 
-        // 6. Server aggregation + global step (Eq. 3).
+        // 6. Aggregation over the selected set + server-optimizer step.
         self.server.apply_round(&recons, &weights);
-        self.traffic
-            .record_broadcast(model.params, self.clients.len());
+        self.traffic.record_broadcast(model.params, selected.len());
+        let comm_time_s = self
+            .net
+            .round_time_slowest(&up_bytes_each, (4 * model.params) as u64);
+        self.traffic.record_comm_time(comm_time_s);
         self.traffic.end_round();
 
-        // 7. Evaluation.
+        // 7. Evaluation. Non-eval rounds carry the previous evaluation
+        // forward; before any evaluation exists, evaluate the pre-round
+        // (round-0) weights instead of recording NaN placeholders.
         let round = self.server.round;
         let (test_loss, test_acc) = if round % self.cfg.eval_every.max(1) == 0 {
-            let (l, a) = self
-                .ops
-                .eval_dataset(&self.server.w, &self.test.features, &self.test.labels)?;
-            (l, a)
+            self.ops
+                .eval_dataset(&self.server.w, &self.test.features, &self.test.labels)?
         } else {
-            self.metrics
-                .last()
-                .map(|r| (r.test_loss, r.test_acc))
-                .unwrap_or((f64::NAN, f64::NAN))
+            match self.metrics.last() {
+                Some(r) => (r.test_loss, r.test_acc),
+                None => self
+                    .ops
+                    .eval_dataset(&w_global, &self.test.features, &self.test.labels)?,
+            }
         };
 
+        let n_selected = selected.len();
+        self.last_selected = selected;
         let rec = RoundRecord {
             round,
             test_acc,
             test_loss,
+            n_selected,
             up_bytes_round: round_bytes,
             up_bytes_cum: self.traffic.up_bytes,
-            efficiency: eff_sum / self.clients.len() as f64,
-            ratio,
+            efficiency: eff_sum / n_selected as f64,
+            ratio: ratio_sum / n_selected as f64,
+            comm_time_s,
             wall_ms: t0.elapsed().as_secs_f64() * 1e3,
         };
         self.metrics.push(rec)?;
@@ -194,5 +249,202 @@ impl<'a> Experiment<'a> {
     /// Compressor-kind accessor for reporting.
     pub fn kind(&self) -> CompressorKind {
         self.cfg.compressor
+    }
+}
+
+/// Fluent construction of an [`Experiment`] — examples and benches set
+/// only what differs from the paper-faithful defaults instead of filling
+/// an [`ExperimentConfig`] field-by-field.
+///
+/// ```no_run
+/// # use fed3sfc::config::{CompressorKind, DatasetKind, ScheduleKind, ServerOptKind};
+/// # use fed3sfc::coordinator::experiment::Experiment;
+/// # fn main() -> anyhow::Result<()> {
+/// let rt = fed3sfc::Runtime::open(&fed3sfc::artifacts_dir())?;
+/// let mut exp = Experiment::builder()
+///     .dataset(DatasetKind::SynthSmall)
+///     .compressor(CompressorKind::ThreeSfc)
+///     .clients(100)
+///     .schedule(ScheduleKind::Uniform)
+///     .client_frac(0.1)
+///     .server_opt(ServerOptKind::FedAdam)
+///     .rounds(20)
+///     .build(&rt)?;
+/// exp.run()?;
+/// # Ok(()) }
+/// ```
+#[derive(Clone, Debug, Default)]
+pub struct ExperimentBuilder {
+    cfg: ExperimentConfig,
+}
+
+impl ExperimentBuilder {
+    pub fn new() -> ExperimentBuilder {
+        ExperimentBuilder { cfg: ExperimentConfig::default() }
+    }
+
+    /// Seed the builder from an existing config (e.g. a TOML preset).
+    pub fn from_config(cfg: ExperimentConfig) -> ExperimentBuilder {
+        ExperimentBuilder { cfg }
+    }
+
+    /// The accumulated config (for inspection before `build`).
+    pub fn config(&self) -> &ExperimentConfig {
+        &self.cfg
+    }
+
+    pub fn name(mut self, name: impl Into<String>) -> Self {
+        self.cfg.name = name.into();
+        self
+    }
+
+    pub fn dataset(mut self, ds: DatasetKind) -> Self {
+        self.cfg.dataset = ds;
+        self
+    }
+
+    pub fn model(mut self, key: impl Into<String>) -> Self {
+        self.cfg.model = key.into();
+        self
+    }
+
+    pub fn compressor(mut self, kind: CompressorKind) -> Self {
+        self.cfg.compressor = kind;
+        self
+    }
+
+    pub fn clients(mut self, n: usize) -> Self {
+        self.cfg.n_clients = n;
+        self
+    }
+
+    pub fn rounds(mut self, n: usize) -> Self {
+        self.cfg.rounds = n;
+        self
+    }
+
+    pub fn k_local(mut self, k: usize) -> Self {
+        self.cfg.k_local = k;
+        self
+    }
+
+    pub fn lr(mut self, lr: f32) -> Self {
+        self.cfg.lr = lr;
+        self
+    }
+
+    pub fn budget_mult(mut self, m: usize) -> Self {
+        self.cfg.budget_mult = m;
+        self
+    }
+
+    pub fn syn_steps(mut self, s: usize) -> Self {
+        self.cfg.syn_steps = s;
+        self
+    }
+
+    pub fn lr_syn(mut self, lr: f32) -> Self {
+        self.cfg.lr_syn = lr;
+        self
+    }
+
+    pub fn error_feedback(mut self, on: bool) -> Self {
+        self.cfg.error_feedback = on;
+        self
+    }
+
+    pub fn topk_rate(mut self, rate: f64) -> Self {
+        self.cfg.topk_rate = rate;
+        self
+    }
+
+    pub fn alpha(mut self, alpha: f64) -> Self {
+        self.cfg.alpha = alpha;
+        self
+    }
+
+    pub fn train_samples(mut self, n: usize) -> Self {
+        self.cfg.train_samples = n;
+        self
+    }
+
+    pub fn test_samples(mut self, n: usize) -> Self {
+        self.cfg.test_samples = n;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    pub fn eval_every(mut self, n: usize) -> Self {
+        self.cfg.eval_every = n;
+        self
+    }
+
+    pub fn fedsynth_ksim(mut self, k: usize) -> Self {
+        self.cfg.fedsynth_ksim = k;
+        self
+    }
+
+    pub fn fedsynth_steps(mut self, s: usize) -> Self {
+        self.cfg.fedsynth_steps = s;
+        self
+    }
+
+    pub fn metrics_path(mut self, path: impl Into<String>) -> Self {
+        self.cfg.metrics_path = path.into();
+        self
+    }
+
+    pub fn schedule(mut self, kind: ScheduleKind) -> Self {
+        self.cfg.schedule = kind;
+        self
+    }
+
+    pub fn client_frac(mut self, frac: f64) -> Self {
+        self.cfg.client_frac = frac;
+        self
+    }
+
+    pub fn server_opt(mut self, kind: ServerOptKind) -> Self {
+        self.cfg.server_opt = kind;
+        self
+    }
+
+    pub fn server_lr(mut self, lr: f32) -> Self {
+        self.cfg.server_lr = lr;
+        self
+    }
+
+    pub fn server_momentum(mut self, beta: f32) -> Self {
+        self.cfg.server_momentum = beta;
+        self
+    }
+
+    pub fn adam_params(mut self, beta1: f32, beta2: f32, tau: f32) -> Self {
+        self.cfg.adam_beta1 = beta1;
+        self.cfg.adam_beta2 = beta2;
+        self.cfg.adam_tau = tau;
+        self
+    }
+
+    pub fn network(mut self, kind: NetworkKind) -> Self {
+        self.cfg.network = kind;
+        self
+    }
+
+    pub fn custom_network(mut self, up_mbps: f64, down_mbps: f64, latency_ms: f64) -> Self {
+        self.cfg.network = NetworkKind::Custom;
+        self.cfg.net_up_mbps = up_mbps;
+        self.cfg.net_down_mbps = down_mbps;
+        self.cfg.net_latency_ms = latency_ms;
+        self
+    }
+
+    /// Validate and wire the experiment against a runtime.
+    pub fn build(self, rt: &Runtime) -> Result<Experiment<'_>> {
+        Experiment::new(self.cfg, rt)
     }
 }

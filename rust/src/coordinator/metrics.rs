@@ -31,10 +31,12 @@ impl MetricsSink {
                 .int("round", rec.round as i64)
                 .num("test_acc", rec.test_acc)
                 .num("test_loss", rec.test_loss)
+                .int("n_selected", rec.n_selected as i64)
                 .int("up_bytes_round", rec.up_bytes_round as i64)
                 .int("up_bytes_cum", rec.up_bytes_cum as i64)
                 .num("efficiency", rec.efficiency)
                 .num("ratio", rec.ratio)
+                .num("comm_time_s", rec.comm_time_s)
                 .num("wall_ms", rec.wall_ms)
                 .finish();
             writeln!(f, "{line}")?;

@@ -1,20 +1,42 @@
-//! The federated-learning coordinator (L3): clients, server, round
-//! scheduler, traffic accounting and metrics — the system the paper's
-//! compressors plug into.
+//! The federated-learning coordinator (L3): a composable round engine —
+//! client schedulers, per-client state, server optimizers, traffic and
+//! network-time accounting, and metrics — that the paper's compressors
+//! plug into.
 //!
 //! One process simulates the cluster (exactly like the paper's testbed,
 //! §5: "evaluated on a simulated 40 clients cluster"), but messages,
 //! byte accounting and client/server state are kept strictly separate so
 //! the compressors see the same interface a distributed deployment would.
+//!
+//! The round engine is assembled from three pluggable pieces, all chosen
+//! by [`crate::config::ExperimentConfig`] (or the [`ExperimentBuilder`]):
+//!
+//! * a [`ClientScheduler`] ([`schedule`]) decides which clients act each
+//!   round — full participation (the paper's protocol), uniform random
+//!   `client_frac` sampling, or round-robin cohorts. Skipped clients keep
+//!   their error-feedback memory untouched until they next participate,
+//!   and aggregation normalizes over the selected set only;
+//! * a [`ServerOptimizer`] ([`opt`]) turns the aggregated pseudo-gradient
+//!   into the global step — plain GD (`server_lr = 1` reproduces the
+//!   paper's Eq. 3 bit-for-bit), server momentum, or FedAdam;
+//! * a [`crate::simnet::NetworkModel`] converts each round's payload
+//!   sizes into a modeled `comm_time_s` with slowest-selected-client
+//!   semantics, recorded on every [`RoundRecord`].
 
 pub mod client;
 pub mod experiment;
 pub mod metrics;
+pub mod opt;
+pub mod schedule;
 pub mod server;
 pub mod traffic;
 
 pub use client::ClientState;
-pub use experiment::{Experiment, RoundRecord};
+pub use experiment::{Experiment, ExperimentBuilder, RoundRecord};
 pub use metrics::MetricsSink;
+pub use opt::{build_server_opt, FedAdam, ServerGd, ServerMomentum, ServerOptimizer};
+pub use schedule::{
+    build_scheduler, ClientScheduler, FullParticipation, RoundRobin, UniformSampler,
+};
 pub use server::Server;
 pub use traffic::Traffic;

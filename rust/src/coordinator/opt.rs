@@ -1,0 +1,210 @@
+//! Server optimizers: how the aggregated (reconstructed) pseudo-gradient
+//! becomes a global-model update.
+//!
+//! The seed hardwired the paper's unit step `w ← w − ḡ` (Eq. 3). A
+//! [`ServerOptimizer`] makes that step pluggable, following the adaptive
+//! federated optimization family (Reddi et al., "Adaptive Federated
+//! Optimization"):
+//!
+//! * [`ServerGd`] — `w ← w − η_s·ḡ`; at `η_s = 1` this is bit-for-bit the
+//!   seed/paper update (the default).
+//! * [`ServerMomentum`] — heavy-ball: `v ← β·v + ḡ`, `w ← w − η_s·v`;
+//!   reduces exactly to [`ServerGd`] at `β = 0`.
+//! * [`FedAdam`] — `m ← β₁·m + (1−β₁)·ḡ`, `v ← β₂·v + (1−β₂)·ḡ²`,
+//!   `w ← w − η_s·m/(√v + τ)` (no bias correction, per FedAdam). In the
+//!   `β₁ = β₂ = 0`, large-`τ` limit the step is `(η_s/τ)·ḡ`, i.e. plain
+//!   GD with learning rate `η_s/τ`.
+//!
+//! All state (momentum/moment buffers) lives in the optimizer, so the
+//! server itself stays a plain weight holder.
+
+use crate::config::{ExperimentConfig, ServerOptKind};
+use crate::util::vecmath;
+
+/// Applies one global-model update from the aggregated pseudo-gradient.
+pub trait ServerOptimizer {
+    /// In-place update of `w` given `agg`, the sample-weighted average of
+    /// the round's reconstructed client updates.
+    fn step(&mut self, w: &mut [f32], agg: &[f32]);
+
+    /// Short name for logs/labels.
+    fn name(&self) -> &'static str;
+}
+
+/// Plain gradient descent with a server learning rate.
+pub struct ServerGd {
+    pub lr: f32,
+}
+
+impl ServerOptimizer for ServerGd {
+    fn step(&mut self, w: &mut [f32], agg: &[f32]) {
+        vecmath::axpy(-self.lr, agg, w);
+    }
+
+    fn name(&self) -> &'static str {
+        "gd"
+    }
+}
+
+/// Heavy-ball server momentum.
+pub struct ServerMomentum {
+    lr: f32,
+    beta: f32,
+    v: Vec<f32>,
+}
+
+impl ServerMomentum {
+    pub fn new(lr: f32, beta: f32) -> ServerMomentum {
+        ServerMomentum { lr, beta, v: Vec::new() }
+    }
+}
+
+impl ServerOptimizer for ServerMomentum {
+    fn step(&mut self, w: &mut [f32], agg: &[f32]) {
+        if self.v.is_empty() {
+            self.v = vec![0.0f32; agg.len()];
+        }
+        for (vi, gi) in self.v.iter_mut().zip(agg.iter()) {
+            *vi = self.beta * *vi + *gi;
+        }
+        vecmath::axpy(-self.lr, &self.v, w);
+    }
+
+    fn name(&self) -> &'static str {
+        "momentum"
+    }
+}
+
+/// FedAdam (Reddi et al., Algorithm 2): per-coordinate adaptive server
+/// step with adaptivity degree `tau`.
+pub struct FedAdam {
+    lr: f32,
+    beta1: f32,
+    beta2: f32,
+    tau: f32,
+    m: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl FedAdam {
+    pub fn new(lr: f32, beta1: f32, beta2: f32, tau: f32) -> FedAdam {
+        FedAdam { lr, beta1, beta2, tau, m: Vec::new(), v: Vec::new() }
+    }
+}
+
+impl ServerOptimizer for FedAdam {
+    fn step(&mut self, w: &mut [f32], agg: &[f32]) {
+        if self.m.is_empty() {
+            self.m = vec![0.0f32; agg.len()];
+            self.v = vec![0.0f32; agg.len()];
+        }
+        for i in 0..agg.len() {
+            let g = agg[i];
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * g;
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * g * g;
+            w[i] -= self.lr * self.m[i] / (self.v[i].sqrt() + self.tau);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "fedadam"
+    }
+}
+
+/// Build the server optimizer an [`ExperimentConfig`] describes.
+pub fn build_server_opt(cfg: &ExperimentConfig) -> Box<dyn ServerOptimizer> {
+    match cfg.server_opt {
+        ServerOptKind::Gd => Box::new(ServerGd { lr: cfg.server_lr }),
+        ServerOptKind::Momentum => {
+            Box::new(ServerMomentum::new(cfg.server_lr, cfg.server_momentum))
+        }
+        ServerOptKind::FedAdam => Box::new(FedAdam::new(
+            cfg.server_lr,
+            cfg.adam_beta1,
+            cfg.adam_beta2,
+            cfg.adam_tau,
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_steps(opt: &mut dyn ServerOptimizer, w0: &[f32], grads: &[Vec<f32>]) -> Vec<f32> {
+        let mut w = w0.to_vec();
+        for g in grads {
+            opt.step(&mut w, g);
+        }
+        w
+    }
+
+    #[test]
+    fn gd_matches_hand_computation() {
+        let mut opt = ServerGd { lr: 0.5 };
+        let mut w = vec![1.0f32, -2.0, 0.0];
+        opt.step(&mut w, &[2.0, 2.0, -4.0]);
+        assert_eq!(w, vec![0.0, -3.0, 2.0]);
+    }
+
+    #[test]
+    fn momentum_reduces_to_gd_at_zero_beta() {
+        // Satellite: β = 0 momentum must equal plain GD exactly, over
+        // multiple steps (state carried, but never mixed in).
+        let w0 = [0.3f32, -1.2, 4.0, 0.0];
+        let grads: Vec<Vec<f32>> = vec![
+            vec![1.0, -0.5, 0.25, 2.0],
+            vec![-2.0, 0.5, 1.0, -1.0],
+            vec![0.1, 0.2, -0.3, 0.4],
+        ];
+        let gd = run_steps(&mut ServerGd { lr: 0.7 }, &w0, &grads);
+        let mom = run_steps(&mut ServerMomentum::new(0.7, 0.0), &w0, &grads);
+        assert_eq!(gd, mom);
+    }
+
+    #[test]
+    fn momentum_accumulates_velocity() {
+        // Two identical gradients: second step must be larger than the first.
+        let mut opt = ServerMomentum::new(1.0, 0.9);
+        let mut w = vec![0.0f32];
+        opt.step(&mut w, &[1.0]);
+        let first = -w[0];
+        let before = w[0];
+        opt.step(&mut w, &[1.0]);
+        let second = before - w[0];
+        assert!((first - 1.0).abs() < 1e-6);
+        assert!((second - 1.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fedadam_reduces_to_gd_in_large_tau_zero_beta_limit() {
+        // Satellite: with β₁ = β₂ = 0 the moments are just ḡ and ḡ²; with
+        // τ ≫ |ḡ| the denominator is ≈ τ, so FedAdam(lr = η·τ) ≈ GD(η).
+        let eta = 0.05f32;
+        let tau = 1e6f32;
+        let w0 = [1.0f32, -0.5, 2.0, 0.25];
+        let grads: Vec<Vec<f32>> = vec![
+            vec![0.5, -1.0, 0.75, 0.1],
+            vec![-0.25, 0.5, -0.5, 1.0],
+        ];
+        let gd = run_steps(&mut ServerGd { lr: eta }, &w0, &grads);
+        let adam = run_steps(&mut FedAdam::new(eta * tau, 0.0, 0.0, tau), &w0, &grads);
+        for (a, b) in gd.iter().zip(adam.iter()) {
+            assert!((a - b).abs() < 1e-5, "gd {a} vs fedadam {b}");
+        }
+    }
+
+    #[test]
+    fn fedadam_step_is_bounded_by_lr() {
+        // The adaptive step magnitude is < lr per coordinate once v ≈ g².
+        let mut opt = FedAdam::new(0.1, 0.9, 0.99, 1e-3);
+        let mut w = vec![0.0f32; 3];
+        for _ in 0..50 {
+            opt.step(&mut w, &[10.0, -10.0, 0.0]);
+        }
+        // 50 steps of at most ~lr each.
+        assert!(w[0] < 0.0 && w[0] > -0.11 * 50.0);
+        assert!(w[1] > 0.0 && w[1] < 0.11 * 50.0);
+        assert_eq!(w[2], 0.0);
+    }
+}

@@ -1,0 +1,210 @@
+//! Client schedulers: which clients act each round.
+//!
+//! The paper's tables use full participation, but time-to-accuracy under
+//! constrained links (§1) depends heavily on *who* uploads each round —
+//! related compressor evaluations (STC, FedSZ) all report partial
+//! participation. A [`ClientScheduler`] owns that decision so the round
+//! loop in [`crate::coordinator::Experiment`] stays scenario-agnostic:
+//!
+//! * [`FullParticipation`] — every client, every round (the seed/paper
+//!   protocol; the default).
+//! * [`UniformSampler`] — `⌈frac·n⌉` clients drawn uniformly without
+//!   replacement from a dedicated RNG stream (independent of data/batch
+//!   sampling, so changing the schedule never perturbs local training).
+//! * [`RoundRobin`] — a rotating contiguous cohort of `⌈frac·n⌉` clients;
+//!   covers all `n` clients within `⌈1/frac⌉` rounds.
+//!
+//! Clients skipped in a round keep all their state (in particular the
+//! error-feedback memory) untouched until their next participation.
+
+use crate::config::{ExperimentConfig, ScheduleKind};
+use crate::util::rng::Rng;
+
+/// Decides the participating client set for each round.
+pub trait ClientScheduler {
+    /// Indices (ascending, non-empty, ≤ `n_clients`) of the clients that
+    /// train and upload in `round`. Stateful: round-robin advances its
+    /// cursor, the uniform sampler consumes its RNG stream.
+    fn select(&mut self, round: usize, n_clients: usize) -> Vec<usize>;
+
+    /// Short name for logs/labels.
+    fn name(&self) -> &'static str;
+}
+
+/// Cohort size for a participation fraction: `⌈frac·n⌉`, clamped to [1, n].
+/// The epsilon absorbs f64 products that land just above an integer
+/// (0.07 × 100 = 7.000000000000001 must mean 7 clients, not 8).
+fn cohort_size(frac: f64, n: usize) -> usize {
+    ((frac * n as f64 - 1e-9).ceil() as usize).clamp(1, n)
+}
+
+/// Every client participates every round (the paper's Table-2 protocol).
+pub struct FullParticipation;
+
+impl ClientScheduler for FullParticipation {
+    fn select(&mut self, _round: usize, n_clients: usize) -> Vec<usize> {
+        (0..n_clients).collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "full"
+    }
+}
+
+/// Uniform random sampling without replacement at a fixed fraction.
+pub struct UniformSampler {
+    frac: f64,
+    rng: Rng,
+}
+
+impl UniformSampler {
+    /// `rng` must be a dedicated stream (see `Experiment::new`): the
+    /// scheduler draws from it every round, and sharing it with any other
+    /// consumer would entangle the schedule with training randomness.
+    pub fn new(frac: f64, rng: Rng) -> UniformSampler {
+        UniformSampler { frac, rng }
+    }
+}
+
+impl ClientScheduler for UniformSampler {
+    fn select(&mut self, _round: usize, n_clients: usize) -> Vec<usize> {
+        let m = cohort_size(self.frac, n_clients);
+        // Partial Fisher–Yates: the first m slots are a uniform sample.
+        let mut pool: Vec<usize> = (0..n_clients).collect();
+        for i in 0..m {
+            let j = i + self.rng.below(n_clients - i);
+            pool.swap(i, j);
+        }
+        pool.truncate(m);
+        pool.sort_unstable();
+        pool
+    }
+
+    fn name(&self) -> &'static str {
+        "uniform"
+    }
+}
+
+/// Deterministic rotating cohort: rounds take consecutive blocks of
+/// `⌈frac·n⌉` clients modulo `n`, so every client participates within
+/// `⌈1/frac⌉` rounds of its last turn.
+pub struct RoundRobin {
+    frac: f64,
+    cursor: usize,
+}
+
+impl RoundRobin {
+    pub fn new(frac: f64) -> RoundRobin {
+        RoundRobin { frac, cursor: 0 }
+    }
+}
+
+impl ClientScheduler for RoundRobin {
+    fn select(&mut self, _round: usize, n_clients: usize) -> Vec<usize> {
+        let m = cohort_size(self.frac, n_clients);
+        let mut sel: Vec<usize> = (0..m).map(|i| (self.cursor + i) % n_clients).collect();
+        self.cursor = (self.cursor + m) % n_clients;
+        sel.sort_unstable();
+        sel
+    }
+
+    fn name(&self) -> &'static str {
+        "round_robin"
+    }
+}
+
+/// Build the scheduler an [`ExperimentConfig`] describes (via
+/// `effective_schedule`, so `client_frac < 1` alone selects uniform
+/// sampling). `root` is the experiment's root RNG; the uniform sampler
+/// splits its own stream off it so schedules replay bit-for-bit from the
+/// experiment seed.
+pub fn build_scheduler(cfg: &ExperimentConfig, root: &Rng) -> Box<dyn ClientScheduler> {
+    match cfg.effective_schedule() {
+        ScheduleKind::Full => Box::new(FullParticipation),
+        ScheduleKind::Uniform => Box::new(UniformSampler::new(
+            cfg.client_frac,
+            root.split(0x5C4E_D111),
+        )),
+        ScheduleKind::RoundRobin => Box::new(RoundRobin::new(cfg.client_frac)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_selects_everyone() {
+        let mut s = FullParticipation;
+        assert_eq!(s.select(0, 5), vec![0, 1, 2, 3, 4]);
+        assert_eq!(s.select(9, 3), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn uniform_is_deterministic_under_fixed_seed() {
+        // Satellite: same selected-set sequence across two identical runs.
+        let root = Rng::new(42);
+        let mut a = UniformSampler::new(0.3, root.split(0x5C4E_D111));
+        let mut b = UniformSampler::new(0.3, root.split(0x5C4E_D111));
+        for round in 0..50 {
+            assert_eq!(a.select(round, 10), b.select(round, 10));
+        }
+    }
+
+    #[test]
+    fn uniform_sample_is_valid_and_varies() {
+        let mut s = UniformSampler::new(0.3, Rng::new(7));
+        let mut distinct = std::collections::BTreeSet::new();
+        for round in 0..20 {
+            let sel = s.select(round, 10);
+            assert_eq!(sel.len(), 3);
+            // ascending, in-range, no duplicates
+            assert!(sel.windows(2).all(|w| w[0] < w[1]));
+            assert!(sel.iter().all(|&i| i < 10));
+            distinct.insert(sel);
+        }
+        assert!(distinct.len() > 1, "sampler never varied its cohort");
+    }
+
+    #[test]
+    fn uniform_frac_one_is_full_participation() {
+        let mut s = UniformSampler::new(1.0, Rng::new(1));
+        assert_eq!(s.select(0, 6), vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn round_robin_covers_all_clients_in_ceil_inv_frac_rounds() {
+        // Satellite: coverage of all n clients within ⌈1/frac⌉ rounds.
+        for (frac, n) in [(0.3f64, 10usize), (0.5, 4), (0.1, 100), (0.25, 7)] {
+            let mut s = RoundRobin::new(frac);
+            let budget = (1.0 / frac).ceil() as usize;
+            let mut seen = std::collections::BTreeSet::new();
+            for round in 0..budget {
+                for i in s.select(round, n) {
+                    seen.insert(i);
+                }
+            }
+            assert_eq!(seen.len(), n, "frac={frac} n={n} budget={budget}");
+        }
+    }
+
+    #[test]
+    fn round_robin_cohorts_rotate() {
+        let mut s = RoundRobin::new(0.5);
+        assert_eq!(s.select(0, 4), vec![0, 1]);
+        assert_eq!(s.select(1, 4), vec![2, 3]);
+        assert_eq!(s.select(2, 4), vec![0, 1]);
+    }
+
+    #[test]
+    fn cohort_size_bounds() {
+        assert_eq!(cohort_size(0.1, 10), 1);
+        assert_eq!(cohort_size(0.1, 5), 1); // ceil(0.5) = 1
+        assert_eq!(cohort_size(1.0, 10), 10);
+        assert_eq!(cohort_size(0.05, 10), 1); // clamped up to 1
+        assert_eq!(cohort_size(0.34, 10), 4); // ceil(3.4)
+        // f64 products just above an integer must not inflate the cohort
+        assert_eq!(cohort_size(0.07, 100), 7); // 0.07*100 = 7.000000000000001
+        assert_eq!(cohort_size(0.56, 25), 14); // 0.56*25 = 14.000000000000002
+    }
+}

@@ -1,22 +1,36 @@
-//! The FL server: holds the global model and applies the aggregated
-//! (reconstructed) gradients — Eq. 3/6.
+//! The FL server: holds the global model, aggregates the reconstructed
+//! client updates (Eq. 3/6), and delegates the global step to a pluggable
+//! [`ServerOptimizer`] (GD / momentum / FedAdam — see
+//! [`crate::coordinator::opt`]).
 
+use crate::coordinator::opt::{ServerGd, ServerOptimizer};
 use crate::util::vecmath;
 
 pub struct Server {
     /// Global flat weights w^t.
     pub w: Vec<f32>,
     pub round: usize,
+    opt: Box<dyn ServerOptimizer>,
 }
 
 impl Server {
+    /// Paper-faithful server: plain GD with a unit step (Eq. 3).
     pub fn new(w0: Vec<f32>) -> Server {
-        Server { w: w0, round: 0 }
+        Server::with_optimizer(w0, Box::new(ServerGd { lr: 1.0 }))
     }
 
-    /// Aggregate reconstructed gradients with the given weights (the paper's
-    /// G: weighted average, Σ weights normalized to 1) and step the model:
-    /// `w ← w − Σ_i λ_i ĝ_i`.
+    pub fn with_optimizer(w0: Vec<f32>, opt: Box<dyn ServerOptimizer>) -> Server {
+        Server { w: w0, round: 0, opt }
+    }
+
+    pub fn optimizer_name(&self) -> &'static str {
+        self.opt.name()
+    }
+
+    /// Aggregate reconstructed gradients with the given weights (the
+    /// paper's G: weighted average, Σ weights normalized to 1 — over the
+    /// *selected* clients only under partial participation) and hand the
+    /// result to the server optimizer for the global step.
     pub fn apply_round(&mut self, recons: &[Vec<f32>], weights: &[f32]) {
         assert_eq!(recons.len(), weights.len());
         assert!(!recons.is_empty());
@@ -26,7 +40,7 @@ impl Server {
         for (g, &wt) in recons.iter().zip(weights.iter()) {
             vecmath::weighted_add(&mut agg, g, (wt as f64 / total) as f32);
         }
-        vecmath::axpy(-1.0, &agg, &mut self.w);
+        self.opt.step(&mut self.w, &agg);
         self.round += 1;
     }
 }
@@ -34,6 +48,7 @@ impl Server {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::opt::ServerMomentum;
 
     #[test]
     fn weighted_average_step() {
@@ -45,5 +60,26 @@ mod tests {
         assert!((s.w[0] - 0.25).abs() < 1e-6);
         assert!((s.w[1] - 0.5).abs() < 1e-6);
         assert_eq!(s.round, 1);
+    }
+
+    #[test]
+    fn custom_optimizer_is_used() {
+        // Momentum at β=0.5 with two identical rounds: second step = 1.5×.
+        let mut s =
+            Server::with_optimizer(vec![0.0f32], Box::new(ServerMomentum::new(1.0, 0.5)));
+        s.apply_round(&[vec![1.0f32]], &[1.0]);
+        assert!((s.w[0] + 1.0).abs() < 1e-6);
+        s.apply_round(&[vec![1.0f32]], &[1.0]);
+        assert!((s.w[0] + 2.5).abs() < 1e-6);
+        assert_eq!(s.optimizer_name(), "momentum");
+    }
+
+    #[test]
+    fn normalization_is_over_provided_clients_only() {
+        // A subset of two (of what could be many) clients must average to
+        // 1 over that subset — partial-participation semantics.
+        let mut s = Server::new(vec![0.0f32]);
+        s.apply_round(&[vec![2.0f32], vec![4.0f32]], &[1.0, 1.0]);
+        assert!((s.w[0] + 3.0).abs() < 1e-6);
     }
 }

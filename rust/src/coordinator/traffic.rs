@@ -7,12 +7,19 @@ pub struct Traffic {
     pub up_bytes: u64,
     /// Server→client bytes (dense global-model broadcasts).
     pub down_bytes: u64,
+    /// Cumulative modeled communication time (simnet, slowest-client
+    /// round semantics) in seconds.
+    pub comm_s: f64,
     pub rounds: u64,
 }
 
 impl Traffic {
     pub fn record_upload(&mut self, bytes: usize) {
         self.up_bytes += bytes as u64;
+    }
+
+    pub fn record_comm_time(&mut self, seconds: f64) {
+        self.comm_s += seconds;
     }
 
     pub fn record_broadcast(&mut self, n_params: usize, n_clients: usize) {
@@ -43,9 +50,12 @@ mod tests {
         t.record_upload(100);
         t.record_upload(50);
         t.record_broadcast(10, 3);
+        t.record_comm_time(1.5);
+        t.record_comm_time(0.5);
         t.end_round();
         assert_eq!(t.up_bytes, 150);
         assert_eq!(t.down_bytes, 120);
         assert_eq!(t.up_per_round(), 150.0);
+        assert_eq!(t.comm_s, 2.0);
     }
 }

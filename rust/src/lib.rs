@@ -6,10 +6,12 @@
 //!
 //! Three-layer architecture (see `DESIGN.md`):
 //!
-//! * **L3 (this crate)** — the federated-learning coordinator: clients,
-//!   server, round scheduler, the full compressor zoo (FedAvg / DGC /
-//!   signSGD / STC / 3SFC / FedSynth), error-feedback state, non-i.i.d.
-//!   data partitioning, traffic accounting, metrics, config and CLI.
+//! * **L3 (this crate)** — the federated-learning coordinator: a
+//!   composable round engine (pluggable client schedulers and server
+//!   optimizers, simnet-aware round accounting), the full compressor zoo
+//!   (FedAvg / DGC / signSGD / STC / 3SFC / FedSynth), error-feedback
+//!   state, non-i.i.d. data partitioning, traffic accounting, metrics,
+//!   config and CLI.
 //! * **L2 (python/compile)** — jax fed-ops over flat parameter vectors,
 //!   AOT-lowered once to HLO text artifacts (`make artifacts`).
 //! * **L1 (python/compile/kernels)** — Pallas kernels (tiled matmul, fused
@@ -30,7 +32,7 @@ pub mod simnet;
 pub mod testing;
 pub mod util;
 
-pub use coordinator::experiment::{Experiment, RoundRecord};
+pub use coordinator::experiment::{Experiment, ExperimentBuilder, RoundRecord};
 pub use runtime::Runtime;
 
 /// Default location of the AOT artifact directory, overridable with the

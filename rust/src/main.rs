@@ -13,11 +13,12 @@
 use anyhow::{bail, Result};
 
 use fed3sfc::cli::Args;
-use fed3sfc::config::{CompressorKind, DatasetKind, ExperimentConfig};
+use fed3sfc::config::{
+    CompressorKind, DatasetKind, ExperimentConfig, NetworkKind, ScheduleKind, ServerOptKind,
+};
 use fed3sfc::coordinator::experiment::Experiment;
 use fed3sfc::data::{dirichlet_partition, Dataset};
 use fed3sfc::runtime::Runtime;
-use fed3sfc::simnet::NetworkModel;
 use fed3sfc::util::rng::Rng;
 
 const USAGE: &str = "\
@@ -38,6 +39,14 @@ run options:
   --alpha F              Dirichlet concentration (default 0.5)
   --train-samples N --test-samples N --seed N --eval-every N
   --metrics PATH         write per-round JSONL
+  --schedule NAME        full|uniform|round_robin (default full)
+  --client-frac F        fraction of clients per round, in (0,1]
+  --server-opt NAME      gd|momentum|fedadam (default gd)
+  --server-lr F          server learning rate (default 1.0 = paper Eq. 3)
+  --server-momentum F    heavy-ball beta for --server-opt momentum
+  --beta1 F --beta2 F --tau F   FedAdam moments + adaptivity
+  --network NAME         edge|datacenter|custom (default edge)
+  --up-mbps F --down-mbps F --latency-ms F   custom link rates
 
 partition-viz options: --dataset --clients --alpha --samples --seed
 ";
@@ -100,6 +109,24 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     if let Some(v) = args.get("metrics") {
         cfg.metrics_path = v.to_string();
     }
+    if let Some(v) = args.get("schedule") {
+        cfg.schedule = ScheduleKind::parse(v)?;
+    }
+    cfg.client_frac = args.get_f64("client-frac", cfg.client_frac)?;
+    if let Some(v) = args.get("server-opt") {
+        cfg.server_opt = ServerOptKind::parse(v)?;
+    }
+    cfg.server_lr = args.get_f32("server-lr", cfg.server_lr)?;
+    cfg.server_momentum = args.get_f32("server-momentum", cfg.server_momentum)?;
+    cfg.adam_beta1 = args.get_f32("beta1", cfg.adam_beta1)?;
+    cfg.adam_beta2 = args.get_f32("beta2", cfg.adam_beta2)?;
+    cfg.adam_tau = args.get_f32("tau", cfg.adam_tau)?;
+    if let Some(v) = args.get("network") {
+        cfg.network = NetworkKind::parse(v)?;
+    }
+    cfg.net_up_mbps = args.get_f64("up-mbps", cfg.net_up_mbps)?;
+    cfg.net_down_mbps = args.get_f64("down-mbps", cfg.net_down_mbps)?;
+    cfg.net_latency_ms = args.get_f64("latency-ms", cfg.net_latency_ms)?;
     cfg.validate()?;
     Ok(cfg)
 }
@@ -108,7 +135,8 @@ fn cmd_run(args: &Args) -> Result<()> {
     let cfg = config_from_args(args)?;
     let rt = Runtime::open(&fed3sfc::artifacts_dir())?;
     println!(
-        "fed3sfc run: {} on {} ({}), {} clients, {} rounds, K={}, method={}",
+        "fed3sfc run: {} on {} ({}), {} clients, {} rounds, K={}, method={}, \
+         schedule={} (frac {}), server_opt={}, network={}",
         cfg.model_key(),
         cfg.dataset.name(),
         rt.platform(),
@@ -116,31 +144,37 @@ fn cmd_run(args: &Args) -> Result<()> {
         cfg.rounds,
         cfg.k_local,
         cfg.compressor.name(),
+        cfg.effective_schedule().name(),
+        cfg.client_frac,
+        cfg.server_opt.name(),
+        cfg.network.name(),
     );
     let mut exp = Experiment::new(cfg, &rt)?;
-    let net = NetworkModel::edge();
     for _ in 0..exp.cfg.rounds {
         let rec = exp.run_round()?;
         println!(
-            "round {:>4}  acc {:.4}  loss {:.4}  up {:>10} B (cum {:>12})  eff {:.3}  ratio {:>8.1}x  {:>7.0} ms",
+            "round {:>4}  acc {:.4}  loss {:.4}  sel {:>3}  up {:>10} B (cum {:>12})  eff {:.3}  ratio {:>8.1}x  comm {:>7.2}s  {:>7.0} ms",
             rec.round,
             rec.test_acc,
             rec.test_loss,
+            rec.n_selected,
             rec.up_bytes_round,
             rec.up_bytes_cum,
             rec.efficiency,
             rec.ratio,
+            rec.comm_time_s,
             rec.wall_ms,
         );
     }
     exp.metrics.flush()?;
     let t = exp.traffic;
     println!(
-        "done. best acc {:.4}; traffic up {} B / down {} B; modeled comm time (edge link): {:.1}s",
+        "done. best acc {:.4}; traffic up {} B / down {} B; modeled comm time ({} link): {:.1}s",
         exp.metrics.best_acc(),
         t.up_bytes,
         t.down_bytes,
-        net.total_time_s(t.rounds, t.up_bytes, t.down_bytes, exp.clients.len()),
+        exp.cfg.network.name(),
+        t.comm_s,
     );
     let st = rt.stats();
     println!(

@@ -1,7 +1,17 @@
 //! Network simulator: converts byte counts into wall-clock communication
 //! time under a bandwidth/latency model — the paper's motivation is that
-//! FL clients sit on slow, unreliable links (§1), so benches report the
-//! *modeled* time-to-accuracy, not just bytes.
+//! FL clients sit on slow, unreliable links (§1), so time-to-accuracy is
+//! the headline metric, not just bytes.
+//!
+//! The model is threaded through the round loop itself (see
+//! `coordinator::Experiment`): each `RoundRecord` carries a modeled
+//! `comm_time_s` computed with synchronous-round semantics — the round
+//! finishes when the *slowest selected* client has uploaded
+//! ([`NetworkModel::round_time_slowest`]), which matters once a scheduler
+//! makes participation partial or payload sizes differ across clients.
+//! [`NetworkModel::total_time_s`] remains for post-hoc aggregate
+//! estimates from `Traffic` totals. Presets are selected by the
+//! `[network]` config table (`edge` / `datacenter` / `custom`).
 
 /// A symmetric-per-client link model.
 #[derive(Clone, Copy, Debug)]
@@ -25,12 +35,31 @@ impl NetworkModel {
         NetworkModel { up_bps: 10e9, down_bps: 10e9, latency_s: 0.0005 }
     }
 
+    /// Arbitrary rates in the units the config file uses.
+    pub fn custom(up_mbps: f64, down_mbps: f64, latency_ms: f64) -> NetworkModel {
+        NetworkModel {
+            up_bps: up_mbps * 1e6,
+            down_bps: down_mbps * 1e6,
+            latency_s: latency_ms * 1e-3,
+        }
+    }
+
     /// Time for one synchronous round: clients transfer in parallel, so the
     /// round cost is the slowest (= any, uniform) client's up+down time.
     pub fn round_time_s(&self, up_bytes_per_client: f64, down_bytes_per_client: f64) -> f64 {
         let up = 8.0 * up_bytes_per_client / self.up_bps;
         let down = 8.0 * down_bytes_per_client / self.down_bps;
         up + down + 2.0 * self.latency_s
+    }
+
+    /// One synchronous round with per-client upload sizes: selected
+    /// clients transfer in parallel, so the round completes when the
+    /// slowest upload lands — `max_i up_i` — plus the (dense, identical)
+    /// broadcast and two one-way latencies. Under full participation with
+    /// equal payloads this equals [`NetworkModel::round_time_s`].
+    pub fn round_time_slowest(&self, up_bytes_each: &[u64], down_bytes_per_client: u64) -> f64 {
+        let slowest = up_bytes_each.iter().copied().max().unwrap_or(0);
+        self.round_time_s(slowest as f64, down_bytes_per_client as f64)
     }
 
     /// Total modeled communication time for an experiment.
@@ -61,6 +90,28 @@ mod tests {
         let fast = net.round_time_s(300.0, 800_000.0);
         assert!(fast < slow);
         assert!(fast > 2.0 * net.latency_s);
+    }
+
+    #[test]
+    fn slowest_client_dominates_round_time() {
+        let net = NetworkModel::edge();
+        let uniform = net.round_time_slowest(&[1000, 1000, 1000], 4000);
+        let straggler = net.round_time_slowest(&[1000, 1000, 800_000], 4000);
+        assert!(straggler > uniform);
+        // equal payloads reduce to the homogeneous formula
+        assert!((uniform - net.round_time_s(1000.0, 4000.0)).abs() < 1e-12);
+        // empty selection: latency + broadcast only
+        let empty = net.round_time_slowest(&[], 4000);
+        assert!((empty - net.round_time_s(0.0, 4000.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn custom_rates_convert_units() {
+        let net = NetworkModel::custom(10.0, 50.0, 30.0);
+        let edge = NetworkModel::edge();
+        assert_eq!(net.up_bps, edge.up_bps);
+        assert_eq!(net.down_bps, edge.down_bps);
+        assert!((net.latency_s - edge.latency_s).abs() < 1e-12);
     }
 
     #[test]

@@ -1,7 +1,9 @@
 //! Config/CLI system integration: presets parse into valid experiments,
 //! every paper table's settings are expressible, errors are caught early.
 
-use fed3sfc::config::{CompressorKind, DatasetKind, ExperimentConfig};
+use fed3sfc::config::{
+    CompressorKind, DatasetKind, ExperimentConfig, NetworkKind, ScheduleKind, ServerOptKind,
+};
 
 #[test]
 fn paper_table2_presets_are_expressible() {
@@ -108,6 +110,90 @@ fn dataset_defaults_pair_with_manifest_models() {
         // default model key must be non-empty and stable
         assert!(!cfg.model_key().is_empty());
     }
+}
+
+#[test]
+fn round_engine_preset_is_expressible() {
+    // The acceptance scenario from the round-engine redesign: 100 clients,
+    // 10% uniform sampling, FedAdam server, edge link — one TOML preset.
+    let cfg = ExperimentConfig::from_toml_str(
+        r#"
+        dataset = "synth_mnist"
+        compressor = "3sfc"
+        clients = 100
+        rounds = 10
+
+        [schedule]
+        kind = "uniform"
+        client_frac = 0.1
+
+        [server_opt]
+        kind = "fedadam"
+        lr = 0.02
+        beta1 = 0.9
+        beta2 = 0.99
+        tau = 0.001
+
+        [network]
+        kind = "edge"
+        "#,
+    )
+    .unwrap();
+    assert_eq!(cfg.n_clients, 100);
+    assert_eq!(cfg.schedule, ScheduleKind::Uniform);
+    assert_eq!(cfg.client_frac, 0.1);
+    assert_eq!(cfg.server_opt, ServerOptKind::FedAdam);
+    assert_eq!(cfg.server_lr, 0.02);
+    assert_eq!(cfg.network, NetworkKind::Edge);
+
+    // Defaults stay the seed/paper protocol.
+    let default = ExperimentConfig::default();
+    assert_eq!(default.schedule, ScheduleKind::Full);
+    assert_eq!(default.client_frac, 1.0);
+    assert_eq!(default.server_opt, ServerOptKind::Gd);
+    assert_eq!(default.server_lr, 1.0);
+}
+
+#[test]
+fn round_engine_cli_flags_parse() {
+    use fed3sfc::cli::Args;
+    let argv: Vec<String> = [
+        "run",
+        "--schedule",
+        "uniform",
+        "--client-frac",
+        "0.1",
+        "--server-opt",
+        "fedadam",
+        "--server-lr",
+        "0.02",
+        "--network",
+        "custom",
+        "--up-mbps",
+        "2.5",
+        "--latency-ms",
+        "80",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    let args = Args::parse(argv, &[]).unwrap();
+    assert_eq!(
+        ScheduleKind::parse(args.get("schedule").unwrap()).unwrap(),
+        ScheduleKind::Uniform
+    );
+    assert_eq!(args.get_f64("client-frac", 1.0).unwrap(), 0.1);
+    assert_eq!(
+        ServerOptKind::parse(args.get("server-opt").unwrap()).unwrap(),
+        ServerOptKind::FedAdam
+    );
+    assert_eq!(args.get_f32("server-lr", 1.0).unwrap(), 0.02);
+    assert_eq!(
+        NetworkKind::parse(args.get("network").unwrap()).unwrap(),
+        NetworkKind::Custom
+    );
+    assert_eq!(args.get_f64("up-mbps", 10.0).unwrap(), 2.5);
+    assert_eq!(args.get_f64("latency-ms", 30.0).unwrap(), 80.0);
 }
 
 #[test]

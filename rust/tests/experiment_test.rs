@@ -58,11 +58,29 @@ fn deterministic_replay() {
     let b = run(small_cfg(CompressorKind::ThreeSfc));
     assert_eq!(a.len(), b.len());
     for (x, y) in a.iter().zip(b.iter()) {
-        // bitwise compare: non-eval rounds carry NaN placeholders
         assert_eq!(x.test_acc.to_bits(), y.test_acc.to_bits());
         assert_eq!(x.up_bytes_cum, y.up_bytes_cum);
         assert_eq!(x.efficiency.to_bits(), y.efficiency.to_bits());
+        assert_eq!(x.comm_time_s.to_bits(), y.comm_time_s.to_bits());
     }
+}
+
+#[test]
+fn non_eval_rounds_carry_real_initial_evaluation() {
+    // eval_every = 12 means rounds 1..11 are non-eval; they must carry a
+    // real round-0 evaluation of the initial weights, never NaN.
+    let _g = common::lock();
+    let recs = run(small_cfg(CompressorKind::ThreeSfc));
+    for r in &recs {
+        assert!(r.test_acc.is_finite(), "round {}: acc NaN", r.round);
+        assert!(r.test_loss.is_finite(), "round {}: loss NaN", r.round);
+    }
+    // All pre-eval rounds share the same (round-0) evaluation.
+    for w in recs[..11].windows(2) {
+        assert_eq!(w[0].test_acc.to_bits(), w[1].test_acc.to_bits());
+    }
+    // The terminal eval round re-evaluates the trained model.
+    assert_ne!(recs[0].test_loss.to_bits(), recs[11].test_loss.to_bits());
 }
 
 #[test]
@@ -110,6 +128,16 @@ fn traffic_accounting_is_exact() {
         4 * model.params as u64 * clients * rounds
     );
     assert_eq!(exp.traffic.rounds, rounds);
+    // Full participation: every round selects every client, and the
+    // modeled per-round comm time accumulates into the traffic totals.
+    assert!(exp
+        .metrics
+        .records
+        .iter()
+        .all(|r| r.n_selected == clients as usize));
+    assert!(exp.traffic.comm_s > 0.0);
+    let sum: f64 = exp.metrics.records.iter().map(|r| r.comm_time_s).sum();
+    assert!((exp.traffic.comm_s - sum).abs() < 1e-9);
 }
 
 #[test]

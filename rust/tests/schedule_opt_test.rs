@@ -1,0 +1,188 @@
+//! Round-engine integration: client schedulers, server optimizers and
+//! simnet-aware accounting composed into full experiments on the small
+//! model — including the EF-persistence regression for skipped clients.
+
+mod common;
+
+use fed3sfc::config::{
+    CompressorKind, DatasetKind, ExperimentConfig, NetworkKind, ScheduleKind, ServerOptKind,
+};
+use fed3sfc::coordinator::experiment::{Experiment, ExperimentBuilder};
+
+fn partial_cfg(schedule: ScheduleKind, frac: f64) -> ExperimentConfig {
+    ExperimentConfig {
+        dataset: DatasetKind::SynthSmall,
+        compressor: CompressorKind::ThreeSfc,
+        n_clients: 4,
+        rounds: 8,
+        k_local: 5,
+        lr: 0.05,
+        syn_steps: 10,
+        train_samples: 320,
+        test_samples: 100,
+        eval_every: 8,
+        seed: 42,
+        schedule,
+        client_frac: frac,
+        ..ExperimentConfig::default()
+    }
+}
+
+#[test]
+fn uniform_schedule_is_deterministic_across_runs() {
+    // Same seed → same selected set every round, and identical records.
+    let _g = common::lock();
+    let rt = common::runtime();
+    let mut selections: Vec<Vec<Vec<usize>>> = Vec::new();
+    let mut finals = Vec::new();
+    for _ in 0..2 {
+        let mut exp = Experiment::new(partial_cfg(ScheduleKind::Uniform, 0.5), &rt).unwrap();
+        let mut sel = Vec::new();
+        for _ in 0..exp.cfg.rounds {
+            let rec = exp.run_round().unwrap();
+            assert_eq!(rec.n_selected, 2, "frac 0.5 of 4 clients");
+            sel.push(exp.last_selected.clone());
+        }
+        selections.push(sel);
+        finals.push(exp.metrics.last().unwrap().test_acc.to_bits());
+    }
+    assert_eq!(selections[0], selections[1]);
+    assert_eq!(finals[0], finals[1]);
+    // The schedule must actually vary across rounds (it is a sampler).
+    let distinct: std::collections::BTreeSet<_> = selections[0].iter().cloned().collect();
+    assert!(distinct.len() > 1, "uniform sampler never varied: {selections:?}");
+}
+
+#[test]
+fn round_robin_covers_every_client_e2e() {
+    let _g = common::lock();
+    let rt = common::runtime();
+    let mut exp = Experiment::new(partial_cfg(ScheduleKind::RoundRobin, 0.5), &rt).unwrap();
+    // ceil(1/0.5) = 2 rounds must cover all 4 clients.
+    exp.run_round().unwrap();
+    let first = exp.last_selected.clone();
+    exp.run_round().unwrap();
+    let mut seen = first;
+    seen.extend(exp.last_selected.iter().copied());
+    seen.sort_unstable();
+    assert_eq!(seen, vec![0, 1, 2, 3]);
+    assert!(exp.clients.iter().all(|c| c.rounds_participated == 1));
+}
+
+#[test]
+fn skipped_clients_keep_error_feedback_untouched() {
+    // Regression (3SFC + client_frac = 0.5): a skipped client's EF memory
+    // must be bit-identical across the round, and must be consumed (i.e.
+    // the memory changes) at its next participation.
+    let _g = common::lock();
+    let rt = common::runtime();
+    let mut exp = Experiment::new(partial_cfg(ScheduleKind::Uniform, 0.5), &rt).unwrap();
+    let n = exp.clients.len();
+    let mut pending_nonzero_ef: Vec<bool> = vec![false; n];
+    let mut consumed_after_skip = 0usize;
+    for _ in 0..20 {
+        let before: Vec<Vec<f32>> = exp.clients.iter().map(|c| c.ef.clone()).collect();
+        exp.run_round().unwrap();
+        for id in 0..n {
+            let selected = exp.last_selected.contains(&id);
+            if !selected {
+                assert_eq!(
+                    exp.clients[id].ef, before[id],
+                    "client {id}: EF mutated while skipped"
+                );
+                if before[id].iter().any(|&v| v != 0.0) {
+                    pending_nonzero_ef[id] = true;
+                }
+            } else {
+                // EF update e ← target − ĝ ran; with a lossy compressor the
+                // memory is (generically) rewritten every participation.
+                if pending_nonzero_ef[id] && exp.clients[id].ef != before[id] {
+                    consumed_after_skip += 1;
+                    pending_nonzero_ef[id] = false;
+                }
+            }
+        }
+    }
+    assert!(
+        consumed_after_skip > 0,
+        "no client ever carried EF across a skip and consumed it"
+    );
+}
+
+#[test]
+fn partial_participation_halves_round_traffic() {
+    let _g = common::lock();
+    let rt = common::runtime();
+    let full = Experiment::new(partial_cfg(ScheduleKind::Full, 1.0), &rt)
+        .unwrap()
+        .run()
+        .map(|recs| recs[0].up_bytes_round)
+        .unwrap();
+    let mut exp = Experiment::new(partial_cfg(ScheduleKind::Uniform, 0.5), &rt).unwrap();
+    let recs = exp.run().unwrap();
+    // 3SFC payloads are fixed-size, so half the clients → half the bytes,
+    // and the broadcast only reaches the selected clients.
+    assert_eq!(recs[0].up_bytes_round * 2, full);
+    let params = exp.ops.model.params as u64;
+    assert_eq!(
+        exp.traffic.down_bytes,
+        4 * params * 2 * exp.cfg.rounds as u64
+    );
+    // Modeled comm time is present and positive on every record.
+    assert!(recs.iter().all(|r| r.comm_time_s > 0.0));
+}
+
+#[test]
+fn server_optimizers_run_and_differ() {
+    let _g = common::lock();
+    let rt = common::runtime();
+    let run = |opt: ServerOptKind, server_lr: f32| {
+        let mut cfg = partial_cfg(ScheduleKind::Full, 1.0);
+        cfg.server_opt = opt;
+        cfg.server_lr = server_lr;
+        cfg.eval_every = 1;
+        let mut exp = Experiment::new(cfg, &rt).unwrap();
+        let recs = exp.run().unwrap();
+        let last = recs.last().unwrap();
+        assert!(last.test_loss.is_finite(), "{opt:?} diverged");
+        last.test_acc
+    };
+    let gd = run(ServerOptKind::Gd, 1.0);
+    let momentum = run(ServerOptKind::Momentum, 0.5);
+    let fedadam = run(ServerOptKind::FedAdam, 0.01);
+    assert!(gd > 0.15, "gd acc {gd} (chance = 0.125)");
+    // Different server optimizers must change the trajectory.
+    assert_ne!(gd.to_bits(), momentum.to_bits());
+    assert_ne!(gd.to_bits(), fedadam.to_bits());
+}
+
+#[test]
+fn acceptance_scenario_via_builder() {
+    // The issue's acceptance config: many clients, 10% uniform sampling,
+    // FedAdam server optimizer, edge network — per-round comm_time_s out.
+    let _g = common::lock();
+    let rt = common::runtime();
+    let mut exp = ExperimentBuilder::new()
+        .dataset(DatasetKind::SynthSmall)
+        .compressor(CompressorKind::ThreeSfc)
+        .clients(20)
+        .rounds(4)
+        .lr(0.05)
+        .syn_steps(5)
+        .train_samples(400)
+        .test_samples(50)
+        .eval_every(4)
+        .schedule(ScheduleKind::Uniform)
+        .client_frac(0.1)
+        .server_opt(ServerOptKind::FedAdam)
+        .server_lr(0.01)
+        .network(NetworkKind::Edge)
+        .build(&rt)
+        .unwrap();
+    let recs = exp.run().unwrap();
+    for r in &recs {
+        assert_eq!(r.n_selected, 2, "10% of 20 clients");
+        assert!(r.comm_time_s > 0.0);
+        assert!(r.test_acc.is_finite());
+    }
+}
