@@ -7,6 +7,8 @@
 //!     cargo run --release --example e2e_mnist_mlp            # 200 rounds
 //!     ROUNDS=50 cargo run --release --example e2e_mnist_mlp  # scaled
 //!     FRAC=50 CLIENTS=40 ... # percent participation (uniform sampling)
+//!     THREADS=1 ...          # sequential clients (default: all cores;
+//!                            # trajectories identical either way)
 //!
 //! Writes e2e_<method>.jsonl next to cwd for plotting.
 
@@ -19,6 +21,7 @@ fn main() -> anyhow::Result<()> {
     let rounds = env_usize("ROUNDS", 200);
     let clients = env_usize("CLIENTS", 20);
     let frac_pct = env_usize("FRAC", 100);
+    let threads = env_usize("THREADS", 0);
     let frac = (frac_pct as f64 / 100.0).clamp(0.01, 1.0);
     let rt = Runtime::open(&fed3sfc::artifacts_dir())?;
 
@@ -40,8 +43,10 @@ fn main() -> anyhow::Result<()> {
             .test_samples(500)
             .eval_every(5)
             .client_frac(frac)
+            .threads(threads)
             .metrics_path(format!("e2e_{}.jsonl", method.name()))
             .build(&rt)?;
+        println!("client execution: {} thread(s)", exp.threads());
         let t0 = std::time::Instant::now();
         for i in 0..rounds {
             let r = exp.run_round()?;

@@ -4,7 +4,12 @@
 //! Regenerates the paper's motivation plot: test accuracy per round for
 //! top-k at rates {1 (FedAvg), 0.1, 0.01, 0.001}.
 //!
-//! Scale knobs (env): ROUNDS (default 12), CLIENTS (20), TRAIN (2000).
+//! Scale knobs (env): ROUNDS (default 6), CLIENTS (8), TRAIN (800),
+//! THREADS (0 = all cores; 1 = sequential). Doubling as the
+//! round-throughput benchmark (EXPERIMENTS.md §Perf): run with
+//! `CLIENTS=100 THREADS=1` and `CLIENTS=100 THREADS=0` and compare the
+//! reported rounds/s — trajectories are bit-identical, only wall clock
+//! changes.
 
 use fed3sfc::bench::{env_usize, Table};
 use fed3sfc::config::{CompressorKind, DatasetKind};
@@ -15,11 +20,15 @@ fn main() -> anyhow::Result<()> {
     let rounds = env_usize("ROUNDS", 6);
     let clients = env_usize("CLIENTS", 8);
     let train = env_usize("TRAIN", 800);
+    let threads = env_usize("THREADS", 0);
     let rt = Runtime::open(&fed3sfc::artifacts_dir())?;
 
     println!("== Figure 1: top-k rate vs convergence (MLP, non-iid synth-MNIST, {clients} clients) ==");
     let rates = [1.0f64, 0.1, 0.01, 0.001];
     let mut series: Vec<(String, Vec<f64>)> = Vec::new();
+    let mut wall_total_ms = 0.0f64;
+    let mut rounds_total = 0usize;
+    let mut threads_used = 1;
     for &rate in &rates {
         let method = if rate >= 1.0 { CompressorKind::FedAvg } else { CompressorKind::Dgc };
         let mut exp = Experiment::builder()
@@ -33,18 +42,32 @@ fn main() -> anyhow::Result<()> {
             .test_samples(500)
             .lr(0.05)
             .eval_every(1)
+            .threads(threads)
             .build(&rt)?;
+        threads_used = exp.threads();
         let recs = exp.run()?;
+        let wall_ms: f64 = recs.iter().map(|r| r.wall_ms).sum();
+        wall_total_ms += wall_ms;
+        rounds_total += recs.len();
         println!(
-            "rate {rate:>6}: final acc {:.4}  (ratio {:.0}x)",
+            "rate {rate:>6}: final acc {:.4}  (ratio {:.0}x)  {:.0} ms/round",
             recs.last().unwrap().test_acc,
-            recs.last().unwrap().ratio
+            recs.last().unwrap().ratio,
+            wall_ms / recs.len() as f64,
         );
         series.push((
             format!("rate={rate}"),
             recs.iter().map(|r| r.test_acc).collect(),
         ));
     }
+    println!(
+        "\nround throughput: {:.3} rounds/s over {} rounds with {} thread(s) \
+         ({:.0} ms/round mean; compare THREADS=1 vs THREADS=0)",
+        1e3 * rounds_total as f64 / wall_total_ms,
+        rounds_total,
+        threads_used,
+        wall_total_ms / rounds_total as f64,
+    );
 
     println!("\nper-round accuracy series (paper Fig 1 y-axis):");
     let t = Table::new(&[8, 12, 12, 12, 12]);

@@ -4,13 +4,13 @@
 //! accumulated gradient into K_sim per-step synthetic batches by
 //! simulating K_sim inner SGD steps and minimizing the **L2 distance**
 //! between the simulated and real model deltas. The deep unroll is what
-//! makes it slow and collapse-prone — `last_step_norms` exposes the
-//! per-step gradient magnitudes so the Fig 3 explosion series can be
-//! reproduced.
+//! makes it slow and collapse-prone — [`super::EncodeStats::step_norms`]
+//! exposes the per-step gradient magnitudes so the Fig 3 explosion series
+//! can be reproduced.
 
 use anyhow::{bail, Result};
 
-use super::{Compressor, DecodeCtx, EncodeCtx, Payload};
+use super::{Compressor, DecodeCtx, EncodeCtx, EncodeStats, Payload};
 
 pub struct FedSynth {
     /// Inner simulation depth K_sim (the paper's collapses at 128).
@@ -21,24 +21,12 @@ pub struct FedSynth {
     pub steps: usize,
     pub lr_inner: f32,
     pub lr_syn: f32,
-    /// ‖∂fit/∂dxs[j]‖ per step j from the last encode (Fig 3).
-    pub last_step_norms: Vec<f32>,
-    /// Final fit loss ‖Δw_sim − g‖² from the last encode (Fig 2).
-    pub last_fit: f32,
 }
 
 impl FedSynth {
     pub fn new(k_sim: usize, m: usize, steps: usize, lr_inner: f32, lr_syn: f32) -> FedSynth {
         assert!(k_sim >= 1 && m >= 1 && steps >= 1);
-        FedSynth {
-            k_sim,
-            m,
-            steps,
-            lr_inner,
-            lr_syn,
-            last_step_norms: Vec::new(),
-            last_fit: f32::NAN,
-        }
+        FedSynth { k_sim, m, steps, lr_inner, lr_syn }
     }
 }
 
@@ -47,7 +35,11 @@ impl Compressor for FedSynth {
         format!("fedsynth(K={},S={})", self.k_sim, self.steps)
     }
 
-    fn encode(&mut self, ctx: &mut EncodeCtx, target: &[f32]) -> Result<(Payload, Vec<f32>)> {
+    fn encode(
+        &self,
+        ctx: &mut EncodeCtx,
+        target: &[f32],
+    ) -> Result<(Payload, Vec<f32>, EncodeStats)> {
         let model = ctx.ops.model;
         let d = model.feature_len();
         let c = model.n_classes;
@@ -56,6 +48,7 @@ impl Compressor for FedSynth {
         let mut dys = vec![0.0f32; self.k_sim * self.m * c];
 
         let mut fit = f32::NAN;
+        let mut step_norms = Vec::new();
         for _ in 0..self.steps {
             let (ndxs, ndys, f, norms) = ctx.ops.fedsynth_step(
                 self.k_sim,
@@ -70,9 +63,8 @@ impl Compressor for FedSynth {
             dxs = ndxs;
             dys = ndys;
             fit = f;
-            self.last_step_norms = norms;
+            step_norms = norms;
         }
-        self.last_fit = fit;
 
         let recon = ctx.ops.fedsynth_apply(
             self.k_sim,
@@ -82,9 +74,11 @@ impl Compressor for FedSynth {
             &dys,
             self.lr_inner,
         )?;
+        let stats = EncodeStats { fit, step_norms, ..EncodeStats::default() };
         Ok((
             Payload::SynMulti { k: self.k_sim, m: self.m, dxs, dys },
             recon,
+            stats,
         ))
     }
 

@@ -2,7 +2,7 @@
 
 use anyhow::Result;
 
-use super::{Compressor, DecodeCtx, EncodeCtx, Payload};
+use super::{Compressor, DecodeCtx, EncodeCtx, EncodeStats, Payload};
 
 #[derive(Default)]
 pub struct Identity;
@@ -18,8 +18,16 @@ impl Compressor for Identity {
         "fedavg".into()
     }
 
-    fn encode(&mut self, _ctx: &mut EncodeCtx, target: &[f32]) -> Result<(Payload, Vec<f32>)> {
-        Ok((Payload::Dense { g: target.to_vec() }, target.to_vec()))
+    fn encode(
+        &self,
+        _ctx: &mut EncodeCtx,
+        target: &[f32],
+    ) -> Result<(Payload, Vec<f32>, EncodeStats)> {
+        Ok((
+            Payload::Dense { g: target.to_vec() },
+            target.to_vec(),
+            EncodeStats::default(),
+        ))
     }
 
     fn decode(&self, _ctx: &DecodeCtx, payload: &Payload) -> Result<Vec<f32>> {

@@ -4,10 +4,18 @@
 //! and the FedSynth multi-step distillation baseline (Table 1, Figs 2–3).
 //!
 //! Contract: `encode` maps the EF-corrected accumulated gradient
-//! `target = g + e` to a wire [`Payload`] **and** the reconstruction the
-//! decoder would produce (the simulation computes it once; `decode` is the
-//! server-side path and tests assert the two agree bit-for-bit). The
-//! coordinator owns the error-feedback state (Eq. 6).
+//! `target = g + e` to a wire [`Payload`], the reconstruction the decoder
+//! would produce (the simulation computes it once; `decode` is the
+//! server-side path and tests assert the two agree bit-for-bit), and an
+//! [`EncodeStats`] carrying encoder diagnostics. The coordinator owns the
+//! error-feedback state (Eq. 6).
+//!
+//! Thread safety: `encode` takes `&self` and every per-encode output
+//! (including the diagnostics that used to live as mutable compressor
+//! fields) is returned by value, so one compressor instance — or one
+//! instance per worker — can encode many clients concurrently. The trait
+//! requires `Send + Sync`; all state a compressor holds is immutable
+//! configuration.
 
 pub mod fedsynth;
 pub mod identity;
@@ -48,12 +56,42 @@ pub struct DecodeCtx<'a, 'b> {
     pub w_global: &'a [f32],
 }
 
+/// Per-encode diagnostics, returned by value so `encode` can stay `&self`
+/// (these used to be mutable compressor fields, which made concurrent
+/// encoding impossible).
+#[derive(Clone, Debug)]
+pub struct EncodeStats {
+    /// Encoder-internal |cos| of the kept iterate (3SFC, Fig 7's
+    /// compression-efficiency trace). NaN when not applicable.
+    pub cos: f32,
+    /// Final fit loss ‖Δw_sim − g‖² (FedSynth, Fig 2). NaN when n/a.
+    pub fit: f32,
+    /// Per-step gradient norms of the FedSynth unroll (Fig 3's explosion
+    /// series). Empty when not applicable.
+    pub step_norms: Vec<f32>,
+}
+
+impl Default for EncodeStats {
+    fn default() -> Self {
+        EncodeStats { cos: f32::NAN, fit: f32::NAN, step_norms: Vec::new() }
+    }
+}
+
 /// A gradient compressor (client encoder + server decoder).
-pub trait Compressor {
+///
+/// `Send + Sync` so the round engine can encode selected clients in
+/// parallel (each worker holds its own instance or shares one; either way
+/// no encode mutates the compressor).
+pub trait Compressor: Send + Sync {
     fn name(&self) -> String;
 
-    /// Compress `target = g + e`. Returns (wire payload, reconstruction).
-    fn encode(&mut self, ctx: &mut EncodeCtx, target: &[f32]) -> Result<(Payload, Vec<f32>)>;
+    /// Compress `target = g + e`.
+    /// Returns (wire payload, reconstruction, encoder diagnostics).
+    fn encode(
+        &self,
+        ctx: &mut EncodeCtx,
+        target: &[f32],
+    ) -> Result<(Payload, Vec<f32>, EncodeStats)>;
 
     /// Server-side reconstruction of the gradient from the payload.
     fn decode(&self, ctx: &DecodeCtx, payload: &Payload) -> Result<Vec<f32>>;
@@ -72,8 +110,9 @@ pub fn build(cfg: &ExperimentConfig, model: &ModelInfo) -> Box<dyn Compressor> {
             let k = if cfg.topk_rate > 0.0 {
                 ((n as f64 * cfg.topk_rate).round() as usize).clamp(1, n)
             } else {
-                // Match 3SFC's wire bytes: top-k costs 8 bytes/coordinate.
-                (model.syn_payload_bytes(cfg.syn_m()) / 8).clamp(1, n)
+                // Match 3SFC's wire bytes: top-k costs 8 bytes/coordinate
+                // plus a 4-byte length header.
+                (model.syn_payload_bytes(cfg.syn_m()).saturating_sub(4) / 8).clamp(1, n)
             };
             Box::new(TopK::new(k))
         }

@@ -22,14 +22,20 @@ pub enum Payload {
 
 impl Payload {
     /// Exact upload size in bytes.
+    ///
+    /// Every length/shape header the enum carries (`n`, `m`, `k`) is
+    /// charged as a u32 on the wire, exactly like the f32 scales already
+    /// were — a real serializer has to send them for the receiver to
+    /// frame the buffers. `Dense` carries no header field: the receiver
+    /// knows the model size, so the 4P baseline stays exact (rate = 1).
     pub fn wire_bytes(&self) -> usize {
         match self {
             Payload::Dense { g } => 4 * g.len(),
-            Payload::TopK { idx, val, .. } => 4 * idx.len() + 4 * val.len(),
-            Payload::Sign { bits, .. } => bits.len() + 4,
-            Payload::Ternary { idx, neg, .. } => 4 * idx.len() + neg.len() + 4,
-            Payload::Syn { dx, dy, .. } => 4 * dx.len() + 4 * dy.len() + 4,
-            Payload::SynMulti { dxs, dys, .. } => 4 * dxs.len() + 4 * dys.len(),
+            Payload::TopK { idx, val, .. } => 4 + 4 * idx.len() + 4 * val.len(),
+            Payload::Sign { bits, .. } => 4 + bits.len() + 4,
+            Payload::Ternary { idx, neg, .. } => 4 + 4 * idx.len() + neg.len() + 4,
+            Payload::Syn { dx, dy, .. } => 4 + 4 * dx.len() + 4 * dy.len() + 4,
+            Payload::SynMulti { dxs, dys, .. } => 8 + 4 * dxs.len() + 4 * dys.len(),
         }
     }
 
@@ -82,15 +88,31 @@ mod tests {
         assert_eq!(p.wire_bytes(), 400);
         assert_eq!(p.rate(100), 1.0);
 
+        // 4 (n header) + 5 idx u32 + 5 val f32.
         let p = Payload::TopK { n: 100, idx: vec![0; 5], val: vec![0.0; 5] };
-        assert_eq!(p.wire_bytes(), 40);
-        assert_eq!(p.ratio(100), 10.0);
+        assert_eq!(p.wire_bytes(), 4 + 40);
+        assert!((p.ratio(100) - 400.0 / 44.0).abs() < 1e-12);
 
+        // 4 (n header) + 13 sign bytes + 4 (scale).
         let p = Payload::Sign { n: 100, bits: vec![0; 13], scale: 1.0 };
-        assert_eq!(p.wire_bytes(), 17);
+        assert_eq!(p.wire_bytes(), 21);
 
+        // 4 (n header) + 5 idx u32 + 1 sign byte + 4 (μ).
+        let p = Payload::Ternary { n: 100, idx: vec![0; 5], neg: vec![0; 1], mu: 1.0 };
+        assert_eq!(p.wire_bytes(), 4 + 20 + 1 + 4);
+
+        // 4 (m header) + (64 + 8) f32 + 4 (scale).
         let p = Payload::Syn { m: 1, dx: vec![0.0; 64], dy: vec![0.0; 8], s: 1.0 };
-        assert_eq!(p.wire_bytes(), 4 * (64 + 8 + 1));
+        assert_eq!(p.wire_bytes(), 4 * (64 + 8 + 1) + 4);
+
+        // 8 (k + m headers) + 2·(64 + 8) f32.
+        let p = Payload::SynMulti {
+            k: 2,
+            m: 1,
+            dxs: vec![0.0; 2 * 64],
+            dys: vec![0.0; 2 * 8],
+        };
+        assert_eq!(p.wire_bytes(), 8 + 4 * 2 * (64 + 8));
     }
 
     #[test]

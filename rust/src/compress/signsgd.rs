@@ -5,7 +5,7 @@
 use anyhow::{bail, Result};
 
 use super::payload::{get_bit, pack_bits};
-use super::{Compressor, DecodeCtx, EncodeCtx, Payload};
+use super::{Compressor, DecodeCtx, EncodeCtx, EncodeStats, Payload};
 
 #[derive(Default)]
 pub struct SignSgd;
@@ -21,7 +21,11 @@ impl Compressor for SignSgd {
         "signsgd".into()
     }
 
-    fn encode(&mut self, _ctx: &mut EncodeCtx, target: &[f32]) -> Result<(Payload, Vec<f32>)> {
+    fn encode(
+        &self,
+        _ctx: &mut EncodeCtx,
+        target: &[f32],
+    ) -> Result<(Payload, Vec<f32>, EncodeStats)> {
         let n = target.len();
         let scale = target.iter().map(|v| v.abs() as f64).sum::<f64>() / n.max(1) as f64;
         let scale = scale as f32;
@@ -30,7 +34,7 @@ impl Compressor for SignSgd {
             .iter()
             .map(|&v| if v < 0.0 { -scale } else { scale })
             .collect();
-        Ok((Payload::Sign { n, bits, scale }, recon))
+        Ok((Payload::Sign { n, bits, scale }, recon, EncodeStats::default()))
     }
 
     fn decode(&self, _ctx: &DecodeCtx, payload: &Payload) -> Result<Vec<f32>> {

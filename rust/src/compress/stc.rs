@@ -6,7 +6,7 @@
 use anyhow::{bail, Result};
 
 use super::payload::{get_bit, pack_bits};
-use super::{Compressor, DecodeCtx, EncodeCtx, Payload};
+use super::{Compressor, DecodeCtx, EncodeCtx, EncodeStats, Payload};
 use crate::util::vecmath;
 
 pub struct Stc {
@@ -19,10 +19,11 @@ impl Stc {
         Stc { k }
     }
 
-    /// Pick k so wire bytes ≈ rate · 4n. Wire = 4k (idx) + k/8 (signs) + 4.
+    /// Pick k so wire bytes ≈ rate · 4n.
+    /// Wire = 4 (n header) + 4k (idx) + k/8 (signs) + 4 (μ) ≈ 4.125k + 8.
     pub fn with_rate(n_params: usize, rate: f64) -> Stc {
         let budget = rate * 4.0 * n_params as f64;
-        let k = ((budget - 4.0) / 4.125).floor().max(1.0) as usize;
+        let k = ((budget - 8.0) / 4.125).floor().max(1.0) as usize;
         Stc::new(k.min(n_params))
     }
 
@@ -36,7 +37,11 @@ impl Compressor for Stc {
         format!("stc(k={})", self.k)
     }
 
-    fn encode(&mut self, _ctx: &mut EncodeCtx, target: &[f32]) -> Result<(Payload, Vec<f32>)> {
+    fn encode(
+        &self,
+        _ctx: &mut EncodeCtx,
+        target: &[f32],
+    ) -> Result<(Payload, Vec<f32>, EncodeStats)> {
         let n = target.len();
         let k = self.k.min(n);
         let idx = vecmath::topk_indices(target, k);
@@ -50,7 +55,7 @@ impl Compressor for Stc {
         for (j, &i) in idx.iter().enumerate() {
             recon[i as usize] = if get_bit(&neg, j) { -mu } else { mu };
         }
-        Ok((Payload::Ternary { n, idx, neg, mu }, recon))
+        Ok((Payload::Ternary { n, idx, neg, mu }, recon, EncodeStats::default()))
     }
 
     fn decode(&self, _ctx: &DecodeCtx, payload: &Payload) -> Result<Vec<f32>> {

@@ -21,7 +21,7 @@
 
 use anyhow::{bail, Result};
 
-use super::{Compressor, DecodeCtx, EncodeCtx, Payload};
+use super::{Compressor, DecodeCtx, EncodeCtx, EncodeStats, Payload};
 use crate::util::vecmath;
 
 pub struct ThreeSfc {
@@ -34,8 +34,6 @@ pub struct ThreeSfc {
     pub lambda: f32,
     /// Std-dev of the synthetic-input init.
     pub init_scale: f32,
-    /// |cos| trace of the last encode (compression efficiency, Fig 7).
-    pub last_cos: f32,
 }
 
 /// Host-side Adam state for one flat buffer.
@@ -70,7 +68,7 @@ impl Adam {
 impl ThreeSfc {
     pub fn new(m: usize, steps: usize, lr_syn: f32, lambda: f32) -> ThreeSfc {
         assert!(m >= 1 && steps >= 1);
-        ThreeSfc { m, steps, lr_syn, lambda, init_scale: 0.5, last_cos: 0.0 }
+        ThreeSfc { m, steps, lr_syn, lambda, init_scale: 0.5 }
     }
 
     /// Closed-form Eq. 8 scale.
@@ -88,7 +86,11 @@ impl Compressor for ThreeSfc {
         format!("3sfc(m={},S={})", self.m, self.steps)
     }
 
-    fn encode(&mut self, ctx: &mut EncodeCtx, target: &[f32]) -> Result<(Payload, Vec<f32>)> {
+    fn encode(
+        &self,
+        ctx: &mut EncodeCtx,
+        target: &[f32],
+    ) -> Result<(Payload, Vec<f32>, EncodeStats)> {
         let model = ctx.ops.model;
         let d = model.feature_len();
         let c = model.n_classes;
@@ -155,19 +157,18 @@ impl Compressor for ThreeSfc {
         // Score the final iterate too.
         let g_final = ctx.ops.syn_grad(self.m, ctx.w_global, &dx, &dy)?;
         let cos_final = vecmath::cosine(&g_final, target) as f32;
-        let (dx, dy, g_syn) = if cos_final.abs() >= best_cos {
-            self.last_cos = cos_final.abs();
-            (dx, dy, g_final)
+        let (dx, dy, g_syn, kept_cos) = if cos_final.abs() >= best_cos {
+            (dx, dy, g_final, cos_final.abs())
         } else {
-            self.last_cos = best_cos;
             let g = ctx.ops.syn_grad(self.m, ctx.w_global, &best_dx, &best_dy)?;
-            (best_dx, best_dy, g)
+            (best_dx, best_dy, g, best_cos)
         };
 
         let s = Self::optimal_scale(target, &g_syn);
         let mut recon = g_syn;
         vecmath::scale_assign(&mut recon, s);
-        Ok((Payload::Syn { m: self.m, dx, dy, s }, recon))
+        let stats = EncodeStats { cos: kept_cos, ..EncodeStats::default() };
+        Ok((Payload::Syn { m: self.m, dx, dy, s }, recon, stats))
     }
 
     fn decode(&self, ctx: &DecodeCtx, payload: &Payload) -> Result<Vec<f32>> {

@@ -5,7 +5,7 @@
 
 use anyhow::{bail, Result};
 
-use super::{Compressor, DecodeCtx, EncodeCtx, Payload};
+use super::{Compressor, DecodeCtx, EncodeCtx, EncodeStats, Payload};
 use crate::util::vecmath;
 
 pub struct TopK {
@@ -28,7 +28,11 @@ impl Compressor for TopK {
         format!("dgc(k={})", self.k)
     }
 
-    fn encode(&mut self, _ctx: &mut EncodeCtx, target: &[f32]) -> Result<(Payload, Vec<f32>)> {
+    fn encode(
+        &self,
+        _ctx: &mut EncodeCtx,
+        target: &[f32],
+    ) -> Result<(Payload, Vec<f32>, EncodeStats)> {
         let k = self.k.min(target.len());
         let idx = vecmath::topk_indices(target, k);
         let val: Vec<f32> = idx.iter().map(|&i| target[i as usize]).collect();
@@ -36,7 +40,11 @@ impl Compressor for TopK {
         for (&i, &v) in idx.iter().zip(val.iter()) {
             recon[i as usize] = v;
         }
-        Ok((Payload::TopK { n: target.len(), idx, val }, recon))
+        Ok((
+            Payload::TopK { n: target.len(), idx, val },
+            recon,
+            EncodeStats::default(),
+        ))
     }
 
     fn decode(&self, _ctx: &DecodeCtx, payload: &Payload) -> Result<Vec<f32>> {

@@ -274,6 +274,11 @@ pub struct ExperimentConfig {
     pub net_up_mbps: f64,
     pub net_down_mbps: f64,
     pub net_latency_ms: f64,
+    /// Worker threads for the per-round client fan-out (`[runtime]`
+    /// table / `--threads`): `0` = auto (available parallelism, or the
+    /// `FED3SFC_THREADS` env var when set), `1` = the sequential seed
+    /// path. Trajectories are bit-identical for every value.
+    pub threads: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -315,6 +320,7 @@ impl Default for ExperimentConfig {
             net_up_mbps: 10.0,
             net_down_mbps: 50.0,
             net_latency_ms: 30.0,
+            threads: 0,
         }
     }
 }
@@ -352,6 +358,25 @@ impl ExperimentConfig {
                 self.net_latency_ms,
             ),
         }
+    }
+
+    /// Resolved worker-thread count for the per-round client fan-out:
+    /// the explicit `threads` setting, else the `FED3SFC_THREADS` env
+    /// var, else the machine's available parallelism. Always ≥ 1.
+    pub fn effective_threads(&self) -> usize {
+        if self.threads > 0 {
+            return self.threads;
+        }
+        if let Ok(v) = std::env::var("FED3SFC_THREADS") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                if n > 0 {
+                    return n;
+                }
+            }
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
     }
 
     /// Synthetic sample count m for 3SFC at this budget multiplier.
@@ -450,6 +475,7 @@ impl ExperimentConfig {
                 "network.up_mbps" => self.net_up_mbps = v.as_f64()?,
                 "network.down_mbps" => self.net_down_mbps = v.as_f64()?,
                 "network.latency_ms" => self.net_latency_ms = v.as_f64()?,
+                "threads" | "runtime.threads" => self.threads = v.as_i64()? as usize,
                 other => bail!("unknown config key '{other}'"),
             }
         }
@@ -557,6 +583,20 @@ mod tests {
             ExperimentConfig::from_toml_str("[schedule]\nkind = \"rr\"\nclient_frac = 0.5\n")
                 .unwrap();
         assert_eq!(rr.effective_schedule(), ScheduleKind::RoundRobin);
+    }
+
+    #[test]
+    fn runtime_threads_table() {
+        let cfg = ExperimentConfig::from_toml_str("[runtime]\nthreads = 4\n").unwrap();
+        assert_eq!(cfg.threads, 4);
+        assert_eq!(cfg.effective_threads(), 4);
+        // bare key works too (CLI-style flat configs)
+        let cfg = ExperimentConfig::from_toml_str("threads = 2").unwrap();
+        assert_eq!(cfg.threads, 2);
+        // 0 = auto: resolves to something >= 1
+        let cfg = ExperimentConfig::default();
+        assert_eq!(cfg.threads, 0);
+        assert!(cfg.effective_threads() >= 1);
     }
 
     #[test]

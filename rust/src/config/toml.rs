@@ -28,11 +28,16 @@
 //! up_mbps = 10.0          # kind = "custom" only
 //! down_mbps = 50.0
 //! latency_ms = 30.0
+//!
+//! [runtime]
+//! threads = 4             # per-round client fan-out: 0 = auto (all
+//!                         # cores / FED3SFC_THREADS), 1 = sequential.
+//!                         # Trajectories are identical for any value.
 //! ```
 //!
-//! `client_frac` and `server_lr` are also accepted at the root level for
-//! flat (CLI-style) presets, and `client_frac < 1` without an explicit
-//! `schedule.kind` implies uniform sampling (see
+//! `client_frac`, `server_lr` and `threads` are also accepted at the
+//! root level for flat (CLI-style) presets, and `client_frac < 1`
+//! without an explicit `schedule.kind` implies uniform sampling (see
 //! `ExperimentConfig::effective_schedule`).
 
 use std::collections::BTreeMap;

@@ -11,25 +11,34 @@
 //! semantics). Skipped clients keep all state — in particular their
 //! error-feedback memory — untouched until their next participation.
 //!
+//! The per-client work (local training + the S-step 3SFC encoder, the
+//! dominant cost) fans out over a [`WorkerPool`] when `threads > 1`; see
+//! [`crate::coordinator::parallel`] for the determinism contract. The
+//! round loop itself runs in three phases: sequential batch sampling in
+//! selection order, parallel train-and-compress into selection-order
+//! slots, then sequential state write-back and accounting — so records
+//! are bit-identical for every thread count.
+//!
 //! Construct experiments with [`ExperimentBuilder`] (or
 //! [`Experiment::new`] from a finished [`ExperimentConfig`]).
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::compress::{self, Compressor, EncodeCtx};
+use crate::compress::{self, Compressor};
 use crate::config::{
     CompressorKind, DatasetKind, ExperimentConfig, NetworkKind, ScheduleKind, ServerOptKind,
 };
 use crate::coordinator::opt::build_server_opt;
+use crate::coordinator::parallel::{run_client, ClientJob, ClientUpdate, WorkerPool};
 use crate::coordinator::schedule::{build_scheduler, ClientScheduler};
 use crate::coordinator::{ClientState, MetricsSink, Server, Traffic};
 use crate::data::{dirichlet_partition, Dataset};
-use crate::runtime::{FedOps, Runtime};
+use crate::runtime::{FedOps, Runtime, RuntimeStats};
 use crate::simnet::NetworkModel;
 use crate::util::rng::Rng;
-use crate::util::vecmath;
 
 /// One round's observables.
 #[derive(Clone, Copy, Debug)]
@@ -65,8 +74,12 @@ pub struct Experiment<'a> {
     pub test: Dataset,
     pub traffic: Traffic,
     pub metrics: MetricsSink,
-    /// The client set of the most recent round (tests/diagnostics).
+    /// The clients that participated in the most recent round
+    /// (tests/diagnostics).
     pub last_selected: Vec<usize>,
+    /// Worker pool for the per-round client fan-out; `None` runs the
+    /// sequential (seed-exact) path.
+    pool: Option<WorkerPool>,
 }
 
 impl<'a> Experiment<'a> {
@@ -110,6 +123,15 @@ impl<'a> Experiment<'a> {
         let net = cfg.network_model();
         let compressor = compress::build(&cfg, model);
         let metrics = MetricsSink::new(&cfg.metrics_path)?;
+        // One worker per thread, never more workers than clients; a
+        // single thread skips the pool entirely and reproduces the
+        // original sequential loop on this experiment's own runtime.
+        let threads = cfg.effective_threads().min(cfg.n_clients);
+        let pool = if threads > 1 {
+            Some(WorkerPool::new(rt.manifest.dir.clone(), &cfg, threads)?)
+        } else {
+            None
+        };
         Ok(Experiment {
             cfg,
             ops,
@@ -123,7 +145,19 @@ impl<'a> Experiment<'a> {
             traffic: Traffic::default(),
             metrics,
             last_selected: Vec::new(),
+            pool,
         })
+    }
+
+    /// Number of threads executing clients each round (1 = sequential).
+    pub fn threads(&self) -> usize {
+        self.pool.as_ref().map(|p| p.workers()).unwrap_or(1)
+    }
+
+    /// Aggregated runtime counters of the worker pool, if one is running
+    /// (the main runtime's counters are reported by `Runtime::stats`).
+    pub fn pool_stats(&self) -> Option<RuntimeStats> {
+        self.pool.as_ref().map(|p| p.stats())
     }
 
     /// Run one communication round; returns the record (evaluation only on
@@ -131,62 +165,96 @@ impl<'a> Experiment<'a> {
     /// with a real round-0 evaluation of the initial weights).
     pub fn run_round(&mut self) -> Result<RoundRecord> {
         let t0 = Instant::now();
-        let cfg = &self.cfg;
         let model = self.ops.model;
-        let k = cfg.k_local;
+        let k = self.cfg.k_local;
         let b = model.train_batch;
-        let w_global = self.server.w.clone();
+        // One clone of the weights per round, shared by both execution
+        // paths (and the pool workers) through the Arc.
+        let w_global: Arc<Vec<f32>> = Arc::new(self.server.w.clone());
 
         let selected = self.scheduler.select(self.server.round, self.clients.len());
-        let mut recons: Vec<Vec<f32>> = Vec::with_capacity(selected.len());
-        let mut weights: Vec<f32> = Vec::with_capacity(selected.len());
-        let mut up_bytes_each: Vec<u64> = Vec::with_capacity(selected.len());
+        // Zero-sample clients (possible only when a best-effort partition
+        // cannot give everyone data) carry zero aggregation weight: skip
+        // them instead of panicking in empty-pool sampling or a
+        // zero-total aggregate.
+        let active: Vec<usize> = selected
+            .iter()
+            .copied()
+            .filter(|&ci| self.clients[ci].n_samples > 0)
+            .collect();
+
+        // Phase 1 (sequential, selection order): draw each active
+        // client's local batches and snapshot the state its job needs —
+        // the data-loader streams advance exactly as in the sequential
+        // loop, independent of thread count.
+        let mut jobs: Vec<ClientJob> = Vec::with_capacity(active.len());
+        for (slot, &ci) in active.iter().enumerate() {
+            let client = &mut self.clients[ci];
+            let (xs, ys) = client.sample_round(&self.train, k, b);
+            // Clone (don't take) the EF memory: if the round errors out
+            // mid-flight the client must keep its accumulated error, not
+            // be silently reset to zeros.
+            let ef = if self.cfg.error_feedback {
+                client.ef.clone()
+            } else {
+                Vec::new()
+            };
+            jobs.push(ClientJob {
+                slot,
+                xs,
+                ys,
+                ef,
+                rng: client.rng.clone(),
+                weight: client.n_samples as f32,
+            });
+        }
+
+        // Phase 2 (parallel): train + compress every client. Updates come
+        // back in slots indexed by selection order; per-client math is
+        // identical on both paths (same `run_client`), so the trajectory
+        // is bit-identical for any thread count.
+        let updates: Vec<ClientUpdate> = match &self.pool {
+            Some(pool) if jobs.len() > 1 => {
+                pool.run_clients(Arc::clone(&w_global), jobs)?
+            }
+            _ => jobs
+                .into_iter()
+                .map(|job| {
+                    run_client(&self.ops, self.compressor.as_ref(), &self.cfg, &w_global, job)
+                })
+                .collect::<Result<Vec<_>>>()?,
+        };
+
+        // Phase 3 (sequential, selection order): write client state back
+        // and account traffic/efficiency exactly as the sequential loop
+        // did.
+        let mut recons: Vec<Vec<f32>> = Vec::with_capacity(active.len());
+        let mut weights: Vec<f32> = Vec::with_capacity(active.len());
+        let mut up_bytes_each: Vec<u64> = Vec::with_capacity(active.len());
         let mut round_bytes = 0u64;
         let mut eff_sum = 0.0f64;
         let mut ratio_sum = 0.0f64;
-
-        for &ci in &selected {
-            let client = &mut self.clients[ci];
-            // 1. Local training (Algorithm 1, lines 3-5).
-            let (xs, ys) = client.sample_round(&self.train, k, b);
-            let w_local = self.ops.local_train(k, &w_global, &xs, &ys, cfg.lr)?;
-            let g = vecmath::sub(&w_global, &w_local);
-
-            // 2. Error-feedback target (Eq. 6).
-            let mut target = g;
-            if cfg.error_feedback {
-                vecmath::add_assign(&mut target, &client.ef);
+        for u in updates {
+            let client = &mut self.clients[active[u.slot]];
+            if self.cfg.error_feedback {
+                client.ef = u.ef;
             }
-
-            // 3. Compress.
-            let mut ctx = EncodeCtx {
-                ops: &self.ops,
-                w_global: &w_global,
-                rng: &mut client.rng,
-            };
-            let (payload, recon) = self.compressor.encode(&mut ctx, &target)?;
-
-            // 4. EF update: e ← target − ĝ.
-            if cfg.error_feedback {
-                client.ef = vecmath::sub(&target, &recon);
-            }
-
-            // 5. Traffic + efficiency accounting.
-            let wire = payload.wire_bytes();
-            round_bytes += wire as u64;
-            up_bytes_each.push(wire as u64);
-            ratio_sum += payload.ratio(model.params);
-            eff_sum += vecmath::cosine(&recon, &target);
-            self.traffic.record_upload(wire);
+            client.rng = u.rng;
             client.rounds_participated += 1;
 
-            recons.push(recon);
-            weights.push(client.n_samples as f32);
+            round_bytes += u.wire_bytes;
+            up_bytes_each.push(u.wire_bytes);
+            ratio_sum += u.ratio;
+            eff_sum += u.efficiency;
+            self.traffic.record_upload(u.wire_bytes as usize);
+            recons.push(u.recon);
+            weights.push(u.weight);
         }
 
-        // 6. Aggregation over the selected set + server-optimizer step.
+        // Aggregation over the selected set + server-optimizer step
+        // (a no-op round if every selected client was skipped).
         self.server.apply_round(&recons, &weights);
-        self.traffic.record_broadcast(model.params, selected.len());
+        self.traffic.record_broadcast(model.params, active.len());
         let comm_time_s = self
             .net
             .round_time_slowest(&up_bytes_each, (4 * model.params) as u64);
@@ -209,8 +277,8 @@ impl<'a> Experiment<'a> {
             }
         };
 
-        let n_selected = selected.len();
-        self.last_selected = selected;
+        let n_selected = active.len();
+        self.last_selected = active;
         let rec = RoundRecord {
             round,
             test_acc,
@@ -218,8 +286,8 @@ impl<'a> Experiment<'a> {
             n_selected,
             up_bytes_round: round_bytes,
             up_bytes_cum: self.traffic.up_bytes,
-            efficiency: eff_sum / n_selected as f64,
-            ratio: ratio_sum / n_selected as f64,
+            efficiency: if n_selected == 0 { 0.0 } else { eff_sum / n_selected as f64 },
+            ratio: if n_selected == 0 { 0.0 } else { ratio_sum / n_selected as f64 },
             comm_time_s,
             wall_ms: t0.elapsed().as_secs_f64() * 1e3,
         };
@@ -236,14 +304,17 @@ impl<'a> Experiment<'a> {
         Ok(self.metrics.records.clone())
     }
 
-    /// Convenience label "method (ratio×)" like the paper's tables.
+    /// Convenience label "method (ratio×)" like the paper's tables. The
+    /// ratio is the *mean* over all recorded rounds — a single round's
+    /// value is noisy under partial participation — and the suffix is
+    /// omitted before any round has run.
     pub fn label(&self) -> String {
-        let ratio = self
-            .metrics
-            .last()
-            .map(|r| r.ratio)
-            .unwrap_or(f64::NAN);
-        format!("{} ({:.1}x)", self.compressor.name(), ratio)
+        let ratio = self.metrics.mean_ratio();
+        if ratio.is_finite() {
+            format!("{} ({:.1}x)", self.compressor.name(), ratio)
+        } else {
+            self.compressor.name()
+        }
     }
 
     /// Compressor-kind accessor for reporting.
@@ -395,6 +466,15 @@ impl ExperimentBuilder {
 
     pub fn metrics_path(mut self, path: impl Into<String>) -> Self {
         self.cfg.metrics_path = path.into();
+        self
+    }
+
+    /// Worker threads for the per-round client fan-out: `0` = auto
+    /// (available parallelism, overridable with `FED3SFC_THREADS`),
+    /// `1` = the sequential seed path. Any value yields bit-identical
+    /// trajectories.
+    pub fn threads(mut self, n: usize) -> Self {
+        self.cfg.threads = n;
         self
     }
 

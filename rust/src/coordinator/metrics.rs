@@ -63,4 +63,69 @@ impl MetricsSink {
             .map(|r| r.test_acc)
             .fold(f64::NAN, f64::max)
     }
+
+    /// Mean compression ratio over every recorded round with at least
+    /// one participant — the stable summary for labels/tables (a single
+    /// round's ratio is noisy under partial participation, and no-op
+    /// rounds carry a 0.0 sentinel that must not deflate the mean). NaN
+    /// when no such round has run yet.
+    pub fn mean_ratio(&self) -> f64 {
+        let mut sum = 0.0f64;
+        let mut n = 0usize;
+        for r in self.records.iter().filter(|r| r.n_selected > 0) {
+            sum += r.ratio;
+            n += 1;
+        }
+        if n == 0 {
+            return f64::NAN;
+        }
+        sum / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize, ratio: f64) -> RoundRecord {
+        RoundRecord {
+            round,
+            test_acc: 0.5,
+            test_loss: 1.0,
+            n_selected: 2,
+            up_bytes_round: 10,
+            up_bytes_cum: 10 * (round as u64 + 1),
+            efficiency: 0.9,
+            ratio,
+            comm_time_s: 0.1,
+            wall_ms: 1.0,
+        }
+    }
+
+    #[test]
+    fn mean_ratio_averages_all_rounds_not_just_the_last() {
+        let mut m = MetricsSink::new("").unwrap();
+        assert!(m.mean_ratio().is_nan());
+        m.push(rec(0, 10.0)).unwrap();
+        m.push(rec(1, 30.0)).unwrap();
+        m.push(rec(2, 20.0)).unwrap();
+        assert!((m.mean_ratio() - 20.0).abs() < 1e-12);
+        // the last record alone would have said 20.0 only by accident;
+        // make the distinction explicit with a skewed tail
+        m.push(rec(3, 100.0)).unwrap();
+        assert!((m.mean_ratio() - 40.0).abs() < 1e-12);
+        assert_eq!(m.last().unwrap().ratio, 100.0);
+    }
+
+    #[test]
+    fn mean_ratio_ignores_noop_rounds() {
+        // A round with no participants records the 0.0 sentinel; it must
+        // not deflate the mean.
+        let mut m = MetricsSink::new("").unwrap();
+        m.push(rec(0, 40.0)).unwrap();
+        let mut empty = rec(1, 0.0);
+        empty.n_selected = 0;
+        m.push(empty).unwrap();
+        assert!((m.mean_ratio() - 40.0).abs() < 1e-12);
+    }
 }

@@ -22,11 +22,20 @@
 //! * a [`crate::simnet::NetworkModel`] converts each round's payload
 //!   sizes into a modeled `comm_time_s` with slowest-selected-client
 //!   semantics, recorded on every [`RoundRecord`].
+//!
+//! Execution within a round is parallel ([`parallel`]): the selected
+//! clients' train-and-compress work fans out over a fixed worker pool
+//! (`[runtime] threads` in config, `--threads` on the CLI; default: all
+//! available cores, `1` = the original sequential path). Results are
+//! collected into slots indexed by selection order before any state or
+//! accounting is touched, so trajectories are bit-identical for every
+//! thread count.
 
 pub mod client;
 pub mod experiment;
 pub mod metrics;
 pub mod opt;
+pub mod parallel;
 pub mod schedule;
 pub mod server;
 pub mod traffic;
@@ -35,6 +44,7 @@ pub use client::ClientState;
 pub use experiment::{Experiment, ExperimentBuilder, RoundRecord};
 pub use metrics::MetricsSink;
 pub use opt::{build_server_opt, FedAdam, ServerGd, ServerMomentum, ServerOptimizer};
+pub use parallel::{run_client, ClientJob, ClientUpdate, WorkerPool};
 pub use schedule::{
     build_scheduler, ClientScheduler, FullParticipation, RoundRobin, UniformSampler,
 };

@@ -1,0 +1,315 @@
+//! Parallel client execution: a fixed worker pool that fans the selected
+//! cohort's train-and-compress work out over threads, deterministically.
+//!
+//! The PJRT client (`xla` crate) is `!Send`, so a runtime can never cross
+//! a thread boundary. Instead each worker thread *owns* a full stack —
+//! its own [`Runtime`] (with its own compiled-executable cache), a
+//! [`FedOps`] facade, and a compressor instance built from the same
+//! config — and client work items travel to it as plain `Send` data:
+//!
+//! * a [`ClientJob`] carries everything one client contributes to a round
+//!   — the pre-sampled local batches, the error-feedback memory, the
+//!   client RNG stream, and a `slot` index (the client's position in the
+//!   round's selection order);
+//! * [`run_client`] is the *single* per-client routine — local training
+//!   (Algorithm 1 lines 3–5), EF correction (Eq. 6), encode, EF update —
+//!   used verbatim by both the sequential (`threads = 1`) path and the
+//!   pool workers, so the math cannot drift between the two;
+//! * a [`ClientUpdate`] carries the results back, and the experiment
+//!   drains them into slots indexed by selection order before doing any
+//!   accounting. Per-client computations are independent (each owns its
+//!   RNG/EF state; the compressor is `&self`-concurrent), so trajectories
+//!   are **bit-identical for every thread count**.
+//!
+//! Work distribution is a shared queue (`Mutex<Receiver>`), so stragglers
+//! (3SFC's S-step encoder dominates, Eq. 9) never idle the other workers.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::compress::{self, Compressor, EncodeCtx};
+use crate::config::ExperimentConfig;
+use crate::runtime::{FedOps, Runtime, RuntimeStats};
+use crate::util::rng::Rng;
+use crate::util::vecmath;
+
+/// Everything one selected client needs computed this round, as owned
+/// `Send` data (the client's `ClientState` itself stays on the main
+/// thread; batches are pre-sampled there so data-loader order is
+/// identical for every thread count).
+pub struct ClientJob {
+    /// Position in this round's selection order — results land back in
+    /// slot order, making aggregation order-independent of scheduling.
+    pub slot: usize,
+    /// Pre-sampled local batches, shapes [K·B·d] / [K·B].
+    pub xs: Vec<f32>,
+    pub ys: Vec<i32>,
+    /// Error-feedback memory e_i^t (empty when EF is disabled).
+    pub ef: Vec<f32>,
+    /// The client's private RNG stream (returned advanced).
+    pub rng: Rng,
+    /// Aggregation weight |D_i|.
+    pub weight: f32,
+}
+
+/// One client's round outcome, in wire/aggregation order fields.
+pub struct ClientUpdate {
+    pub slot: usize,
+    /// Reconstructed (decoded) update the server aggregates.
+    pub recon: Vec<f32>,
+    /// Updated EF memory (empty when EF is disabled).
+    pub ef: Vec<f32>,
+    /// The advanced RNG stream, to write back into the client.
+    pub rng: Rng,
+    pub weight: f32,
+    pub wire_bytes: u64,
+    /// Compression ratio (× vs dense) of this payload.
+    pub ratio: f64,
+    /// cos(ĝ, g+e) — the paper's compression-efficiency metric (Fig 7).
+    pub efficiency: f64,
+}
+
+/// Train + compress one client. This is the entire per-client body of the
+/// round loop; the sequential path and every pool worker call exactly
+/// this function, which is what makes `threads = N` bit-identical to
+/// `threads = 1`.
+pub fn run_client(
+    ops: &FedOps,
+    comp: &dyn Compressor,
+    cfg: &ExperimentConfig,
+    w_global: &[f32],
+    mut job: ClientJob,
+) -> Result<ClientUpdate> {
+    // 1. Local training (Algorithm 1, lines 3-5).
+    let w_local = ops.local_train(cfg.k_local, w_global, &job.xs, &job.ys, cfg.lr)?;
+    let g = vecmath::sub(w_global, &w_local);
+
+    // 2. Error-feedback target (Eq. 6).
+    let mut target = g;
+    if cfg.error_feedback {
+        vecmath::add_assign(&mut target, &job.ef);
+    }
+
+    // 3. Compress.
+    let mut ctx = EncodeCtx { ops, w_global, rng: &mut job.rng };
+    let (payload, recon, _stats) = comp.encode(&mut ctx, &target)?;
+
+    // 4. EF update: e ← target − ĝ.
+    let ef = if cfg.error_feedback {
+        vecmath::sub(&target, &recon)
+    } else {
+        job.ef
+    };
+
+    let wire = payload.wire_bytes();
+    Ok(ClientUpdate {
+        slot: job.slot,
+        efficiency: vecmath::cosine(&recon, &target),
+        ratio: payload.ratio(ops.model.params),
+        wire_bytes: wire as u64,
+        weight: job.weight,
+        ef,
+        rng: job.rng,
+        recon,
+    })
+}
+
+enum Job {
+    Client { w_global: Arc<Vec<f32>>, job: ClientJob },
+}
+
+/// Fixed pool of worker threads, each owning an independent
+/// runtime/compressor stack. Construction blocks until every worker has
+/// opened its runtime (so artifact problems surface immediately);
+/// dropping the pool shuts the workers down and joins them.
+pub struct WorkerPool {
+    job_tx: Option<Sender<Job>>,
+    res_rx: Receiver<Result<ClientUpdate>>,
+    handles: Vec<JoinHandle<()>>,
+    stats: Arc<Mutex<RuntimeStats>>,
+    workers: usize,
+}
+
+impl WorkerPool {
+    pub fn new(artifacts: PathBuf, cfg: &ExperimentConfig, threads: usize) -> Result<WorkerPool> {
+        let workers = threads.max(1);
+        let (job_tx, job_rx) = channel::<Job>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let (res_tx, res_rx) = channel();
+        let (ready_tx, ready_rx) = channel();
+        let stats = Arc::new(Mutex::new(RuntimeStats::default()));
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let dir = artifacts.clone();
+            let cfg = cfg.clone();
+            let job_rx = Arc::clone(&job_rx);
+            let res_tx = res_tx.clone();
+            let ready_tx = ready_tx.clone();
+            let stats = Arc::clone(&stats);
+            let handle = std::thread::Builder::new()
+                .name(format!("fed3sfc-worker-{i}"))
+                .spawn(move || worker_main(dir, cfg, job_rx, res_tx, ready_tx, stats))
+                .context("spawning worker thread")?;
+            handles.push(handle);
+        }
+        drop(ready_tx);
+        let mut startup: Result<()> = Ok(());
+        for _ in 0..workers {
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    startup = Err(e.context("starting worker runtime"));
+                }
+                Err(_) => {
+                    if startup.is_ok() {
+                        startup = Err(anyhow!("worker exited before reporting ready"));
+                    }
+                }
+            }
+        }
+        let mut pool = WorkerPool { job_tx: Some(job_tx), res_rx, handles, stats, workers };
+        if let Err(e) = startup {
+            pool.shutdown();
+            return Err(e);
+        }
+        Ok(pool)
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Aggregated runtime counters across all workers.
+    pub fn stats(&self) -> RuntimeStats {
+        *self.stats.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Execute one round's client jobs on the pool. Returns the updates
+    /// sorted by `slot` (selection order); fails if any client failed.
+    pub fn run_clients(
+        &self,
+        w_global: Arc<Vec<f32>>,
+        jobs: Vec<ClientJob>,
+    ) -> Result<Vec<ClientUpdate>> {
+        let n = jobs.len();
+        let tx = self.job_tx.as_ref().expect("pool is alive");
+        for job in jobs {
+            tx.send(Job::Client { w_global: Arc::clone(&w_global), job })
+                .map_err(|_| anyhow!("worker pool has shut down"))?;
+        }
+        let mut slots: Vec<Option<ClientUpdate>> = (0..n).map(|_| None).collect();
+        let mut first_err: Option<anyhow::Error> = None;
+        for _ in 0..n {
+            match self.res_rx.recv() {
+                Ok(Ok(u)) => {
+                    let slot = u.slot;
+                    anyhow::ensure!(
+                        slot < n && slots[slot].is_none(),
+                        "worker returned bad slot {slot}"
+                    );
+                    slots[slot] = Some(u);
+                }
+                Ok(Err(e)) => {
+                    first_err.get_or_insert(e);
+                }
+                Err(_) => {
+                    first_err.get_or_insert(anyhow!("all workers died mid-round"));
+                    break;
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        slots
+            .into_iter()
+            .map(|s| s.ok_or_else(|| anyhow!("missing client result")))
+            .collect()
+    }
+
+    fn shutdown(&mut self) {
+        // Closing the job channel makes every worker's recv fail → exit.
+        self.job_tx.take();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_main(
+    artifacts: PathBuf,
+    cfg: ExperimentConfig,
+    job_rx: Arc<Mutex<Receiver<Job>>>,
+    res_tx: Sender<Result<ClientUpdate>>,
+    ready_tx: Sender<Result<()>>,
+    pool_stats: Arc<Mutex<RuntimeStats>>,
+) {
+    // Own the full stack locally — the runtime must never cross threads.
+    let setup = (|| -> Result<(Runtime, Box<dyn Compressor>)> {
+        let rt = Runtime::open(&artifacts)?;
+        let model = rt.model(cfg.model_key())?;
+        let comp = compress::build(&cfg, model);
+        Ok((rt, comp))
+    })();
+    let (rt, comp) = match setup {
+        Ok(ok) => {
+            let _ = ready_tx.send(Ok(()));
+            ok
+        }
+        Err(e) => {
+            let _ = ready_tx.send(Err(e));
+            return;
+        }
+    };
+    let ops = match FedOps::new(&rt, cfg.model_key()) {
+        Ok(ops) => ops,
+        // model_key was validated during setup; this cannot fail now.
+        Err(_) => return,
+    };
+    drop(ready_tx);
+
+    let mut reported = RuntimeStats::default();
+    loop {
+        // Standard shared-queue pattern: the guard is a temporary, so the
+        // lock is released as soon as `recv` hands us a job.
+        let job = job_rx.lock().unwrap_or_else(|p| p.into_inner()).recv();
+        let Ok(Job::Client { w_global, job }) = job else {
+            break; // channel closed: pool dropped
+        };
+        // A panicking job (e.g. an assert deep in a compressor) must not
+        // deadlock the round — convert it into an error result.
+        let out = catch_unwind(AssertUnwindSafe(|| {
+            run_client(&ops, comp.as_ref(), &cfg, &w_global, job)
+        }))
+        .unwrap_or_else(|panic| {
+            let msg = panic
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| panic.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "worker panicked".into());
+            Err(anyhow!("client job panicked: {msg}"))
+        });
+        // Publish this worker's runtime-counter delta.
+        let now = rt.stats();
+        let delta = now.delta(&reported);
+        reported = now;
+        if let Ok(mut agg) = pool_stats.lock() {
+            agg.merge(&delta);
+        }
+        if res_tx.send(out).is_err() {
+            break; // pool gone
+        }
+    }
+}

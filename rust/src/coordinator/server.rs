@@ -31,11 +31,18 @@ impl Server {
     /// paper's G: weighted average, Σ weights normalized to 1 — over the
     /// *selected* clients only under partial participation) and hand the
     /// result to the server optimizer for the global step.
+    ///
+    /// An empty or all-zero-weight cohort (possible when a best-effort
+    /// partition leaves selected clients without data) is a no-op round:
+    /// the weights stay put but the round counter still advances so
+    /// schedules and metrics move on.
     pub fn apply_round(&mut self, recons: &[Vec<f32>], weights: &[f32]) {
         assert_eq!(recons.len(), weights.len());
-        assert!(!recons.is_empty());
         let total: f64 = weights.iter().map(|&w| w as f64).sum();
-        assert!(total > 0.0);
+        if recons.is_empty() || total <= 0.0 {
+            self.round += 1;
+            return;
+        }
         let mut agg = vec![0.0f32; self.w.len()];
         for (g, &wt) in recons.iter().zip(weights.iter()) {
             vecmath::weighted_add(&mut agg, g, (wt as f64 / total) as f32);
@@ -72,6 +79,18 @@ mod tests {
         s.apply_round(&[vec![1.0f32]], &[1.0]);
         assert!((s.w[0] + 2.5).abs() < 1e-6);
         assert_eq!(s.optimizer_name(), "momentum");
+    }
+
+    #[test]
+    fn empty_cohort_is_a_noop_round() {
+        let mut s = Server::new(vec![1.5f32, -2.0]);
+        s.apply_round(&[], &[]);
+        assert_eq!(s.w, vec![1.5, -2.0]);
+        assert_eq!(s.round, 1);
+        // All-zero weights likewise must not divide by zero.
+        s.apply_round(&[vec![1.0f32, 1.0]], &[0.0]);
+        assert_eq!(s.w, vec![1.5, -2.0]);
+        assert_eq!(s.round, 2);
     }
 
     #[test]

@@ -16,8 +16,10 @@ pub struct ClientSampler {
 }
 
 impl ClientSampler {
+    /// `indices` may be empty (a best-effort partition can leave a client
+    /// without data); the round engine skips such clients, and actually
+    /// *sampling* from an empty pool is a bug that panics loudly below.
     pub fn new(mut indices: Vec<u32>, mut rng: Rng) -> Self {
-        assert!(!indices.is_empty(), "client has no data");
         rng.shuffle(&mut indices);
         ClientSampler { indices, cursor: 0, rng }
     }
@@ -31,6 +33,10 @@ impl ClientSampler {
     }
 
     fn next_index(&mut self) -> u32 {
+        assert!(
+            !self.indices.is_empty(),
+            "sampling from a client with no data (zero-sample clients must be skipped)"
+        );
         if self.cursor >= self.indices.len() {
             self.rng.shuffle(&mut self.indices);
             self.cursor = 0;

@@ -47,6 +47,9 @@ run options:
   --beta1 F --beta2 F --tau F   FedAdam moments + adaptivity
   --network NAME         edge|datacenter|custom (default edge)
   --up-mbps F --down-mbps F --latency-ms F   custom link rates
+  --threads N            worker threads for the per-round client fan-out
+                         (0 = auto: all cores, or FED3SFC_THREADS;
+                         1 = sequential; results identical for any N)
 
 partition-viz options: --dataset --clients --alpha --samples --seed
 ";
@@ -127,6 +130,7 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     cfg.net_up_mbps = args.get_f64("up-mbps", cfg.net_up_mbps)?;
     cfg.net_down_mbps = args.get_f64("down-mbps", cfg.net_down_mbps)?;
     cfg.net_latency_ms = args.get_f64("latency-ms", cfg.net_latency_ms)?;
+    cfg.threads = args.get_usize("threads", cfg.threads)?;
     cfg.validate()?;
     Ok(cfg)
 }
@@ -150,6 +154,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         cfg.network.name(),
     );
     let mut exp = Experiment::new(cfg, &rt)?;
+    println!("client execution: {} thread(s)", exp.threads());
     for _ in 0..exp.cfg.rounds {
         let rec = exp.run_round()?;
         println!(
@@ -176,6 +181,16 @@ fn cmd_run(args: &Args) -> Result<()> {
         exp.cfg.network.name(),
         t.comm_s,
     );
+    if let Some(ws) = exp.pool_stats() {
+        println!(
+            "workers ({}): {} compiles ({:.0} ms), {} executions ({:.0} ms)",
+            exp.threads(),
+            ws.compiles,
+            ws.compile_ms,
+            ws.executions,
+            ws.execute_ms
+        );
+    }
     let st = rt.stats();
     println!(
         "runtime: {} compiles ({:.0} ms), {} executions ({:.0} ms)",

@@ -46,9 +46,10 @@ impl ModelInfo {
     }
 
     /// 3SFC payload bytes for m synthetic samples: m·(d+C)+1 floats (Eq. 7's
-    /// ‖D‖₀ + 1 budget accounting).
+    /// ‖D‖₀ + 1 budget accounting) plus the u32 `m` header the wire format
+    /// charges (see [`crate::compress::Payload::wire_bytes`]).
     pub fn syn_payload_bytes(&self, m: usize) -> usize {
-        4 * (m * (self.feature_len() + self.n_classes) + 1)
+        4 * (m * (self.feature_len() + self.n_classes) + 1) + 4
     }
 
     /// Uncompressed gradient payload (4P bytes).
@@ -179,7 +180,7 @@ mod tests {
     fn payload_math() {
         let m = Manifest::parse(Path::new("/tmp"), DOC).unwrap();
         let mdl = m.model("mlp_small").unwrap();
-        assert_eq!(mdl.syn_payload_bytes(1), 4 * (64 + 8 + 1));
+        assert_eq!(mdl.syn_payload_bytes(1), 4 * (64 + 8 + 1) + 4);
         assert_eq!(mdl.dense_payload_bytes(), 4 * 2344);
     }
 }

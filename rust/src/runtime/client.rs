@@ -20,10 +20,34 @@ pub struct RuntimeStats {
     pub execute_ms: f64,
 }
 
+impl RuntimeStats {
+    /// Accumulate another snapshot (worker-pool aggregation).
+    pub fn merge(&mut self, other: &RuntimeStats) {
+        self.compiles += other.compiles;
+        self.executions += other.executions;
+        self.compile_ms += other.compile_ms;
+        self.execute_ms += other.execute_ms;
+    }
+
+    /// Counters accumulated since `earlier` (a previous snapshot of the
+    /// same runtime).
+    pub fn delta(&self, earlier: &RuntimeStats) -> RuntimeStats {
+        RuntimeStats {
+            compiles: self.compiles - earlier.compiles,
+            executions: self.executions - earlier.executions,
+            compile_ms: self.compile_ms - earlier.compile_ms,
+            execute_ms: self.execute_ms - earlier.execute_ms,
+        }
+    }
+}
+
 /// Owns the PJRT CPU client and the compiled-executable cache.
 ///
-/// Single-threaded by design: the `xla` crate's client is not `Send`, and
-/// the simulated cluster schedules clients sequentially (DESIGN.md §3).
+/// Single-threaded by design: the `xla` crate's client is not `Send`, so
+/// a `Runtime` never crosses a thread boundary. Parallel round execution
+/// (see `coordinator::parallel`) instead gives every worker thread its
+/// own `Runtime` — each with its own executable cache — and moves plain
+/// `Send` data between them.
 pub struct Runtime {
     client: PjRtClient,
     pub manifest: Manifest,

@@ -10,5 +10,5 @@ pub mod client;
 pub mod fedops;
 pub mod literal;
 
-pub use client::Runtime;
+pub use client::{Runtime, RuntimeStats};
 pub use fedops::FedOps;

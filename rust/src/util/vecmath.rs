@@ -78,32 +78,50 @@ pub fn weighted_add(acc: &mut [f32], x: &[f32], w: f32) {
     axpy(w, x, acc)
 }
 
-/// Index of the k-th largest |value| via quickselect (O(n) average).
+/// Selection key for top-k by magnitude: |v| with NaN mapped *below*
+/// every finite value, so divergent coordinates (NaN gradients from a
+/// runaway lr) are selected last and every comparison is total —
+/// `partial_cmp(..).unwrap()` here used to abort whole experiments the
+/// moment one coordinate went NaN.
+#[inline]
+fn mag_key(v: f32) -> f32 {
+    let a = v.abs();
+    if a.is_nan() {
+        f32::NEG_INFINITY
+    } else {
+        a
+    }
+}
+
+/// Magnitude of the k-th largest |value| via quickselect (O(n) average).
 /// Returns the magnitude threshold; ties included above it may exceed k —
-/// callers slice to exactly k.
+/// callers slice to exactly k. NaN inputs rank below every finite value
+/// (the threshold is −∞ only if fewer than k values are non-NaN).
 pub fn kth_magnitude(values: &[f32], k: usize) -> f32 {
     assert!(k >= 1 && k <= values.len());
-    let mut mags: Vec<f32> = values.iter().map(|v| v.abs()).collect();
+    let mut mags: Vec<f32> = values.iter().map(|&v| mag_key(v)).collect();
     let idx = mags.len() - k; // k-th largest == (n-k)-th smallest
-    let (_, kth, _) =
-        mags.select_nth_unstable_by(idx, |a, b| a.partial_cmp(b).unwrap());
+    let (_, kth, _) = mags.select_nth_unstable_by(idx, f32::total_cmp);
     *kth
 }
 
 /// Top-k indices by |value|, ascending index order. O(n + k log k).
+/// Total over NaN inputs: NaN coordinates lose to every finite one and
+/// only pad the result when fewer than k values are finite.
 pub fn topk_indices(values: &[f32], k: usize) -> Vec<u32> {
+    use std::cmp::Ordering;
     let k = k.min(values.len()).max(1);
     let thr = kth_magnitude(values, k);
     let mut idx: Vec<u32> = Vec::with_capacity(k + 16);
     // First take strictly-above-threshold, then fill ties at the threshold.
-    for (i, v) in values.iter().enumerate() {
-        if v.abs() > thr {
+    for (i, &v) in values.iter().enumerate() {
+        if mag_key(v).total_cmp(&thr) == Ordering::Greater {
             idx.push(i as u32);
         }
     }
     if idx.len() < k {
-        for (i, v) in values.iter().enumerate() {
-            if v.abs() == thr {
+        for (i, &v) in values.iter().enumerate() {
+            if mag_key(v).total_cmp(&thr) == Ordering::Equal {
                 idx.push(i as u32);
                 if idx.len() == k {
                     break;
@@ -167,5 +185,24 @@ mod tests {
         assert_eq!(kth_magnitude(&v, 1), 4.0);
         assert_eq!(kth_magnitude(&v, 2), 3.0);
         assert_eq!(kth_magnitude(&v, 4), 1.0);
+    }
+
+    #[test]
+    fn topk_tolerates_nan_inputs() {
+        // Divergent gradients must degrade selection, not abort it.
+        let v = [f32::NAN, 1.0, -3.0, f32::NAN, 2.0, 0.5];
+        assert_eq!(kth_magnitude(&v, 3), 1.0);
+        assert_eq!(topk_indices(&v, 3), vec![1, 2, 4]); // finite coords win
+        // Asking for more than the finite count pads with NaN positions.
+        assert_eq!(topk_indices(&v, 5), vec![0, 1, 2, 4, 5]);
+    }
+
+    #[test]
+    fn topk_all_nan_still_returns_k() {
+        let v = [f32::NAN; 4];
+        assert_eq!(kth_magnitude(&v, 2), f32::NEG_INFINITY);
+        let idx = topk_indices(&v, 2);
+        assert_eq!(idx.len(), 2);
+        assert_eq!(idx, vec![0, 1]);
     }
 }

@@ -25,7 +25,7 @@ fn target_vec(n: usize, seed: u64) -> Vec<f32> {
 
 /// encode() must return exactly what decode() reconstructs — the
 /// client-side EF update and the server-side aggregation must agree.
-fn assert_encode_decode_agree(comp: &mut dyn Compressor) {
+fn assert_encode_decode_agree(comp: &dyn Compressor) {
     let _g = common::lock();
     let rt = common::runtime();
     let ops = FedOps::new(&rt, "mlp_small").unwrap();
@@ -33,7 +33,7 @@ fn assert_encode_decode_agree(comp: &mut dyn Compressor) {
     let target = target_vec(ops.model.params, 5);
     let mut rng = Rng::new(11);
     let mut ctx = EncodeCtx { ops: &ops, w_global: &w, rng: &mut rng };
-    let (payload, recon) = comp.encode(&mut ctx, &target).unwrap();
+    let (payload, recon, _stats) = comp.encode(&mut ctx, &target).unwrap();
     let dctx = DecodeCtx { ops: &ops, w_global: &w };
     let decoded = comp.decode(&dctx, &payload).unwrap();
     assert_eq!(recon.len(), target.len());
@@ -44,32 +44,32 @@ fn assert_encode_decode_agree(comp: &mut dyn Compressor) {
 
 #[test]
 fn identity_roundtrip() {
-    assert_encode_decode_agree(&mut Identity::new());
+    assert_encode_decode_agree(&Identity::new());
 }
 
 #[test]
 fn topk_roundtrip() {
-    assert_encode_decode_agree(&mut TopK::new(37));
+    assert_encode_decode_agree(&TopK::new(37));
 }
 
 #[test]
 fn signsgd_roundtrip() {
-    assert_encode_decode_agree(&mut SignSgd::new());
+    assert_encode_decode_agree(&SignSgd::new());
 }
 
 #[test]
 fn stc_roundtrip() {
-    assert_encode_decode_agree(&mut Stc::new(53));
+    assert_encode_decode_agree(&Stc::new(53));
 }
 
 #[test]
 fn threesfc_roundtrip() {
-    assert_encode_decode_agree(&mut ThreeSfc::new(1, 5, 5.0, 0.0));
+    assert_encode_decode_agree(&ThreeSfc::new(1, 5, 5.0, 0.0));
 }
 
 #[test]
 fn fedsynth_roundtrip() {
-    assert_encode_decode_agree(&mut FedSynth::new(2, 1, 3, 0.05, 0.5));
+    assert_encode_decode_agree(&FedSynth::new(2, 1, 3, 0.05, 0.5));
 }
 
 #[test]
@@ -118,9 +118,9 @@ fn topk_respects_budget_and_picks_largest() {
     let w = rt.manifest.load_init(ops.model).unwrap();
     let target = target_vec(ops.model.params, 6);
     let mut rng = Rng::new(12);
-    let mut comp = TopK::new(10);
+    let comp = TopK::new(10);
     let mut ctx = EncodeCtx { ops: &ops, w_global: &w, rng: &mut rng };
-    let (payload, recon) = comp.encode(&mut ctx, &target).unwrap();
+    let (payload, recon, _stats) = comp.encode(&mut ctx, &target).unwrap();
     let Payload::TopK { idx, val, .. } = &payload else { panic!() };
     assert_eq!(idx.len(), 10);
     assert_eq!(val.len(), 10);
@@ -150,7 +150,7 @@ fn error_feedback_telescopes() {
     let ops = FedOps::new(&rt, "mlp_small").unwrap();
     let w = rt.manifest.load_init(ops.model).unwrap();
     let n = ops.model.params;
-    let mut comp = TopK::new(20);
+    let comp = TopK::new(20);
     let mut rng = Rng::new(13);
 
     let mut ef = vec![0.0f32; n];
@@ -162,7 +162,7 @@ fn error_feedback_telescopes() {
         let mut target = g.clone();
         vecmath::add_assign(&mut target, &ef);
         let mut ctx = EncodeCtx { ops: &ops, w_global: &w, rng: &mut rng };
-        let (_, recon) = comp.encode(&mut ctx, &target).unwrap();
+        let (_, recon, _stats) = comp.encode(&mut ctx, &target).unwrap();
         ef = vecmath::sub(&target, &recon);
         vecmath::add_assign(&mut sum_recon, &recon);
     }
@@ -210,12 +210,12 @@ fn threesfc_reconstruction_correlates_with_target() {
     let w_local = ops.local_train(5, &w, &x, &y, 0.05).unwrap();
     let target = vecmath::sub(&w, &w_local);
 
-    let mut comp = ThreeSfc::new(1, 25, 5.0, 0.0);
+    let comp = ThreeSfc::new(1, 25, 5.0, 0.0);
     let mut ctx = EncodeCtx { ops: &ops, w_global: &w, rng: &mut rng };
-    let (payload, recon) = comp.encode(&mut ctx, &target).unwrap();
+    let (payload, recon, stats) = comp.encode(&mut ctx, &target).unwrap();
     let cos = vecmath::cosine(&recon, &target);
     assert!(cos > 0.2, "3SFC reconstruction cosine too low: {cos}");
-    assert!(comp.last_cos > 0.2);
+    assert!(stats.cos > 0.2);
     // scale must be applied: recon ≈ s * syn_grad
     let Payload::Syn { s, .. } = payload else { panic!() };
     assert!(s.is_finite() && s != 0.0);

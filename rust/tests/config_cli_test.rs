@@ -173,6 +173,8 @@ fn round_engine_cli_flags_parse() {
         "2.5",
         "--latency-ms",
         "80",
+        "--threads",
+        "4",
     ]
     .iter()
     .map(|s| s.to_string())
@@ -194,6 +196,17 @@ fn round_engine_cli_flags_parse() {
     );
     assert_eq!(args.get_f64("up-mbps", 10.0).unwrap(), 2.5);
     assert_eq!(args.get_f64("latency-ms", 30.0).unwrap(), 80.0);
+    assert_eq!(args.get_usize("threads", 0).unwrap(), 4);
+}
+
+#[test]
+fn runtime_threads_preset_is_expressible() {
+    let cfg = ExperimentConfig::from_toml_str(
+        "dataset = \"synth_mnist\"\ncompressor = \"3sfc\"\nrounds = 5\n\n[runtime]\nthreads = 4\n",
+    )
+    .unwrap();
+    assert_eq!(cfg.threads, 4);
+    assert_eq!(cfg.effective_threads(), 4);
 }
 
 #[test]

@@ -157,6 +157,29 @@ fn compression_ratios_ordered_as_paper() {
 }
 
 #[test]
+fn extreme_alpha_tiny_shards_train_without_panicking() {
+    // Regression (ISSUE 2): alpha = 0.01 with n_clients = train_samples/2
+    // used to be able to leave a client with an empty shard, which killed
+    // the round in empty-pool sampling (or tripped the aggregation
+    // assert). The partition now guarantees >= 1 sample per client at
+    // this density, and the round loop skips zero-weight clients anyway.
+    let _g = common::lock();
+    let mut cfg = small_cfg(CompressorKind::Dgc);
+    cfg.alpha = 0.01;
+    cfg.n_clients = 32;
+    cfg.train_samples = 64;
+    cfg.rounds = 2;
+    cfg.k_local = 1;
+    cfg.eval_every = 2;
+    let recs = run(cfg);
+    assert_eq!(recs.len(), 2);
+    for r in &recs {
+        assert!(r.n_selected > 0);
+        assert!(r.test_loss.is_finite());
+    }
+}
+
+#[test]
 fn efficiency_metric_in_range() {
     let _g = common::lock();
     let recs = run(small_cfg(CompressorKind::Dgc));

@@ -1,0 +1,107 @@
+//! Determinism under parallelism: `threads = N` must reproduce
+//! `threads = 1` bit-for-bit — weights trajectory, traffic accounting,
+//! efficiency metrics, and per-client error-feedback state — because the
+//! round engine collects per-client results into selection-order slots
+//! before touching any shared state.
+
+mod common;
+
+use fed3sfc::config::{CompressorKind, DatasetKind, ExperimentConfig, ScheduleKind};
+use fed3sfc::coordinator::experiment::Experiment;
+use fed3sfc::RoundRecord;
+
+fn cfg(method: CompressorKind, threads: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        dataset: DatasetKind::SynthSmall,
+        compressor: method,
+        n_clients: 6,
+        rounds: 6,
+        k_local: 5,
+        lr: 0.05,
+        syn_steps: 8,
+        train_samples: 240,
+        test_samples: 80,
+        eval_every: 2,
+        seed: 42,
+        // uniform partial participation: the scheduler stream and
+        // per-client EF persistence across skipped rounds must also be
+        // thread-count independent
+        schedule: ScheduleKind::Uniform,
+        client_frac: 0.5,
+        threads,
+        ..ExperimentConfig::default()
+    }
+}
+
+/// Run to completion, returning (records, per-client EF state).
+fn run(cfg: ExperimentConfig) -> (Vec<RoundRecord>, Vec<Vec<f32>>) {
+    let rt = common::runtime();
+    let mut exp = Experiment::new(cfg, &rt).unwrap();
+    let recs = exp.run().unwrap();
+    let efs = exp.clients.iter().map(|c| c.ef.clone()).collect();
+    (recs, efs)
+}
+
+fn assert_bit_identical(a: &[RoundRecord], b: &[RoundRecord]) {
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b.iter()) {
+        assert_eq!(x.round, y.round);
+        assert_eq!(x.n_selected, y.n_selected);
+        assert_eq!(x.test_acc.to_bits(), y.test_acc.to_bits(), "round {}", x.round);
+        assert_eq!(x.test_loss.to_bits(), y.test_loss.to_bits(), "round {}", x.round);
+        assert_eq!(x.up_bytes_round, y.up_bytes_round, "round {}", x.round);
+        assert_eq!(x.up_bytes_cum, y.up_bytes_cum, "round {}", x.round);
+        assert_eq!(x.efficiency.to_bits(), y.efficiency.to_bits(), "round {}", x.round);
+        assert_eq!(x.ratio.to_bits(), y.ratio.to_bits(), "round {}", x.round);
+        assert_eq!(x.comm_time_s.to_bits(), y.comm_time_s.to_bits(), "round {}", x.round);
+    }
+}
+
+fn assert_ef_identical(a: &[Vec<f32>], b: &[Vec<f32>]) {
+    assert_eq!(a.len(), b.len());
+    for (ci, (ea, eb)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(ea.len(), eb.len(), "client {ci}");
+        for (i, (x, y)) in ea.iter().zip(eb.iter()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "client {ci} ef[{i}]");
+        }
+    }
+}
+
+#[test]
+fn threesfc_parallel_matches_sequential_bitwise() {
+    let _g = common::lock();
+    let (seq, seq_ef) = run(cfg(CompressorKind::ThreeSfc, 1));
+    let (par, par_ef) = run(cfg(CompressorKind::ThreeSfc, 4));
+    assert_bit_identical(&seq, &par);
+    assert_ef_identical(&seq_ef, &par_ef);
+}
+
+#[test]
+fn topk_parallel_matches_sequential_bitwise() {
+    let _g = common::lock();
+    let (seq, seq_ef) = run(cfg(CompressorKind::Dgc, 1));
+    let (par, par_ef) = run(cfg(CompressorKind::Dgc, 4));
+    assert_bit_identical(&seq, &par);
+    assert_ef_identical(&seq_ef, &par_ef);
+}
+
+#[test]
+fn thread_count_is_not_part_of_the_trajectory() {
+    // 2 and 4 workers agree too (not just 1 vs N).
+    let _g = common::lock();
+    let (a, _) = run(cfg(CompressorKind::ThreeSfc, 2));
+    let (b, _) = run(cfg(CompressorKind::ThreeSfc, 4));
+    assert_bit_identical(&a, &b);
+}
+
+#[test]
+fn parallel_experiment_reports_its_worker_count() {
+    let _g = common::lock();
+    let rt = common::runtime();
+    let exp = Experiment::new(cfg(CompressorKind::Dgc, 3), &rt).unwrap();
+    assert_eq!(exp.threads(), 3);
+    assert!(exp.pool_stats().is_some());
+    let seq = Experiment::new(cfg(CompressorKind::Dgc, 1), &rt).unwrap();
+    assert_eq!(seq.threads(), 1);
+    assert!(seq.pool_stats().is_none());
+}
