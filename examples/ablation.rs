@@ -6,16 +6,20 @@ use anyhow::Result;
 use fed3sfc::cli::Args;
 use fed3sfc::config::DatasetKind;
 use fed3sfc::coordinator::experiment::Experiment;
-use fed3sfc::runtime::Runtime;
+use fed3sfc::runtime::{open_backend_kind, Backend};
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1).collect::<Vec<_>>(), &[])?;
     let dataset = DatasetKind::parse(args.get("dataset").unwrap_or("synth_mnist"))?;
     let clients = args.get_usize("clients", 10)?;
     let rounds = args.get_usize("rounds", 12)?;
-    let rt = Runtime::open(&fed3sfc::artifacts_dir())?;
+    let backend = open_backend_kind(fed3sfc::config::BackendKind::Auto)?;
 
-    println!("3SFC ablation on {} ({clients} clients, {rounds} rounds)\n", dataset.name());
+    println!(
+        "3SFC ablation on {} ({} backend; {clients} clients, {rounds} rounds)\n",
+        dataset.name(),
+        backend.backend_name()
+    );
     let variants: [(&str, bool, usize, usize); 6] = [
         ("base (EF, B, K=5)", true, 1, 5),
         ("w/o EF", false, 1, 5),
@@ -36,7 +40,7 @@ fn main() -> Result<()> {
             .lr(0.05)
             .eval_every(1)
             .syn_steps(20)
-            .build(&rt)?;
+            .build(backend.as_ref())?;
         let recs = exp.run()?;
         let last = recs.last().unwrap();
         println!(

@@ -12,7 +12,7 @@ use anyhow::Result;
 use fed3sfc::cli::Args;
 use fed3sfc::config::{CompressorKind, DatasetKind, ServerOptKind};
 use fed3sfc::coordinator::experiment::Experiment;
-use fed3sfc::runtime::Runtime;
+use fed3sfc::runtime::{open_backend_kind, Backend};
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1).collect::<Vec<_>>(), &[])?;
@@ -23,11 +23,15 @@ fn main() -> Result<()> {
     let frac = args.get_f64("client-frac", 1.0)?;
     let server_opt = ServerOptKind::parse(args.get("server-opt").unwrap_or("gd"))?;
 
-    let rt = Runtime::open(&fed3sfc::artifacts_dir())?;
+    let backend = match args.get("backend") {
+        Some(v) => open_backend_kind(fed3sfc::config::BackendKind::parse(v)?)?,
+        None => open_backend_kind(fed3sfc::config::BackendKind::Auto)?,
+    };
     println!(
-        "method comparison: {} / {} — {clients} clients (frac {frac}), {rounds} rounds, server_opt {}\n",
+        "method comparison: {} / {} ({} backend) — {clients} clients (frac {frac}), {rounds} rounds, server_opt {}\n",
         dataset.name(),
         if model.is_empty() { dataset.default_model() } else { &model },
+        backend.backend_name(),
         server_opt.name(),
     );
     println!(
@@ -53,7 +57,7 @@ fn main() -> Result<()> {
             .syn_steps(20)
             .client_frac(frac)
             .server_opt(server_opt)
-            .build(&rt)?;
+            .build(backend.as_ref())?;
         let recs = exp.run()?;
         let last = recs.last().unwrap();
         let t = exp.traffic;

@@ -9,7 +9,7 @@ use anyhow::Result;
 use fed3sfc::cli::Args;
 use fed3sfc::config::{CompressorKind, DatasetKind};
 use fed3sfc::coordinator::experiment::{Experiment, ExperimentBuilder};
-use fed3sfc::runtime::Runtime;
+use fed3sfc::runtime::{open_backend_kind, Backend};
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1).collect::<Vec<_>>(), &[])?;
@@ -23,11 +23,15 @@ fn main() -> Result<()> {
         .map(|s| s.parse().unwrap())
         .collect();
 
-    let rt = Runtime::open(&fed3sfc::artifacts_dir())?;
-    println!("compression sweep on {} ({clients} clients, {rounds} rounds)", dataset.name());
+    let backend = open_backend_kind(fed3sfc::config::BackendKind::Auto)?;
+    println!(
+        "compression sweep on {} ({} backend; {clients} clients, {rounds} rounds)",
+        dataset.name(),
+        backend.backend_name()
+    );
 
     let run = |name: String, builder: ExperimentBuilder| -> Result<()> {
-        let mut exp = builder.build(&rt)?;
+        let mut exp = builder.build(backend.as_ref())?;
         let recs = exp.run()?;
         let accs: Vec<String> = recs.iter().map(|r| format!("{:.3}", r.test_acc)).collect();
         println!(

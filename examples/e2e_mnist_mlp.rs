@@ -15,7 +15,7 @@
 use fed3sfc::bench::env_usize;
 use fed3sfc::config::{CompressorKind, DatasetKind};
 use fed3sfc::coordinator::experiment::Experiment;
-use fed3sfc::runtime::Runtime;
+use fed3sfc::runtime::{open_backend_kind, Backend};
 
 fn main() -> anyhow::Result<()> {
     let rounds = env_usize("ROUNDS", 200);
@@ -23,12 +23,15 @@ fn main() -> anyhow::Result<()> {
     let frac_pct = env_usize("FRAC", 100);
     let threads = env_usize("THREADS", 0);
     let frac = (frac_pct as f64 / 100.0).clamp(0.01, 1.0);
-    let rt = Runtime::open(&fed3sfc::artifacts_dir())?;
+    // mlp10 is in both manifests: PJRT artifacts when present, native
+    // otherwise (FED3SFC_BACKEND overrides).
+    let backend = open_backend_kind(fed3sfc::config::BackendKind::Auto)?;
 
     for method in [CompressorKind::ThreeSfc, CompressorKind::FedAvg] {
         println!(
-            "=== e2e: {} | mlp10 (P=198760) on synth_mnist, {clients} clients ({frac_pct}%), {rounds} rounds ===",
-            method.name()
+            "=== e2e: {} | mlp10 (P=198760) on synth_mnist ({} backend), {clients} clients ({frac_pct}%), {rounds} rounds ===",
+            method.name(),
+            backend.backend_name()
         );
         let mut exp = Experiment::builder()
             .name(format!("e2e-{}", method.name()))
@@ -45,7 +48,7 @@ fn main() -> anyhow::Result<()> {
             .client_frac(frac)
             .threads(threads)
             .metrics_path(format!("e2e_{}.jsonl", method.name()))
-            .build(&rt)?;
+            .build(backend.as_ref())?;
         println!("client execution: {} thread(s)", exp.threads());
         let t0 = std::time::Instant::now();
         for i in 0..rounds {

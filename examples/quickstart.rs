@@ -7,17 +7,14 @@
 
 use fed3sfc::config::{CompressorKind, DatasetKind};
 use fed3sfc::coordinator::experiment::Experiment;
-use fed3sfc::runtime::Runtime;
+use fed3sfc::runtime::{open_backend, Backend};
 
 fn main() -> anyhow::Result<()> {
-    // 1. Open the AOT artifact directory (built once by `make artifacts`).
-    let rt = Runtime::open(&fed3sfc::artifacts_dir())?;
-
-    // 2. Describe the experiment. Everything has paper-faithful defaults
+    // 1. Describe the experiment. Everything has paper-faithful defaults
     //    (full participation, unit-step server GD, edge link model);
     //    here: 4 clients, non-iid Dirichlet(0.5) split, 3SFC at budget B
     //    (one synthetic sample), error feedback on.
-    let mut exp = Experiment::builder()
+    let builder = Experiment::builder()
         .dataset(DatasetKind::SynthSmall)
         .compressor(CompressorKind::ThreeSfc)
         .clients(4)
@@ -25,8 +22,15 @@ fn main() -> anyhow::Result<()> {
         .lr(0.05)
         .syn_steps(15)
         .train_samples(400)
-        .test_samples(100)
-        .build(&rt)?;
+        .test_samples(100);
+
+    // 2. Open a compute backend: the AOT artifact path (built once by
+    //    `make artifacts`) when available, the pure-Rust native backend
+    //    otherwise — so this example runs in a bare container too.
+    //    Override with FED3SFC_BACKEND=native|pjrt or `.backend(...)`.
+    let backend = open_backend(builder.config())?;
+    println!("backend: {}", backend.backend_name());
+    let mut exp = builder.build(backend.as_ref())?;
 
     // 3. Run. Each round: local SGD on every selected client -> 3SFC
     //    encode -> (simulated) upload -> server decode + aggregate ->

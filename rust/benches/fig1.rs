@@ -12,18 +12,22 @@
 //! changes.
 
 use fed3sfc::bench::{env_usize, Table};
-use fed3sfc::config::{CompressorKind, DatasetKind};
+use fed3sfc::config::{BackendKind, CompressorKind, DatasetKind};
 use fed3sfc::coordinator::experiment::Experiment;
-use fed3sfc::runtime::Runtime;
+use fed3sfc::runtime::{open_backend_kind, Backend};
 
 fn main() -> anyhow::Result<()> {
     let rounds = env_usize("ROUNDS", 6);
     let clients = env_usize("CLIENTS", 8);
     let train = env_usize("TRAIN", 800);
     let threads = env_usize("THREADS", 0);
-    let rt = Runtime::open(&fed3sfc::artifacts_dir())?;
+    // PJRT when artifacts exist, native otherwise (FED3SFC_BACKEND pins).
+    let backend = open_backend_kind(BackendKind::Auto)?;
 
-    println!("== Figure 1: top-k rate vs convergence (MLP, non-iid synth-MNIST, {clients} clients) ==");
+    println!(
+        "== Figure 1: top-k rate vs convergence (MLP, non-iid synth-MNIST, {clients} clients, {} backend) ==",
+        backend.backend_name()
+    );
     let rates = [1.0f64, 0.1, 0.01, 0.001];
     let mut series: Vec<(String, Vec<f64>)> = Vec::new();
     let mut wall_total_ms = 0.0f64;
@@ -43,7 +47,7 @@ fn main() -> anyhow::Result<()> {
             .lr(0.05)
             .eval_every(1)
             .threads(threads)
-            .build(&rt)?;
+            .build(backend.as_ref())?;
         threads_used = exp.threads();
         let recs = exp.run()?;
         let wall_ms: f64 = recs.iter().map(|r| r.wall_ms).sum();

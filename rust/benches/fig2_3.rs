@@ -9,16 +9,17 @@
 //! Scale knobs: STEPS (default 25).
 
 use fed3sfc::bench::{env_usize, Table};
-use fed3sfc::runtime::{FedOps, Runtime};
+use fed3sfc::config::BackendKind;
+use fed3sfc::runtime::{open_backend_kind, Backend, FedOps};
 use fed3sfc::util::rng::Rng;
 use fed3sfc::util::vecmath;
 
 fn main() -> anyhow::Result<()> {
     let steps = env_usize("STEPS", 15);
-    let rt = Runtime::open(&fed3sfc::artifacts_dir())?;
-    let ops = FedOps::new(&rt, "mlp_small")?;
+    let rt = open_backend_kind(BackendKind::Auto)?;
+    let ops = FedOps::new(rt.as_ref(), "mlp_small")?;
     let model = ops.model;
-    let w = rt.manifest.load_init(model)?;
+    let w = rt.load_init(model)?;
 
     // Fixed target: a genuine K=5 local-training delta.
     let mut rng = Rng::new(42);

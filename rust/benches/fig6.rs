@@ -6,15 +6,15 @@
 //! Scale knobs: ROUNDS (12), CLIENTS (10), TRAIN (1500).
 
 use fed3sfc::bench::{env_usize, Table};
-use fed3sfc::config::{CompressorKind, DatasetKind};
+use fed3sfc::config::{BackendKind, CompressorKind, DatasetKind};
 use fed3sfc::coordinator::experiment::Experiment;
-use fed3sfc::runtime::Runtime;
+use fed3sfc::runtime::{open_backend_kind, Backend};
 
 fn main() -> anyhow::Result<()> {
     let rounds = env_usize("ROUNDS", 6);
     let clients = env_usize("CLIENTS", 6);
     let train = env_usize("TRAIN", 800);
-    let rt = Runtime::open(&fed3sfc::artifacts_dir())?;
+    let rt = open_backend_kind(BackendKind::Auto)?;
 
     let methods = [
         CompressorKind::FedAvg,
@@ -23,7 +23,10 @@ fn main() -> anyhow::Result<()> {
         CompressorKind::Stc,
         CompressorKind::ThreeSfc,
     ];
-    println!("== Figure 6: accuracy/loss vs cumulative upload bytes (synth-MNIST + MLP, {clients} clients) ==\n");
+    println!(
+        "== Figure 6: accuracy/loss vs cumulative upload bytes (synth-MNIST + MLP, {clients} clients, {} backend) ==\n",
+        rt.backend_name()
+    );
     let t = Table::new(&[10, 8, 16, 10, 10]);
     t.row(&[
         "method".into(),
@@ -45,7 +48,7 @@ fn main() -> anyhow::Result<()> {
             .lr(0.05)
             .eval_every(1)
             .syn_steps(30)
-            .build(&rt)?;
+            .build(rt.as_ref())?;
         let recs = exp.run()?;
         for r in &recs {
             t.row(&[

@@ -5,15 +5,16 @@
 //! Scale knobs: ROUNDS (15), CLIENTS (10), TRAIN (1500).
 
 use fed3sfc::bench::{env_usize, Table};
-use fed3sfc::config::{CompressorKind, DatasetKind};
+use fed3sfc::config::{BackendKind, CompressorKind, DatasetKind};
 use fed3sfc::coordinator::experiment::Experiment;
-use fed3sfc::runtime::Runtime;
+use fed3sfc::runtime::{open_backend_kind, Backend};
 
 fn main() -> anyhow::Result<()> {
     let rounds = env_usize("ROUNDS", 8);
     let clients = env_usize("CLIENTS", 6);
     let train = env_usize("TRAIN", 800);
-    let rt = Runtime::open(&fed3sfc::artifacts_dir())?;
+    let rt = open_backend_kind(BackendKind::Auto)?;
+    println!("backend: {}", rt.backend_name());
 
     let mut series: Vec<(String, Vec<f64>)> = Vec::new();
     for method in [
@@ -32,7 +33,7 @@ fn main() -> anyhow::Result<()> {
             .lr(0.05)
             .eval_every(rounds) // efficiency is the point here
             .syn_steps(40)
-            .build(&rt)?;
+            .build(rt.as_ref())?;
         let recs = exp.run()?;
         series.push((
             method.name().to_string(),

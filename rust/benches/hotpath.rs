@@ -5,16 +5,20 @@
 //! syn_step / syn_grad / eval executions on mlp10 (the paper-scale MLP).
 
 use fed3sfc::bench::{report, time_it};
-use fed3sfc::runtime::{FedOps, Runtime};
+use fed3sfc::config::BackendKind;
+use fed3sfc::runtime::{open_backend_kind, Backend, FedOps};
 use fed3sfc::util::rng::Rng;
 use fed3sfc::util::vecmath;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::open(&fed3sfc::artifacts_dir())?;
-    let ops = FedOps::new(&rt, "mlp10")?;
+    let rt = open_backend_kind(BackendKind::Auto)?;
+    let ops = FedOps::new(rt.as_ref(), "mlp10")?;
     let model = ops.model;
     let n = model.params;
-    println!("== hot-path microbenchmarks (P = {n}) ==\n");
+    println!(
+        "== hot-path microbenchmarks (P = {n}, {} backend) ==\n",
+        rt.backend_name()
+    );
 
     let mut rng = Rng::new(1);
     let mut g = vec![0.0f32; n];
@@ -51,8 +55,8 @@ fn main() -> anyhow::Result<()> {
         }),
     );
 
-    println!("\n-- runtime paths (PJRT CPU, mlp10) --");
-    let w = rt.manifest.load_init(model)?;
+    println!("\n-- backend paths ({}, mlp10) --", rt.backend_name());
+    let w = rt.load_init(model)?;
     let k = 5;
     let b = model.train_batch;
     let mut xs = vec![0.0f32; k * b * model.feature_len()];
@@ -100,7 +104,7 @@ fn main() -> anyhow::Result<()> {
 
     let st = rt.stats();
     println!(
-        "\nruntime totals: {} compiles {:.0} ms, {} execs {:.0} ms",
+        "\nbackend totals: {} compiles {:.0} ms, {} execs {:.0} ms",
         st.compiles, st.compile_ms, st.executions, st.execute_ms
     );
     Ok(())

@@ -6,15 +6,15 @@
 //! 10 clients. Scale knobs: ROUNDS (10), CLIENTS (10), TRAIN (1200).
 
 use fed3sfc::bench::{env_usize, Table};
-use fed3sfc::config::{CompressorKind, DatasetKind};
+use fed3sfc::config::{BackendKind, CompressorKind, DatasetKind};
 use fed3sfc::coordinator::experiment::Experiment;
-use fed3sfc::runtime::Runtime;
+use fed3sfc::runtime::{open_backend_kind, Backend};
 
 fn main() -> anyhow::Result<()> {
     let rounds = env_usize("ROUNDS", 5);
     let clients = env_usize("CLIENTS", 6);
     let train = env_usize("TRAIN", 700);
-    let rt = Runtime::open(&fed3sfc::artifacts_dir())?;
+    let rt = open_backend_kind(BackendKind::Auto)?;
 
     let pairs: [(&str, DatasetKind, &str); 4] = [
         ("MNIST+MLP", DatasetKind::SynthMnist, "mlp10"),
@@ -33,6 +33,15 @@ fn main() -> anyhow::Result<()> {
     ]);
     t.sep();
     for (label, ds, model) in pairs {
+        if rt.manifest().model(model).is_err() {
+            t.row(&[
+                label.into(),
+                format!("(needs pjrt: {model})"),
+                "-".into(),
+                "-".into(),
+            ]);
+            continue;
+        }
         let mut accs = Vec::new();
         for method in [
             CompressorKind::FedAvg,
@@ -53,7 +62,7 @@ fn main() -> anyhow::Result<()> {
                 .syn_steps(20)
                 .fedsynth_ksim(4)
                 .fedsynth_steps(20)
-                .build(&rt)?;
+                .build(rt.as_ref())?;
             let recs = exp.run()?;
             let last = recs.last().unwrap();
             accs.push((last.test_acc, last.ratio));

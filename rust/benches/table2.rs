@@ -8,9 +8,9 @@
 //! Scale knobs: ROUNDS (8), CLIENTS (10), TRAIN (1200), PAIRS (all|mlp).
 
 use fed3sfc::bench::{env_usize, Table};
-use fed3sfc::config::{CompressorKind, DatasetKind};
+use fed3sfc::config::{BackendKind, CompressorKind, DatasetKind};
 use fed3sfc::coordinator::experiment::Experiment;
-use fed3sfc::runtime::Runtime;
+use fed3sfc::runtime::{open_backend_kind, Backend};
 
 fn pairs(which: &str) -> Vec<(&'static str, DatasetKind, &'static str)> {
     let mlp = vec![
@@ -40,7 +40,7 @@ fn main() -> anyhow::Result<()> {
     // FRAC (percent) reruns the grid under uniform partial participation.
     let frac = (env_usize("FRAC", 100) as f64 / 100.0).clamp(0.01, 1.0);
     let which = std::env::var("PAIRS").unwrap_or_else(|_| "mlp".into());
-    let rt = Runtime::open(&fed3sfc::artifacts_dir())?;
+    let rt = open_backend_kind(BackendKind::Auto)?;
 
     let methods = [
         CompressorKind::FedAvg,
@@ -59,6 +59,14 @@ fn main() -> anyhow::Result<()> {
 
     for (label, ds, model) in pairs(&which) {
         let mut cells = vec![label.to_string()];
+        if rt.manifest().model(model).is_err() {
+            cells.push(format!("(needs pjrt: {model})"));
+            while cells.len() < methods.len() + 1 {
+                cells.push("-".into());
+            }
+            t.row(&cells);
+            continue;
+        }
         for method in methods {
             // client_frac < 1 implies uniform sampling (effective_schedule).
             let mut exp = Experiment::builder()
@@ -74,7 +82,7 @@ fn main() -> anyhow::Result<()> {
                 .eval_every(rounds)
                 .syn_steps(20)
                 .client_frac(frac)
-                .build(&rt)?;
+                .build(rt.as_ref())?;
             let recs = exp.run()?;
             let last = recs.last().unwrap();
             cells.push(format!("{:.4} ({:.0}x)", last.test_acc, last.ratio));

@@ -5,9 +5,9 @@
 //! Scale knobs: ROUNDS (8), CLIENTS (10), TRAIN (1200), PAIRS (all|mlp).
 
 use fed3sfc::bench::{env_usize, Table};
-use fed3sfc::config::{CompressorKind, DatasetKind};
+use fed3sfc::config::{BackendKind, CompressorKind, DatasetKind};
 use fed3sfc::coordinator::experiment::Experiment;
-use fed3sfc::runtime::Runtime;
+use fed3sfc::runtime::{open_backend_kind, Backend};
 
 fn pairs(which: &str) -> Vec<(&'static str, DatasetKind, &'static str)> {
     let mlp = vec![
@@ -34,7 +34,7 @@ fn main() -> anyhow::Result<()> {
     let clients = env_usize("CLIENTS", 6);
     let train = env_usize("TRAIN", 700);
     let which = std::env::var("PAIRS").unwrap_or_else(|_| "mlp".into());
-    let rt = Runtime::open(&fed3sfc::artifacts_dir())?;
+    let rt = open_backend_kind(BackendKind::Auto)?;
 
     println!("== Table 3: STC vs 3SFC at 2xB and 4xB ({clients} clients, {rounds} rounds) ==\n");
     let t = Table::new(&[18, 20, 20, 20]);
@@ -48,6 +48,13 @@ fn main() -> anyhow::Result<()> {
 
     for (label, ds, model) in pairs(&which) {
         let mut cells = vec![label.to_string()];
+        if rt.manifest().model(model).is_err() {
+            cells.push(format!("(needs pjrt: {model})"));
+            cells.push("-".into());
+            cells.push("-".into());
+            t.row(&cells);
+            continue;
+        }
         for (method, budget) in [
             (CompressorKind::Stc, 1usize),
             (CompressorKind::ThreeSfc, 2),
@@ -66,7 +73,7 @@ fn main() -> anyhow::Result<()> {
                 .lr(0.05)
                 .eval_every(rounds)
                 .syn_steps(20)
-                .build(&rt)?;
+                .build(rt.as_ref())?;
             let recs = exp.run()?;
             let last = recs.last().unwrap();
             cells.push(format!("{:.4} ({:.0}x)", last.test_acc, last.ratio));

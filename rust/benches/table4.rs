@@ -4,9 +4,9 @@
 //! Scale knobs: ROUNDS (10), CLIENTS (10), TRAIN (1200), PAIRS (mlp|all).
 
 use fed3sfc::bench::{env_usize, Table};
-use fed3sfc::config::DatasetKind;
+use fed3sfc::config::{BackendKind, DatasetKind};
 use fed3sfc::coordinator::experiment::Experiment;
-use fed3sfc::runtime::Runtime;
+use fed3sfc::runtime::{open_backend_kind, Backend};
 
 struct Variant {
     label: &'static str,
@@ -20,7 +20,7 @@ fn main() -> anyhow::Result<()> {
     let clients = env_usize("CLIENTS", 6);
     let train = env_usize("TRAIN", 700);
     let which = std::env::var("PAIRS").unwrap_or_else(|_| "mlp".into());
-    let rt = Runtime::open(&fed3sfc::artifacts_dir())?;
+    let rt = open_backend_kind(BackendKind::Auto)?;
 
     let variants = [
         Variant { label: "3SFC w/ EF (base)", ef: true, budget: 1, k: 5 },
@@ -57,6 +57,10 @@ fn main() -> anyhow::Result<()> {
     for v in &variants {
         let mut cells = vec![v.label.to_string()];
         for (label, ds, model) in &pairs {
+            if rt.manifest().model(model).is_err() {
+                cells.push("(needs pjrt)".into());
+                continue;
+            }
             let mut exp = Experiment::builder()
                 .name(format!("t4-{label}-{}", v.label))
                 .dataset(*ds)
@@ -71,7 +75,7 @@ fn main() -> anyhow::Result<()> {
                 .lr(0.05)
                 .eval_every(rounds)
                 .syn_steps(20)
-                .build(&rt)?;
+                .build(rt.as_ref())?;
             let recs = exp.run()?;
             cells.push(format!("{:.4}", recs.last().unwrap().test_acc));
         }

@@ -173,6 +173,37 @@ impl NetworkKind {
     }
 }
 
+/// Which compute backend executes the fed-ops (see `runtime::backend`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BackendKind {
+    /// Resolve at open time: `FED3SFC_BACKEND` env var if set, else PJRT
+    /// when an artifact directory is present, else native (default).
+    Auto,
+    /// AOT HLO artifacts through the PJRT CPU client (`pjrt` feature).
+    Pjrt,
+    /// Pure-Rust reference implementation — no artifacts required.
+    Native,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "auto" => BackendKind::Auto,
+            "pjrt" | "xla" => BackendKind::Pjrt,
+            "native" | "rust" => BackendKind::Native,
+            _ => bail!("unknown backend '{s}' (want auto|pjrt|native)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Auto => "auto",
+            BackendKind::Pjrt => "pjrt",
+            BackendKind::Native => "native",
+        }
+    }
+}
+
 /// Compression method (the paper's competitor zoo + the contribution).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum CompressorKind {
@@ -279,6 +310,13 @@ pub struct ExperimentConfig {
     /// `FED3SFC_THREADS` env var when set), `1` = the sequential seed
     /// path. Trajectories are bit-identical for every value.
     pub threads: usize,
+    /// Compute backend (`[runtime] backend` / `--backend` /
+    /// `FED3SFC_BACKEND`): PJRT artifacts or the pure-Rust native path.
+    pub backend: BackendKind,
+    /// Explicit initial global weights (builder-only; e.g. the
+    /// backend-parity test pins both backends to one init). `None` asks
+    /// the backend for its deterministic He-normal init.
+    pub init_weights: Option<Vec<f32>>,
 }
 
 impl Default for ExperimentConfig {
@@ -321,6 +359,8 @@ impl Default for ExperimentConfig {
             net_down_mbps: 50.0,
             net_latency_ms: 30.0,
             threads: 0,
+            backend: BackendKind::Auto,
+            init_weights: None,
         }
     }
 }
@@ -476,6 +516,9 @@ impl ExperimentConfig {
                 "network.down_mbps" => self.net_down_mbps = v.as_f64()?,
                 "network.latency_ms" => self.net_latency_ms = v.as_f64()?,
                 "threads" | "runtime.threads" => self.threads = v.as_i64()? as usize,
+                "backend" | "runtime.backend" => {
+                    self.backend = BackendKind::parse(v.as_str()?)?
+                }
                 other => bail!("unknown config key '{other}'"),
             }
         }
@@ -597,6 +640,20 @@ mod tests {
         let cfg = ExperimentConfig::default();
         assert_eq!(cfg.threads, 0);
         assert!(cfg.effective_threads() >= 1);
+    }
+
+    #[test]
+    fn backend_key_parses_and_defaults_to_auto() {
+        let cfg = ExperimentConfig::default();
+        assert_eq!(cfg.backend, BackendKind::Auto);
+        let cfg = ExperimentConfig::from_toml_str("[runtime]\nbackend = \"native\"\n").unwrap();
+        assert_eq!(cfg.backend, BackendKind::Native);
+        let cfg = ExperimentConfig::from_toml_str("backend = \"pjrt\"").unwrap();
+        assert_eq!(cfg.backend, BackendKind::Pjrt);
+        assert!(ExperimentConfig::from_toml_str("backend = \"tpu\"").is_err());
+        for kind in [BackendKind::Auto, BackendKind::Pjrt, BackendKind::Native] {
+            assert_eq!(BackendKind::parse(kind.name()).unwrap(), kind);
+        }
     }
 
     #[test]

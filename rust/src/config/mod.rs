@@ -5,6 +5,7 @@ pub mod experiment;
 pub mod toml;
 
 pub use experiment::{
-    CompressorKind, DatasetKind, ExperimentConfig, NetworkKind, ScheduleKind, ServerOptKind,
+    BackendKind, CompressorKind, DatasetKind, ExperimentConfig, NetworkKind, ScheduleKind,
+    ServerOptKind,
 };
 pub use toml::{parse_toml, TomlValue};

@@ -29,14 +29,15 @@ use anyhow::Result;
 
 use crate::compress::{self, Compressor};
 use crate::config::{
-    CompressorKind, DatasetKind, ExperimentConfig, NetworkKind, ScheduleKind, ServerOptKind,
+    BackendKind, CompressorKind, DatasetKind, ExperimentConfig, NetworkKind, ScheduleKind,
+    ServerOptKind,
 };
 use crate::coordinator::opt::build_server_opt;
 use crate::coordinator::parallel::{run_client, ClientJob, ClientUpdate, WorkerPool};
 use crate::coordinator::schedule::{build_scheduler, ClientScheduler};
 use crate::coordinator::{ClientState, MetricsSink, Server, Traffic};
 use crate::data::{dirichlet_partition, Dataset};
-use crate::runtime::{FedOps, Runtime, RuntimeStats};
+use crate::runtime::{Backend, FedOps, RuntimeStats};
 use crate::simnet::NetworkModel;
 use crate::util::rng::Rng;
 
@@ -88,9 +89,9 @@ impl<'a> Experiment<'a> {
         ExperimentBuilder::new()
     }
 
-    pub fn new(cfg: ExperimentConfig, rt: &'a Runtime) -> Result<Experiment<'a>> {
+    pub fn new(cfg: ExperimentConfig, backend: &'a dyn Backend) -> Result<Experiment<'a>> {
         cfg.validate()?;
-        let ops = FedOps::new(rt, cfg.model_key())?;
+        let ops = FedOps::new(backend, cfg.model_key())?;
         let model = ops.model;
         anyhow::ensure!(
             model.feature_len() == cfg.dataset.feature_len(),
@@ -117,7 +118,19 @@ impl<'a> Experiment<'a> {
             .map(|(i, idxs)| ClientState::new(i, idxs, model.params, &root))
             .collect();
 
-        let w0 = rt.manifest.load_init(model)?;
+        let w0 = match &cfg.init_weights {
+            Some(w) => {
+                anyhow::ensure!(
+                    w.len() == model.params,
+                    "init_weights has {} values, model {} needs {}",
+                    w.len(),
+                    model.name,
+                    model.params
+                );
+                w.clone()
+            }
+            None => backend.load_init(model)?,
+        };
         let scheduler = build_scheduler(&cfg, &root);
         let server = Server::with_optimizer(w0, build_server_opt(&cfg));
         let net = cfg.network_model();
@@ -125,10 +138,13 @@ impl<'a> Experiment<'a> {
         let metrics = MetricsSink::new(&cfg.metrics_path)?;
         // One worker per thread, never more workers than clients; a
         // single thread skips the pool entirely and reproduces the
-        // original sequential loop on this experiment's own runtime.
+        // original sequential loop on this experiment's own backend.
+        // Workers re-open the *same* backend from its `Send` spec — the
+        // per-worker-instance dance only actually costs anything on PJRT
+        // (the native backend is a pure in-memory construction).
         let threads = cfg.effective_threads().min(cfg.n_clients);
         let pool = if threads > 1 {
-            Some(WorkerPool::new(rt.manifest.dir.clone(), &cfg, threads)?)
+            Some(WorkerPool::new(backend.spec(), &cfg, threads)?)
         } else {
             None
         };
@@ -155,7 +171,7 @@ impl<'a> Experiment<'a> {
     }
 
     /// Aggregated runtime counters of the worker pool, if one is running
-    /// (the main runtime's counters are reported by `Runtime::stats`).
+    /// (the main backend's counters are reported by `Backend::stats`).
     pub fn pool_stats(&self) -> Option<RuntimeStats> {
         self.pool.as_ref().map(|p| p.stats())
     }
@@ -331,16 +347,18 @@ impl<'a> Experiment<'a> {
 /// # use fed3sfc::config::{CompressorKind, DatasetKind, ScheduleKind, ServerOptKind};
 /// # use fed3sfc::coordinator::experiment::Experiment;
 /// # fn main() -> anyhow::Result<()> {
-/// let rt = fed3sfc::Runtime::open(&fed3sfc::artifacts_dir())?;
-/// let mut exp = Experiment::builder()
+/// let builder = Experiment::builder()
 ///     .dataset(DatasetKind::SynthSmall)
 ///     .compressor(CompressorKind::ThreeSfc)
 ///     .clients(100)
 ///     .schedule(ScheduleKind::Uniform)
 ///     .client_frac(0.1)
 ///     .server_opt(ServerOptKind::FedAdam)
-///     .rounds(20)
-///     .build(&rt)?;
+///     .rounds(20);
+/// // PJRT artifacts when available, pure-Rust native backend otherwise
+/// // (or force one with `.backend(...)` / FED3SFC_BACKEND).
+/// let backend = fed3sfc::runtime::open_backend(builder.config())?;
+/// let mut exp = builder.build(backend.as_ref())?;
 /// exp.run()?;
 /// # Ok(()) }
 /// ```
@@ -478,6 +496,21 @@ impl ExperimentBuilder {
         self
     }
 
+    /// Compute backend: PJRT artifacts, the pure-Rust native path, or
+    /// auto (resolved against `FED3SFC_BACKEND` / artifact presence by
+    /// [`crate::runtime::open_backend`]).
+    pub fn backend(mut self, kind: BackendKind) -> Self {
+        self.cfg.backend = kind;
+        self
+    }
+
+    /// Pin the initial global weights instead of asking the backend for
+    /// its deterministic init (warm starts; the backend-parity test).
+    pub fn initial_weights(mut self, w0: Vec<f32>) -> Self {
+        self.cfg.init_weights = Some(w0);
+        self
+    }
+
     pub fn schedule(mut self, kind: ScheduleKind) -> Self {
         self.cfg.schedule = kind;
         self
@@ -523,8 +556,8 @@ impl ExperimentBuilder {
         self
     }
 
-    /// Validate and wire the experiment against a runtime.
-    pub fn build(self, rt: &Runtime) -> Result<Experiment<'_>> {
-        Experiment::new(self.cfg, rt)
+    /// Validate and wire the experiment against a backend.
+    pub fn build(self, backend: &dyn Backend) -> Result<Experiment<'_>> {
+        Experiment::new(self.cfg, backend)
     }
 }

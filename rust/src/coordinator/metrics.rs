@@ -128,4 +128,36 @@ mod tests {
         m.push(empty).unwrap();
         assert!((m.mean_ratio() - 40.0).abs() < 1e-12);
     }
+
+    #[test]
+    fn mean_ratio_over_only_skipped_rounds_is_nan() {
+        // Every round skipped (tiny client_frac + unlucky partition):
+        // there is no ratio to report, and NaN — not 0 — must say so, so
+        // `Experiment::label()` omits the suffix instead of printing 0.0x.
+        let mut m = MetricsSink::new("").unwrap();
+        for round in 0..3 {
+            let mut empty = rec(round, 0.0);
+            empty.n_selected = 0;
+            m.push(empty).unwrap();
+        }
+        assert!(m.mean_ratio().is_nan());
+        // The first participating round flips it to that round's ratio.
+        m.push(rec(3, 25.0)).unwrap();
+        assert!((m.mean_ratio() - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_ratio_interleaves_skips_without_bias() {
+        // skip, 10×, skip, 30× → mean 20, however the skips interleave.
+        let mut m = MetricsSink::new("").unwrap();
+        let mut skip0 = rec(0, 0.0);
+        skip0.n_selected = 0;
+        m.push(skip0).unwrap();
+        m.push(rec(1, 10.0)).unwrap();
+        let mut skip2 = rec(2, 0.0);
+        skip2.n_selected = 0;
+        m.push(skip2).unwrap();
+        m.push(rec(3, 30.0)).unwrap();
+        assert!((m.mean_ratio() - 20.0).abs() < 1e-12);
+    }
 }

@@ -29,7 +29,9 @@
 //! available cores, `1` = the original sequential path). Results are
 //! collected into slots indexed by selection order before any state or
 //! accounting is touched, so trajectories are bit-identical for every
-//! thread count.
+//! thread count. All of it runs against a pluggable
+//! [`crate::runtime::Backend`] — PJRT artifacts or the pure-Rust native
+//! implementation — with identical semantics.
 
 pub mod client;
 pub mod experiment;

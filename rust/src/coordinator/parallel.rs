@@ -1,11 +1,13 @@
 //! Parallel client execution: a fixed worker pool that fans the selected
 //! cohort's train-and-compress work out over threads, deterministically.
 //!
-//! The PJRT client (`xla` crate) is `!Send`, so a runtime can never cross
-//! a thread boundary. Instead each worker thread *owns* a full stack —
-//! its own [`Runtime`] (with its own compiled-executable cache), a
-//! [`FedOps`] facade, and a compressor instance built from the same
-//! config — and client work items travel to it as plain `Send` data:
+//! Backends are not `Send` (the PJRT client can never cross a thread
+//! boundary). Instead each worker thread *owns* a full stack — its own
+//! [`Backend`] opened from the experiment's [`BackendSpec`] (for PJRT,
+//! its own client + compiled-executable cache; for the native backend a
+//! free in-memory construction), a [`FedOps`] facade, and a compressor
+//! instance built from the same config — and client work items travel to
+//! it as plain `Send` data:
 //!
 //! * a [`ClientJob`] carries everything one client contributes to a round
 //!   — the pre-sampled local batches, the error-feedback memory, the
@@ -25,7 +27,6 @@
 //! (3SFC's S-step encoder dominates, Eq. 9) never idle the other workers.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -34,7 +35,7 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::compress::{self, Compressor, EncodeCtx};
 use crate::config::ExperimentConfig;
-use crate::runtime::{FedOps, Runtime, RuntimeStats};
+use crate::runtime::{Backend, BackendSpec, FedOps, RuntimeStats};
 use crate::util::rng::Rng;
 use crate::util::vecmath;
 
@@ -124,8 +125,8 @@ enum Job {
 }
 
 /// Fixed pool of worker threads, each owning an independent
-/// runtime/compressor stack. Construction blocks until every worker has
-/// opened its runtime (so artifact problems surface immediately);
+/// backend/compressor stack. Construction blocks until every worker has
+/// opened its backend (so artifact problems surface immediately);
 /// dropping the pool shuts the workers down and joins them.
 pub struct WorkerPool {
     job_tx: Option<Sender<Job>>,
@@ -136,7 +137,7 @@ pub struct WorkerPool {
 }
 
 impl WorkerPool {
-    pub fn new(artifacts: PathBuf, cfg: &ExperimentConfig, threads: usize) -> Result<WorkerPool> {
+    pub fn new(spec: BackendSpec, cfg: &ExperimentConfig, threads: usize) -> Result<WorkerPool> {
         let workers = threads.max(1);
         let (job_tx, job_rx) = channel::<Job>();
         let job_rx = Arc::new(Mutex::new(job_rx));
@@ -145,7 +146,7 @@ impl WorkerPool {
         let stats = Arc::new(Mutex::new(RuntimeStats::default()));
         let mut handles = Vec::with_capacity(workers);
         for i in 0..workers {
-            let dir = artifacts.clone();
+            let spec = spec.clone();
             let cfg = cfg.clone();
             let job_rx = Arc::clone(&job_rx);
             let res_tx = res_tx.clone();
@@ -153,7 +154,7 @@ impl WorkerPool {
             let stats = Arc::clone(&stats);
             let handle = std::thread::Builder::new()
                 .name(format!("fed3sfc-worker-{i}"))
-                .spawn(move || worker_main(dir, cfg, job_rx, res_tx, ready_tx, stats))
+                .spawn(move || worker_main(spec, cfg, job_rx, res_tx, ready_tx, stats))
                 .context("spawning worker thread")?;
             handles.push(handle);
         }
@@ -249,21 +250,21 @@ impl Drop for WorkerPool {
 }
 
 fn worker_main(
-    artifacts: PathBuf,
+    spec: BackendSpec,
     cfg: ExperimentConfig,
     job_rx: Arc<Mutex<Receiver<Job>>>,
     res_tx: Sender<Result<ClientUpdate>>,
     ready_tx: Sender<Result<()>>,
     pool_stats: Arc<Mutex<RuntimeStats>>,
 ) {
-    // Own the full stack locally — the runtime must never cross threads.
-    let setup = (|| -> Result<(Runtime, Box<dyn Compressor>)> {
-        let rt = Runtime::open(&artifacts)?;
-        let model = rt.model(cfg.model_key())?;
+    // Own the full stack locally — backends never cross threads.
+    let setup = (|| -> Result<(Box<dyn Backend>, Box<dyn Compressor>)> {
+        let backend = spec.open()?;
+        let model = backend.manifest().model(cfg.model_key())?;
         let comp = compress::build(&cfg, model);
-        Ok((rt, comp))
+        Ok((backend, comp))
     })();
-    let (rt, comp) = match setup {
+    let (backend, comp) = match setup {
         Ok(ok) => {
             let _ = ready_tx.send(Ok(()));
             ok
@@ -273,7 +274,7 @@ fn worker_main(
             return;
         }
     };
-    let ops = match FedOps::new(&rt, cfg.model_key()) {
+    let ops = match FedOps::new(backend.as_ref(), cfg.model_key()) {
         Ok(ops) => ops,
         // model_key was validated during setup; this cannot fail now.
         Err(_) => return,
@@ -301,8 +302,8 @@ fn worker_main(
                 .unwrap_or_else(|| "worker panicked".into());
             Err(anyhow!("client job panicked: {msg}"))
         });
-        // Publish this worker's runtime-counter delta.
-        let now = rt.stats();
+        // Publish this worker's backend-counter delta.
+        let now = backend.stats();
         let delta = now.delta(&reported);
         reported = now;
         if let Ok(mut agg) = pool_stats.lock() {

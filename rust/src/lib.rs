@@ -17,8 +17,14 @@
 //! * **L1 (python/compile/kernels)** — Pallas kernels (tiled matmul, fused
 //!   reductions, axpy) with second-order-capable custom vjps.
 //!
-//! At run time the rust binary loads `artifacts/*.hlo.txt` through the PJRT
-//! CPU client (`xla` crate) — python never runs on the round path.
+//! The runtime layer is a pluggable [`runtime::Backend`]: the default
+//! `pjrt` path loads `artifacts/*.hlo.txt` through the PJRT CPU client
+//! (`xla` crate) — python never runs on the round path — while the
+//! `native` path re-implements every fed-op in pure Rust
+//! ([`runtime::mlp`]) so experiments and the whole test tier run with no
+//! artifacts at all. Select with `[runtime] backend`, `--backend`, or
+//! `FED3SFC_BACKEND`; the two implementations are differentially tested
+//! against each other (`tests/backend_parity_test.rs`).
 
 pub mod bench;
 pub mod cli;
@@ -33,7 +39,9 @@ pub mod testing;
 pub mod util;
 
 pub use coordinator::experiment::{Experiment, ExperimentBuilder, RoundRecord};
-pub use runtime::Runtime;
+pub use runtime::{open_backend, Backend, NativeBackend};
+#[cfg(feature = "pjrt")]
+pub use runtime::{PjrtBackend, Runtime};
 
 /// Default location of the AOT artifact directory, overridable with the
 /// `FED3SFC_ARTIFACTS` environment variable (used by tests/benches so they

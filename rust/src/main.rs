@@ -14,11 +14,12 @@ use anyhow::{bail, Result};
 
 use fed3sfc::cli::Args;
 use fed3sfc::config::{
-    CompressorKind, DatasetKind, ExperimentConfig, NetworkKind, ScheduleKind, ServerOptKind,
+    BackendKind, CompressorKind, DatasetKind, ExperimentConfig, NetworkKind, ScheduleKind,
+    ServerOptKind,
 };
 use fed3sfc::coordinator::experiment::Experiment;
 use fed3sfc::data::{dirichlet_partition, Dataset};
-use fed3sfc::runtime::Runtime;
+use fed3sfc::runtime::{open_backend, open_backend_kind, Backend};
 use fed3sfc::util::rng::Rng;
 
 const USAGE: &str = "\
@@ -50,8 +51,12 @@ run options:
   --threads N            worker threads for the per-round client fan-out
                          (0 = auto: all cores, or FED3SFC_THREADS;
                          1 = sequential; results identical for any N)
+  --backend NAME         auto|pjrt|native (default auto: PJRT when the
+                         artifact dir exists, else the pure-Rust native
+                         backend; FED3SFC_BACKEND overrides auto)
 
 partition-viz options: --dataset --clients --alpha --samples --seed
+list-models / info options: --backend
 ";
 
 fn main() {
@@ -71,10 +76,19 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
     match args.subcommand.as_str() {
         "run" => cmd_run(&args),
         "partition-viz" => cmd_partition_viz(&args),
-        "list-models" => cmd_list_models(),
-        "info" => cmd_info(),
+        "list-models" => cmd_list_models(&args),
+        "info" => cmd_info(&args),
         other => bail!("unknown subcommand '{other}' (try --help)"),
     }
+}
+
+/// Open the backend a bare subcommand asks for (`--backend`, else auto).
+fn backend_from_args(args: &Args) -> Result<Box<dyn Backend>> {
+    let kind = match args.get("backend") {
+        Some(v) => BackendKind::parse(v)?,
+        None => BackendKind::Auto,
+    };
+    open_backend_kind(kind)
 }
 
 fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
@@ -131,19 +145,23 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     cfg.net_down_mbps = args.get_f64("down-mbps", cfg.net_down_mbps)?;
     cfg.net_latency_ms = args.get_f64("latency-ms", cfg.net_latency_ms)?;
     cfg.threads = args.get_usize("threads", cfg.threads)?;
+    if let Some(v) = args.get("backend") {
+        cfg.backend = BackendKind::parse(v)?;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
     let cfg = config_from_args(args)?;
-    let rt = Runtime::open(&fed3sfc::artifacts_dir())?;
+    let backend = open_backend(&cfg)?;
     println!(
-        "fed3sfc run: {} on {} ({}), {} clients, {} rounds, K={}, method={}, \
+        "fed3sfc run: {} on {} ({} backend, {}), {} clients, {} rounds, K={}, method={}, \
          schedule={} (frac {}), server_opt={}, network={}",
         cfg.model_key(),
         cfg.dataset.name(),
-        rt.platform(),
+        backend.backend_name(),
+        backend.platform(),
         cfg.n_clients,
         cfg.rounds,
         cfg.k_local,
@@ -153,7 +171,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         cfg.server_opt.name(),
         cfg.network.name(),
     );
-    let mut exp = Experiment::new(cfg, &rt)?;
+    let mut exp = Experiment::new(cfg, backend.as_ref())?;
     println!("client execution: {} thread(s)", exp.threads());
     for _ in 0..exp.cfg.rounds {
         let rec = exp.run_round()?;
@@ -191,10 +209,14 @@ fn cmd_run(args: &Args) -> Result<()> {
             ws.execute_ms
         );
     }
-    let st = rt.stats();
+    let st = backend.stats();
     println!(
-        "runtime: {} compiles ({:.0} ms), {} executions ({:.0} ms)",
-        st.compiles, st.compile_ms, st.executions, st.execute_ms
+        "backend ({}): {} compiles ({:.0} ms), {} executions ({:.0} ms)",
+        backend.backend_name(),
+        st.compiles,
+        st.compile_ms,
+        st.executions,
+        st.execute_ms
     );
     Ok(())
 }
@@ -218,9 +240,10 @@ fn cmd_partition_viz(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_list_models() -> Result<()> {
-    let rt = Runtime::open(&fed3sfc::artifacts_dir())?;
-    for (name, m) in &rt.manifest.models {
+fn cmd_list_models(args: &Args) -> Result<()> {
+    let backend = backend_from_args(args)?;
+    println!("backend: {}", backend.backend_name());
+    for (name, m) in &backend.manifest().models {
         println!(
             "{name:<14} P={:<8} in={:?} classes={} batch={} ops: {}",
             m.params,
@@ -233,11 +256,13 @@ fn cmd_list_models() -> Result<()> {
     Ok(())
 }
 
-fn cmd_info() -> Result<()> {
-    let dir = fed3sfc::artifacts_dir();
-    let rt = Runtime::open(&dir)?;
-    println!("artifacts: {}", dir.display());
-    println!("platform:  {}", rt.platform());
-    println!("models:    {}", rt.manifest.models.len());
+fn cmd_info(args: &Args) -> Result<()> {
+    let backend = backend_from_args(args)?;
+    println!("backend:   {}", backend.backend_name());
+    println!("models:    {}", backend.manifest().models.len());
+    println!("platform:  {}", backend.platform());
+    if backend.backend_name() == "pjrt" {
+        println!("artifacts: {}", backend.manifest().dir.display());
+    }
     Ok(())
 }

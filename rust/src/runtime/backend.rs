@@ -1,0 +1,274 @@
+//! The compute-backend abstraction: every fed-op the coordinator needs,
+//! behind one trait with two implementations.
+//!
+//! * [`crate::runtime::PjrtBackend`] — the original path: AOT-lowered HLO
+//!   artifacts executed through the PJRT CPU client (`xla` crate). Fast,
+//!   faithful to the L1/L2 kernel stack, but requires `make artifacts`
+//!   and the `pjrt` cargo feature.
+//! * [`crate::runtime::NativeBackend`] — a pure-Rust reference
+//!   implementation of the same ops (see [`crate::runtime::mlp`]): no
+//!   artifacts, no `xla` dependency, `Send`. It exists so the entire
+//!   experiment stack — and the whole integration-test tier — runs in any
+//!   container, and so the two implementations can be differentially
+//!   tested against each other (`tests/backend_parity_test.rs`).
+//!
+//! Selection: `[runtime] backend = "native" | "pjrt"` in TOML, `--backend`
+//! on the CLI, [`crate::coordinator::ExperimentBuilder::backend`], or the
+//! `FED3SFC_BACKEND` environment variable; the default (`auto`) picks PJRT
+//! when an artifact directory is present and falls back to native.
+//!
+//! Backends are deliberately **not** `Send`/`Sync` at the trait level —
+//! the PJRT client cannot cross threads. Parallel round execution instead
+//! clones a [`BackendSpec`] (plain `Send` data) into every worker, which
+//! opens its own backend instance (see `coordinator::parallel`); for the
+//! native backend this is a pure in-memory construction.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::config::{BackendKind, ExperimentConfig};
+use crate::model::{Manifest, ModelInfo};
+
+/// Counters for the backend hot path (perf visibility, EXPERIMENTS §Perf).
+/// For the native backend `compiles` is always 0; `executions` counts op
+/// dispatches for both.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RuntimeStats {
+    pub compiles: u64,
+    pub executions: u64,
+    pub compile_ms: f64,
+    pub execute_ms: f64,
+}
+
+impl RuntimeStats {
+    /// Accumulate another snapshot (worker-pool aggregation).
+    pub fn merge(&mut self, other: &RuntimeStats) {
+        self.compiles += other.compiles;
+        self.executions += other.executions;
+        self.compile_ms += other.compile_ms;
+        self.execute_ms += other.execute_ms;
+    }
+
+    /// Counters accumulated since `earlier` (a previous snapshot of the
+    /// same backend).
+    pub fn delta(&self, earlier: &RuntimeStats) -> RuntimeStats {
+        RuntimeStats {
+            compiles: self.compiles - earlier.compiles,
+            executions: self.executions - earlier.executions,
+            compile_ms: self.compile_ms - earlier.compile_ms,
+            execute_ms: self.execute_ms - earlier.execute_ms,
+        }
+    }
+}
+
+/// Everything needed to (re)open a backend on another thread: plain
+/// `Send + Sync` data, cloned into each worker of the round engine's pool.
+#[derive(Clone, Debug)]
+pub enum BackendSpec {
+    /// Open the artifact directory through the PJRT client.
+    Pjrt { artifacts: PathBuf },
+    /// Construct the pure-Rust backend (no filesystem access).
+    Native,
+}
+
+impl BackendSpec {
+    /// Open a fresh backend instance described by this spec.
+    pub fn open(&self) -> Result<Box<dyn Backend>> {
+        match self {
+            #[cfg(feature = "pjrt")]
+            BackendSpec::Pjrt { artifacts } => {
+                Ok(Box::new(crate::runtime::PjrtBackend::open(artifacts)?))
+            }
+            #[cfg(not(feature = "pjrt"))]
+            BackendSpec::Pjrt { .. } => anyhow::bail!(
+                "this build has no PJRT support (compiled without the `pjrt` feature); \
+                 use the native backend"
+            ),
+            BackendSpec::Native => Ok(Box::new(crate::runtime::NativeBackend::new())),
+        }
+    }
+}
+
+/// The typed fed-op surface (plus model/weight plumbing) the coordinator
+/// consumes. Shapes follow the manifest conventions: `w` is the flat
+/// parameter vector `[P]`, batches are flat row-major buffers.
+///
+/// The op semantics are specified by `python/compile/fedops.py` (the
+/// lowering source for the PJRT artifacts); the native backend
+/// re-implements the same math in Rust and the two are differentially
+/// tested against each other.
+pub trait Backend {
+    /// Which implementation this is (`"pjrt"` / `"native"`).
+    fn backend_name(&self) -> &'static str;
+
+    /// Human-readable platform string (PJRT platform name, or "native").
+    fn platform(&self) -> String;
+
+    /// The model table this backend can execute.
+    fn manifest(&self) -> &Manifest;
+
+    /// Hot-path counters.
+    fn stats(&self) -> RuntimeStats;
+
+    /// A `Send` recipe for opening an equivalent backend on another
+    /// thread (worker pool).
+    fn spec(&self) -> BackendSpec;
+
+    /// Deterministic initial weights for `model` (He-normal; the PJRT
+    /// backend reads the packed `.init.bin` the AOT pass exported).
+    fn load_init(&self, model: &ModelInfo) -> Result<Vec<f32>>;
+
+    /// K local SGD steps over pre-batched data `xs: [K·B·d]`, `ys: [K·B]`;
+    /// returns the updated local weights.
+    fn local_train(
+        &self,
+        model: &ModelInfo,
+        k: usize,
+        w: &[f32],
+        xs: &[f32],
+        ys: &[i32],
+        lr: f32,
+    ) -> Result<Vec<f32>>;
+
+    /// One-batch gradient of the hard-label CE loss.
+    fn grad_batch(&self, model: &ModelInfo, w: &[f32], x: &[f32], y: &[i32]) -> Result<Vec<f32>>;
+
+    /// One 3SFC encoder step (Eq. 9 gradient on the synthetic features).
+    /// Returns (dx', dy', cos at the pre-step iterate).
+    #[allow(clippy::too_many_arguments)]
+    fn syn_step(
+        &self,
+        model: &ModelInfo,
+        m: usize,
+        w: &[f32],
+        g_target: &[f32],
+        dx: &[f32],
+        dy: &[f32],
+        lr_syn: f32,
+        lambda: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, f32)>;
+
+    /// True if a fused S-step encoder exists for (m, s) — a PJRT artifact
+    /// property; the native backend always loops [`Backend::syn_step`].
+    fn has_syn_opt(&self, model: &ModelInfo, m: usize, s: usize) -> bool;
+
+    /// Fused 3SFC encoder: S Adam steps in one dispatch (perf pass).
+    /// Returns (dx_final, dy_final, dx_best, dy_best, best_cos, last_cos).
+    #[allow(clippy::too_many_arguments, clippy::type_complexity)]
+    fn syn_opt(
+        &self,
+        model: &ModelInfo,
+        m: usize,
+        s: usize,
+        w: &[f32],
+        g_target: &[f32],
+        dx: &[f32],
+        dy: &[f32],
+        lr_syn: f32,
+        lambda: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, f32, f32)>;
+
+    /// Decoder / finalizer: ∇_w F(D_syn, w) (Eq. 10; caller applies s).
+    fn syn_grad(
+        &self,
+        model: &ModelInfo,
+        m: usize,
+        w: &[f32],
+        dx: &[f32],
+        dy: &[f32],
+    ) -> Result<Vec<f32>>;
+
+    /// Eval over one fixed-size batch: (Σ loss, #correct).
+    fn eval_batch(&self, model: &ModelInfo, w: &[f32], x: &[f32], y: &[i32]) -> Result<(f32, f32)>;
+
+    /// One FedSynth distillation step (multi-step baseline).
+    /// Returns (dxs', dys', fit, per-step grad norms).
+    #[allow(clippy::too_many_arguments, clippy::type_complexity)]
+    fn fedsynth_step(
+        &self,
+        model: &ModelInfo,
+        k: usize,
+        m: usize,
+        w: &[f32],
+        g_target: &[f32],
+        dxs: &[f32],
+        dys: &[f32],
+        lr_inner: f32,
+        lr_syn: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, f32, Vec<f32>)>;
+
+    /// FedSynth decoder: replay the K_sim-step simulation, return Δw.
+    #[allow(clippy::too_many_arguments)]
+    fn fedsynth_apply(
+        &self,
+        model: &ModelInfo,
+        k: usize,
+        m: usize,
+        w: &[f32],
+        dxs: &[f32],
+        dys: &[f32],
+        lr_inner: f32,
+    ) -> Result<Vec<f32>>;
+}
+
+/// Open the backend an [`ExperimentConfig`] asks for. `auto` resolves in
+/// [`open_backend_kind`]: `FED3SFC_BACKEND` if set (an unparseable value
+/// is an error, not a silent fallback), else PJRT when artifacts exist,
+/// else native.
+pub fn open_backend(cfg: &ExperimentConfig) -> Result<Box<dyn Backend>> {
+    open_backend_kind(cfg.backend)
+}
+
+/// Open a backend by kind; [`BackendKind::Auto`] is resolved here — the
+/// single place env/artifact resolution happens.
+pub fn open_backend_kind(kind: BackendKind) -> Result<Box<dyn Backend>> {
+    match kind {
+        BackendKind::Native => BackendSpec::Native.open(),
+        BackendKind::Pjrt => {
+            BackendSpec::Pjrt { artifacts: crate::artifacts_dir() }.open()
+        }
+        BackendKind::Auto => {
+            // Env override first (so every entry point honors it), then
+            // artifact availability. A value that doesn't parse is a
+            // user error and must not silently auto-resolve.
+            if let Ok(v) = std::env::var("FED3SFC_BACKEND") {
+                let env_kind = BackendKind::parse(v.trim())
+                    .map_err(|e| e.context("invalid FED3SFC_BACKEND"))?;
+                if env_kind != BackendKind::Auto {
+                    return open_backend_kind(env_kind);
+                }
+            }
+            let dir = crate::artifacts_dir();
+            if cfg!(feature = "pjrt") && dir.join("manifest.json").exists() {
+                BackendSpec::Pjrt { artifacts: dir }.open()
+            } else {
+                BackendSpec::Native.open()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_merge_and_delta() {
+        let mut a = RuntimeStats { compiles: 2, executions: 10, compile_ms: 5.0, execute_ms: 1.0 };
+        let b = RuntimeStats { compiles: 1, executions: 4, compile_ms: 2.0, execute_ms: 0.5 };
+        a.merge(&b);
+        assert_eq!(a.compiles, 3);
+        assert_eq!(a.executions, 14);
+        let d = a.delta(&b);
+        assert_eq!(d.compiles, 2);
+        assert_eq!(d.executions, 10);
+    }
+
+    #[test]
+    fn native_spec_opens_without_filesystem() {
+        let be = BackendSpec::Native.open().unwrap();
+        assert_eq!(be.backend_name(), "native");
+        assert!(be.manifest().models.contains_key("mlp_small"));
+    }
+}

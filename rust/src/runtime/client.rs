@@ -1,4 +1,6 @@
-//! The PJRT runtime handle: client + manifest + lazy executable cache.
+//! The PJRT backend: client + manifest + lazy executable cache, plus the
+//! typed fed-op marshalling that binds the AOT HLO artifacts to the
+//! [`Backend`] trait.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -6,74 +8,43 @@ use std::path::Path;
 use std::rc::Rc;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{ensure, Context, Result};
 use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
 use crate::model::{Manifest, ModelInfo};
-
-/// Counters for the runtime hot path (perf visibility, EXPERIMENTS §Perf).
-#[derive(Clone, Copy, Debug, Default)]
-pub struct RuntimeStats {
-    pub compiles: u64,
-    pub executions: u64,
-    pub compile_ms: f64,
-    pub execute_ms: f64,
-}
-
-impl RuntimeStats {
-    /// Accumulate another snapshot (worker-pool aggregation).
-    pub fn merge(&mut self, other: &RuntimeStats) {
-        self.compiles += other.compiles;
-        self.executions += other.executions;
-        self.compile_ms += other.compile_ms;
-        self.execute_ms += other.execute_ms;
-    }
-
-    /// Counters accumulated since `earlier` (a previous snapshot of the
-    /// same runtime).
-    pub fn delta(&self, earlier: &RuntimeStats) -> RuntimeStats {
-        RuntimeStats {
-            compiles: self.compiles - earlier.compiles,
-            executions: self.executions - earlier.executions,
-            compile_ms: self.compile_ms - earlier.compile_ms,
-            execute_ms: self.execute_ms - earlier.execute_ms,
-        }
-    }
-}
+use crate::runtime::backend::{Backend, BackendSpec, RuntimeStats};
+use crate::runtime::literal::{f32_literal, i32_literal, scalar_f32, to_f32s, to_scalar_f32};
 
 /// Owns the PJRT CPU client and the compiled-executable cache.
 ///
 /// Single-threaded by design: the `xla` crate's client is not `Send`, so
-/// a `Runtime` never crosses a thread boundary. Parallel round execution
-/// (see `coordinator::parallel`) instead gives every worker thread its
-/// own `Runtime` — each with its own executable cache — and moves plain
-/// `Send` data between them.
-pub struct Runtime {
+/// a `PjrtBackend` never crosses a thread boundary. Parallel round
+/// execution (see `coordinator::parallel`) instead gives every worker
+/// thread its own backend — each with its own executable cache — opened
+/// from the shared [`BackendSpec`], and moves plain `Send` data between
+/// them.
+pub struct PjrtBackend {
     client: PjRtClient,
     pub manifest: Manifest,
     cache: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
     stats: RefCell<RuntimeStats>,
 }
 
-impl Runtime {
+/// The pre-backend-abstraction name; kept so downstream code and docs
+/// that say `Runtime::open` keep compiling.
+pub type Runtime = PjrtBackend;
+
+impl PjrtBackend {
     /// Open the artifact directory (see [`crate::artifacts_dir`]).
-    pub fn open(dir: &Path) -> Result<Runtime> {
+    pub fn open(dir: &Path) -> Result<PjrtBackend> {
         let manifest = Manifest::load(dir)?;
         let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime {
+        Ok(PjrtBackend {
             client,
             manifest,
             cache: RefCell::new(HashMap::new()),
             stats: RefCell::new(RuntimeStats::default()),
         })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    pub fn stats(&self) -> RuntimeStats {
-        *self.stats.borrow()
     }
 
     pub fn model(&self, name: &str) -> Result<&ModelInfo> {
@@ -113,5 +84,234 @@ impl Runtime {
         st.executions += 1;
         st.execute_ms += t0.elapsed().as_secs_f64() * 1e3;
         Ok(lit.to_tuple()?)
+    }
+
+    fn input_dims(model: &ModelInfo, lead: &[usize]) -> Vec<usize> {
+        let mut dims = lead.to_vec();
+        dims.extend_from_slice(&model.input_shape);
+        dims
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+impl Backend for PjrtBackend {
+    fn backend_name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn stats(&self) -> RuntimeStats {
+        *self.stats.borrow()
+    }
+
+    fn spec(&self) -> BackendSpec {
+        BackendSpec::Pjrt { artifacts: self.manifest.dir.clone() }
+    }
+
+    fn load_init(&self, model: &ModelInfo) -> Result<Vec<f32>> {
+        self.manifest.load_init(model)
+    }
+
+    fn local_train(
+        &self,
+        model: &ModelInfo,
+        k: usize,
+        w: &[f32],
+        xs: &[f32],
+        ys: &[i32],
+        lr: f32,
+    ) -> Result<Vec<f32>> {
+        let op = model.op(&format!("train_k{k}"))?;
+        let b = op.batch;
+        ensure!(w.len() == model.params, "w len");
+        ensure!(xs.len() == k * b * model.feature_len(), "xs len");
+        ensure!(ys.len() == k * b, "ys len");
+        let out = self.execute(
+            &op.file,
+            &[
+                f32_literal(&[model.params], w)?,
+                f32_literal(&Self::input_dims(model, &[k, b]), xs)?,
+                i32_literal(&[k, b], ys)?,
+                scalar_f32(lr)?,
+            ],
+        )?;
+        to_f32s(&out[0])
+    }
+
+    fn grad_batch(&self, model: &ModelInfo, w: &[f32], x: &[f32], y: &[i32]) -> Result<Vec<f32>> {
+        let op = model.op("grad")?;
+        let b = op.batch;
+        let out = self.execute(
+            &op.file,
+            &[
+                f32_literal(&[model.params], w)?,
+                f32_literal(&Self::input_dims(model, &[b]), x)?,
+                i32_literal(&[b], y)?,
+            ],
+        )?;
+        to_f32s(&out[0])
+    }
+
+    fn syn_step(
+        &self,
+        model: &ModelInfo,
+        m: usize,
+        w: &[f32],
+        g_target: &[f32],
+        dx: &[f32],
+        dy: &[f32],
+        lr_syn: f32,
+        lambda: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, f32)> {
+        let op = model.op(&format!("syn_step_m{m}"))?;
+        ensure!(dx.len() == m * model.feature_len(), "dx len");
+        ensure!(dy.len() == m * model.n_classes, "dy len");
+        let out = self.execute(
+            &op.file,
+            &[
+                f32_literal(&[model.params], w)?,
+                f32_literal(&[model.params], g_target)?,
+                f32_literal(&Self::input_dims(model, &[m]), dx)?,
+                f32_literal(&[m, model.n_classes], dy)?,
+                scalar_f32(lr_syn)?,
+                scalar_f32(lambda)?,
+            ],
+        )?;
+        Ok((to_f32s(&out[0])?, to_f32s(&out[1])?, to_scalar_f32(&out[2])?))
+    }
+
+    fn has_syn_opt(&self, model: &ModelInfo, m: usize, s: usize) -> bool {
+        model.ops.contains_key(&format!("syn_opt_m{m}_s{s}"))
+    }
+
+    fn syn_opt(
+        &self,
+        model: &ModelInfo,
+        m: usize,
+        s: usize,
+        w: &[f32],
+        g_target: &[f32],
+        dx: &[f32],
+        dy: &[f32],
+        lr_syn: f32,
+        lambda: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, f32, f32)> {
+        let op = model.op(&format!("syn_opt_m{m}_s{s}"))?;
+        let out = self.execute(
+            &op.file,
+            &[
+                f32_literal(&[model.params], w)?,
+                f32_literal(&[model.params], g_target)?,
+                f32_literal(&Self::input_dims(model, &[m]), dx)?,
+                f32_literal(&[m, model.n_classes], dy)?,
+                scalar_f32(lr_syn)?,
+                scalar_f32(lambda)?,
+            ],
+        )?;
+        Ok((
+            to_f32s(&out[0])?,
+            to_f32s(&out[1])?,
+            to_f32s(&out[2])?,
+            to_f32s(&out[3])?,
+            to_scalar_f32(&out[4])?,
+            to_scalar_f32(&out[5])?,
+        ))
+    }
+
+    fn syn_grad(
+        &self,
+        model: &ModelInfo,
+        m: usize,
+        w: &[f32],
+        dx: &[f32],
+        dy: &[f32],
+    ) -> Result<Vec<f32>> {
+        let op = model.op(&format!("syn_grad_m{m}"))?;
+        let out = self.execute(
+            &op.file,
+            &[
+                f32_literal(&[model.params], w)?,
+                f32_literal(&Self::input_dims(model, &[m]), dx)?,
+                f32_literal(&[m, model.n_classes], dy)?,
+            ],
+        )?;
+        to_f32s(&out[0])
+    }
+
+    fn eval_batch(&self, model: &ModelInfo, w: &[f32], x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
+        let op = model.op("eval")?;
+        let b = op.batch;
+        ensure!(x.len() == b * model.feature_len(), "x len");
+        let out = self.execute(
+            &op.file,
+            &[
+                f32_literal(&[model.params], w)?,
+                f32_literal(&Self::input_dims(model, &[b]), x)?,
+                i32_literal(&[b], y)?,
+            ],
+        )?;
+        Ok((to_scalar_f32(&out[0])?, to_scalar_f32(&out[1])?))
+    }
+
+    fn fedsynth_step(
+        &self,
+        model: &ModelInfo,
+        k: usize,
+        m: usize,
+        w: &[f32],
+        g_target: &[f32],
+        dxs: &[f32],
+        dys: &[f32],
+        lr_inner: f32,
+        lr_syn: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, f32, Vec<f32>)> {
+        let op = model.op(&format!("fedsynth_k{k}_m{m}"))?;
+        let out = self.execute(
+            &op.file,
+            &[
+                f32_literal(&[model.params], w)?,
+                f32_literal(&[model.params], g_target)?,
+                f32_literal(&Self::input_dims(model, &[k, m]), dxs)?,
+                f32_literal(&[k, m, model.n_classes], dys)?,
+                scalar_f32(lr_inner)?,
+                scalar_f32(lr_syn)?,
+            ],
+        )?;
+        Ok((
+            to_f32s(&out[0])?,
+            to_f32s(&out[1])?,
+            to_scalar_f32(&out[2])?,
+            to_f32s(&out[3])?,
+        ))
+    }
+
+    fn fedsynth_apply(
+        &self,
+        model: &ModelInfo,
+        k: usize,
+        m: usize,
+        w: &[f32],
+        dxs: &[f32],
+        dys: &[f32],
+        lr_inner: f32,
+    ) -> Result<Vec<f32>> {
+        let op = model.op(&format!("fedsynth_apply_k{k}_m{m}"))?;
+        let out = self.execute(
+            &op.file,
+            &[
+                f32_literal(&[model.params], w)?,
+                f32_literal(&Self::input_dims(model, &[k, m]), dxs)?,
+                f32_literal(&[k, m, model.n_classes], dys)?,
+                scalar_f32(lr_inner)?,
+            ],
+        )?;
+        to_f32s(&out[0])
     }
 }

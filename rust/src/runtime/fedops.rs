@@ -1,30 +1,25 @@
-//! Typed wrappers over the AOT fed-op artifacts.
+//! Typed fed-op facade bound to one (backend, model) pair.
 //!
-//! Each wrapper checks shapes against the manifest, marshals flat host
-//! buffers into literals, runs the executable, and unpacks the tuple.
+//! Thin forwarding layer over the [`Backend`] trait: compressors and the
+//! round engine hold a `FedOps` and never care which implementation (PJRT
+//! artifacts or the pure-Rust native path) executes the math. Dataset-level
+//! evaluation lives here because it is backend-independent batching logic.
 
 use anyhow::{ensure, Result};
 
 use crate::model::ModelInfo;
-use crate::runtime::literal::{f32_literal, i32_literal, scalar_f32, to_f32s, to_scalar_f32};
-use crate::runtime::Runtime;
+use crate::runtime::backend::Backend;
 
-/// Fed-op facade bound to one (runtime, model) pair.
+/// Fed-op facade bound to one (backend, model) pair.
 pub struct FedOps<'a> {
-    pub rt: &'a Runtime,
+    pub backend: &'a dyn Backend,
     pub model: &'a ModelInfo,
 }
 
 impl<'a> FedOps<'a> {
-    pub fn new(rt: &'a Runtime, model_key: &str) -> Result<FedOps<'a>> {
-        let model = rt.model(model_key)?;
-        Ok(FedOps { rt, model })
-    }
-
-    fn input_dims(&self, lead: &[usize]) -> Vec<usize> {
-        let mut dims = lead.to_vec();
-        dims.extend_from_slice(&self.model.input_shape);
-        dims
+    pub fn new(backend: &'a dyn Backend, model_key: &str) -> Result<FedOps<'a>> {
+        let model = backend.manifest().model(model_key)?;
+        Ok(FedOps { backend, model })
     }
 
     /// K local SGD steps: returns the updated local weights.
@@ -36,36 +31,12 @@ impl<'a> FedOps<'a> {
         ys: &[i32],
         lr: f32,
     ) -> Result<Vec<f32>> {
-        let op = self.model.op(&format!("train_k{k}"))?;
-        let b = op.batch;
-        ensure!(w.len() == self.model.params, "w len");
-        ensure!(xs.len() == k * b * self.model.feature_len(), "xs len");
-        ensure!(ys.len() == k * b, "ys len");
-        let out = self.rt.execute(
-            &op.file,
-            &[
-                f32_literal(&[self.model.params], w)?,
-                f32_literal(&self.input_dims(&[k, b]), xs)?,
-                i32_literal(&[k, b], ys)?,
-                scalar_f32(lr)?,
-            ],
-        )?;
-        to_f32s(&out[0])
+        self.backend.local_train(self.model, k, w, xs, ys, lr)
     }
 
-    /// One-batch gradient (mlp_small only; tests).
+    /// One-batch gradient (mlp family; tests).
     pub fn grad_batch(&self, w: &[f32], x: &[f32], y: &[i32]) -> Result<Vec<f32>> {
-        let op = self.model.op("grad")?;
-        let b = op.batch;
-        let out = self.rt.execute(
-            &op.file,
-            &[
-                f32_literal(&[self.model.params], w)?,
-                f32_literal(&self.input_dims(&[b]), x)?,
-                i32_literal(&[b], y)?,
-            ],
-        )?;
-        to_f32s(&out[0])
+        self.backend.grad_batch(self.model, w, x, y)
     }
 
     /// One 3SFC encoder step. Returns (dx', dy', cos).
@@ -80,26 +51,14 @@ impl<'a> FedOps<'a> {
         lr_syn: f32,
         lambda: f32,
     ) -> Result<(Vec<f32>, Vec<f32>, f32)> {
-        let op = self.model.op(&format!("syn_step_m{m}"))?;
-        ensure!(dx.len() == m * self.model.feature_len(), "dx len");
-        ensure!(dy.len() == m * self.model.n_classes, "dy len");
-        let out = self.rt.execute(
-            &op.file,
-            &[
-                f32_literal(&[self.model.params], w)?,
-                f32_literal(&[self.model.params], g_target)?,
-                f32_literal(&self.input_dims(&[m]), dx)?,
-                f32_literal(&[m, self.model.n_classes], dy)?,
-                scalar_f32(lr_syn)?,
-                scalar_f32(lambda)?,
-            ],
-        )?;
-        Ok((to_f32s(&out[0])?, to_f32s(&out[1])?, to_scalar_f32(&out[2])?))
+        self.backend
+            .syn_step(self.model, m, w, g_target, dx, dy, lr_syn, lambda)
     }
 
-    /// True if a fused encoder artifact exists for (m, s).
+    /// True if a fused encoder exists for (m, s) — always false on the
+    /// native backend.
     pub fn has_syn_opt(&self, m: usize, s: usize) -> bool {
-        self.model.ops.contains_key(&format!("syn_opt_m{m}_s{s}"))
+        self.backend.has_syn_opt(self.model, m, s)
     }
 
     /// Fused 3SFC encoder: S Adam steps in one dispatch (perf pass).
@@ -116,63 +75,57 @@ impl<'a> FedOps<'a> {
         lr_syn: f32,
         lambda: f32,
     ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, f32, f32)> {
-        let op = self.model.op(&format!("syn_opt_m{m}_s{s}"))?;
-        let out = self.rt.execute(
-            &op.file,
-            &[
-                f32_literal(&[self.model.params], w)?,
-                f32_literal(&[self.model.params], g_target)?,
-                f32_literal(&self.input_dims(&[m]), dx)?,
-                f32_literal(&[m, self.model.n_classes], dy)?,
-                scalar_f32(lr_syn)?,
-                scalar_f32(lambda)?,
-            ],
-        )?;
-        Ok((
-            to_f32s(&out[0])?,
-            to_f32s(&out[1])?,
-            to_f32s(&out[2])?,
-            to_f32s(&out[3])?,
-            to_scalar_f32(&out[4])?,
-            to_scalar_f32(&out[5])?,
-        ))
+        self.backend
+            .syn_opt(self.model, m, s, w, g_target, dx, dy, lr_syn, lambda)
     }
 
     /// Decoder / finalizer: gradient of the loss on the synthetic features.
     pub fn syn_grad(&self, m: usize, w: &[f32], dx: &[f32], dy: &[f32]) -> Result<Vec<f32>> {
-        let op = self.model.op(&format!("syn_grad_m{m}"))?;
-        let out = self.rt.execute(
-            &op.file,
-            &[
-                f32_literal(&[self.model.params], w)?,
-                f32_literal(&self.input_dims(&[m]), dx)?,
-                f32_literal(&[m, self.model.n_classes], dy)?,
-            ],
-        )?;
-        to_f32s(&out[0])
+        self.backend.syn_grad(self.model, m, w, dx, dy)
     }
 
     /// Eval over one fixed-size batch: (Σ loss, #correct).
     pub fn eval_batch(&self, w: &[f32], x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
-        let op = self.model.op("eval")?;
-        let b = op.batch;
-        ensure!(x.len() == b * self.model.feature_len(), "x len");
-        let out = self.rt.execute(
-            &op.file,
-            &[
-                f32_literal(&[self.model.params], w)?,
-                f32_literal(&self.input_dims(&[b]), x)?,
-                i32_literal(&[b], y)?,
-            ],
-        )?;
-        Ok((to_scalar_f32(&out[0])?, to_scalar_f32(&out[1])?))
+        self.backend.eval_batch(self.model, w, x, y)
+    }
+
+    /// One FedSynth distillation step (multi-step baseline).
+    /// Returns (dxs', dys', fit, per-step grad norms).
+    #[allow(clippy::too_many_arguments)]
+    pub fn fedsynth_step(
+        &self,
+        k: usize,
+        m: usize,
+        w: &[f32],
+        g_target: &[f32],
+        dxs: &[f32],
+        dys: &[f32],
+        lr_inner: f32,
+        lr_syn: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, f32, Vec<f32>)> {
+        self.backend
+            .fedsynth_step(self.model, k, m, w, g_target, dxs, dys, lr_inner, lr_syn)
+    }
+
+    /// FedSynth decoder: replay the K_sim-step simulation, return Δw.
+    pub fn fedsynth_apply(
+        &self,
+        k: usize,
+        m: usize,
+        w: &[f32],
+        dxs: &[f32],
+        dys: &[f32],
+        lr_inner: f32,
+    ) -> Result<Vec<f32>> {
+        self.backend
+            .fedsynth_apply(self.model, k, m, w, dxs, dys, lr_inner)
     }
 
     /// Eval over a whole dataset slice, looping fixed-size batches and
     /// padding the tail by wrapping (standard practice; error is O(B/n)).
+    /// Backend-independent: both implementations see identical batching.
     pub fn eval_dataset(&self, w: &[f32], xs: &[f32], ys: &[i32]) -> Result<(f64, f64)> {
-        let op = self.model.op("eval")?;
-        let b = op.batch;
+        let b = self.model.eval_batch;
         let d = self.model.feature_len();
         let n = ys.len();
         ensure!(n >= 1 && xs.len() == n * d, "eval data shape");
@@ -205,62 +158,5 @@ impl<'a> FedOps<'a> {
             off += take;
         }
         Ok((loss_sum / n as f64, correct / n as f64))
-    }
-
-    /// One FedSynth distillation step (multi-step baseline).
-    /// Returns (dxs', dys', fit, per-step grad norms).
-    #[allow(clippy::too_many_arguments)]
-    pub fn fedsynth_step(
-        &self,
-        k: usize,
-        m: usize,
-        w: &[f32],
-        g_target: &[f32],
-        dxs: &[f32],
-        dys: &[f32],
-        lr_inner: f32,
-        lr_syn: f32,
-    ) -> Result<(Vec<f32>, Vec<f32>, f32, Vec<f32>)> {
-        let op = self.model.op(&format!("fedsynth_k{k}_m{m}"))?;
-        let out = self.rt.execute(
-            &op.file,
-            &[
-                f32_literal(&[self.model.params], w)?,
-                f32_literal(&[self.model.params], g_target)?,
-                f32_literal(&self.input_dims(&[k, m]), dxs)?,
-                f32_literal(&[k, m, self.model.n_classes], dys)?,
-                scalar_f32(lr_inner)?,
-                scalar_f32(lr_syn)?,
-            ],
-        )?;
-        Ok((
-            to_f32s(&out[0])?,
-            to_f32s(&out[1])?,
-            to_scalar_f32(&out[2])?,
-            to_f32s(&out[3])?,
-        ))
-    }
-
-    /// FedSynth decoder: replay the K_sim-step simulation, return Δw.
-    pub fn fedsynth_apply(
-        &self,
-        k: usize,
-        m: usize,
-        w: &[f32],
-        dxs: &[f32],
-        dys: &[f32],
-        lr_inner: f32,
-    ) -> Result<Vec<f32>> {
-        let op = self.model.op(&format!("fedsynth_apply_k{k}_m{m}"))?;
-        let out = self.rt.execute(
-            &op.file,
-            &[
-                f32_literal(&[self.model.params], w)?,
-                f32_literal(&self.input_dims(&[k, m]), dxs)?,
-                f32_literal(&[k, m, self.model.n_classes], dys)?,
-                scalar_f32(lr_inner)?,
-            ],
-        )?;
-        to_f32s(&out[0])
     }
 }

@@ -1,0 +1,622 @@
+//! Pure-Rust MLP fed-op math — the numerics core of the native backend.
+//!
+//! Implements, for the repo's 2-layer MLP family (`x → relu(x·W1+b1)·W2+b2`
+//! with softmax cross-entropy; see `python/compile/models.py::make_mlp`):
+//!
+//! * forward / hard-label loss+gradient (local training, eval);
+//! * soft-label loss with gradients w.r.t. the weights, the **inputs**, and
+//!   the **label logits** (the 3SFC/FedSynth synthetic-feature paths,
+//!   where labels are `softmax(dy_logits)`);
+//! * the ε-tangents of all three gradients under a perturbation of the
+//!   weights — *forward-over-reverse* second-order automatic
+//!   differentiation with dual numbers, hand-specialized to this
+//!   architecture.
+//!
+//! The tangent machinery is what makes the encoder ops exact: the 3SFC
+//! objective gradient is `∇_D |cos(∇_w L(D, w), t)|`, a mixed second
+//! derivative. With `u := ∂obj/∂g` held constant, the chain rule gives
+//! `∇_D ⟨∇_w L, u⟩`, and by symmetry of second derivatives that equals the
+//! u-directional tangent of `∇_D L` — one dual-number pass. The FedSynth
+//! unroll backward uses the same pass per inner step: the adjoint update
+//! needs the Hessian-vector product `∇_w⟨∇_w L, λ⟩` (the `gw` tangent) and
+//! the cross terms `∇_{dx,dy}⟨∇_w L, λ⟩` (the `gx`/`gdy` tangents).
+//!
+//! All buffers are flat row-major `f32`, matching the artifact layout:
+//! `w = [W1 (d×h) | b1 (h) | W2 (h×c) | b2 (c)]`.
+
+// Index loops here deliberately mirror the math derivation (same symbols,
+// same subscripts); iterator rewrites would obscure the correspondence.
+#![allow(clippy::needless_range_loop)]
+
+/// Static shape of one 2-layer MLP.
+#[derive(Clone, Copy, Debug)]
+pub struct MlpDims {
+    /// Input features.
+    pub d: usize,
+    /// Hidden width.
+    pub h: usize,
+    /// Classes.
+    pub c: usize,
+}
+
+impl MlpDims {
+    pub fn params(&self) -> usize {
+        self.d * self.h + self.h + self.h * self.c + self.c
+    }
+
+    /// Split a flat parameter vector into (W1, b1, W2, b2) slices.
+    pub fn split<'a>(&self, w: &'a [f32]) -> (&'a [f32], &'a [f32], &'a [f32], &'a [f32]) {
+        assert_eq!(w.len(), self.params(), "flat parameter length");
+        let (w1, rest) = w.split_at(self.d * self.h);
+        let (b1, rest) = rest.split_at(self.h);
+        let (w2, b2) = rest.split_at(self.h * self.c);
+        (w1, b1, w2, b2)
+    }
+}
+
+/// `out = a·b` for row-major `a: [m×k]`, `b: [k×n]` (ikj loop order).
+fn mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (l, &av) in arow.iter().enumerate() {
+            let brow = &b[l * n..(l + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// `out += aᵀ·b` for `a: [k×m]`, `b: [k×n]` → `out: [m×n]`.
+fn mm_at_acc(a: &[f32], b: &[f32], k: usize, m: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    for l in 0..k {
+        let arow = &a[l * m..(l + 1) * m];
+        let brow = &b[l * n..(l + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// `out += a·bᵀ` for `a: [m×k]`, `b: [n×k]` → `out: [m×n]`.
+fn mm_bt_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (&av, &bv) in arow.iter().zip(brow.iter()) {
+                acc += av * bv;
+            }
+            out[i * n + j] += acc;
+        }
+    }
+}
+
+/// Per-row column sum: `out[j] = Σ_i a[i][j]` for `a: [m×n]`.
+fn colsum(a: &[f32], m: usize, n: usize, out: &mut [f32]) {
+    out.fill(0.0);
+    for i in 0..m {
+        for (o, &v) in out.iter_mut().zip(a[i * n..(i + 1) * n].iter()) {
+            *o += v;
+        }
+    }
+}
+
+/// Row-wise softmax + log-softmax (max-subtracted, like `jax.nn`).
+fn softmax_rows(z: &[f32], rows: usize, n: usize, p: &mut [f32], logp: &mut [f32]) {
+    for i in 0..rows {
+        let row = &z[i * n..(i + 1) * n];
+        let mx = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut s = 0.0f32;
+        for (j, &v) in row.iter().enumerate() {
+            let e = (v - mx).exp();
+            p[i * n + j] = e;
+            s += e;
+        }
+        let ln_s = s.ln();
+        for j in 0..n {
+            p[i * n + j] /= s;
+            logp[i * n + j] = row[j] - mx - ln_s;
+        }
+    }
+}
+
+/// Forward activations kept for the backward passes.
+struct Fwd {
+    /// relu(z1) `[B×h]`.
+    h1: Vec<f32>,
+    /// relu mask (z1 > 0) `[B×h]`.
+    mask: Vec<bool>,
+    /// softmax(z2) `[B×c]`.
+    p: Vec<f32>,
+    /// log_softmax(z2) `[B×c]`.
+    logp: Vec<f32>,
+}
+
+fn forward(dims: &MlpDims, w: &[f32], x: &[f32], bsz: usize) -> Fwd {
+    let (w1, b1, w2, b2) = dims.split(w);
+    let (d, h, c) = (dims.d, dims.h, dims.c);
+    debug_assert_eq!(x.len(), bsz * d);
+    let mut z1 = vec![0.0f32; bsz * h];
+    mm(x, w1, bsz, d, h, &mut z1);
+    let mut mask = vec![false; bsz * h];
+    let mut h1 = vec![0.0f32; bsz * h];
+    for i in 0..bsz {
+        for j in 0..h {
+            let v = z1[i * h + j] + b1[j];
+            if v > 0.0 {
+                mask[i * h + j] = true;
+                h1[i * h + j] = v;
+            }
+        }
+    }
+    let mut z2 = vec![0.0f32; bsz * c];
+    mm(&h1, w2, bsz, h, c, &mut z2);
+    for i in 0..bsz {
+        for j in 0..c {
+            z2[i * c + j] += b2[j];
+        }
+    }
+    let mut p = vec![0.0f32; bsz * c];
+    let mut logp = vec![0.0f32; bsz * c];
+    softmax_rows(&z2, bsz, c, &mut p, &mut logp);
+    Fwd { h1, mask, p, logp }
+}
+
+/// Reverse pass w.r.t. the weights from `dz2 = ∂L/∂z2`; returns the flat
+/// weight gradient and `dz1` (needed by callers that also want `∂L/∂x`).
+fn backward_w(
+    dims: &MlpDims,
+    w: &[f32],
+    x: &[f32],
+    fwd_h1: &[f32],
+    mask: &[bool],
+    dz2: &[f32],
+    bsz: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let (_, _, w2, _) = dims.split(w);
+    let (d, h, c) = (dims.d, dims.h, dims.c);
+    let mut gw = vec![0.0f32; dims.params()];
+    let mut dz1 = vec![0.0f32; bsz * h];
+    {
+        let (gw1, rest) = gw.split_at_mut(d * h);
+        let (gb1, rest) = rest.split_at_mut(h);
+        let (gw2, gb2) = rest.split_at_mut(h * c);
+        mm_at_acc(fwd_h1, dz2, bsz, h, c, gw2);
+        colsum(dz2, bsz, c, gb2);
+        mm_bt_acc(dz2, w2, bsz, c, h, &mut dz1);
+        for (v, &m) in dz1.iter_mut().zip(mask.iter()) {
+            if !m {
+                *v = 0.0;
+            }
+        }
+        mm_at_acc(x, &dz1, bsz, d, h, gw1);
+        colsum(&dz1, bsz, h, gb1);
+    }
+    (gw, dz1)
+}
+
+/// Mean hard-label cross-entropy and its weight gradient over one batch.
+pub fn loss_grad_hard(dims: &MlpDims, w: &[f32], x: &[f32], y: &[i32]) -> (f32, Vec<f32>) {
+    let bsz = y.len();
+    let c = dims.c;
+    let fwd = forward(dims, w, x, bsz);
+    let inv_b = 1.0 / bsz as f32;
+    let mut loss = 0.0f64;
+    let mut dz2 = fwd.p.clone();
+    for (i, &yi) in y.iter().enumerate() {
+        let yi = yi as usize;
+        loss -= fwd.logp[i * c + yi] as f64;
+        dz2[i * c + yi] -= 1.0;
+    }
+    for v in dz2.iter_mut() {
+        *v *= inv_b;
+    }
+    let (gw, _) = backward_w(dims, w, x, &fwd.h1, &fwd.mask, &dz2, bsz);
+    ((loss / bsz as f64) as f32, gw)
+}
+
+/// K SGD steps over pre-batched data (`xs: [k·b·d]`, `ys: [k·b]`).
+pub fn sgd_steps(
+    dims: &MlpDims,
+    w: &[f32],
+    xs: &[f32],
+    ys: &[i32],
+    k: usize,
+    b: usize,
+    lr: f32,
+) -> Vec<f32> {
+    let d = dims.d;
+    let mut wc = w.to_vec();
+    for j in 0..k {
+        let x = &xs[j * b * d..(j + 1) * b * d];
+        let y = &ys[j * b..(j + 1) * b];
+        let (_, g) = loss_grad_hard(dims, &wc, x, y);
+        for (wv, gv) in wc.iter_mut().zip(g.iter()) {
+            *wv -= lr * gv;
+        }
+    }
+    wc
+}
+
+/// Eval over one batch: (Σ per-sample CE loss, #correct). Argmax breaks
+/// ties toward the first maximal class (matching `jnp.argmax`).
+pub fn eval_batch(dims: &MlpDims, w: &[f32], x: &[f32], y: &[i32]) -> (f32, f32) {
+    let bsz = y.len();
+    let c = dims.c;
+    let fwd = forward(dims, w, x, bsz);
+    let mut loss_sum = 0.0f64;
+    let mut correct = 0u32;
+    for (i, &yi) in y.iter().enumerate() {
+        loss_sum -= fwd.logp[i * c + yi as usize] as f64;
+        let row = &fwd.p[i * c..(i + 1) * c];
+        let mut best = 0usize;
+        for (j, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = j;
+            }
+        }
+        if best as i32 == yi {
+            correct += 1;
+        }
+    }
+    (loss_sum as f32, correct as f32)
+}
+
+/// Soft-label loss/gradients of `L = −(1/m)Σᵢ Σₖ yᵢₖ·logpᵢₖ` with
+/// `y = softmax(dy_logits)`, plus (optionally) the ε-tangents of every
+/// gradient under the weight perturbation `w + ε·v`.
+pub struct SoftGrads {
+    pub loss: f32,
+    /// ∇_w L `[P]`.
+    pub gw: Vec<f32>,
+    /// ∇_x L `[m·d]`.
+    pub gx: Vec<f32>,
+    /// ∇_{dy_logits} L `[m·c]` (softmax-Jacobian chain included).
+    pub gdy: Vec<f32>,
+    /// Tangents along `v` (empty when no tangent was requested).
+    pub gw_dot: Vec<f32>,
+    pub gx_dot: Vec<f32>,
+    pub gdy_dot: Vec<f32>,
+}
+
+pub fn soft_grads(
+    dims: &MlpDims,
+    w: &[f32],
+    v: Option<&[f32]>,
+    x: &[f32],
+    dy_logits: &[f32],
+    m: usize,
+) -> SoftGrads {
+    let (w1, _, w2, _) = dims.split(w);
+    let (d, h, c) = (dims.d, dims.h, dims.c);
+    debug_assert_eq!(x.len(), m * d);
+    debug_assert_eq!(dy_logits.len(), m * c);
+    let inv_m = 1.0 / m as f32;
+
+    // Soft labels y = softmax(dy_logits); independent of w (no tangent).
+    let mut y = vec![0.0f32; m * c];
+    let mut logy = vec![0.0f32; m * c];
+    softmax_rows(dy_logits, m, c, &mut y, &mut logy);
+
+    let fwd = forward(dims, w, x, m);
+
+    // Value pass.
+    let mut loss = 0.0f64;
+    for i in 0..m * c {
+        loss -= (y[i] * fwd.logp[i]) as f64;
+    }
+    let loss = (loss * inv_m as f64) as f32;
+
+    // dz2 = (p − y)/m.
+    let mut dz2 = vec![0.0f32; m * c];
+    for i in 0..m * c {
+        dz2[i] = (fwd.p[i] - y[i]) * inv_m;
+    }
+    let (gw, dz1) = backward_w(dims, w, x, &fwd.h1, &fwd.mask, &dz2, m);
+    // gx = dz1·W1ᵀ.
+    let mut gx = vec![0.0f32; m * d];
+    mm_bt_acc(&dz1, w1, m, h, d, &mut gx);
+    // a = ∂L/∂y = −logp/m; gdy = y ⊙ (a − rowdot(y, a)).
+    let mut gdy = vec![0.0f32; m * c];
+    for i in 0..m {
+        let mut rd = 0.0f32;
+        for k in 0..c {
+            rd += y[i * c + k] * (-fwd.logp[i * c + k] * inv_m);
+        }
+        for k in 0..c {
+            let a = -fwd.logp[i * c + k] * inv_m;
+            gdy[i * c + k] = y[i * c + k] * (a - rd);
+        }
+    }
+
+    let Some(v) = v else {
+        return SoftGrads {
+            loss,
+            gw,
+            gx,
+            gdy,
+            gw_dot: Vec::new(),
+            gx_dot: Vec::new(),
+            gdy_dot: Vec::new(),
+        };
+    };
+
+    // ---- Tangent pass: ε-parts under w ← w + ε·v (ẋ = ẏ = 0). The relu
+    // mask and the softmax normalizing max are locally constant a.e.
+    let (v1, vb1, v2, vb2) = dims.split(v);
+    // ż1 = x·V1 + vb1; ḣ1 = ż1 ⊙ mask.
+    let mut h1_dot = vec![0.0f32; m * h];
+    mm(x, v1, m, d, h, &mut h1_dot);
+    for i in 0..m {
+        for j in 0..h {
+            h1_dot[i * h + j] += vb1[j];
+            if !fwd.mask[i * h + j] {
+                h1_dot[i * h + j] = 0.0;
+            }
+        }
+    }
+    // ż2 = ḣ1·W2 + h1·V2 + vb2.
+    let mut z2_dot = vec![0.0f32; m * c];
+    mm(&h1_dot, w2, m, h, c, &mut z2_dot);
+    {
+        let mut tmp = vec![0.0f32; m * c];
+        mm(&fwd.h1, v2, m, h, c, &mut tmp);
+        for i in 0..m {
+            for j in 0..c {
+                z2_dot[i * c + j] += tmp[i * c + j] + vb2[j];
+            }
+        }
+    }
+    // ṗ = p ⊙ (ż2 − rowdot(p, ż2));  (logp)˙ = ż2 − rowdot(p, ż2).
+    let mut p_dot = vec![0.0f32; m * c];
+    let mut logp_dot = vec![0.0f32; m * c];
+    for i in 0..m {
+        let mut rd = 0.0f32;
+        for k in 0..c {
+            rd += fwd.p[i * c + k] * z2_dot[i * c + k];
+        }
+        for k in 0..c {
+            logp_dot[i * c + k] = z2_dot[i * c + k] - rd;
+            p_dot[i * c + k] = fwd.p[i * c + k] * logp_dot[i * c + k];
+        }
+    }
+    // (dz2)˙ = ṗ/m.
+    let mut dz2_dot = vec![0.0f32; m * c];
+    for i in 0..m * c {
+        dz2_dot[i] = p_dot[i] * inv_m;
+    }
+
+    // ġW2 = ḣ1ᵀ·dz2 + h1ᵀ·(dz2)˙;  ġb2 = colsum((dz2)˙).
+    let mut gw_dot = vec![0.0f32; dims.params()];
+    let (gw1_dot, rest) = gw_dot.split_at_mut(d * h);
+    let (gb1_dot, rest) = rest.split_at_mut(h);
+    let (gw2_dot, gb2_dot) = rest.split_at_mut(h * c);
+    mm_at_acc(&h1_dot, &dz2, m, h, c, gw2_dot);
+    mm_at_acc(&fwd.h1, &dz2_dot, m, h, c, gw2_dot);
+    colsum(&dz2_dot, m, c, gb2_dot);
+    // (dh1)˙ = (dz2)˙·W2ᵀ + dz2·V2ᵀ;  (dz1)˙ = (dh1)˙ ⊙ mask.
+    let mut dz1_dot = vec![0.0f32; m * h];
+    mm_bt_acc(&dz2_dot, w2, m, c, h, &mut dz1_dot);
+    mm_bt_acc(&dz2, v2, m, c, h, &mut dz1_dot);
+    for (vv, &mk) in dz1_dot.iter_mut().zip(fwd.mask.iter()) {
+        if !mk {
+            *vv = 0.0;
+        }
+    }
+    // ġW1 = xᵀ·(dz1)˙;  ġb1 = colsum((dz1)˙).
+    mm_at_acc(x, &dz1_dot, m, d, h, gw1_dot);
+    colsum(&dz1_dot, m, h, gb1_dot);
+    // ġx = (dz1)˙·W1ᵀ + dz1·V1ᵀ.
+    let mut gx_dot = vec![0.0f32; m * d];
+    mm_bt_acc(&dz1_dot, w1, m, h, d, &mut gx_dot);
+    mm_bt_acc(&dz1, v1, m, h, d, &mut gx_dot);
+    // ȧ = −(logp)˙/m;  ġdy = y ⊙ (ȧ − rowdot(y, ȧ)).
+    let mut gdy_dot = vec![0.0f32; m * c];
+    for i in 0..m {
+        let mut rd = 0.0f32;
+        for k in 0..c {
+            rd += y[i * c + k] * (-logp_dot[i * c + k] * inv_m);
+        }
+        for k in 0..c {
+            let ad = -logp_dot[i * c + k] * inv_m;
+            gdy_dot[i * c + k] = y[i * c + k] * (ad - rd);
+        }
+    }
+
+    SoftGrads { loss, gw, gx, gdy, gw_dot, gx_dot, gdy_dot }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::vecmath;
+
+    const DIMS: MlpDims = MlpDims { d: 5, h: 7, c: 3 };
+
+    fn rand_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+        let mut v = vec![0.0f32; n];
+        rng.fill_normal(&mut v, scale);
+        v
+    }
+
+    /// Vectors agree in direction (cos > 0.999) and magnitude (±2%).
+    fn assert_grad_close(analytic: &[f32], fd: &[f32], what: &str) {
+        let cos = vecmath::cosine(analytic, fd);
+        assert!(cos > 0.999, "{what}: cos(analytic, fd) = {cos}");
+        let (na, nf) = (vecmath::norm(analytic), vecmath::norm(fd));
+        assert!(
+            (na - nf).abs() <= 0.02 * nf.max(1e-6),
+            "{what}: norm {na} vs fd {nf}"
+        );
+    }
+
+    #[test]
+    fn hard_grad_matches_finite_differences() {
+        let mut rng = Rng::new(31);
+        let w = rand_vec(&mut rng, DIMS.params(), 0.5);
+        let x = rand_vec(&mut rng, 4 * DIMS.d, 1.0);
+        let y = vec![0i32, 2, 1, 0];
+        let (_, g) = loss_grad_hard(&DIMS, &w, &x, &y);
+        let eps = 1e-2f32;
+        let mut fd = vec![0.0f32; w.len()];
+        for j in 0..w.len() {
+            let mut wp = w.clone();
+            wp[j] += eps;
+            let (lp, _) = loss_grad_hard(&DIMS, &wp, &x, &y);
+            wp[j] = w[j] - eps;
+            let (lm, _) = loss_grad_hard(&DIMS, &wp, &x, &y);
+            fd[j] = (lp - lm) / (2.0 * eps);
+        }
+        assert_grad_close(&g, &fd, "hard gw");
+    }
+
+    #[test]
+    fn soft_grads_match_finite_differences() {
+        let mut rng = Rng::new(32);
+        let m = 2usize;
+        let w = rand_vec(&mut rng, DIMS.params(), 0.5);
+        let x = rand_vec(&mut rng, m * DIMS.d, 0.7);
+        let dy = rand_vec(&mut rng, m * DIMS.c, 0.3);
+        let sg = soft_grads(&DIMS, &w, None, &x, &dy, m);
+        let eps = 1e-2f32;
+
+        let loss_at = |w: &[f32], x: &[f32], dy: &[f32]| soft_grads(&DIMS, w, None, x, dy, m).loss;
+        let mut fd_w = vec![0.0f32; w.len()];
+        for j in 0..w.len() {
+            let mut wp = w.clone();
+            wp[j] = w[j] + eps;
+            let lp = loss_at(&wp, &x, &dy);
+            wp[j] = w[j] - eps;
+            let lm = loss_at(&wp, &x, &dy);
+            fd_w[j] = (lp - lm) / (2.0 * eps);
+        }
+        assert_grad_close(&sg.gw, &fd_w, "soft gw");
+
+        let mut fd_x = vec![0.0f32; x.len()];
+        for j in 0..x.len() {
+            let mut xp = x.clone();
+            xp[j] = x[j] + eps;
+            let lp = loss_at(&w, &xp, &dy);
+            xp[j] = x[j] - eps;
+            let lm = loss_at(&w, &xp, &dy);
+            fd_x[j] = (lp - lm) / (2.0 * eps);
+        }
+        assert_grad_close(&sg.gx, &fd_x, "soft gx");
+
+        let mut fd_y = vec![0.0f32; dy.len()];
+        for j in 0..dy.len() {
+            let mut dyp = dy.clone();
+            dyp[j] = dy[j] + eps;
+            let lp = loss_at(&w, &x, &dyp);
+            dyp[j] = dy[j] - eps;
+            let lm = loss_at(&w, &x, &dyp);
+            fd_y[j] = (lp - lm) / (2.0 * eps);
+        }
+        assert_grad_close(&sg.gdy, &fd_y, "soft gdy");
+    }
+
+    #[test]
+    fn tangents_match_directional_differences() {
+        // gw_dot / gx_dot / gdy_dot must equal the directional derivative
+        // of the corresponding gradient along v — the second-order core
+        // the 3SFC and FedSynth encoders stand on.
+        let mut rng = Rng::new(33);
+        let m = 2usize;
+        let w = rand_vec(&mut rng, DIMS.params(), 0.5);
+        let v = rand_vec(&mut rng, DIMS.params(), 0.3);
+        let x = rand_vec(&mut rng, m * DIMS.d, 0.7);
+        let dy = rand_vec(&mut rng, m * DIMS.c, 0.3);
+        let sg = soft_grads(&DIMS, &w, Some(&v), &x, &dy, m);
+
+        let eps = 1e-2f32;
+        let mut wp = w.clone();
+        let mut wm = w.clone();
+        for i in 0..w.len() {
+            wp[i] = w[i] + eps * v[i];
+            wm[i] = w[i] - eps * v[i];
+        }
+        let sp = soft_grads(&DIMS, &wp, None, &x, &dy, m);
+        let sm = soft_grads(&DIMS, &wm, None, &x, &dy, m);
+        let fd = |a: &[f32], b: &[f32]| -> Vec<f32> {
+            a.iter().zip(b.iter()).map(|(p, q)| (p - q) / (2.0 * eps)).collect()
+        };
+        assert_grad_close(&sg.gw_dot, &fd(&sp.gw, &sm.gw), "gw_dot");
+        assert_grad_close(&sg.gx_dot, &fd(&sp.gx, &sm.gx), "gx_dot");
+        assert_grad_close(&sg.gdy_dot, &fd(&sp.gdy, &sm.gdy), "gdy_dot");
+    }
+
+    #[test]
+    fn sgd_step_is_w_minus_lr_grad() {
+        let mut rng = Rng::new(34);
+        let w = rand_vec(&mut rng, DIMS.params(), 0.5);
+        let x = rand_vec(&mut rng, 3 * DIMS.d, 1.0);
+        let y = vec![1i32, 0, 2];
+        let w1 = sgd_steps(&DIMS, &w, &x, &y, 1, 3, 0.1);
+        let (_, g) = loss_grad_hard(&DIMS, &w, &x, &y);
+        for i in 0..w.len() {
+            assert_eq!(w1[i].to_bits(), (w[i] - 0.1 * g[i]).to_bits());
+        }
+    }
+
+    #[test]
+    fn training_separable_batch_reaches_high_accuracy() {
+        // Two well-separated clusters must be learnable in a few steps.
+        let dims = MlpDims { d: 4, h: 8, c: 2 };
+        let mut rng = Rng::new(35);
+        let mut w = rand_vec(&mut rng, dims.params(), 0.3);
+        let b = 8usize;
+        let mut x = vec![0.0f32; b * dims.d];
+        let mut y = vec![0i32; b];
+        for i in 0..b {
+            let cls = i % 2;
+            y[i] = cls as i32;
+            for j in 0..dims.d {
+                x[i * dims.d + j] =
+                    if cls == 0 { 1.0 } else { -1.0 } + 0.1 * rng.normal_f32();
+            }
+        }
+        let (loss0, _) = loss_grad_hard(&dims, &w, &x, &y);
+        for _ in 0..200 {
+            let (_, g) = loss_grad_hard(&dims, &w, &x, &y);
+            for (wv, gv) in w.iter_mut().zip(g.iter()) {
+                *wv -= 0.5 * gv;
+            }
+        }
+        let (loss1, _) = loss_grad_hard(&dims, &w, &x, &y);
+        assert!(loss1 < loss0 * 0.2, "loss {loss0} -> {loss1}");
+        let (_, correct) = eval_batch(&dims, &w, &x, &y);
+        assert_eq!(correct as usize, b);
+    }
+
+    #[test]
+    fn eval_counts_and_sums() {
+        let dims = MlpDims { d: 2, h: 3, c: 2 };
+        let mut rng = Rng::new(36);
+        let w = rand_vec(&mut rng, dims.params(), 0.4);
+        let x = rand_vec(&mut rng, 5 * dims.d, 1.0);
+        let y = vec![0i32, 1, 0, 1, 0];
+        let (loss, correct) = eval_batch(&dims, &w, &x, &y);
+        assert!(loss.is_finite() && loss > 0.0);
+        assert!((0.0..=5.0).contains(&correct));
+        // Σ per-sample loss ≥ B·min per-sample loss: sanity vs mean form.
+        let (mean_loss, _) = loss_grad_hard(&dims, &w, &x, &y);
+        assert!((loss / 5.0 - mean_loss).abs() < 1e-5);
+    }
+}

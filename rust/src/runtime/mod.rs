@@ -1,14 +1,33 @@
-//! PJRT runtime: loads AOT HLO-text artifacts and executes them.
+//! Runtime layer: the pluggable compute backend behind the coordinator.
 //!
-//! The bridge (see /opt/xla-example and DESIGN.md §2): python lowers each
-//! fed-op to HLO **text**; here `HloModuleProto::from_text_file` parses it,
-//! `PjRtClient::cpu().compile` produces an executable, and typed wrappers
-//! in [`fedops`] marshal flat `Vec<f32>`/`Vec<i32>` buffers in and out.
-//! Executables are compiled lazily and cached per op.
+//! [`Backend`] is the typed fed-op surface (forward/backward, SGD steps,
+//! eval, the 3SFC/FedSynth encoder ops). Two implementations:
+//!
+//! * [`PjrtBackend`] (feature `pjrt`, default): loads AOT HLO-text
+//!   artifacts and executes them through the PJRT CPU client — python
+//!   lowers each fed-op once (`make artifacts`), rust compiles lazily and
+//!   caches per op. The original, kernel-faithful path.
+//! * [`NativeBackend`]: the same ops in pure Rust ([`mlp`]) — no
+//!   artifacts, no `xla` crate, runs in any container. The reference
+//!   implementation the integration-test tier runs on, and the
+//!   differential-testing counterpart of the PJRT kernels
+//!   (`tests/backend_parity_test.rs`).
+//!
+//! [`FedOps`] binds a backend to one model; [`open_backend`] resolves the
+//! configured [`crate::config::BackendKind`] (TOML `[runtime] backend`,
+//! `--backend`, `FED3SFC_BACKEND`, default auto).
 
+pub mod backend;
+#[cfg(feature = "pjrt")]
 pub mod client;
 pub mod fedops;
+#[cfg(feature = "pjrt")]
 pub mod literal;
+pub mod mlp;
+pub mod native;
 
-pub use client::{Runtime, RuntimeStats};
+pub use backend::{open_backend, open_backend_kind, Backend, BackendSpec, RuntimeStats};
+#[cfg(feature = "pjrt")]
+pub use client::{PjrtBackend, Runtime};
 pub use fedops::FedOps;
+pub use native::NativeBackend;

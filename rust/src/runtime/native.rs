@@ -1,0 +1,469 @@
+//! The pure-Rust compute backend: every fed-op implemented over
+//! [`crate::runtime::mlp`], no artifacts, no `xla` dependency.
+//!
+//! Covers the MLP model family (`mlp_small`, `mlp10`, `mlp26` — the
+//! paper's MLP pairings); the conv models remain PJRT-only and asking for
+//! them returns a clear error. Initial weights are He-normal like the AOT
+//! export, drawn from this crate's deterministic PRNG (a *different*
+//! stream than numpy's, so absolute trajectories differ from PJRT runs
+//! unless the caller pins `initial_weights`; the parity test does).
+//!
+//! `NativeBackend` is `Send` and construction touches no filesystem, so
+//! worker pools and bare containers can spin one up per thread for free.
+
+use std::cell::RefCell;
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::model::{Manifest, ModelInfo, OpInfo};
+use crate::runtime::backend::{Backend, BackendSpec, RuntimeStats};
+use crate::runtime::mlp::{self, MlpDims};
+use crate::util::rng::Rng;
+use crate::util::vecmath;
+
+/// Marker used for `Manifest.dir` / op files of the built-in model table.
+const BUILTIN: &str = "<native>";
+
+/// (name, d_in, hidden, classes, train_batch, eval_batch) — mirrors the
+/// AOT export's MLP table (`python/compile/aot.py`).
+const MODELS: &[(&str, usize, usize, usize, usize, usize)] = &[
+    ("mlp_small", 64, 32, 8, 16, 50),
+    ("mlp10", 784, 250, 10, 32, 100),
+    ("mlp26", 784, 250, 26, 32, 100),
+];
+
+fn op(name: &str, kind: &str, k: usize, batch: usize, m: usize) -> (String, OpInfo) {
+    (
+        name.to_string(),
+        OpInfo {
+            name: name.to_string(),
+            file: BUILTIN.to_string(),
+            kind: kind.to_string(),
+            k,
+            batch,
+            m,
+        },
+    )
+}
+
+fn builtin_manifest() -> Manifest {
+    let mut models = std::collections::BTreeMap::new();
+    for &(name, d, h, c, bt, be) in MODELS {
+        let dims = MlpDims { d, h, c };
+        let mut ops = std::collections::BTreeMap::new();
+        for k in [1usize, 5, 10] {
+            ops.extend([op(&format!("train_k{k}"), "train", k, bt, 0)]);
+        }
+        ops.extend([op("grad", "grad", 0, bt, 0), op("eval", "eval", 0, be, 0)]);
+        for m in [1usize, 2, 4] {
+            ops.extend([
+                op(&format!("syn_step_m{m}"), "syn_step", 0, 0, m),
+                op(&format!("syn_grad_m{m}"), "syn_grad", 0, 0, m),
+            ]);
+        }
+        let fed_ks: &[usize] = if name == "mlp_small" { &[1, 2, 4, 8, 16] } else { &[4] };
+        for &k in fed_ks {
+            ops.extend([
+                op(&format!("fedsynth_k{k}_m1"), "fedsynth", k, 0, 1),
+                op(&format!("fedsynth_apply_k{k}_m1"), "fedsynth_apply", k, 0, 1),
+            ]);
+        }
+        models.insert(
+            name.to_string(),
+            ModelInfo {
+                name: name.to_string(),
+                params: dims.params(),
+                input_shape: vec![d],
+                n_classes: c,
+                train_batch: bt,
+                eval_batch: be,
+                init_file: BUILTIN.to_string(),
+                ops,
+            },
+        );
+    }
+    Manifest { dir: PathBuf::from(BUILTIN), models }
+}
+
+/// Pure-Rust reference backend (see module docs).
+pub struct NativeBackend {
+    manifest: Manifest,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl NativeBackend {
+    pub fn new() -> NativeBackend {
+        NativeBackend {
+            manifest: builtin_manifest(),
+            stats: RefCell::new(RuntimeStats::default()),
+        }
+    }
+
+    /// The MLP shape behind a manifest entry; errors for non-MLP models
+    /// (conv architectures are PJRT-only).
+    fn dims(&self, model: &ModelInfo) -> Result<MlpDims> {
+        ensure!(
+            model.input_shape.len() == 1,
+            "model '{}' is not supported by the native backend (conv models are PJRT-only)",
+            model.name
+        );
+        let d = model.feature_len();
+        let c = model.n_classes;
+        let denom = d + c + 1;
+        let h = (model.params.saturating_sub(c)) / denom;
+        let dims = MlpDims { d, h, c };
+        ensure!(
+            h >= 1 && dims.params() == model.params,
+            "model '{}' parameter count {} does not match a 2-layer MLP over {d}→{c}",
+            model.name,
+            model.params
+        );
+        Ok(dims)
+    }
+
+    /// Run `f` under the execution counters.
+    fn timed<T>(&self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        let mut st = self.stats.borrow_mut();
+        st.executions += 1;
+        st.execute_ms += t0.elapsed().as_secs_f64() * 1e3;
+        out
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+impl Backend for NativeBackend {
+    fn backend_name(&self) -> &'static str {
+        "native"
+    }
+
+    fn platform(&self) -> String {
+        "native (pure rust)".to_string()
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn stats(&self) -> RuntimeStats {
+        *self.stats.borrow()
+    }
+
+    fn spec(&self) -> BackendSpec {
+        BackendSpec::Native
+    }
+
+    fn load_init(&self, model: &ModelInfo) -> Result<Vec<f32>> {
+        let dims = self.dims(model)?;
+        // He-normal weights, zero biases; one fixed stream per model name
+        // so every backend instance hands out identical weights.
+        let name_tag = model
+            .name
+            .bytes()
+            .fold(0u64, |acc, b| acc.wrapping_mul(131).wrapping_add(b as u64));
+        let mut rng = Rng::new(0xF3D_0E17).split(name_tag);
+        let mut w = vec![0.0f32; dims.params()];
+        {
+            let (w1, rest) = w.split_at_mut(dims.d * dims.h);
+            let (_b1, rest) = rest.split_at_mut(dims.h);
+            let (w2, _b2) = rest.split_at_mut(dims.h * dims.c);
+            rng.fill_normal(w1, (2.0f32 / dims.d as f32).sqrt());
+            rng.fill_normal(w2, (2.0f32 / dims.h as f32).sqrt());
+        }
+        Ok(w)
+    }
+
+    fn local_train(
+        &self,
+        model: &ModelInfo,
+        k: usize,
+        w: &[f32],
+        xs: &[f32],
+        ys: &[i32],
+        lr: f32,
+    ) -> Result<Vec<f32>> {
+        let dims = self.dims(model)?;
+        ensure!(w.len() == model.params, "w len");
+        ensure!(k >= 1 && ys.len() % k == 0, "ys len");
+        let b = ys.len() / k;
+        ensure!(xs.len() == k * b * dims.d, "xs len");
+        Ok(self.timed(|| mlp::sgd_steps(&dims, w, xs, ys, k, b, lr)))
+    }
+
+    fn grad_batch(&self, model: &ModelInfo, w: &[f32], x: &[f32], y: &[i32]) -> Result<Vec<f32>> {
+        let dims = self.dims(model)?;
+        ensure!(x.len() == y.len() * dims.d, "x len");
+        Ok(self.timed(|| mlp::loss_grad_hard(&dims, w, x, y).1))
+    }
+
+    fn syn_step(
+        &self,
+        model: &ModelInfo,
+        m: usize,
+        w: &[f32],
+        g_target: &[f32],
+        dx: &[f32],
+        dy: &[f32],
+        lr_syn: f32,
+        lambda: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, f32)> {
+        let dims = self.dims(model)?;
+        ensure!(dx.len() == m * dims.d && dy.len() == m * dims.c, "syn shapes");
+        ensure!(g_target.len() == model.params, "g_target len");
+        Ok(self.timed(|| {
+            // Value pass: g = ∇_w L(D_syn, w) and the kernels' cosine
+            // (ε = 1e-12 inside the rsqrt, matching python/compile).
+            let sg = mlp::soft_grads(&dims, w, None, dx, dy, m);
+            let g = &sg.gw;
+            let dval = vecmath::dot(g, g_target);
+            let na = vecmath::norm2(g);
+            let nb = vecmath::norm2(g_target);
+            let r = 1.0 / (na * nb + 1e-12).sqrt();
+            let cos = (dval * r) as f32;
+            // u = ∂(−|cos|)/∂g = −sign(cos)·(r·t − d·nb·r³·g).
+            let sign = if cos > 0.0 {
+                1.0f64
+            } else if cos < 0.0 {
+                -1.0
+            } else {
+                0.0
+            };
+            let r3 = r * r * r;
+            let u: Vec<f32> = g
+                .iter()
+                .zip(g_target.iter())
+                .map(|(&gi, &ti)| (-sign * (r * ti as f64 - dval * nb * r3 * gi as f64)) as f32)
+                .collect();
+            // Tangent pass: ∇_{dx,dy} ⟨g, u⟩, plus the λ‖D‖² regularizer.
+            let tg = mlp::soft_grads(&dims, w, Some(&u), dx, dy, m);
+            let dx2: Vec<f32> = dx
+                .iter()
+                .zip(tg.gx_dot.iter())
+                .map(|(&xv, &gv)| xv - lr_syn * (gv + 2.0 * lambda * xv))
+                .collect();
+            let dy2: Vec<f32> = dy
+                .iter()
+                .zip(tg.gdy_dot.iter())
+                .map(|(&yv, &gv)| yv - lr_syn * (gv + 2.0 * lambda * yv))
+                .collect();
+            (dx2, dy2, cos)
+        }))
+    }
+
+    fn has_syn_opt(&self, _model: &ModelInfo, _m: usize, _s: usize) -> bool {
+        // The fused S-step encoder is an artifact-level optimization; the
+        // native path always loops `syn_step` host-side (identical math).
+        false
+    }
+
+    fn syn_opt(
+        &self,
+        _model: &ModelInfo,
+        m: usize,
+        s: usize,
+        _w: &[f32],
+        _g_target: &[f32],
+        _dx: &[f32],
+        _dy: &[f32],
+        _lr_syn: f32,
+        _lambda: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, f32, f32)> {
+        bail!("native backend has no fused syn_opt (m={m}, s={s}); loop syn_step instead")
+    }
+
+    fn syn_grad(
+        &self,
+        model: &ModelInfo,
+        m: usize,
+        w: &[f32],
+        dx: &[f32],
+        dy: &[f32],
+    ) -> Result<Vec<f32>> {
+        let dims = self.dims(model)?;
+        ensure!(dx.len() == m * dims.d && dy.len() == m * dims.c, "syn shapes");
+        Ok(self.timed(|| mlp::soft_grads(&dims, w, None, dx, dy, m).gw))
+    }
+
+    fn eval_batch(&self, model: &ModelInfo, w: &[f32], x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
+        let dims = self.dims(model)?;
+        ensure!(x.len() == y.len() * dims.d, "x len");
+        Ok(self.timed(|| mlp::eval_batch(&dims, w, x, y)))
+    }
+
+    fn fedsynth_step(
+        &self,
+        model: &ModelInfo,
+        k: usize,
+        m: usize,
+        w: &[f32],
+        g_target: &[f32],
+        dxs: &[f32],
+        dys: &[f32],
+        lr_inner: f32,
+        lr_syn: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, f32, Vec<f32>)> {
+        let dims = self.dims(model)?;
+        let (d, c) = (dims.d, dims.c);
+        ensure!(dxs.len() == k * m * d && dys.len() == k * m * c, "fedsynth shapes");
+        ensure!(g_target.len() == model.params, "g_target len");
+        Ok(self.timed(|| {
+            // Forward: replay the K_sim inner steps, keeping each step's
+            // starting weights for the backward sweep.
+            let mut wcs: Vec<Vec<f32>> = Vec::with_capacity(k);
+            let mut wc = w.to_vec();
+            for j in 0..k {
+                wcs.push(wc.clone());
+                let sg = mlp::soft_grads(
+                    &dims,
+                    &wc,
+                    None,
+                    &dxs[j * m * d..(j + 1) * m * d],
+                    &dys[j * m * c..(j + 1) * m * c],
+                    m,
+                );
+                vecmath::axpy(-lr_inner, &sg.gw, &mut wc);
+            }
+            // fit = ‖(w − w_K) − g_target‖²; residual drives the adjoint.
+            let resid: Vec<f32> = w
+                .iter()
+                .zip(wc.iter())
+                .zip(g_target.iter())
+                .map(|((&w0, &wk), &t)| (w0 - wk) - t)
+                .collect();
+            let fit = vecmath::norm2(&resid) as f32;
+            // λ_K = ∂fit/∂w_K = −2·resid; walk the unroll backwards. Per
+            // step: the synthetic-batch gradients are the cross second
+            // derivatives ∇_{dx,dy}⟨∇_w L, λ⟩ scaled by −lr, and the
+            // adjoint update needs the HVP ∇_w⟨∇_w L, λ⟩ — all three are
+            // the tangents of one dual pass at (w_j, λ_{j+1}).
+            let mut lam: Vec<f32> = resid.iter().map(|&v| -2.0 * v).collect();
+            let mut gdxs = vec![0.0f32; k * m * d];
+            let mut gdys = vec![0.0f32; k * m * c];
+            let mut norms = vec![0.0f32; k];
+            for j in (0..k).rev() {
+                let sg = mlp::soft_grads(
+                    &dims,
+                    &wcs[j],
+                    Some(&lam),
+                    &dxs[j * m * d..(j + 1) * m * d],
+                    &dys[j * m * c..(j + 1) * m * c],
+                    m,
+                );
+                let gdx = &mut gdxs[j * m * d..(j + 1) * m * d];
+                for (o, &t) in gdx.iter_mut().zip(sg.gx_dot.iter()) {
+                    *o = -lr_inner * t;
+                }
+                norms[j] = vecmath::norm(gdx) as f32;
+                for (o, &t) in gdys[j * m * c..(j + 1) * m * c]
+                    .iter_mut()
+                    .zip(sg.gdy_dot.iter())
+                {
+                    *o = -lr_inner * t;
+                }
+                vecmath::axpy(-lr_inner, &sg.gw_dot, &mut lam);
+            }
+            let dxs2: Vec<f32> = dxs
+                .iter()
+                .zip(gdxs.iter())
+                .map(|(&x, &g)| x - lr_syn * g)
+                .collect();
+            let dys2: Vec<f32> = dys
+                .iter()
+                .zip(gdys.iter())
+                .map(|(&y, &g)| y - lr_syn * g)
+                .collect();
+            (dxs2, dys2, fit, norms)
+        }))
+    }
+
+    fn fedsynth_apply(
+        &self,
+        model: &ModelInfo,
+        k: usize,
+        m: usize,
+        w: &[f32],
+        dxs: &[f32],
+        dys: &[f32],
+        lr_inner: f32,
+    ) -> Result<Vec<f32>> {
+        let dims = self.dims(model)?;
+        let (d, c) = (dims.d, dims.c);
+        ensure!(dxs.len() == k * m * d && dys.len() == k * m * c, "fedsynth shapes");
+        Ok(self.timed(|| {
+            let mut wc = w.to_vec();
+            for j in 0..k {
+                let sg = mlp::soft_grads(
+                    &dims,
+                    &wc,
+                    None,
+                    &dxs[j * m * d..(j + 1) * m * d],
+                    &dys[j * m * c..(j + 1) * m * c],
+                    m,
+                );
+                vecmath::axpy(-lr_inner, &sg.gw, &mut wc);
+            }
+            vecmath::sub(w, &wc)
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_has_the_mlp_family() {
+        let be = NativeBackend::new();
+        for (name, params) in [("mlp_small", 2344usize), ("mlp10", 198_760), ("mlp26", 202_776)] {
+            let m = be.manifest().model(name).unwrap();
+            assert_eq!(m.params, params, "{name}");
+            assert!(m.ops.contains_key("eval"));
+            assert!(m.ops.contains_key("syn_step_m1"));
+            assert!(m.ops.contains_key("train_k5"));
+        }
+        assert!(be.manifest().model("convnet").is_err());
+    }
+
+    #[test]
+    fn init_is_deterministic_and_he_scaled() {
+        let a = NativeBackend::new();
+        let b = NativeBackend::new();
+        let model = a.manifest().model("mlp_small").unwrap().clone();
+        let wa = a.load_init(&model).unwrap();
+        let wb = b.load_init(&model).unwrap();
+        assert_eq!(wa.len(), model.params);
+        assert_eq!(wa, wb);
+        // Biases are zero.
+        let dims = a.dims(&model).unwrap();
+        let b1 = &wa[dims.d * dims.h..dims.d * dims.h + dims.h];
+        assert!(b1.iter().all(|&v| v == 0.0));
+        // W1 std ≈ sqrt(2/d).
+        let w1 = &wa[..dims.d * dims.h];
+        let var = w1.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / w1.len() as f64;
+        let want = 2.0 / dims.d as f64;
+        assert!((var - want).abs() < 0.3 * want, "var {var} want {want}");
+    }
+
+    #[test]
+    fn stats_count_executions() {
+        let be = NativeBackend::new();
+        let model = be.manifest().model("mlp_small").unwrap().clone();
+        let w = be.load_init(&model).unwrap();
+        let x = vec![0.1f32; 4 * 64];
+        let y = vec![0i32, 1, 2, 3];
+        be.eval_batch(&model, &w, &x, &y).unwrap();
+        be.grad_batch(&model, &w, &x, &y).unwrap();
+        let st = be.stats();
+        assert_eq!(st.compiles, 0);
+        assert_eq!(st.executions, 2);
+    }
+}

@@ -106,6 +106,44 @@ mod tests {
     }
 
     #[test]
+    fn heterogeneous_payloads_cost_exactly_the_max() {
+        // Order-independent, and equal to pricing the slowest client
+        // alone — the synchronous-round contract partial participation
+        // and mixed compressors rely on.
+        let net = NetworkModel::edge();
+        let payloads = [120u64, 999_999, 4, 500_000, 31];
+        let t = net.round_time_slowest(&payloads, 8_000);
+        let mut rev = payloads;
+        rev.reverse();
+        assert_eq!(t.to_bits(), net.round_time_slowest(&rev, 8_000).to_bits());
+        assert!((t - net.round_time_s(999_999.0, 8_000.0)).abs() < 1e-12);
+        // Growing any payload beyond the max strictly slows the round;
+        // growing a non-max payload below it does nothing.
+        let mut bigger = payloads;
+        bigger[0] = 2_000_000;
+        assert!(net.round_time_slowest(&bigger, 8_000) > t);
+        let mut still_dominated = payloads;
+        still_dominated[2] = 900_000;
+        assert_eq!(
+            t.to_bits(),
+            net.round_time_slowest(&still_dominated, 8_000).to_bits()
+        );
+    }
+
+    #[test]
+    fn zero_selected_round_costs_broadcast_plus_latency_only() {
+        // A round where every client was skipped still broadcasts and
+        // pays the RTT — never NaN, never negative.
+        let net = NetworkModel::edge();
+        let t = net.round_time_slowest(&[], 4_000);
+        assert!(t.is_finite() && t > 0.0);
+        assert!((t - (8.0 * 4_000.0 / net.down_bps + 2.0 * net.latency_s)).abs() < 1e-12);
+        // And with a zero broadcast too: pure latency.
+        let t0 = net.round_time_slowest(&[], 0);
+        assert!((t0 - 2.0 * net.latency_s).abs() < 1e-15);
+    }
+
+    #[test]
     fn custom_rates_convert_units() {
         let net = NetworkModel::custom(10.0, 50.0, 30.0);
         let edge = NetworkModel::edge();

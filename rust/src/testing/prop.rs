@@ -27,6 +27,30 @@ impl Case {
     pub fn len(&mut self, max: usize) -> usize {
         1 + self.rng.below(max.max(1))
     }
+
+    /// Random f32 vector whose |values| are pairwise distinct — for
+    /// properties (top-k / STC selection stability) where magnitude ties
+    /// would make the selected *set* legitimately ambiguous.
+    pub fn vec_f32_distinct(&mut self, len: usize, scale: f32) -> Vec<f32> {
+        let mut v: Vec<f32> = (0..len)
+            .map(|i| {
+                let sign = if self.rng.f64() < 0.5 { -1.0 } else { 1.0 };
+                // Strictly increasing magnitude floor + random jitter that
+                // cannot bridge adjacent floors, then shuffled into random
+                // positions.
+                sign * scale * (1.0 + i as f32 + 0.4 * self.rng.f32())
+            })
+            .collect();
+        self.rng.shuffle(&mut v);
+        v
+    }
+
+    /// Uniformly random permutation of 0..n.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut p: Vec<usize> = (0..n).collect();
+        self.rng.shuffle(&mut p);
+        p
+    }
 }
 
 /// Run `cases` instances of `prop`. Panics with the failing seed/size.

@@ -1,16 +1,27 @@
-//! Shared helpers for integration tests.
+//! Shared helpers for integration tests — the two test tiers.
 //!
-//! The PJRT CPU client spins up thread pools; tests serialize runtime
-//! creation behind a global lock so parallel test threads don't stack
-//! clients (the `xla` client is !Send, so each test builds its own).
+//! * **native-always**: every test that exercises coordinator/compressor
+//!   semantics builds a [`NativeBackend`] (pure Rust, no artifacts) and
+//!   runs unconditionally, in any container.
+//! * **pjrt-when-artifacts**: tests that exercise the artifact path call
+//!   [`pjrt()`]; it returns `None` — with a skip message, never a panic —
+//!   when the artifact bundle is absent, when `FED3SFC_BACKEND=native`
+//!   pins the run to the native tier, or when the build has no `pjrt`
+//!   feature. See EXPERIMENTS.md §Testing.
+//!
+//! The PJRT CPU client spins up thread pools; pjrt-tier tests serialize
+//! runtime creation behind [`lock()`] so parallel test threads don't
+//! stack clients.
+
+#![allow(dead_code)] // each integration-test binary uses a subset
 
 use std::sync::{Mutex, MutexGuard, OnceLock};
 
-use fed3sfc::runtime::Runtime;
+use fed3sfc::runtime::{Backend, NativeBackend};
 
 static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
 
-/// Grab the runtime serialization lock (held for the whole test).
+/// Grab the pjrt-runtime serialization lock (held for the whole test).
 pub fn lock() -> MutexGuard<'static, ()> {
     match LOCK.get_or_init(|| Mutex::new(())).lock() {
         Ok(g) => g,
@@ -18,6 +29,50 @@ pub fn lock() -> MutexGuard<'static, ()> {
     }
 }
 
-pub fn runtime() -> Runtime {
-    Runtime::open(&fed3sfc::artifacts_dir()).expect("run `make artifacts` first")
+/// The always-available pure-Rust backend.
+pub fn native() -> NativeBackend {
+    NativeBackend::new()
+}
+
+/// The PJRT backend, if this environment can provide one. `None` means
+/// "skip the pjrt tier" — callers return early without failing.
+#[cfg(feature = "pjrt")]
+pub fn pjrt() -> Option<Box<dyn Backend>> {
+    // Respect the env pin through the same parser every entry point
+    // uses (so aliases like "rust" and stray whitespace behave alike).
+    if let Ok(v) = std::env::var("FED3SFC_BACKEND") {
+        match fed3sfc::config::BackendKind::parse(v.trim()) {
+            Ok(fed3sfc::config::BackendKind::Native) => {
+                eprintln!("skipping pjrt tier: FED3SFC_BACKEND pins the native backend");
+                return None;
+            }
+            Ok(_) => {}
+            Err(_) => {
+                eprintln!("skipping pjrt tier: unparseable FED3SFC_BACKEND {v:?}");
+                return None;
+            }
+        }
+    }
+    let dir = fed3sfc::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!(
+            "skipping pjrt tier: no artifacts at {} (run `make artifacts` to enable)",
+            dir.display()
+        );
+        return None;
+    }
+    match fed3sfc::runtime::PjrtBackend::open(&dir) {
+        Ok(rt) => Some(Box::new(rt)),
+        Err(e) => {
+            eprintln!("skipping pjrt tier: artifacts present but unusable: {e:#}");
+            None
+        }
+    }
+}
+
+/// Without the `pjrt` feature there is no pjrt tier to run.
+#[cfg(not(feature = "pjrt"))]
+pub fn pjrt() -> Option<Box<dyn Backend>> {
+    eprintln!("skipping pjrt tier: built without the `pjrt` feature");
+    None
 }

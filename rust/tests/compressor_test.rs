@@ -1,12 +1,15 @@
 //! Compressor zoo integration: encode/decode agreement, byte budgets,
 //! error-feedback telescoping, and the paper's budget-matching protocol.
+//!
+//! Entirely backend-generic math, so the whole file runs on the native
+//! backend — no artifacts required.
 
 mod common;
 
 use fed3sfc::compress::{
     Compressor, DecodeCtx, EncodeCtx, FedSynth, Identity, Payload, SignSgd, Stc, ThreeSfc, TopK,
 };
-use fed3sfc::runtime::FedOps;
+use fed3sfc::runtime::{Backend, FedOps};
 use fed3sfc::util::rng::Rng;
 use fed3sfc::util::vecmath;
 
@@ -26,10 +29,9 @@ fn target_vec(n: usize, seed: u64) -> Vec<f32> {
 /// encode() must return exactly what decode() reconstructs — the
 /// client-side EF update and the server-side aggregation must agree.
 fn assert_encode_decode_agree(comp: &dyn Compressor) {
-    let _g = common::lock();
-    let rt = common::runtime();
-    let ops = FedOps::new(&rt, "mlp_small").unwrap();
-    let w = rt.manifest.load_init(ops.model).unwrap();
+    let be = common::native();
+    let ops = FedOps::new(&be, "mlp_small").unwrap();
+    let w = be.load_init(ops.model).unwrap();
     let target = target_vec(ops.model.params, 5);
     let mut rng = Rng::new(11);
     let mut ctx = EncodeCtx { ops: &ops, w_global: &w, rng: &mut rng };
@@ -40,6 +42,8 @@ fn assert_encode_decode_agree(comp: &dyn Compressor) {
     for (a, b) in recon.iter().zip(decoded.iter()) {
         assert!((a - b).abs() <= 1e-6 * (1.0 + a.abs()), "{a} vs {b}");
     }
+    // The wire accounting is backed by a real serializer.
+    assert_eq!(payload.serialize().len(), payload.wire_bytes());
 }
 
 #[test]
@@ -74,9 +78,8 @@ fn fedsynth_roundtrip() {
 
 #[test]
 fn byte_budgets_match_paper_protocol() {
-    let _g = common::lock();
-    let rt = common::runtime();
-    let model = rt.model("mlp10").unwrap();
+    let be = common::native();
+    let model = be.manifest().model("mlp10").unwrap();
     let n = model.params;
 
     // 3SFC m=1 on the paper MLP: (784+10+1+... )·4 bytes ≈ 250× ratio.
@@ -112,10 +115,9 @@ fn byte_budgets_match_paper_protocol() {
 
 #[test]
 fn topk_respects_budget_and_picks_largest() {
-    let _g = common::lock();
-    let rt = common::runtime();
-    let ops = FedOps::new(&rt, "mlp_small").unwrap();
-    let w = rt.manifest.load_init(ops.model).unwrap();
+    let be = common::native();
+    let ops = FedOps::new(&be, "mlp_small").unwrap();
+    let w = be.load_init(ops.model).unwrap();
     let target = target_vec(ops.model.params, 6);
     let mut rng = Rng::new(12);
     let comp = TopK::new(10);
@@ -145,10 +147,9 @@ fn error_feedback_telescopes() {
     // Σ_t recon_t + e_T = Σ_t target-contributions + e_0: nothing is lost,
     // only delayed — the EF invariant that makes compression unbiased in
     // the limit.
-    let _g = common::lock();
-    let rt = common::runtime();
-    let ops = FedOps::new(&rt, "mlp_small").unwrap();
-    let w = rt.manifest.load_init(ops.model).unwrap();
+    let be = common::native();
+    let ops = FedOps::new(&be, "mlp_small").unwrap();
+    let w = be.load_init(ops.model).unwrap();
     let n = ops.model.params;
     let comp = TopK::new(20);
     let mut rng = Rng::new(13);
@@ -196,10 +197,9 @@ fn threesfc_scale_is_l2_optimal() {
 
 #[test]
 fn threesfc_reconstruction_correlates_with_target() {
-    let _g = common::lock();
-    let rt = common::runtime();
-    let ops = FedOps::new(&rt, "mlp_small").unwrap();
-    let w = rt.manifest.load_init(ops.model).unwrap();
+    let be = common::native();
+    let ops = FedOps::new(&be, "mlp_small").unwrap();
+    let w = be.load_init(ops.model).unwrap();
     // realistic target: an actual local-training delta
     let mut rng = Rng::new(21);
     let mut x = vec![0.0f32; 5 * ops.model.train_batch * ops.model.feature_len()];

@@ -2,7 +2,8 @@
 //! every paper table's settings are expressible, errors are caught early.
 
 use fed3sfc::config::{
-    CompressorKind, DatasetKind, ExperimentConfig, NetworkKind, ScheduleKind, ServerOptKind,
+    BackendKind, CompressorKind, DatasetKind, ExperimentConfig, NetworkKind, ScheduleKind,
+    ServerOptKind,
 };
 
 #[test]
@@ -197,6 +198,31 @@ fn round_engine_cli_flags_parse() {
     assert_eq!(args.get_f64("up-mbps", 10.0).unwrap(), 2.5);
     assert_eq!(args.get_f64("latency-ms", 30.0).unwrap(), 80.0);
     assert_eq!(args.get_usize("threads", 0).unwrap(), 4);
+}
+
+#[test]
+fn backend_preset_and_cli_flag_parse() {
+    // TOML: [runtime] table and bare key.
+    let cfg = ExperimentConfig::from_toml_str(
+        "dataset = \"synth_mnist\"\ncompressor = \"3sfc\"\nrounds = 5\n\n[runtime]\nbackend = \"native\"\n",
+    )
+    .unwrap();
+    assert_eq!(cfg.backend, BackendKind::Native);
+    let cfg = ExperimentConfig::from_toml_str("backend = \"pjrt\"").unwrap();
+    assert_eq!(cfg.backend, BackendKind::Pjrt);
+    assert!(ExperimentConfig::from_toml_str("backend = \"gpu\"").is_err());
+
+    // CLI flag value parses through the same enum.
+    use fed3sfc::cli::Args;
+    let argv: Vec<String> = ["run", "--backend", "native"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let args = Args::parse(argv, &[]).unwrap();
+    assert_eq!(
+        BackendKind::parse(args.get("backend").unwrap()).unwrap(),
+        BackendKind::Native
+    );
 }
 
 #[test]

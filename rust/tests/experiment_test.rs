@@ -1,10 +1,15 @@
 //! End-to-end coordinator integration on the small model: every method
 //! trains, determinism holds, EF matters, traffic accounting is exact.
+//!
+//! The full suite runs unconditionally on the native backend; a pjrt
+//! variant of the core assertions re-runs on the artifact path when an
+//! artifact bundle is available (see tests/common/mod.rs).
 
 mod common;
 
 use fed3sfc::config::{CompressorKind, DatasetKind, ExperimentConfig};
 use fed3sfc::coordinator::experiment::Experiment;
+use fed3sfc::runtime::Backend;
 
 fn small_cfg(method: CompressorKind) -> ExperimentConfig {
     ExperimentConfig {
@@ -23,15 +28,17 @@ fn small_cfg(method: CompressorKind) -> ExperimentConfig {
     }
 }
 
-fn run(cfg: ExperimentConfig) -> Vec<fed3sfc::RoundRecord> {
-    let rt = common::runtime();
-    let mut exp = Experiment::new(cfg, &rt).unwrap();
+fn run_on(cfg: ExperimentConfig, backend: &dyn Backend) -> Vec<fed3sfc::RoundRecord> {
+    let mut exp = Experiment::new(cfg, backend).unwrap();
     exp.run().unwrap()
 }
 
-#[test]
-fn every_method_improves_over_init() {
-    let _g = common::lock();
+fn run(cfg: ExperimentConfig) -> Vec<fed3sfc::RoundRecord> {
+    let be = common::native();
+    run_on(cfg, &be)
+}
+
+fn check_every_method_improves(backend: &dyn Backend) {
     for method in [
         CompressorKind::FedAvg,
         CompressorKind::Dgc,
@@ -39,7 +46,7 @@ fn every_method_improves_over_init() {
         CompressorKind::Stc,
         CompressorKind::ThreeSfc,
     ] {
-        let recs = run(small_cfg(method));
+        let recs = run_on(small_cfg(method), backend);
         let last = recs.last().unwrap();
         assert!(
             last.test_acc > 0.25,
@@ -52,10 +59,21 @@ fn every_method_improves_over_init() {
 }
 
 #[test]
-fn deterministic_replay() {
+fn every_method_improves_over_init() {
+    let be = common::native();
+    check_every_method_improves(&be);
+}
+
+#[test]
+fn pjrt_every_method_improves_over_init() {
     let _g = common::lock();
-    let a = run(small_cfg(CompressorKind::ThreeSfc));
-    let b = run(small_cfg(CompressorKind::ThreeSfc));
+    let Some(be) = common::pjrt() else { return };
+    check_every_method_improves(be.as_ref());
+}
+
+fn check_deterministic_replay(backend: &dyn Backend) {
+    let a = run_on(small_cfg(CompressorKind::ThreeSfc), backend);
+    let b = run_on(small_cfg(CompressorKind::ThreeSfc), backend);
     assert_eq!(a.len(), b.len());
     for (x, y) in a.iter().zip(b.iter()) {
         assert_eq!(x.test_acc.to_bits(), y.test_acc.to_bits());
@@ -66,10 +84,22 @@ fn deterministic_replay() {
 }
 
 #[test]
+fn deterministic_replay() {
+    let be = common::native();
+    check_deterministic_replay(&be);
+}
+
+#[test]
+fn pjrt_deterministic_replay() {
+    let _g = common::lock();
+    let Some(be) = common::pjrt() else { return };
+    check_deterministic_replay(be.as_ref());
+}
+
+#[test]
 fn non_eval_rounds_carry_real_initial_evaluation() {
     // eval_every = 12 means rounds 1..11 are non-eval; they must carry a
     // real round-0 evaluation of the initial weights, never NaN.
-    let _g = common::lock();
     let recs = run(small_cfg(CompressorKind::ThreeSfc));
     for r in &recs {
         assert!(r.test_acc.is_finite(), "round {}: acc NaN", r.round);
@@ -85,7 +115,6 @@ fn non_eval_rounds_carry_real_initial_evaluation() {
 
 #[test]
 fn seeds_change_trajectories() {
-    let _g = common::lock();
     let a = run(small_cfg(CompressorKind::ThreeSfc));
     let mut cfg = small_cfg(CompressorKind::ThreeSfc);
     cfg.seed = 43;
@@ -99,7 +128,6 @@ fn seeds_change_trajectories() {
 #[test]
 fn error_feedback_ablation_changes_dynamics() {
     // Table 4: EF off must change (and generally hurt) the trajectory.
-    let _g = common::lock();
     let with_ef = run(small_cfg(CompressorKind::ThreeSfc));
     let mut cfg = small_cfg(CompressorKind::ThreeSfc);
     cfg.error_feedback = false;
@@ -112,12 +140,11 @@ fn error_feedback_ablation_changes_dynamics() {
 
 #[test]
 fn traffic_accounting_is_exact() {
-    let _g = common::lock();
-    let rt = common::runtime();
+    let be = common::native();
     let cfg = small_cfg(CompressorKind::ThreeSfc);
     let rounds = cfg.rounds as u64;
     let clients = cfg.n_clients as u64;
-    let mut exp = Experiment::new(cfg, &rt).unwrap();
+    let mut exp = Experiment::new(cfg, &be).unwrap();
     exp.run().unwrap();
     let model = exp.ops.model;
     // 3SFC payload is fixed-size: m(d+C)+1 floats per client per round.
@@ -144,7 +171,6 @@ fn traffic_accounting_is_exact() {
 fn compression_ratios_ordered_as_paper() {
     // 3SFC (m=1) must communicate less per round than signSGD, which
     // communicates less than FedAvg. (Table 2's ratio columns.)
-    let _g = common::lock();
     let bytes_of = |method| {
         let recs = run(small_cfg(method));
         recs.last().unwrap().up_bytes_round
@@ -163,7 +189,6 @@ fn extreme_alpha_tiny_shards_train_without_panicking() {
     // the round in empty-pool sampling (or tripped the aggregation
     // assert). The partition now guarantees >= 1 sample per client at
     // this density, and the round loop skips zero-weight clients anyway.
-    let _g = common::lock();
     let mut cfg = small_cfg(CompressorKind::Dgc);
     cfg.alpha = 0.01;
     cfg.n_clients = 32;
@@ -181,7 +206,6 @@ fn extreme_alpha_tiny_shards_train_without_panicking() {
 
 #[test]
 fn efficiency_metric_in_range() {
-    let _g = common::lock();
     let recs = run(small_cfg(CompressorKind::Dgc));
     for r in &recs {
         assert!((-1.0..=1.0).contains(&r.efficiency), "{}", r.efficiency);
@@ -191,7 +215,6 @@ fn efficiency_metric_in_range() {
 
 #[test]
 fn metrics_jsonl_roundtrip() {
-    let _g = common::lock();
     let dir = std::env::temp_dir().join("fed3sfc_test_metrics.jsonl");
     let mut cfg = small_cfg(CompressorKind::Dgc);
     cfg.rounds = 3;
@@ -207,4 +230,17 @@ fn metrics_jsonl_roundtrip() {
         assert!(v.get("up_bytes_cum").is_some());
     }
     std::fs::remove_file(dir).ok();
+}
+
+#[test]
+fn fedsynth_trains_end_to_end_on_native() {
+    // The multi-step baseline exercises the second-order unroll backward
+    // (HVP + cross terms); 4 rounds must run and stay finite.
+    let mut cfg = small_cfg(CompressorKind::FedSynth);
+    cfg.rounds = 4;
+    cfg.eval_every = 4;
+    cfg.fedsynth_steps = 5;
+    let recs = run(cfg);
+    assert_eq!(recs.len(), 4);
+    assert!(recs.last().unwrap().test_loss.is_finite());
 }

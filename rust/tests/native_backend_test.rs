@@ -1,9 +1,6 @@
-//! PJRT runtime integration: HLO artifacts load, compile and compute the
-//! same math the python oracle verified at build time.
-//!
-//! This whole file is the pjrt-when-artifacts tier: every test skips with
-//! a message when no artifact bundle is present (see tests/common/mod.rs);
-//! the same math runs artifact-free in tests/native_backend_test.rs.
+//! Native-backend math integration — the artifact-free mirror of
+//! tests/runtime_test.rs: the pure-Rust fed-ops satisfy the same
+//! semantic contracts the python oracle verified for the PJRT artifacts.
 
 mod common;
 
@@ -19,37 +16,29 @@ fn test_batch(d: usize, b: usize, classes: usize) -> (Vec<f32>, Vec<i32>) {
 }
 
 #[test]
-fn manifest_lists_expected_models() {
-    let _g = common::lock();
-    let Some(rt) = common::pjrt() else { return };
-    for m in [
-        "mlp_small",
-        "mlp10",
-        "mlp26",
-        "mnistnet",
-        "convnet",
-        "resnet8_c10",
-        "resnet8_c20",
-        "regnet_c10",
-        "regnet_c20",
-    ] {
-        let info = rt.manifest().model(m).unwrap();
+fn manifest_lists_the_mlp_family() {
+    let be = common::native();
+    for m in ["mlp_small", "mlp10", "mlp26"] {
+        let info = be.manifest().model(m).unwrap();
         assert!(info.params > 0);
         assert!(info.ops.contains_key("eval"), "{m} missing eval");
         assert!(info.ops.contains_key("syn_step_m1"));
     }
-    // Paper's MLP scale (Fig 1 caption: 199,210 params; same architecture).
-    assert_eq!(rt.manifest().model("mlp10").unwrap().params, 198_760);
+    // Same parameter counts as the AOT manifest exports.
+    assert_eq!(be.manifest().model("mlp10").unwrap().params, 198_760);
+    assert_eq!(be.manifest().model("mlp_small").unwrap().params, 2344);
+    // Conv models are PJRT-only and must fail with a clear error, not
+    // garbage numerics.
+    assert!(be.manifest().model("convnet").is_err());
 }
 
 #[test]
 fn local_train_k1_matches_grad_batch() {
     // train_k1 must be exactly w - lr * grad(batch).
-    let _g = common::lock();
-    let Some(rt) = common::pjrt() else { return };
-    let ops = FedOps::new(rt.as_ref(), "mlp_small").unwrap();
+    let be = common::native();
+    let ops = FedOps::new(&be, "mlp_small").unwrap();
     let model = ops.model;
-    let w = rt.load_init(model).unwrap();
+    let w = be.load_init(model).unwrap();
     let (x, y) = test_batch(model.feature_len(), model.train_batch, model.n_classes);
     let lr = 0.05f32;
 
@@ -58,21 +47,19 @@ fn local_train_k1_matches_grad_batch() {
     let mut want = w.clone();
     vecmath::axpy(-lr, &g, &mut want);
     for (a, b) in w1.iter().zip(want.iter()) {
-        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        assert!((a - b).abs() < 1e-6, "{a} vs {b}");
     }
 }
 
 #[test]
 fn local_training_reduces_loss() {
-    let _g = common::lock();
-    let Some(rt) = common::pjrt() else { return };
-    let ops = FedOps::new(rt.as_ref(), "mlp_small").unwrap();
+    let be = common::native();
+    let ops = FedOps::new(&be, "mlp_small").unwrap();
     let model = ops.model;
-    let mut w = rt.load_init(model).unwrap();
+    let mut w = be.load_init(model).unwrap();
     let (x, y) = test_batch(model.feature_len(), model.eval_batch, model.n_classes);
     let (loss0, _) = ops.eval_batch(&w, &x, &y).unwrap();
 
-    // 10 rounds of K=5 training on (a subset of) the same data.
     let (xt, yt) = test_batch(model.feature_len(), model.train_batch, model.n_classes);
     let xs: Vec<f32> = xt.iter().cloned().cycle().take(5 * xt.len()).collect();
     let ys: Vec<i32> = yt.iter().cloned().cycle().take(5 * yt.len()).collect();
@@ -80,9 +67,7 @@ fn local_training_reduces_loss() {
         w = ops.local_train(5, &w, &xs, &ys, 0.05).unwrap();
     }
     let (loss1, _) = ops.eval_batch(&w, &x, &y).unwrap();
-    // Train and eval batches share the synthetic distribution shape only
-    // loosely here; the training batch loss is the real check:
-    let w0 = rt.load_init(model).unwrap();
+    let w0 = be.load_init(model).unwrap();
     let g0 = ops.grad_batch(&w0, &xt, &yt).unwrap();
     let g1 = ops.grad_batch(&w, &xt, &yt).unwrap();
     assert!(
@@ -94,11 +79,10 @@ fn local_training_reduces_loss() {
 
 #[test]
 fn syn_step_improves_cosine_and_syn_grad_agrees() {
-    let _g = common::lock();
-    let Some(rt) = common::pjrt() else { return };
-    let ops = FedOps::new(rt.as_ref(), "mlp_small").unwrap();
+    let be = common::native();
+    let ops = FedOps::new(&be, "mlp_small").unwrap();
     let model = ops.model;
-    let w = rt.load_init(model).unwrap();
+    let w = be.load_init(model).unwrap();
 
     // Build a realistic target: one local training delta.
     let (xt, yt) = test_batch(model.feature_len(), model.train_batch, model.n_classes);
@@ -134,12 +118,41 @@ fn syn_step_improves_cosine_and_syn_grad_agrees() {
 }
 
 #[test]
-fn eval_dataset_loops_batches_consistently() {
-    let _g = common::lock();
-    let Some(rt) = common::pjrt() else { return };
-    let ops = FedOps::new(rt.as_ref(), "mlp_small").unwrap();
+fn syn_step_gradient_descends_the_objective() {
+    // A small-enough step on the Eq. 9 objective must not increase
+    // 1 − |cos| (λ = 0): the native encoder gradient points downhill.
+    let be = common::native();
+    let ops = FedOps::new(&be, "mlp_small").unwrap();
     let model = ops.model;
-    let w = rt.load_init(model).unwrap();
+    let w = be.load_init(model).unwrap();
+    let (xt, yt) = test_batch(model.feature_len(), model.train_batch, model.n_classes);
+    let w_local = ops.local_train(1, &w, &xt, &yt, 0.05).unwrap();
+    let target = vecmath::sub(&w, &w_local);
+
+    let mut rng = fed3sfc::util::rng::Rng::new(77);
+    let mut dx = vec![0.0f32; model.feature_len()];
+    rng.fill_normal(&mut dx, 0.5);
+    let dy = vec![0.0f32; model.n_classes];
+
+    let cos_at = |dx: &[f32], dy: &[f32]| -> f64 {
+        let g = ops.syn_grad(1, &w, dx, dy).unwrap();
+        vecmath::cosine(&g, &target).abs()
+    };
+    let before = cos_at(&dx, &dy);
+    let (ndx, ndy, _) = ops.syn_step(1, &w, &target, &dx, &dy, 0.05, 0.0).unwrap();
+    let after = cos_at(&ndx, &ndy);
+    assert!(
+        after >= before - 1e-4,
+        "tiny syn_step increased the objective: |cos| {before} -> {after}"
+    );
+}
+
+#[test]
+fn eval_dataset_loops_batches_consistently() {
+    let be = common::native();
+    let ops = FedOps::new(&be, "mlp_small").unwrap();
+    let model = ops.model;
+    let w = be.load_init(model).unwrap();
     let b = model.eval_batch;
     let (x, y) = test_batch(model.feature_len(), 2 * b, model.n_classes);
     let (loss_all, acc_all) = ops.eval_dataset(&w, &x, &y).unwrap();
@@ -158,11 +171,12 @@ fn eval_dataset_loops_batches_consistently() {
 
 #[test]
 fn fedsynth_apply_matches_step_fit() {
-    let _g = common::lock();
-    let Some(rt) = common::pjrt() else { return };
-    let ops = FedOps::new(rt.as_ref(), "mlp_small").unwrap();
+    // The forward replay inside fedsynth_step and the standalone decoder
+    // must agree on the simulated delta: fit == ‖apply(D) − target‖².
+    let be = common::native();
+    let ops = FedOps::new(&be, "mlp_small").unwrap();
     let model = ops.model;
-    let w = rt.load_init(model).unwrap();
+    let w = be.load_init(model).unwrap();
     let (xt, yt) = test_batch(model.feature_len(), model.train_batch, model.n_classes);
     let xs: Vec<f32> = xt.iter().cloned().cycle().take(5 * xt.len()).collect();
     let ys: Vec<i32> = yt.iter().cloned().cycle().take(5 * yt.len()).collect();
@@ -179,6 +193,7 @@ fn fedsynth_apply_matches_step_fit() {
         .fedsynth_step(k, 1, &w, &target, &dxs, &dys, 0.05, 0.0)
         .unwrap();
     assert_eq!(norms.len(), k);
+    assert!(norms.iter().all(|n| n.is_finite()));
     let delta = ops.fedsynth_apply(k, 1, &w, &dxs, &dys, 0.05).unwrap();
     let err = vecmath::sub(&delta, &target);
     let want_fit = vecmath::norm2(&err) as f32;
@@ -186,4 +201,62 @@ fn fedsynth_apply_matches_step_fit() {
         (fit - want_fit).abs() < 1e-3 * (1.0 + want_fit.abs()),
         "{fit} vs {want_fit}"
     );
+}
+
+#[test]
+fn fedsynth_outer_steps_reduce_fit() {
+    // The distillation objective must (at a modest lr) actually descend:
+    // its gradient comes from the hand-rolled unroll backward, so a sign
+    // error anywhere would show up here immediately.
+    let be = common::native();
+    let ops = FedOps::new(&be, "mlp_small").unwrap();
+    let model = ops.model;
+    let w = be.load_init(model).unwrap();
+    let (xt, yt) = test_batch(model.feature_len(), model.train_batch, model.n_classes);
+    let w_local = ops.local_train(1, &w, &xt, &yt, 0.05).unwrap();
+    let target = vecmath::sub(&w, &w_local);
+
+    let k = 2;
+    let mut rng = fed3sfc::util::rng::Rng::new(15);
+    let mut dxs = vec![0.0f32; k * model.feature_len()];
+    rng.fill_normal(&mut dxs, 0.5);
+    let mut dys = vec![0.0f32; k * model.n_classes];
+
+    let mut first = None;
+    let mut last = f32::NAN;
+    for _ in 0..12 {
+        let (ndxs, ndys, fit, _) = ops
+            .fedsynth_step(k, 1, &w, &target, &dxs, &dys, 0.05, 0.25)
+            .unwrap();
+        if first.is_none() {
+            first = Some(fit);
+        }
+        last = fit;
+        dxs = ndxs;
+        dys = ndys;
+    }
+    assert!(
+        last < first.unwrap(),
+        "fit did not decrease: {first:?} -> {last}"
+    );
+}
+
+#[test]
+fn grad_batch_matches_soft_grad_with_onehot_labels() {
+    // Hard labels are the one-hot limit of the soft-label path: push the
+    // label logits far toward one-hot and the two gradients converge.
+    let be = common::native();
+    let ops = FedOps::new(&be, "mlp_small").unwrap();
+    let model = ops.model;
+    let w = be.load_init(model).unwrap();
+    let m = 4usize;
+    let (x, y) = test_batch(model.feature_len(), m, model.n_classes);
+    let g_hard = ops.grad_batch(&w, &x, &y).unwrap();
+    let mut dy = vec![-40.0f32; m * model.n_classes];
+    for (i, &yi) in y.iter().enumerate() {
+        dy[i * model.n_classes + yi as usize] = 40.0;
+    }
+    let g_soft = ops.syn_grad(m, &w, &x, &dy).unwrap();
+    let cos = vecmath::cosine(&g_hard, &g_soft);
+    assert!(cos > 0.9999, "hard/soft gradient cos {cos}");
 }

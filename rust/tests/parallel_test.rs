@@ -3,11 +3,16 @@
 //! efficiency metrics, and per-client error-feedback state — because the
 //! round engine collects per-client results into selection-order slots
 //! before touching any shared state.
+//!
+//! Runs unconditionally on the native backend (whose worker pool opens a
+//! fresh in-memory backend per thread); one pjrt variant guards the
+//! artifact path when a bundle is available.
 
 mod common;
 
 use fed3sfc::config::{CompressorKind, DatasetKind, ExperimentConfig, ScheduleKind};
 use fed3sfc::coordinator::experiment::Experiment;
+use fed3sfc::runtime::Backend;
 use fed3sfc::RoundRecord;
 
 fn cfg(method: CompressorKind, threads: usize) -> ExperimentConfig {
@@ -34,12 +39,16 @@ fn cfg(method: CompressorKind, threads: usize) -> ExperimentConfig {
 }
 
 /// Run to completion, returning (records, per-client EF state).
-fn run(cfg: ExperimentConfig) -> (Vec<RoundRecord>, Vec<Vec<f32>>) {
-    let rt = common::runtime();
-    let mut exp = Experiment::new(cfg, &rt).unwrap();
+fn run_on(cfg: ExperimentConfig, backend: &dyn Backend) -> (Vec<RoundRecord>, Vec<Vec<f32>>) {
+    let mut exp = Experiment::new(cfg, backend).unwrap();
     let recs = exp.run().unwrap();
     let efs = exp.clients.iter().map(|c| c.ef.clone()).collect();
     (recs, efs)
+}
+
+fn run(cfg: ExperimentConfig) -> (Vec<RoundRecord>, Vec<Vec<f32>>) {
+    let be = common::native();
+    run_on(cfg, &be)
 }
 
 fn assert_bit_identical(a: &[RoundRecord], b: &[RoundRecord]) {
@@ -69,7 +78,6 @@ fn assert_ef_identical(a: &[Vec<f32>], b: &[Vec<f32>]) {
 
 #[test]
 fn threesfc_parallel_matches_sequential_bitwise() {
-    let _g = common::lock();
     let (seq, seq_ef) = run(cfg(CompressorKind::ThreeSfc, 1));
     let (par, par_ef) = run(cfg(CompressorKind::ThreeSfc, 4));
     assert_bit_identical(&seq, &par);
@@ -78,7 +86,6 @@ fn threesfc_parallel_matches_sequential_bitwise() {
 
 #[test]
 fn topk_parallel_matches_sequential_bitwise() {
-    let _g = common::lock();
     let (seq, seq_ef) = run(cfg(CompressorKind::Dgc, 1));
     let (par, par_ef) = run(cfg(CompressorKind::Dgc, 4));
     assert_bit_identical(&seq, &par);
@@ -88,7 +95,6 @@ fn topk_parallel_matches_sequential_bitwise() {
 #[test]
 fn thread_count_is_not_part_of_the_trajectory() {
     // 2 and 4 workers agree too (not just 1 vs N).
-    let _g = common::lock();
     let (a, _) = run(cfg(CompressorKind::ThreeSfc, 2));
     let (b, _) = run(cfg(CompressorKind::ThreeSfc, 4));
     assert_bit_identical(&a, &b);
@@ -96,12 +102,33 @@ fn thread_count_is_not_part_of_the_trajectory() {
 
 #[test]
 fn parallel_experiment_reports_its_worker_count() {
-    let _g = common::lock();
-    let rt = common::runtime();
-    let exp = Experiment::new(cfg(CompressorKind::Dgc, 3), &rt).unwrap();
+    let be = common::native();
+    let exp = Experiment::new(cfg(CompressorKind::Dgc, 3), &be).unwrap();
     assert_eq!(exp.threads(), 3);
     assert!(exp.pool_stats().is_some());
-    let seq = Experiment::new(cfg(CompressorKind::Dgc, 1), &rt).unwrap();
+    let seq = Experiment::new(cfg(CompressorKind::Dgc, 1), &be).unwrap();
     assert_eq!(seq.threads(), 1);
     assert!(seq.pool_stats().is_none());
+}
+
+#[test]
+fn pool_workers_report_execution_stats() {
+    // The native workers must publish their op counters back to the pool
+    // aggregate, exactly like the per-worker PJRT runtimes do.
+    let be = common::native();
+    let mut exp = Experiment::new(cfg(CompressorKind::ThreeSfc, 3), &be).unwrap();
+    exp.run().unwrap();
+    let ws = exp.pool_stats().expect("pool is running");
+    assert!(ws.executions > 0, "workers executed nothing");
+    assert_eq!(ws.compiles, 0, "native backend never compiles");
+}
+
+#[test]
+fn pjrt_threesfc_parallel_matches_sequential_bitwise() {
+    let _g = common::lock();
+    let Some(be) = common::pjrt() else { return };
+    let (seq, seq_ef) = run_on(cfg(CompressorKind::ThreeSfc, 1), be.as_ref());
+    let (par, par_ef) = run_on(cfg(CompressorKind::ThreeSfc, 4), be.as_ref());
+    assert_bit_identical(&seq, &par);
+    assert_ef_identical(&seq_ef, &par_ef);
 }

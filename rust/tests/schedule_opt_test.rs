@@ -1,6 +1,9 @@
 //! Round-engine integration: client schedulers, server optimizers and
 //! simnet-aware accounting composed into full experiments on the small
 //! model — including the EF-persistence regression for skipped clients.
+//!
+//! Runs unconditionally on the native backend; the acceptance scenario
+//! re-runs on pjrt when artifacts are available.
 
 mod common;
 
@@ -8,6 +11,7 @@ use fed3sfc::config::{
     CompressorKind, DatasetKind, ExperimentConfig, NetworkKind, ScheduleKind, ServerOptKind,
 };
 use fed3sfc::coordinator::experiment::{Experiment, ExperimentBuilder};
+use fed3sfc::runtime::Backend;
 
 fn partial_cfg(schedule: ScheduleKind, frac: f64) -> ExperimentConfig {
     ExperimentConfig {
@@ -31,12 +35,11 @@ fn partial_cfg(schedule: ScheduleKind, frac: f64) -> ExperimentConfig {
 #[test]
 fn uniform_schedule_is_deterministic_across_runs() {
     // Same seed → same selected set every round, and identical records.
-    let _g = common::lock();
-    let rt = common::runtime();
+    let be = common::native();
     let mut selections: Vec<Vec<Vec<usize>>> = Vec::new();
     let mut finals = Vec::new();
     for _ in 0..2 {
-        let mut exp = Experiment::new(partial_cfg(ScheduleKind::Uniform, 0.5), &rt).unwrap();
+        let mut exp = Experiment::new(partial_cfg(ScheduleKind::Uniform, 0.5), &be).unwrap();
         let mut sel = Vec::new();
         for _ in 0..exp.cfg.rounds {
             let rec = exp.run_round().unwrap();
@@ -55,9 +58,8 @@ fn uniform_schedule_is_deterministic_across_runs() {
 
 #[test]
 fn round_robin_covers_every_client_e2e() {
-    let _g = common::lock();
-    let rt = common::runtime();
-    let mut exp = Experiment::new(partial_cfg(ScheduleKind::RoundRobin, 0.5), &rt).unwrap();
+    let be = common::native();
+    let mut exp = Experiment::new(partial_cfg(ScheduleKind::RoundRobin, 0.5), &be).unwrap();
     // ceil(1/0.5) = 2 rounds must cover all 4 clients.
     exp.run_round().unwrap();
     let first = exp.last_selected.clone();
@@ -74,9 +76,8 @@ fn skipped_clients_keep_error_feedback_untouched() {
     // Regression (3SFC + client_frac = 0.5): a skipped client's EF memory
     // must be bit-identical across the round, and must be consumed (i.e.
     // the memory changes) at its next participation.
-    let _g = common::lock();
-    let rt = common::runtime();
-    let mut exp = Experiment::new(partial_cfg(ScheduleKind::Uniform, 0.5), &rt).unwrap();
+    let be = common::native();
+    let mut exp = Experiment::new(partial_cfg(ScheduleKind::Uniform, 0.5), &be).unwrap();
     let n = exp.clients.len();
     let mut pending_nonzero_ef: Vec<bool> = vec![false; n];
     let mut consumed_after_skip = 0usize;
@@ -111,14 +112,13 @@ fn skipped_clients_keep_error_feedback_untouched() {
 
 #[test]
 fn partial_participation_halves_round_traffic() {
-    let _g = common::lock();
-    let rt = common::runtime();
-    let full = Experiment::new(partial_cfg(ScheduleKind::Full, 1.0), &rt)
+    let be = common::native();
+    let full = Experiment::new(partial_cfg(ScheduleKind::Full, 1.0), &be)
         .unwrap()
         .run()
         .map(|recs| recs[0].up_bytes_round)
         .unwrap();
-    let mut exp = Experiment::new(partial_cfg(ScheduleKind::Uniform, 0.5), &rt).unwrap();
+    let mut exp = Experiment::new(partial_cfg(ScheduleKind::Uniform, 0.5), &be).unwrap();
     let recs = exp.run().unwrap();
     // 3SFC payloads are fixed-size, so half the clients → half the bytes,
     // and the broadcast only reaches the selected clients.
@@ -134,14 +134,13 @@ fn partial_participation_halves_round_traffic() {
 
 #[test]
 fn server_optimizers_run_and_differ() {
-    let _g = common::lock();
-    let rt = common::runtime();
+    let be = common::native();
     let run = |opt: ServerOptKind, server_lr: f32| {
         let mut cfg = partial_cfg(ScheduleKind::Full, 1.0);
         cfg.server_opt = opt;
         cfg.server_lr = server_lr;
         cfg.eval_every = 1;
-        let mut exp = Experiment::new(cfg, &rt).unwrap();
+        let mut exp = Experiment::new(cfg, &be).unwrap();
         let recs = exp.run().unwrap();
         let last = recs.last().unwrap();
         assert!(last.test_loss.is_finite(), "{opt:?} diverged");
@@ -156,12 +155,9 @@ fn server_optimizers_run_and_differ() {
     assert_ne!(gd.to_bits(), fedadam.to_bits());
 }
 
-#[test]
-fn acceptance_scenario_via_builder() {
+fn check_acceptance_scenario(backend: &dyn Backend) {
     // The issue's acceptance config: many clients, 10% uniform sampling,
     // FedAdam server optimizer, edge network — per-round comm_time_s out.
-    let _g = common::lock();
-    let rt = common::runtime();
     let mut exp = ExperimentBuilder::new()
         .dataset(DatasetKind::SynthSmall)
         .compressor(CompressorKind::ThreeSfc)
@@ -177,7 +173,7 @@ fn acceptance_scenario_via_builder() {
         .server_opt(ServerOptKind::FedAdam)
         .server_lr(0.01)
         .network(NetworkKind::Edge)
-        .build(&rt)
+        .build(backend)
         .unwrap();
     let recs = exp.run().unwrap();
     for r in &recs {
@@ -185,4 +181,17 @@ fn acceptance_scenario_via_builder() {
         assert!(r.comm_time_s > 0.0);
         assert!(r.test_acc.is_finite());
     }
+}
+
+#[test]
+fn acceptance_scenario_via_builder() {
+    let be = common::native();
+    check_acceptance_scenario(&be);
+}
+
+#[test]
+fn pjrt_acceptance_scenario_via_builder() {
+    let _g = common::lock();
+    let Some(be) = common::pjrt() else { return };
+    check_acceptance_scenario(be.as_ref());
 }
