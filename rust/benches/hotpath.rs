@@ -1,12 +1,29 @@
-//! Hot-path microbenchmarks — the perf pass baseline (EXPERIMENTS §Perf).
+//! Hot-path microbenchmarks + the persistent bench-trajectory harness
+//! (EXPERIMENTS.md §Perf).
 //!
-//! L3 host paths: top-k selection, axpy/EF accumulation, cosine metric,
-//! aggregation; runtime paths: literal marshalling, local_train /
-//! syn_step / syn_grad / eval executions on mlp10 (the paper-scale MLP).
+//! Sections:
+//! * L3 host paths — top-k selection, axpy/EF accumulation, cosine
+//!   metric, aggregation (the agg buffer is preallocated and `fill(0.0)`
+//!   per iteration, so the number measures the kernel, not the
+//!   allocator);
+//! * GEMM kernels — naive oracle vs the register-blocked kernels at
+//!   mlp10 shapes (the before/after table in EXPERIMENTS.md);
+//! * backend op paths — local_train / syn_step / syn_grad / eval on
+//!   mlp10 (the paper-scale MLP).
+//!
+//! On the native backend the run is appended to the trajectory record:
+//! per-op median/p95 ns land in `BENCH_hotpath.json` at the repo root
+//! (override with `FED3SFC_BENCH_OUT`), and when a *calibrated* baseline
+//! exists at `FED3SFC_BENCH_BASELINE` (default: the committed JSON) any
+//! op slower than `FED3SFC_BENCH_MAX_REGRESSION`× (default 3×) its
+//! baseline median fails the run — the CI perf-smoke job is exactly this
+//! invocation.
 
-use fed3sfc::bench::{report, time_it};
+use fed3sfc::bench::{
+    bench_json, parse_bench_json, regressions, report, time_it, BenchRecord, Timing,
+};
 use fed3sfc::config::BackendKind;
-use fed3sfc::runtime::{open_backend_kind, Backend, FedOps};
+use fed3sfc::runtime::{kernels, open_backend_kind, Backend, FedOps};
 use fed3sfc::util::rng::Rng;
 use fed3sfc::util::vecmath;
 
@@ -20,38 +37,101 @@ fn main() -> anyhow::Result<()> {
         rt.backend_name()
     );
 
+    let mut records: Vec<BenchRecord> = Vec::new();
+    let mut record = |name: &str, t: &Timing| {
+        report(name, t);
+        records.push(BenchRecord::new(name, t));
+    };
+
     let mut rng = Rng::new(1);
     let mut g = vec![0.0f32; n];
     rng.fill_normal(&mut g, 0.01);
     let mut ef = vec![0.0f32; n];
 
     println!("-- L3 host paths --");
-    report(
-        "topk_indices k=P/250 (DGC select)",
+    record(
+        "topk_dgc_select",
         &time_it(3, 20, || {
             std::hint::black_box(vecmath::topk_indices(&g, n / 250));
         }),
     );
-    report(
-        "axpy (EF accumulate)",
+    record(
+        "axpy_ef",
         &time_it(3, 50, || {
             vecmath::axpy(1.0, &g, &mut ef);
         }),
     );
-    report(
-        "cosine (efficiency metric)",
+    record(
+        "cosine_metric",
         &time_it(3, 50, || {
             std::hint::black_box(vecmath::cosine(&g, &ef));
         }),
     );
-    report(
-        "weighted aggregation of 10 clients",
+    // Preallocated accumulator: the measured closure must time the
+    // weighted-add kernel, not a fresh `vec![0.0; n]` per iteration.
+    let mut agg = vec![0.0f32; n];
+    record(
+        "weighted_agg_10",
         &time_it(3, 20, || {
-            let mut agg = vec![0.0f32; n];
+            agg.fill(0.0);
             for _ in 0..10 {
                 vecmath::weighted_add(&mut agg, &g, 0.1);
             }
-            std::hint::black_box(agg);
+            std::hint::black_box(&agg);
+        }),
+    );
+
+    // GEMM microkernels at mlp10 shapes (d=784, h=250, B=32): naive
+    // oracle vs the register-blocked kernels — the §Perf kernel table.
+    println!("\n-- GEMM kernels (naive vs tiled, mlp10 shapes) --");
+    let (bm, kd, kh) = (32usize, 784usize, 250usize);
+    let mut ka = vec![0.0f32; bm * kd];
+    let mut kb = vec![0.0f32; kd * kh];
+    rng.fill_normal(&mut ka, 1.0);
+    rng.fill_normal(&mut kb, 0.1);
+    let mut kout = vec![0.0f32; bm * kh];
+    record(
+        "kern_mm_naive",
+        &time_it(2, 12, || {
+            kernels::naive::mm(&ka, &kb, bm, kd, kh, &mut kout);
+        }),
+    );
+    record(
+        "kern_mm_tiled",
+        &time_it(2, 12, || {
+            kernels::mm(&ka, &kb, bm, kd, kh, &mut kout);
+        }),
+    );
+    // aᵀ·b at the gW1 shape: [B×d]ᵀ·[B×h] → [d×h].
+    let mut kdz = vec![0.0f32; bm * kh];
+    rng.fill_normal(&mut kdz, 0.1);
+    let mut kgw = vec![0.0f32; kd * kh];
+    record(
+        "kern_mm_at_naive",
+        &time_it(2, 12, || {
+            kernels::naive::mm_at_acc(&ka, &kdz, bm, kd, kh, &mut kgw);
+        }),
+    );
+    record(
+        "kern_mm_at_tiled",
+        &time_it(2, 12, || {
+            kernels::mm_at_acc(&ka, &kdz, bm, kd, kh, &mut kgw);
+        }),
+    );
+    // a·bᵀ at the gx shape: [B×h]·[d×h]ᵀ → [B×d].
+    let mut kw1 = vec![0.0f32; kd * kh];
+    rng.fill_normal(&mut kw1, 0.1);
+    let mut kgx = vec![0.0f32; bm * kd];
+    record(
+        "kern_mm_bt_naive",
+        &time_it(2, 12, || {
+            kernels::naive::mm_bt_acc(&kdz, &kw1, bm, kh, kd, &mut kgx);
+        }),
+    );
+    record(
+        "kern_mm_bt_tiled",
+        &time_it(2, 12, || {
+            kernels::mm_bt_acc(&kdz, &kw1, bm, kh, kd, &mut kgx);
         }),
     );
 
@@ -62,8 +142,8 @@ fn main() -> anyhow::Result<()> {
     let mut xs = vec![0.0f32; k * b * model.feature_len()];
     rng.fill_normal(&mut xs, 1.0);
     let ys: Vec<i32> = (0..k * b).map(|i| (i % model.n_classes) as i32).collect();
-    report(
-        "local_train K=5 (B=32)",
+    record(
+        "local_train_k5",
         &time_it(2, 10, || {
             std::hint::black_box(ops.local_train(k, &w, &xs, &ys, 0.05).unwrap());
         }),
@@ -76,16 +156,16 @@ fn main() -> anyhow::Result<()> {
     let mut dx = vec![0.0f32; model.feature_len()];
     rng.fill_normal(&mut dx, 0.5);
     let dy = vec![0.0f32; model.n_classes];
-    report(
-        "syn_step m=1 (2nd-order encoder step)",
+    record(
+        "syn_step_m1",
         &time_it(2, 10, || {
             std::hint::black_box(
                 ops.syn_step(1, &w, &target, &dx, &dy, 5.0, 0.0).unwrap(),
             );
         }),
     );
-    report(
-        "syn_grad m=1 (decoder)",
+    record(
+        "syn_grad_m1",
         &time_it(2, 10, || {
             std::hint::black_box(ops.syn_grad(1, &w, &dx, &dy).unwrap());
         }),
@@ -95,8 +175,8 @@ fn main() -> anyhow::Result<()> {
     let mut xe = vec![0.0f32; be * model.feature_len()];
     rng.fill_normal(&mut xe, 1.0);
     let ye: Vec<i32> = (0..be).map(|i| (i % model.n_classes) as i32).collect();
-    report(
-        "eval_batch (B=100)",
+    record(
+        "eval_batch",
         &time_it(2, 10, || {
             std::hint::black_box(ops.eval_batch(&w, &xe, &ye).unwrap());
         }),
@@ -107,5 +187,62 @@ fn main() -> anyhow::Result<()> {
         "\nbackend totals: {} compiles {:.0} ms, {} execs {:.0} ms",
         st.compiles, st.compile_ms, st.executions, st.execute_ms
     );
+
+    // Trajectory record + regression gate — native backend only (the
+    // committed baseline is the native perf record; pjrt timings are not
+    // comparable to it).
+    if rt.backend_name() != "native" {
+        println!("(backend is not native: skipping BENCH_hotpath.json emit/check)");
+        return Ok(());
+    }
+    let baseline_path = std::env::var("FED3SFC_BENCH_BASELINE")
+        .unwrap_or_else(|_| "../BENCH_hotpath.json".to_string());
+    let max_ratio: f64 = std::env::var("FED3SFC_BENCH_MAX_REGRESSION")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3.0);
+    let current: std::collections::BTreeMap<String, f64> = records
+        .iter()
+        .map(|r| (r.name.clone(), r.median_ns))
+        .collect();
+    // Read the baseline BEFORE writing the fresh record (locally the two
+    // default to the same path), then persist, then gate — a failing run
+    // must still leave its numbers on disk for diagnosis.
+    let baseline_text = std::fs::read_to_string(&baseline_path).ok();
+    let out_path = std::env::var("FED3SFC_BENCH_OUT")
+        .unwrap_or_else(|_| "../BENCH_hotpath.json".to_string());
+    // `calibrated` is opt-in (CI sets it): a casual local run must never
+    // produce a record that, if committed, arms the gate against the
+    // wrong hardware.
+    let calibrate = std::env::var("FED3SFC_BENCH_CALIBRATE").map(|v| v == "1").unwrap_or(false);
+    let doc = bench_json("native", "mlp10", n, calibrate, &records);
+    std::fs::write(&out_path, doc)?;
+    println!("wrote trajectory record to {out_path} (calibrated: {calibrate})");
+    match baseline_text {
+        Some(text) => {
+            let (calibrated, baseline) = parse_bench_json(&text)?;
+            if !calibrated {
+                println!(
+                    "baseline {baseline_path} is uncalibrated (seed placeholder): \
+                     recording only, no regression gate"
+                );
+            } else {
+                let bad = regressions(&current, &baseline, max_ratio);
+                if bad.is_empty() {
+                    let shared = baseline
+                        .keys()
+                        .filter(|name| current.contains_key(name.as_str()))
+                        .count();
+                    println!("perf smoke OK: {shared} ops within {max_ratio}x of baseline");
+                } else {
+                    for line in &bad {
+                        eprintln!("PERF REGRESSION {line}");
+                    }
+                    anyhow::bail!("{} op(s) regressed beyond {max_ratio}x", bad.len());
+                }
+            }
+        }
+        None => println!("no baseline at {baseline_path}: recording only"),
+    }
     Ok(())
 }

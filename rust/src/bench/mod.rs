@@ -1,35 +1,209 @@
 //! Bench harness (offline replacement for `criterion`): timing with
-//! warmup + repeated samples, and fixed-width table printing shared by
-//! every `benches/*.rs` target (`harness = false`).
+//! warmup + repeated samples, fixed-width table printing shared by every
+//! `benches/*.rs` target (`harness = false`), and the machine-readable
+//! trajectory format behind `BENCH_hotpath.json` (schema documented in
+//! EXPERIMENTS.md §Perf) that the CI perf-smoke job diffs across commits.
 
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
 use std::time::Instant;
 
-use crate::util::stats::OnlineStats;
+use anyhow::{ensure, Result};
+
+use crate::util::json::{self, Value};
+
+/// Samples from one timed closure, in milliseconds. Robust summaries
+/// (median / p95) are first-class because container timing is jittery:
+/// a mean is one noisy-neighbor page fault away from a fake regression.
+#[derive(Clone, Debug)]
+pub struct Timing {
+    /// Sorted ascending.
+    samples: Vec<f64>,
+}
+
+impl Timing {
+    pub fn from_samples(mut samples: Vec<f64>) -> Timing {
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Timing { samples }
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+    pub fn min(&self) -> f64 {
+        self.samples.first().copied().unwrap_or(0.0)
+    }
+    pub fn max(&self) -> f64 {
+        self.samples.last().copied().unwrap_or(0.0)
+    }
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+    pub fn median(&self) -> f64 {
+        self.at_percentile(50.0)
+    }
+    pub fn p95(&self) -> f64 {
+        self.at_percentile(95.0)
+    }
+
+    /// Nearest-rank percentile, indexing the already-sorted samples
+    /// (same convention as `util::stats::percentile`, without the
+    /// clone + re-sort).
+    fn at_percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let rank = ((p / 100.0) * (self.samples.len() as f64 - 1.0)).round() as usize;
+        self.samples[rank.min(self.samples.len() - 1)]
+    }
+}
 
 /// Time `f` with `warmup` throwaway calls and `iters` measured calls.
-pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> OnlineStats {
+pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Timing {
     for _ in 0..warmup {
         f();
     }
-    let mut stats = OnlineStats::new();
+    let mut samples = Vec::with_capacity(iters);
     for _ in 0..iters {
         let t0 = Instant::now();
         f();
-        stats.push(t0.elapsed().as_secs_f64() * 1e3);
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
     }
-    stats
+    Timing::from_samples(samples)
 }
 
-/// Print a `name  mean ± std ms  (min..max, n)` line.
-pub fn report(name: &str, stats: &OnlineStats) {
+/// Print a `name  median ms (p95, min..max, n)` line.
+pub fn report(name: &str, t: &Timing) {
     println!(
-        "{name:<44} {:>9.3} ms ± {:>7.3}  (min {:.3}, max {:.3}, n={})",
-        stats.mean(),
-        stats.std(),
-        stats.min(),
-        stats.max(),
-        stats.count()
+        "{name:<44} {:>9.3} ms med (p95 {:>8.3}, min {:.3}, max {:.3}, n={})",
+        t.median(),
+        t.p95(),
+        t.min(),
+        t.max(),
+        t.count()
     );
+}
+
+/// One named measurement destined for the trajectory JSON.
+#[derive(Clone, Debug)]
+pub struct BenchRecord {
+    /// Stable key — baselines are diffed by this name across commits.
+    pub name: String,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub mean_ns: f64,
+    pub n: usize,
+}
+
+impl BenchRecord {
+    pub fn new(name: &str, t: &Timing) -> BenchRecord {
+        BenchRecord {
+            name: name.to_string(),
+            median_ns: t.median() * 1e6,
+            p95_ns: t.p95() * 1e6,
+            mean_ns: t.mean() * 1e6,
+            n: t.count(),
+        }
+    }
+}
+
+/// Best-effort commit id for the trajectory record: `GITHUB_SHA` in CI,
+/// `git rev-parse HEAD` locally, `"unknown"` when neither resolves.
+pub fn git_sha() -> String {
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        if !sha.trim().is_empty() {
+            return sha.trim().to_string();
+        }
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Serialize one bench run (schema 1, EXPERIMENTS.md §Perf). `calibrated`
+/// marks numbers measured on real hardware; the seeded placeholder
+/// baseline carries `false` so CI never gates on made-up figures.
+pub fn bench_json(
+    backend: &str,
+    model: &str,
+    params: usize,
+    calibrated: bool,
+    records: &[BenchRecord],
+) -> String {
+    let mut ops = String::from("{");
+    for (i, r) in records.iter().enumerate() {
+        if i > 0 {
+            ops.push(',');
+        }
+        let _ = write!(
+            ops,
+            "\"{}\":{{\"median_ns\":{:.1},\"p95_ns\":{:.1},\"mean_ns\":{:.1},\"n\":{}}}",
+            json::escape(&r.name),
+            r.median_ns,
+            r.p95_ns,
+            r.mean_ns,
+            r.n
+        );
+    }
+    ops.push('}');
+    format!(
+        "{{\"schema\":1,\"backend\":\"{}\",\"model\":\"{}\",\"params\":{},\"git_sha\":\"{}\",\
+         \"calibrated\":{},\"ops\":{}}}\n",
+        json::escape(backend),
+        json::escape(model),
+        params,
+        json::escape(&git_sha()),
+        calibrated,
+        ops
+    )
+}
+
+/// A parsed baseline: (calibrated, op name → median ns).
+pub fn parse_bench_json(text: &str) -> Result<(bool, BTreeMap<String, f64>)> {
+    let v = json::parse(text)?;
+    ensure!(
+        v.req("schema")?.as_usize()? == 1,
+        "unsupported bench schema (want 1)"
+    );
+    let calibrated = matches!(v.req("calibrated")?, Value::Bool(true));
+    let mut ops = BTreeMap::new();
+    for (name, op) in v.req("ops")?.as_obj()? {
+        ops.insert(name.clone(), op.req("median_ns")?.as_f64()?);
+    }
+    Ok((calibrated, ops))
+}
+
+/// Ops whose current median exceeds `max_ratio ×` the baseline median.
+/// Only names present in both runs are compared, so adding or renaming
+/// benches never fails the smoke job by itself.
+pub fn regressions(
+    current: &BTreeMap<String, f64>,
+    baseline: &BTreeMap<String, f64>,
+    max_ratio: f64,
+) -> Vec<String> {
+    let mut bad = Vec::new();
+    for (name, &base) in baseline {
+        if let Some(&cur) = current.get(name) {
+            if base > 0.0 && cur > base * max_ratio {
+                bad.push(format!(
+                    "{name}: {:.0} ns vs baseline {:.0} ns ({:.1}x > {max_ratio}x)",
+                    cur,
+                    base,
+                    cur / base
+                ));
+            }
+        }
+    }
+    bad
 }
 
 /// Fixed-width table printer for paper-style rows.
@@ -71,11 +245,73 @@ mod tests {
 
     #[test]
     fn timing_collects_samples() {
-        let stats = time_it(1, 5, || {
+        let t = time_it(1, 5, || {
             std::hint::black_box((0..1000).sum::<u64>());
         });
-        assert_eq!(stats.count(), 5);
-        assert!(stats.mean() >= 0.0);
+        assert_eq!(t.count(), 5);
+        assert!(t.mean() >= 0.0);
+        assert!(t.median() >= t.min() && t.median() <= t.max());
+        assert!(t.p95() >= t.median());
+    }
+
+    #[test]
+    fn timing_percentiles_on_known_data() {
+        let t = Timing::from_samples(vec![5.0, 1.0, 3.0, 2.0, 4.0]);
+        assert_eq!(t.median(), 3.0);
+        assert_eq!(t.min(), 1.0);
+        assert_eq!(t.max(), 5.0);
+        assert_eq!(t.p95(), 5.0);
+        assert!((t.mean() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bench_json_roundtrips_through_parser() {
+        let recs = vec![
+            BenchRecord {
+                name: "local_train_k5".into(),
+                median_ns: 1234.5,
+                p95_ns: 2000.0,
+                mean_ns: 1300.0,
+                n: 10,
+            },
+            BenchRecord {
+                name: "eval_batch".into(),
+                median_ns: 10.0,
+                p95_ns: 12.0,
+                mean_ns: 10.5,
+                n: 20,
+            },
+        ];
+        let doc = bench_json("native", "mlp10", 198_760, true, &recs);
+        let (calibrated, ops) = parse_bench_json(&doc).unwrap();
+        assert!(calibrated);
+        assert_eq!(ops.len(), 2);
+        assert!((ops["local_train_k5"] - 1234.5).abs() < 1e-6);
+        assert!((ops["eval_batch"] - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn regressions_flag_only_shared_slow_ops() {
+        let mut base = BTreeMap::new();
+        base.insert("a".to_string(), 100.0);
+        base.insert("b".to_string(), 100.0);
+        base.insert("gone".to_string(), 100.0);
+        let mut cur = BTreeMap::new();
+        cur.insert("a".to_string(), 250.0); // 2.5x: fine at 3x
+        cur.insert("b".to_string(), 400.0); // 4x: regression
+        cur.insert("new".to_string(), 9999.0); // not in baseline: ignored
+        let bad = regressions(&cur, &base, 3.0);
+        assert_eq!(bad.len(), 1);
+        assert!(bad[0].starts_with("b:"), "{}", bad[0]);
+    }
+
+    #[test]
+    fn uncalibrated_baseline_parses() {
+        let seed = "{\"schema\":1,\"backend\":\"native\",\"model\":\"mlp10\",\"params\":198760,\
+                    \"git_sha\":\"seed\",\"calibrated\":false,\"ops\":{}}";
+        let (calibrated, ops) = parse_bench_json(seed).unwrap();
+        assert!(!calibrated);
+        assert!(ops.is_empty());
     }
 
     #[test]

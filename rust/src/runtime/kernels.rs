@@ -1,0 +1,530 @@
+//! Register-blocked, cache-friendly compute kernels for the native
+//! backend, plus the zero-alloc [`Workspace`] buffer arena.
+//!
+//! The naive `ikj` GEMMs the native backend launched with (kept verbatim
+//! in [`naive`] as the differential-testing oracle and the before/after
+//! bench reference) re-load and re-store every output element once per
+//! depth step: the inner loop is `orow += a[i][l] * b[l]`, so each of the
+//! `m·n` outputs round-trips through memory `k` times. The kernels here
+//! accumulate a 4×8 register tile across the whole depth loop and touch
+//! the output exactly once per tile:
+//!
+//! * [`mm`] / [`mm_acc`] — `out (+)= a·b`, 4 rows × 8 columns of
+//!   accumulators; the depth loop does 32 independent FMAs per iteration,
+//!   which LLVM auto-vectorizes (the 8-wide column dimension maps onto
+//!   SIMD lanes) with no dependency chain on memory.
+//! * [`mm_at_acc`] — `out += aᵀ·b` with the same tiling; both operand
+//!   reads are contiguous rows, so the transpose costs nothing.
+//! * [`mm_bt_acc`] — `out += a·bᵀ`: a dot-product kernel, blocked 4
+//!   b-rows at a time with 4 partial-sum lanes per row to break the
+//!   single-accumulator dependency chain of the naive version.
+//!
+//! Ragged edges (dimensions not divisible by the tile) fall back to the
+//! naive loop structure on the remainder strip only. All reductions are
+//! sequential with a fixed association order, so results are deterministic
+//! for a given shape — `threads = N` stays bit-identical to `threads = 1`
+//! — and `tests/kernel_parity_test.rs` pins the tiled kernels against the
+//! [`naive`] oracle to ≤ 1e-5 relative error on random (ragged) shapes.
+
+/// Rows of `out` accumulated per register tile.
+const MR: usize = 4;
+/// Columns of `out` accumulated per register tile (SIMD-lane dimension).
+const NR: usize = 8;
+/// Partial-sum lanes in the dot-product (`a·bᵀ`) kernel.
+const LANES: usize = 4;
+
+/// `out = a·b` for row-major `a: [m×k]`, `b: [k×n]`.
+pub fn mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    mm_acc(a, b, m, k, n, out);
+}
+
+/// `out += a·b` for row-major `a: [m×k]`, `b: [k×n]`.
+pub fn mm_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    let mi = (m / MR) * MR;
+    let nj = (n / NR) * NR;
+    let mut i = 0;
+    while i < mi {
+        let a0 = &a[i * k..(i + 1) * k];
+        let a1 = &a[(i + 1) * k..(i + 2) * k];
+        let a2 = &a[(i + 2) * k..(i + 3) * k];
+        let a3 = &a[(i + 3) * k..(i + 4) * k];
+        let mut j = 0;
+        while j < nj {
+            let mut acc = [[0.0f32; NR]; MR];
+            for l in 0..k {
+                let bl: &[f32; NR] = b[l * n + j..l * n + j + NR].try_into().unwrap();
+                let (av0, av1, av2, av3) = (a0[l], a1[l], a2[l], a3[l]);
+                for c in 0..NR {
+                    acc[0][c] += av0 * bl[c];
+                    acc[1][c] += av1 * bl[c];
+                    acc[2][c] += av2 * bl[c];
+                    acc[3][c] += av3 * bl[c];
+                }
+            }
+            for (r, accr) in acc.iter().enumerate() {
+                let orow = &mut out[(i + r) * n + j..(i + r) * n + j + NR];
+                for (o, &v) in orow.iter_mut().zip(accr.iter()) {
+                    *o += v;
+                }
+            }
+            j += NR;
+        }
+        if j < n {
+            // Ragged column strip: naive on the last n − nj columns.
+            for r in 0..MR {
+                let ar = &a[(i + r) * k..(i + r + 1) * k];
+                let orow = &mut out[(i + r) * n + j..(i + r) * n + n];
+                for (l, &av) in ar.iter().enumerate() {
+                    for (o, &bv) in orow.iter_mut().zip(b[l * n + j..l * n + n].iter()) {
+                        *o += av * bv;
+                    }
+                }
+            }
+        }
+        i += MR;
+    }
+    // Ragged row strip: naive rows (inner loop still vectorizes over n).
+    for i in mi..m {
+        let ar = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (l, &av) in ar.iter().enumerate() {
+            for (o, &bv) in orow.iter_mut().zip(b[l * n..(l + 1) * n].iter()) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// `out += aᵀ·b` for `a: [k×m]`, `b: [k×n]` → `out: [m×n]`.
+pub fn mm_at_acc(a: &[f32], b: &[f32], k: usize, m: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    let mi = (m / MR) * MR;
+    let nj = (n / NR) * NR;
+    let mut i = 0;
+    while i < mi {
+        let mut j = 0;
+        while j < nj {
+            let mut acc = [[0.0f32; NR]; MR];
+            for l in 0..k {
+                let al: &[f32; MR] = a[l * m + i..l * m + i + MR].try_into().unwrap();
+                let bl: &[f32; NR] = b[l * n + j..l * n + j + NR].try_into().unwrap();
+                for c in 0..NR {
+                    acc[0][c] += al[0] * bl[c];
+                    acc[1][c] += al[1] * bl[c];
+                    acc[2][c] += al[2] * bl[c];
+                    acc[3][c] += al[3] * bl[c];
+                }
+            }
+            for (r, accr) in acc.iter().enumerate() {
+                let orow = &mut out[(i + r) * n + j..(i + r) * n + j + NR];
+                for (o, &v) in orow.iter_mut().zip(accr.iter()) {
+                    *o += v;
+                }
+            }
+            j += NR;
+        }
+        if j < n {
+            for l in 0..k {
+                for r in 0..MR {
+                    let av = a[l * m + i + r];
+                    let orow = &mut out[(i + r) * n + j..(i + r) * n + n];
+                    for (o, &bv) in orow.iter_mut().zip(b[l * n + j..l * n + n].iter()) {
+                        *o += av * bv;
+                    }
+                }
+            }
+        }
+        i += MR;
+    }
+    for i in mi..m {
+        for l in 0..k {
+            let av = a[l * m + i];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(b[l * n..(l + 1) * n].iter()) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// `out += a·bᵀ` for `a: [m×k]`, `b: [n×k]` → `out: [m×n]`.
+pub fn mm_bt_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    let nj = (n / LANES) * LANES;
+    let kq = (k / LANES) * LANES;
+    for i in 0..m {
+        let ar = &a[i * k..(i + 1) * k];
+        let mut j = 0;
+        while j < nj {
+            let b0 = &b[j * k..(j + 1) * k];
+            let b1 = &b[(j + 1) * k..(j + 2) * k];
+            let b2 = &b[(j + 2) * k..(j + 3) * k];
+            let b3 = &b[(j + 3) * k..(j + 4) * k];
+            let mut acc = [[0.0f32; LANES]; LANES];
+            let mut l = 0;
+            while l < kq {
+                let av: &[f32; LANES] = ar[l..l + LANES].try_into().unwrap();
+                let bv0: &[f32; LANES] = b0[l..l + LANES].try_into().unwrap();
+                let bv1: &[f32; LANES] = b1[l..l + LANES].try_into().unwrap();
+                let bv2: &[f32; LANES] = b2[l..l + LANES].try_into().unwrap();
+                let bv3: &[f32; LANES] = b3[l..l + LANES].try_into().unwrap();
+                for t in 0..LANES {
+                    acc[0][t] += av[t] * bv0[t];
+                    acc[1][t] += av[t] * bv1[t];
+                    acc[2][t] += av[t] * bv2[t];
+                    acc[3][t] += av[t] * bv3[t];
+                }
+                l += LANES;
+            }
+            let mut tail = [0.0f32; LANES];
+            for l in kq..k {
+                let av = ar[l];
+                tail[0] += av * b0[l];
+                tail[1] += av * b1[l];
+                tail[2] += av * b2[l];
+                tail[3] += av * b3[l];
+            }
+            for (c, accc) in acc.iter().enumerate() {
+                let s = ((accc[0] + accc[1]) + (accc[2] + accc[3])) + tail[c];
+                out[i * n + j + c] += s;
+            }
+            j += LANES;
+        }
+        while j < n {
+            let br = &b[j * k..(j + 1) * k];
+            let mut acc = [0.0f32; LANES];
+            let mut l = 0;
+            while l < kq {
+                let av: &[f32; LANES] = ar[l..l + LANES].try_into().unwrap();
+                let bv: &[f32; LANES] = br[l..l + LANES].try_into().unwrap();
+                for t in 0..LANES {
+                    acc[t] += av[t] * bv[t];
+                }
+                l += LANES;
+            }
+            let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+            for l in kq..k {
+                s += ar[l] * br[l];
+            }
+            out[i * n + j] += s;
+            j += 1;
+        }
+    }
+}
+
+/// Per-row column sum: `out[j] = Σ_i a[i][j]` for `a: [m×n]`.
+pub fn colsum(a: &[f32], m: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(out.len(), n);
+    out.fill(0.0);
+    for row in a.chunks_exact(n) {
+        for (o, &v) in out.iter_mut().zip(row.iter()) {
+            *o += v;
+        }
+    }
+}
+
+/// Row-wise softmax + log-softmax (max-subtracted, like `jax.nn`).
+pub fn softmax_rows(z: &[f32], rows: usize, n: usize, p: &mut [f32], logp: &mut [f32]) {
+    debug_assert_eq!(z.len(), rows * n);
+    debug_assert_eq!(p.len(), rows * n);
+    debug_assert_eq!(logp.len(), rows * n);
+    for i in 0..rows {
+        let row = &z[i * n..(i + 1) * n];
+        let prow = &mut p[i * n..(i + 1) * n];
+        let lrow = &mut logp[i * n..(i + 1) * n];
+        let mx = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut s = 0.0f32;
+        for (pv, &v) in prow.iter_mut().zip(row.iter()) {
+            let e = (v - mx).exp();
+            *pv = e;
+            s += e;
+        }
+        let ln_s = s.ln();
+        for ((pv, lv), &v) in prow.iter_mut().zip(lrow.iter_mut()).zip(row.iter()) {
+            *pv /= s;
+            *lv = v - mx - ln_s;
+        }
+    }
+}
+
+/// The unoptimized kernels the native backend shipped with — retained as
+/// the differential-testing oracle (`tests/kernel_parity_test.rs`) and as
+/// the "before" side of the `benches/hotpath.rs` kernel table. Loop
+/// structure is the original `ikj` / per-element form, unchanged.
+pub mod naive {
+    /// `out = a·b` (ikj loop order).
+    pub fn mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), k * n);
+        debug_assert_eq!(out.len(), m * n);
+        out.fill(0.0);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (l, &av) in arow.iter().enumerate() {
+                let brow = &b[l * n..(l + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                    *o += av * bv;
+                }
+            }
+        }
+    }
+
+    /// `out += aᵀ·b` for `a: [k×m]`, `b: [k×n]` → `out: [m×n]`.
+    pub fn mm_at_acc(a: &[f32], b: &[f32], k: usize, m: usize, n: usize, out: &mut [f32]) {
+        debug_assert_eq!(a.len(), k * m);
+        debug_assert_eq!(b.len(), k * n);
+        debug_assert_eq!(out.len(), m * n);
+        for l in 0..k {
+            let arow = &a[l * m..(l + 1) * m];
+            let brow = &b[l * n..(l + 1) * n];
+            for (i, &av) in arow.iter().enumerate() {
+                let orow = &mut out[i * n..(i + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                    *o += av * bv;
+                }
+            }
+        }
+    }
+
+    /// `out += a·bᵀ` for `a: [m×k]`, `b: [n×k]` → `out: [m×n]`.
+    pub fn mm_bt_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), n * k);
+        debug_assert_eq!(out.len(), m * n);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            for j in 0..n {
+                let brow = &b[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for (&av, &bv) in arow.iter().zip(brow.iter()) {
+                    acc += av * bv;
+                }
+                out[i * n + j] += acc;
+            }
+        }
+    }
+}
+
+/// Reusable scratch-buffer arena: checked-out buffers are owned `Vec`s
+/// (no lifetime coupling to the arena), returned with [`Workspace::give`]
+/// for reuse. After an op has run once per shape, subsequent executions
+/// perform no heap allocation inside the op — only the result vectors the
+/// `Backend` trait hands to the caller are freshly allocated
+/// (`tests/alloc_count_test.rs` pins the exact counts).
+///
+/// [`Workspace::take`] always returns a **zeroed** buffer, so op results
+/// are pure functions of their inputs regardless of pool history — the
+/// property the `threads = 1` vs `threads = N` bit-identity rests on.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    pool: Vec<Vec<f32>>,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace { pool: Vec::new() }
+    }
+
+    /// Check out a zeroed buffer of length `n`, reusing the pooled vector
+    /// with the smallest sufficient capacity (best fit, so small requests
+    /// do not starve later large ones).
+    pub fn take(&mut self, n: usize) -> Vec<f32> {
+        let mut best: Option<(usize, usize)> = None;
+        for (i, v) in self.pool.iter().enumerate() {
+            let cap = v.capacity();
+            let better = match best {
+                None => true,
+                Some((_, best_cap)) => cap < best_cap,
+            };
+            if cap >= n && better {
+                best = Some((i, cap));
+            }
+        }
+        let mut v = match best {
+            Some((i, _)) => self.pool.swap_remove(i),
+            // No pooled buffer fits: allocate fresh rather than growing a
+            // smaller pooled vector — growing would strip the pool of a
+            // buffer some other op is sized for (and ops like `syn_grad`
+            // move their checkout out as the result, so a no-fit miss
+            // must not cannibalize the pool).
+            None => Vec::new(),
+        };
+        v.clear();
+        v.resize(n, 0.0);
+        v
+    }
+
+    /// Return a buffer to the pool. Zero-capacity vectors are dropped —
+    /// pooling them would just re-allocate on the next checkout.
+    pub fn give(&mut self, v: Vec<f32>) {
+        if v.capacity() > 0 {
+            self.pool.push(v);
+        }
+    }
+
+    /// Buffers currently parked in the pool (test visibility).
+    pub fn pooled(&self) -> usize {
+        self.pool.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        let mut v = vec![0.0f32; n];
+        rng.fill_normal(&mut v, 1.0);
+        v
+    }
+
+    fn assert_close(got: &[f32], want: &[f32], what: &str) {
+        assert_eq!(got.len(), want.len(), "{what}: len");
+        for (i, (&g, &w)) in got.iter().zip(want.iter()).enumerate() {
+            let tol = 1e-5f32 * w.abs().max(1.0);
+            assert!((g - w).abs() <= tol, "{what}[{i}]: {g} vs {w}");
+        }
+    }
+
+    // Shapes chosen to hit every code path: full tiles, ragged rows,
+    // ragged columns, ragged depth, degenerate m = 1 / n = 1 / k = 1.
+    const SHAPES: &[(usize, usize, usize)] = &[
+        (4, 8, 8),
+        (8, 16, 32),
+        (1, 7, 5),
+        (5, 13, 9),
+        (3, 1, 17),
+        (7, 10, 1),
+        (9, 33, 23),
+        (16, 4, 40),
+        (2, 100, 3),
+    ];
+
+    #[test]
+    fn mm_matches_naive_oracle() {
+        let mut rng = Rng::new(101);
+        for &(m, k, n) in SHAPES {
+            let a = rand_vec(&mut rng, m * k);
+            let b = rand_vec(&mut rng, k * n);
+            let mut got = vec![0.0f32; m * n];
+            let mut want = vec![0.0f32; m * n];
+            mm(&a, &b, m, k, n, &mut got);
+            naive::mm(&a, &b, m, k, n, &mut want);
+            assert_close(&got, &want, &format!("mm {m}x{k}x{n}"));
+        }
+    }
+
+    #[test]
+    fn mm_acc_accumulates_onto_existing_output() {
+        let mut rng = Rng::new(102);
+        let (m, k, n) = (5, 9, 11);
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let base = rand_vec(&mut rng, m * n);
+        let mut got = base.clone();
+        mm_acc(&a, &b, m, k, n, &mut got);
+        let mut prod = vec![0.0f32; m * n];
+        naive::mm(&a, &b, m, k, n, &mut prod);
+        let want: Vec<f32> = base.iter().zip(prod.iter()).map(|(x, y)| x + y).collect();
+        assert_close(&got, &want, "mm_acc");
+    }
+
+    #[test]
+    fn mm_at_acc_matches_naive_oracle() {
+        let mut rng = Rng::new(103);
+        for &(m, k, n) in SHAPES {
+            let a = rand_vec(&mut rng, k * m);
+            let b = rand_vec(&mut rng, k * n);
+            let mut got = vec![0.0f32; m * n];
+            let mut want = vec![0.0f32; m * n];
+            mm_at_acc(&a, &b, k, m, n, &mut got);
+            naive::mm_at_acc(&a, &b, k, m, n, &mut want);
+            assert_close(&got, &want, &format!("mm_at {k}x{m}x{n}"));
+        }
+    }
+
+    #[test]
+    fn mm_bt_acc_matches_naive_oracle() {
+        let mut rng = Rng::new(104);
+        for &(m, k, n) in SHAPES {
+            let a = rand_vec(&mut rng, m * k);
+            let b = rand_vec(&mut rng, n * k);
+            let mut got = vec![0.0f32; m * n];
+            let mut want = vec![0.0f32; m * n];
+            mm_bt_acc(&a, &b, m, k, n, &mut got);
+            naive::mm_bt_acc(&a, &b, m, k, n, &mut want);
+            assert_close(&got, &want, &format!("mm_bt {m}x{k}x{n}"));
+        }
+    }
+
+    #[test]
+    fn colsum_and_softmax_basics() {
+        let a = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut s = [0.0f32; 3];
+        colsum(&a, 2, 3, &mut s);
+        assert_eq!(s, [5.0, 7.0, 9.0]);
+
+        let z = [0.0f32, 1.0, 2.0, -1.0];
+        let mut p = [0.0f32; 4];
+        let mut lp = [0.0f32; 4];
+        softmax_rows(&z, 2, 2, &mut p, &mut lp);
+        for row in 0..2 {
+            let sum: f32 = p[row * 2..(row + 1) * 2].iter().sum();
+            assert!((sum - 1.0).abs() < 1e-6, "row {row} sums to {sum}");
+        }
+        for i in 0..4 {
+            assert!((lp[i].exp() - p[i]).abs() < 1e-6);
+        }
+        // Second row: z = [2, -1] ⇒ p0 = e^3/(e^3+1).
+        let want = (3.0f32).exp() / ((3.0f32).exp() + 1.0);
+        assert!((p[2] - want).abs() < 1e-6);
+    }
+
+    #[test]
+    fn workspace_buffers_are_zeroed_and_reused() {
+        let mut ws = Workspace::new();
+        let mut v = ws.take(64);
+        assert!(v.iter().all(|&x| x == 0.0));
+        v.iter_mut().for_each(|x| *x = 7.0);
+        let ptr = v.as_ptr();
+        ws.give(v);
+        assert_eq!(ws.pooled(), 1);
+        // Smaller request reuses the same allocation, zeroed again.
+        let v2 = ws.take(32);
+        assert_eq!(v2.as_ptr(), ptr);
+        assert_eq!(v2.len(), 32);
+        assert!(v2.iter().all(|&x| x == 0.0));
+        ws.give(v2);
+    }
+
+    #[test]
+    fn workspace_best_fit_prefers_smallest_sufficient() {
+        let mut ws = Workspace::new();
+        let big = ws.take(1000);
+        let small = ws.take(10);
+        let (big_ptr, small_ptr) = (big.as_ptr(), small.as_ptr());
+        ws.give(big);
+        ws.give(small);
+        let v = ws.take(8);
+        assert_eq!(v.as_ptr(), small_ptr, "best fit picks the small buffer");
+        ws.give(v);
+        let v = ws.take(500);
+        assert_eq!(v.as_ptr(), big_ptr);
+        ws.give(v);
+        // Empty vectors are not pooled.
+        ws.give(Vec::new());
+        assert_eq!(ws.pooled(), 2);
+    }
+}

@@ -23,10 +23,20 @@
 //!
 //! All buffers are flat row-major `f32`, matching the artifact layout:
 //! `w = [W1 (d×h) | b1 (h) | W2 (h×c) | b2 (c)]`.
+//!
+//! Matrix products run on the register-blocked kernels in
+//! [`crate::runtime::kernels`] (the original naive loops survive as the
+//! `kernels::naive` test oracle), and every intermediate comes from the
+//! caller's [`Workspace`] — after one warm-up execution per op shape the
+//! hot path performs **zero heap allocations** (pinned by
+//! `tests/alloc_count_test.rs`). The relu mask is not materialized: since
+//! `h1 = relu(z1 + b1)`, the test `h1 > 0` *is* the mask.
 
 // Index loops here deliberately mirror the math derivation (same symbols,
 // same subscripts); iterator rewrites would obscure the correspondence.
 #![allow(clippy::needless_range_loop)]
+
+use crate::runtime::kernels::{self, Workspace};
 
 /// Static shape of one 2-layer MLP.
 #[derive(Clone, Copy, Debug)]
@@ -54,171 +64,109 @@ impl MlpDims {
     }
 }
 
-/// `out = a·b` for row-major `a: [m×k]`, `b: [k×n]` (ikj loop order).
-fn mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(out.len(), m * n);
-    out.fill(0.0);
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (l, &av) in arow.iter().enumerate() {
-            let brow = &b[l * n..(l + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
-                *o += av * bv;
-            }
-        }
-    }
-}
-
-/// `out += aᵀ·b` for `a: [k×m]`, `b: [k×n]` → `out: [m×n]`.
-fn mm_at_acc(a: &[f32], b: &[f32], k: usize, m: usize, n: usize, out: &mut [f32]) {
-    debug_assert_eq!(a.len(), k * m);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(out.len(), m * n);
-    for l in 0..k {
-        let arow = &a[l * m..(l + 1) * m];
-        let brow = &b[l * n..(l + 1) * n];
-        for (i, &av) in arow.iter().enumerate() {
-            let orow = &mut out[i * n..(i + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
-                *o += av * bv;
-            }
-        }
-    }
-}
-
-/// `out += a·bᵀ` for `a: [m×k]`, `b: [n×k]` → `out: [m×n]`.
-fn mm_bt_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), n * k);
-    debug_assert_eq!(out.len(), m * n);
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        for j in 0..n {
-            let brow = &b[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for (&av, &bv) in arow.iter().zip(brow.iter()) {
-                acc += av * bv;
-            }
-            out[i * n + j] += acc;
-        }
-    }
-}
-
-/// Per-row column sum: `out[j] = Σ_i a[i][j]` for `a: [m×n]`.
-fn colsum(a: &[f32], m: usize, n: usize, out: &mut [f32]) {
-    out.fill(0.0);
-    for i in 0..m {
-        for (o, &v) in out.iter_mut().zip(a[i * n..(i + 1) * n].iter()) {
-            *o += v;
-        }
-    }
-}
-
-/// Row-wise softmax + log-softmax (max-subtracted, like `jax.nn`).
-fn softmax_rows(z: &[f32], rows: usize, n: usize, p: &mut [f32], logp: &mut [f32]) {
-    for i in 0..rows {
-        let row = &z[i * n..(i + 1) * n];
-        let mx = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-        let mut s = 0.0f32;
-        for (j, &v) in row.iter().enumerate() {
-            let e = (v - mx).exp();
-            p[i * n + j] = e;
-            s += e;
-        }
-        let ln_s = s.ln();
-        for j in 0..n {
-            p[i * n + j] /= s;
-            logp[i * n + j] = row[j] - mx - ln_s;
-        }
-    }
-}
-
-/// Forward activations kept for the backward passes.
+/// Forward activations kept for the backward passes. The buffers are
+/// workspace checkouts; call [`Fwd::release`] when done.
 struct Fwd {
-    /// relu(z1) `[B×h]`.
+    /// relu(z1) `[B×h]` — doubles as the relu mask (`h1 > 0`).
     h1: Vec<f32>,
-    /// relu mask (z1 > 0) `[B×h]`.
-    mask: Vec<bool>,
     /// softmax(z2) `[B×c]`.
     p: Vec<f32>,
     /// log_softmax(z2) `[B×c]`.
     logp: Vec<f32>,
 }
 
-fn forward(dims: &MlpDims, w: &[f32], x: &[f32], bsz: usize) -> Fwd {
+impl Fwd {
+    fn release(self, ws: &mut Workspace) {
+        ws.give(self.h1);
+        ws.give(self.p);
+        ws.give(self.logp);
+    }
+}
+
+fn forward(dims: &MlpDims, w: &[f32], x: &[f32], bsz: usize, ws: &mut Workspace) -> Fwd {
     let (w1, b1, w2, b2) = dims.split(w);
     let (d, h, c) = (dims.d, dims.h, dims.c);
     debug_assert_eq!(x.len(), bsz * d);
-    let mut z1 = vec![0.0f32; bsz * h];
-    mm(x, w1, bsz, d, h, &mut z1);
-    let mut mask = vec![false; bsz * h];
-    let mut h1 = vec![0.0f32; bsz * h];
+    let mut z1 = ws.take(bsz * h);
+    kernels::mm(x, w1, bsz, d, h, &mut z1);
+    let mut h1 = ws.take(bsz * h);
     for i in 0..bsz {
         for j in 0..h {
             let v = z1[i * h + j] + b1[j];
             if v > 0.0 {
-                mask[i * h + j] = true;
                 h1[i * h + j] = v;
             }
         }
     }
-    let mut z2 = vec![0.0f32; bsz * c];
-    mm(&h1, w2, bsz, h, c, &mut z2);
+    let mut z2 = ws.take(bsz * c);
+    kernels::mm(&h1, w2, bsz, h, c, &mut z2);
     for i in 0..bsz {
         for j in 0..c {
             z2[i * c + j] += b2[j];
         }
     }
-    let mut p = vec![0.0f32; bsz * c];
-    let mut logp = vec![0.0f32; bsz * c];
-    softmax_rows(&z2, bsz, c, &mut p, &mut logp);
-    Fwd { h1, mask, p, logp }
+    let mut p = ws.take(bsz * c);
+    let mut logp = ws.take(bsz * c);
+    kernels::softmax_rows(&z2, bsz, c, &mut p, &mut logp);
+    ws.give(z1);
+    ws.give(z2);
+    Fwd { h1, p, logp }
 }
 
-/// Reverse pass w.r.t. the weights from `dz2 = ∂L/∂z2`; returns the flat
-/// weight gradient and `dz1` (needed by callers that also want `∂L/∂x`).
+/// Reverse pass w.r.t. the weights from `dz2 = ∂L/∂z2`, written into the
+/// flat `gw`; returns `dz1` (a workspace checkout — callers that also want
+/// `∂L/∂x` read it, everyone gives it back).
+#[allow(clippy::too_many_arguments)]
 fn backward_w(
     dims: &MlpDims,
     w: &[f32],
     x: &[f32],
     fwd_h1: &[f32],
-    mask: &[bool],
     dz2: &[f32],
     bsz: usize,
-) -> (Vec<f32>, Vec<f32>) {
+    ws: &mut Workspace,
+    gw: &mut [f32],
+) -> Vec<f32> {
     let (_, _, w2, _) = dims.split(w);
     let (d, h, c) = (dims.d, dims.h, dims.c);
-    let mut gw = vec![0.0f32; dims.params()];
-    let mut dz1 = vec![0.0f32; bsz * h];
+    debug_assert_eq!(gw.len(), dims.params());
+    gw.fill(0.0);
+    let mut dz1 = ws.take(bsz * h);
     {
         let (gw1, rest) = gw.split_at_mut(d * h);
         let (gb1, rest) = rest.split_at_mut(h);
         let (gw2, gb2) = rest.split_at_mut(h * c);
-        mm_at_acc(fwd_h1, dz2, bsz, h, c, gw2);
-        colsum(dz2, bsz, c, gb2);
-        mm_bt_acc(dz2, w2, bsz, c, h, &mut dz1);
-        for (v, &m) in dz1.iter_mut().zip(mask.iter()) {
-            if !m {
+        kernels::mm_at_acc(fwd_h1, dz2, bsz, h, c, gw2);
+        kernels::colsum(dz2, bsz, c, gb2);
+        kernels::mm_bt_acc(dz2, w2, bsz, c, h, &mut dz1);
+        for (v, &hv) in dz1.iter_mut().zip(fwd_h1.iter()) {
+            if hv <= 0.0 {
                 *v = 0.0;
             }
         }
-        mm_at_acc(x, &dz1, bsz, d, h, gw1);
-        colsum(&dz1, bsz, h, gb1);
+        kernels::mm_at_acc(x, &dz1, bsz, d, h, gw1);
+        kernels::colsum(&dz1, bsz, h, gb1);
     }
-    (gw, dz1)
+    dz1
 }
 
-/// Mean hard-label cross-entropy and its weight gradient over one batch.
-pub fn loss_grad_hard(dims: &MlpDims, w: &[f32], x: &[f32], y: &[i32]) -> (f32, Vec<f32>) {
+/// Mean hard-label cross-entropy over one batch; the weight gradient is
+/// written into `gw` (`[P]`).
+pub fn loss_grad_hard(
+    dims: &MlpDims,
+    w: &[f32],
+    x: &[f32],
+    y: &[i32],
+    ws: &mut Workspace,
+    gw: &mut [f32],
+) -> f32 {
     let bsz = y.len();
     let c = dims.c;
-    let fwd = forward(dims, w, x, bsz);
+    let fwd = forward(dims, w, x, bsz, ws);
     let inv_b = 1.0 / bsz as f32;
     let mut loss = 0.0f64;
-    let mut dz2 = fwd.p.clone();
+    let mut dz2 = ws.take(bsz * c);
+    dz2.copy_from_slice(&fwd.p);
     for (i, &yi) in y.iter().enumerate() {
         let yi = yi as usize;
         loss -= fwd.logp[i * c + yi] as f64;
@@ -227,11 +175,16 @@ pub fn loss_grad_hard(dims: &MlpDims, w: &[f32], x: &[f32], y: &[i32]) -> (f32, 
     for v in dz2.iter_mut() {
         *v *= inv_b;
     }
-    let (gw, _) = backward_w(dims, w, x, &fwd.h1, &fwd.mask, &dz2, bsz);
-    ((loss / bsz as f64) as f32, gw)
+    let dz1 = backward_w(dims, w, x, &fwd.h1, &dz2, bsz, ws, gw);
+    ws.give(dz1);
+    ws.give(dz2);
+    fwd.release(ws);
+    (loss / bsz as f64) as f32
 }
 
-/// K SGD steps over pre-batched data (`xs: [k·b·d]`, `ys: [k·b]`).
+/// K SGD steps over pre-batched data (`xs: [k·b·d]`, `ys: [k·b]`); the
+/// final weights land in `w_out` (`[P]`).
+#[allow(clippy::too_many_arguments)]
 pub fn sgd_steps(
     dims: &MlpDims,
     w: &[f32],
@@ -240,26 +193,35 @@ pub fn sgd_steps(
     k: usize,
     b: usize,
     lr: f32,
-) -> Vec<f32> {
+    ws: &mut Workspace,
+    w_out: &mut [f32],
+) {
     let d = dims.d;
-    let mut wc = w.to_vec();
+    w_out.copy_from_slice(w);
+    let mut g = ws.take(dims.params());
     for j in 0..k {
         let x = &xs[j * b * d..(j + 1) * b * d];
         let y = &ys[j * b..(j + 1) * b];
-        let (_, g) = loss_grad_hard(dims, &wc, x, y);
-        for (wv, gv) in wc.iter_mut().zip(g.iter()) {
+        loss_grad_hard(dims, &*w_out, x, y, ws, &mut g);
+        for (wv, gv) in w_out.iter_mut().zip(g.iter()) {
             *wv -= lr * gv;
         }
     }
-    wc
+    ws.give(g);
 }
 
 /// Eval over one batch: (Σ per-sample CE loss, #correct). Argmax breaks
 /// ties toward the first maximal class (matching `jnp.argmax`).
-pub fn eval_batch(dims: &MlpDims, w: &[f32], x: &[f32], y: &[i32]) -> (f32, f32) {
+pub fn eval_batch(
+    dims: &MlpDims,
+    w: &[f32],
+    x: &[f32],
+    y: &[i32],
+    ws: &mut Workspace,
+) -> (f32, f32) {
     let bsz = y.len();
     let c = dims.c;
-    let fwd = forward(dims, w, x, bsz);
+    let fwd = forward(dims, w, x, bsz, ws);
     let mut loss_sum = 0.0f64;
     let mut correct = 0u32;
     for (i, &yi) in y.iter().enumerate() {
@@ -275,12 +237,16 @@ pub fn eval_batch(dims: &MlpDims, w: &[f32], x: &[f32], y: &[i32]) -> (f32, f32)
             correct += 1;
         }
     }
+    fwd.release(ws);
     (loss_sum as f32, correct as f32)
 }
 
 /// Soft-label loss/gradients of `L = −(1/m)Σᵢ Σₖ yᵢₖ·logpᵢₖ` with
 /// `y = softmax(dy_logits)`, plus (optionally) the ε-tangents of every
 /// gradient under the weight perturbation `w + ε·v`.
+///
+/// Every `Vec` field is a workspace checkout — call [`SoftGrads::release`]
+/// once the values have been consumed so the buffers recycle.
 pub struct SoftGrads {
     pub loss: f32,
     /// ∇_w L `[P]`.
@@ -295,6 +261,15 @@ pub struct SoftGrads {
     pub gdy_dot: Vec<f32>,
 }
 
+impl SoftGrads {
+    /// Return every buffer to the workspace pool.
+    pub fn release(self, ws: &mut Workspace) {
+        for v in [self.gw, self.gx, self.gdy, self.gw_dot, self.gx_dot, self.gdy_dot] {
+            ws.give(v);
+        }
+    }
+}
+
 pub fn soft_grads(
     dims: &MlpDims,
     w: &[f32],
@@ -302,6 +277,7 @@ pub fn soft_grads(
     x: &[f32],
     dy_logits: &[f32],
     m: usize,
+    ws: &mut Workspace,
 ) -> SoftGrads {
     let (w1, _, w2, _) = dims.split(w);
     let (d, h, c) = (dims.d, dims.h, dims.c);
@@ -310,11 +286,12 @@ pub fn soft_grads(
     let inv_m = 1.0 / m as f32;
 
     // Soft labels y = softmax(dy_logits); independent of w (no tangent).
-    let mut y = vec![0.0f32; m * c];
-    let mut logy = vec![0.0f32; m * c];
-    softmax_rows(dy_logits, m, c, &mut y, &mut logy);
+    let mut y = ws.take(m * c);
+    let mut logy = ws.take(m * c);
+    kernels::softmax_rows(dy_logits, m, c, &mut y, &mut logy);
+    ws.give(logy);
 
-    let fwd = forward(dims, w, x, m);
+    let fwd = forward(dims, w, x, m, ws);
 
     // Value pass.
     let mut loss = 0.0f64;
@@ -324,16 +301,17 @@ pub fn soft_grads(
     let loss = (loss * inv_m as f64) as f32;
 
     // dz2 = (p − y)/m.
-    let mut dz2 = vec![0.0f32; m * c];
+    let mut dz2 = ws.take(m * c);
     for i in 0..m * c {
         dz2[i] = (fwd.p[i] - y[i]) * inv_m;
     }
-    let (gw, dz1) = backward_w(dims, w, x, &fwd.h1, &fwd.mask, &dz2, m);
+    let mut gw = ws.take(dims.params());
+    let dz1 = backward_w(dims, w, x, &fwd.h1, &dz2, m, ws, &mut gw);
     // gx = dz1·W1ᵀ.
-    let mut gx = vec![0.0f32; m * d];
-    mm_bt_acc(&dz1, w1, m, h, d, &mut gx);
+    let mut gx = ws.take(m * d);
+    kernels::mm_bt_acc(&dz1, w1, m, h, d, &mut gx);
     // a = ∂L/∂y = −logp/m; gdy = y ⊙ (a − rowdot(y, a)).
-    let mut gdy = vec![0.0f32; m * c];
+    let mut gdy = ws.take(m * c);
     for i in 0..m {
         let mut rd = 0.0f32;
         for k in 0..c {
@@ -346,6 +324,10 @@ pub fn soft_grads(
     }
 
     let Some(v) = v else {
+        ws.give(dz1);
+        ws.give(dz2);
+        ws.give(y);
+        fwd.release(ws);
         return SoftGrads {
             loss,
             gw,
@@ -361,31 +343,28 @@ pub fn soft_grads(
     // mask and the softmax normalizing max are locally constant a.e.
     let (v1, vb1, v2, vb2) = dims.split(v);
     // ż1 = x·V1 + vb1; ḣ1 = ż1 ⊙ mask.
-    let mut h1_dot = vec![0.0f32; m * h];
-    mm(x, v1, m, d, h, &mut h1_dot);
+    let mut h1_dot = ws.take(m * h);
+    kernels::mm(x, v1, m, d, h, &mut h1_dot);
     for i in 0..m {
         for j in 0..h {
             h1_dot[i * h + j] += vb1[j];
-            if !fwd.mask[i * h + j] {
+            if fwd.h1[i * h + j] <= 0.0 {
                 h1_dot[i * h + j] = 0.0;
             }
         }
     }
     // ż2 = ḣ1·W2 + h1·V2 + vb2.
-    let mut z2_dot = vec![0.0f32; m * c];
-    mm(&h1_dot, w2, m, h, c, &mut z2_dot);
-    {
-        let mut tmp = vec![0.0f32; m * c];
-        mm(&fwd.h1, v2, m, h, c, &mut tmp);
-        for i in 0..m {
-            for j in 0..c {
-                z2_dot[i * c + j] += tmp[i * c + j] + vb2[j];
-            }
+    let mut z2_dot = ws.take(m * c);
+    kernels::mm(&h1_dot, w2, m, h, c, &mut z2_dot);
+    kernels::mm_acc(&fwd.h1, v2, m, h, c, &mut z2_dot);
+    for i in 0..m {
+        for j in 0..c {
+            z2_dot[i * c + j] += vb2[j];
         }
     }
     // ṗ = p ⊙ (ż2 − rowdot(p, ż2));  (logp)˙ = ż2 − rowdot(p, ż2).
-    let mut p_dot = vec![0.0f32; m * c];
-    let mut logp_dot = vec![0.0f32; m * c];
+    let mut p_dot = ws.take(m * c);
+    let mut logp_dot = ws.take(m * c);
     for i in 0..m {
         let mut rd = 0.0f32;
         for k in 0..c {
@@ -397,37 +376,37 @@ pub fn soft_grads(
         }
     }
     // (dz2)˙ = ṗ/m.
-    let mut dz2_dot = vec![0.0f32; m * c];
+    let mut dz2_dot = ws.take(m * c);
     for i in 0..m * c {
         dz2_dot[i] = p_dot[i] * inv_m;
     }
 
     // ġW2 = ḣ1ᵀ·dz2 + h1ᵀ·(dz2)˙;  ġb2 = colsum((dz2)˙).
-    let mut gw_dot = vec![0.0f32; dims.params()];
+    let mut gw_dot = ws.take(dims.params());
     let (gw1_dot, rest) = gw_dot.split_at_mut(d * h);
     let (gb1_dot, rest) = rest.split_at_mut(h);
     let (gw2_dot, gb2_dot) = rest.split_at_mut(h * c);
-    mm_at_acc(&h1_dot, &dz2, m, h, c, gw2_dot);
-    mm_at_acc(&fwd.h1, &dz2_dot, m, h, c, gw2_dot);
-    colsum(&dz2_dot, m, c, gb2_dot);
+    kernels::mm_at_acc(&h1_dot, &dz2, m, h, c, gw2_dot);
+    kernels::mm_at_acc(&fwd.h1, &dz2_dot, m, h, c, gw2_dot);
+    kernels::colsum(&dz2_dot, m, c, gb2_dot);
     // (dh1)˙ = (dz2)˙·W2ᵀ + dz2·V2ᵀ;  (dz1)˙ = (dh1)˙ ⊙ mask.
-    let mut dz1_dot = vec![0.0f32; m * h];
-    mm_bt_acc(&dz2_dot, w2, m, c, h, &mut dz1_dot);
-    mm_bt_acc(&dz2, v2, m, c, h, &mut dz1_dot);
-    for (vv, &mk) in dz1_dot.iter_mut().zip(fwd.mask.iter()) {
-        if !mk {
+    let mut dz1_dot = ws.take(m * h);
+    kernels::mm_bt_acc(&dz2_dot, w2, m, c, h, &mut dz1_dot);
+    kernels::mm_bt_acc(&dz2, v2, m, c, h, &mut dz1_dot);
+    for (vv, &hv) in dz1_dot.iter_mut().zip(fwd.h1.iter()) {
+        if hv <= 0.0 {
             *vv = 0.0;
         }
     }
     // ġW1 = xᵀ·(dz1)˙;  ġb1 = colsum((dz1)˙).
-    mm_at_acc(x, &dz1_dot, m, d, h, gw1_dot);
-    colsum(&dz1_dot, m, h, gb1_dot);
+    kernels::mm_at_acc(x, &dz1_dot, m, d, h, gw1_dot);
+    kernels::colsum(&dz1_dot, m, h, gb1_dot);
     // ġx = (dz1)˙·W1ᵀ + dz1·V1ᵀ.
-    let mut gx_dot = vec![0.0f32; m * d];
-    mm_bt_acc(&dz1_dot, w1, m, h, d, &mut gx_dot);
-    mm_bt_acc(&dz1, v1, m, h, d, &mut gx_dot);
+    let mut gx_dot = ws.take(m * d);
+    kernels::mm_bt_acc(&dz1_dot, w1, m, h, d, &mut gx_dot);
+    kernels::mm_bt_acc(&dz1, v1, m, h, d, &mut gx_dot);
     // ȧ = −(logp)˙/m;  ġdy = y ⊙ (ȧ − rowdot(y, ȧ)).
-    let mut gdy_dot = vec![0.0f32; m * c];
+    let mut gdy_dot = ws.take(m * c);
     for i in 0..m {
         let mut rd = 0.0f32;
         for k in 0..c {
@@ -438,6 +417,17 @@ pub fn soft_grads(
             gdy_dot[i * c + k] = y[i * c + k] * (ad - rd);
         }
     }
+
+    ws.give(dz1);
+    ws.give(dz2);
+    ws.give(y);
+    ws.give(h1_dot);
+    ws.give(z2_dot);
+    ws.give(p_dot);
+    ws.give(logp_dot);
+    ws.give(dz2_dot);
+    ws.give(dz1_dot);
+    fwd.release(ws);
 
     SoftGrads { loss, gw, gx, gdy, gw_dot, gx_dot, gdy_dot }
 }
@@ -456,6 +446,19 @@ mod tests {
         v
     }
 
+    /// Convenience wrapper: hard loss + freshly allocated gradient.
+    fn loss_grad(
+        dims: &MlpDims,
+        w: &[f32],
+        x: &[f32],
+        y: &[i32],
+        ws: &mut Workspace,
+    ) -> (f32, Vec<f32>) {
+        let mut gw = vec![0.0f32; dims.params()];
+        let loss = loss_grad_hard(dims, w, x, y, ws, &mut gw);
+        (loss, gw)
+    }
+
     /// Vectors agree in direction (cos > 0.999) and magnitude (±2%).
     fn assert_grad_close(analytic: &[f32], fd: &[f32], what: &str) {
         let cos = vecmath::cosine(analytic, fd);
@@ -470,18 +473,19 @@ mod tests {
     #[test]
     fn hard_grad_matches_finite_differences() {
         let mut rng = Rng::new(31);
+        let mut ws = Workspace::new();
         let w = rand_vec(&mut rng, DIMS.params(), 0.5);
         let x = rand_vec(&mut rng, 4 * DIMS.d, 1.0);
         let y = vec![0i32, 2, 1, 0];
-        let (_, g) = loss_grad_hard(&DIMS, &w, &x, &y);
+        let (_, g) = loss_grad(&DIMS, &w, &x, &y, &mut ws);
         let eps = 1e-2f32;
         let mut fd = vec![0.0f32; w.len()];
         for j in 0..w.len() {
             let mut wp = w.clone();
             wp[j] += eps;
-            let (lp, _) = loss_grad_hard(&DIMS, &wp, &x, &y);
+            let (lp, _) = loss_grad(&DIMS, &wp, &x, &y, &mut ws);
             wp[j] = w[j] - eps;
-            let (lm, _) = loss_grad_hard(&DIMS, &wp, &x, &y);
+            let (lm, _) = loss_grad(&DIMS, &wp, &x, &y, &mut ws);
             fd[j] = (lp - lm) / (2.0 * eps);
         }
         assert_grad_close(&g, &fd, "hard gw");
@@ -490,21 +494,27 @@ mod tests {
     #[test]
     fn soft_grads_match_finite_differences() {
         let mut rng = Rng::new(32);
+        let mut ws = Workspace::new();
         let m = 2usize;
         let w = rand_vec(&mut rng, DIMS.params(), 0.5);
         let x = rand_vec(&mut rng, m * DIMS.d, 0.7);
         let dy = rand_vec(&mut rng, m * DIMS.c, 0.3);
-        let sg = soft_grads(&DIMS, &w, None, &x, &dy, m);
+        let sg = soft_grads(&DIMS, &w, None, &x, &dy, m, &mut ws);
         let eps = 1e-2f32;
 
-        let loss_at = |w: &[f32], x: &[f32], dy: &[f32]| soft_grads(&DIMS, w, None, x, dy, m).loss;
+        let loss_at = |w: &[f32], x: &[f32], dy: &[f32], ws: &mut Workspace| {
+            let sg = soft_grads(&DIMS, w, None, x, dy, m, ws);
+            let loss = sg.loss;
+            sg.release(ws);
+            loss
+        };
         let mut fd_w = vec![0.0f32; w.len()];
         for j in 0..w.len() {
             let mut wp = w.clone();
             wp[j] = w[j] + eps;
-            let lp = loss_at(&wp, &x, &dy);
+            let lp = loss_at(&wp, &x, &dy, &mut ws);
             wp[j] = w[j] - eps;
-            let lm = loss_at(&wp, &x, &dy);
+            let lm = loss_at(&wp, &x, &dy, &mut ws);
             fd_w[j] = (lp - lm) / (2.0 * eps);
         }
         assert_grad_close(&sg.gw, &fd_w, "soft gw");
@@ -513,9 +523,9 @@ mod tests {
         for j in 0..x.len() {
             let mut xp = x.clone();
             xp[j] = x[j] + eps;
-            let lp = loss_at(&w, &xp, &dy);
+            let lp = loss_at(&w, &xp, &dy, &mut ws);
             xp[j] = x[j] - eps;
-            let lm = loss_at(&w, &xp, &dy);
+            let lm = loss_at(&w, &xp, &dy, &mut ws);
             fd_x[j] = (lp - lm) / (2.0 * eps);
         }
         assert_grad_close(&sg.gx, &fd_x, "soft gx");
@@ -524,9 +534,9 @@ mod tests {
         for j in 0..dy.len() {
             let mut dyp = dy.clone();
             dyp[j] = dy[j] + eps;
-            let lp = loss_at(&w, &x, &dyp);
+            let lp = loss_at(&w, &x, &dyp, &mut ws);
             dyp[j] = dy[j] - eps;
-            let lm = loss_at(&w, &x, &dyp);
+            let lm = loss_at(&w, &x, &dyp, &mut ws);
             fd_y[j] = (lp - lm) / (2.0 * eps);
         }
         assert_grad_close(&sg.gdy, &fd_y, "soft gdy");
@@ -538,12 +548,13 @@ mod tests {
         // of the corresponding gradient along v — the second-order core
         // the 3SFC and FedSynth encoders stand on.
         let mut rng = Rng::new(33);
+        let mut ws = Workspace::new();
         let m = 2usize;
         let w = rand_vec(&mut rng, DIMS.params(), 0.5);
         let v = rand_vec(&mut rng, DIMS.params(), 0.3);
         let x = rand_vec(&mut rng, m * DIMS.d, 0.7);
         let dy = rand_vec(&mut rng, m * DIMS.c, 0.3);
-        let sg = soft_grads(&DIMS, &w, Some(&v), &x, &dy, m);
+        let sg = soft_grads(&DIMS, &w, Some(&v), &x, &dy, m, &mut ws);
 
         let eps = 1e-2f32;
         let mut wp = w.clone();
@@ -552,8 +563,8 @@ mod tests {
             wp[i] = w[i] + eps * v[i];
             wm[i] = w[i] - eps * v[i];
         }
-        let sp = soft_grads(&DIMS, &wp, None, &x, &dy, m);
-        let sm = soft_grads(&DIMS, &wm, None, &x, &dy, m);
+        let sp = soft_grads(&DIMS, &wp, None, &x, &dy, m, &mut ws);
+        let sm = soft_grads(&DIMS, &wm, None, &x, &dy, m, &mut ws);
         let fd = |a: &[f32], b: &[f32]| -> Vec<f32> {
             a.iter().zip(b.iter()).map(|(p, q)| (p - q) / (2.0 * eps)).collect()
         };
@@ -565,11 +576,13 @@ mod tests {
     #[test]
     fn sgd_step_is_w_minus_lr_grad() {
         let mut rng = Rng::new(34);
+        let mut ws = Workspace::new();
         let w = rand_vec(&mut rng, DIMS.params(), 0.5);
         let x = rand_vec(&mut rng, 3 * DIMS.d, 1.0);
         let y = vec![1i32, 0, 2];
-        let w1 = sgd_steps(&DIMS, &w, &x, &y, 1, 3, 0.1);
-        let (_, g) = loss_grad_hard(&DIMS, &w, &x, &y);
+        let mut w1 = vec![0.0f32; w.len()];
+        sgd_steps(&DIMS, &w, &x, &y, 1, 3, 0.1, &mut ws, &mut w1);
+        let (_, g) = loss_grad(&DIMS, &w, &x, &y, &mut ws);
         for i in 0..w.len() {
             assert_eq!(w1[i].to_bits(), (w[i] - 0.1 * g[i]).to_bits());
         }
@@ -580,6 +593,7 @@ mod tests {
         // Two well-separated clusters must be learnable in a few steps.
         let dims = MlpDims { d: 4, h: 8, c: 2 };
         let mut rng = Rng::new(35);
+        let mut ws = Workspace::new();
         let mut w = rand_vec(&mut rng, dims.params(), 0.3);
         let b = 8usize;
         let mut x = vec![0.0f32; b * dims.d];
@@ -592,16 +606,16 @@ mod tests {
                     if cls == 0 { 1.0 } else { -1.0 } + 0.1 * rng.normal_f32();
             }
         }
-        let (loss0, _) = loss_grad_hard(&dims, &w, &x, &y);
+        let (loss0, _) = loss_grad(&dims, &w, &x, &y, &mut ws);
         for _ in 0..200 {
-            let (_, g) = loss_grad_hard(&dims, &w, &x, &y);
+            let (_, g) = loss_grad(&dims, &w, &x, &y, &mut ws);
             for (wv, gv) in w.iter_mut().zip(g.iter()) {
                 *wv -= 0.5 * gv;
             }
         }
-        let (loss1, _) = loss_grad_hard(&dims, &w, &x, &y);
+        let (loss1, _) = loss_grad(&dims, &w, &x, &y, &mut ws);
         assert!(loss1 < loss0 * 0.2, "loss {loss0} -> {loss1}");
-        let (_, correct) = eval_batch(&dims, &w, &x, &y);
+        let (_, correct) = eval_batch(&dims, &w, &x, &y, &mut ws);
         assert_eq!(correct as usize, b);
     }
 
@@ -609,14 +623,15 @@ mod tests {
     fn eval_counts_and_sums() {
         let dims = MlpDims { d: 2, h: 3, c: 2 };
         let mut rng = Rng::new(36);
+        let mut ws = Workspace::new();
         let w = rand_vec(&mut rng, dims.params(), 0.4);
         let x = rand_vec(&mut rng, 5 * dims.d, 1.0);
         let y = vec![0i32, 1, 0, 1, 0];
-        let (loss, correct) = eval_batch(&dims, &w, &x, &y);
+        let (loss, correct) = eval_batch(&dims, &w, &x, &y, &mut ws);
         assert!(loss.is_finite() && loss > 0.0);
         assert!((0.0..=5.0).contains(&correct));
         // Σ per-sample loss ≥ B·min per-sample loss: sanity vs mean form.
-        let (mean_loss, _) = loss_grad_hard(&dims, &w, &x, &y);
+        let (mean_loss, _) = loss_grad(&dims, &w, &x, &y, &mut ws);
         assert!((loss / 5.0 - mean_loss).abs() < 1e-5);
     }
 }

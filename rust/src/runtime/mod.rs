@@ -21,12 +21,14 @@ pub mod backend;
 #[cfg(feature = "pjrt")]
 pub mod client;
 pub mod fedops;
+pub mod kernels;
 #[cfg(feature = "pjrt")]
 pub mod literal;
 pub mod mlp;
 pub mod native;
 
 pub use backend::{open_backend, open_backend_kind, Backend, BackendSpec, RuntimeStats};
+pub use kernels::Workspace;
 #[cfg(feature = "pjrt")]
 pub use client::{PjrtBackend, Runtime};
 pub use fedops::FedOps;

@@ -10,6 +10,14 @@
 //!
 //! `NativeBackend` is `Send` and construction touches no filesystem, so
 //! worker pools and bare containers can spin one up per thread for free.
+//!
+//! Each backend instance owns a [`Workspace`] scratch arena (behind the
+//! same single-thread `RefCell` discipline as the stats counters): every
+//! op's intermediates are pooled checkouts, so after one warm-up
+//! execution per op the only allocations left are the result vectors the
+//! [`Backend`] trait returns — `tests/alloc_count_test.rs` pins the
+//! exact counts. Worker pools get per-thread workspaces for free because
+//! each worker opens its own backend.
 
 use std::cell::RefCell;
 use std::path::PathBuf;
@@ -19,6 +27,7 @@ use anyhow::{bail, ensure, Result};
 
 use crate::model::{Manifest, ModelInfo, OpInfo};
 use crate::runtime::backend::{Backend, BackendSpec, RuntimeStats};
+use crate::runtime::kernels::Workspace;
 use crate::runtime::mlp::{self, MlpDims};
 use crate::util::rng::Rng;
 use crate::util::vecmath;
@@ -91,6 +100,8 @@ fn builtin_manifest() -> Manifest {
 pub struct NativeBackend {
     manifest: Manifest,
     stats: RefCell<RuntimeStats>,
+    /// Reusable scratch for every op — zero allocations after warm-up.
+    ws: RefCell<Workspace>,
 }
 
 impl Default for NativeBackend {
@@ -104,6 +115,7 @@ impl NativeBackend {
         NativeBackend {
             manifest: builtin_manifest(),
             stats: RefCell::new(RuntimeStats::default()),
+            ws: RefCell::new(Workspace::new()),
         }
     }
 
@@ -196,13 +208,23 @@ impl Backend for NativeBackend {
         ensure!(k >= 1 && ys.len() % k == 0, "ys len");
         let b = ys.len() / k;
         ensure!(xs.len() == k * b * dims.d, "xs len");
-        Ok(self.timed(|| mlp::sgd_steps(&dims, w, xs, ys, k, b, lr)))
+        Ok(self.timed(|| {
+            let mut ws = self.ws.borrow_mut();
+            let mut out = vec![0.0f32; w.len()];
+            mlp::sgd_steps(&dims, w, xs, ys, k, b, lr, &mut ws, &mut out);
+            out
+        }))
     }
 
     fn grad_batch(&self, model: &ModelInfo, w: &[f32], x: &[f32], y: &[i32]) -> Result<Vec<f32>> {
         let dims = self.dims(model)?;
         ensure!(x.len() == y.len() * dims.d, "x len");
-        Ok(self.timed(|| mlp::loss_grad_hard(&dims, w, x, y).1))
+        Ok(self.timed(|| {
+            let mut ws = self.ws.borrow_mut();
+            let mut gw = vec![0.0f32; dims.params()];
+            mlp::loss_grad_hard(&dims, w, x, y, &mut ws, &mut gw);
+            gw
+        }))
     }
 
     fn syn_step(
@@ -220,9 +242,10 @@ impl Backend for NativeBackend {
         ensure!(dx.len() == m * dims.d && dy.len() == m * dims.c, "syn shapes");
         ensure!(g_target.len() == model.params, "g_target len");
         Ok(self.timed(|| {
+            let mut ws = self.ws.borrow_mut();
             // Value pass: g = ∇_w L(D_syn, w) and the kernels' cosine
             // (ε = 1e-12 inside the rsqrt, matching python/compile).
-            let sg = mlp::soft_grads(&dims, w, None, dx, dy, m);
+            let sg = mlp::soft_grads(&dims, w, None, dx, dy, m, &mut ws);
             let g = &sg.gw;
             let dval = vecmath::dot(g, g_target);
             let na = vecmath::norm2(g);
@@ -238,13 +261,12 @@ impl Backend for NativeBackend {
                 0.0
             };
             let r3 = r * r * r;
-            let u: Vec<f32> = g
-                .iter()
-                .zip(g_target.iter())
-                .map(|(&gi, &ti)| (-sign * (r * ti as f64 - dval * nb * r3 * gi as f64)) as f32)
-                .collect();
+            let mut u = ws.take(g.len());
+            for (uv, (&gi, &ti)) in u.iter_mut().zip(g.iter().zip(g_target.iter())) {
+                *uv = (-sign * (r * ti as f64 - dval * nb * r3 * gi as f64)) as f32;
+            }
             // Tangent pass: ∇_{dx,dy} ⟨g, u⟩, plus the λ‖D‖² regularizer.
-            let tg = mlp::soft_grads(&dims, w, Some(&u), dx, dy, m);
+            let tg = mlp::soft_grads(&dims, w, Some(&u), dx, dy, m, &mut ws);
             let dx2: Vec<f32> = dx
                 .iter()
                 .zip(tg.gx_dot.iter())
@@ -255,6 +277,9 @@ impl Backend for NativeBackend {
                 .zip(tg.gdy_dot.iter())
                 .map(|(&yv, &gv)| yv - lr_syn * (gv + 2.0 * lambda * yv))
                 .collect();
+            ws.give(u);
+            sg.release(&mut ws);
+            tg.release(&mut ws);
             (dx2, dy2, cos)
         }))
     }
@@ -290,13 +315,25 @@ impl Backend for NativeBackend {
     ) -> Result<Vec<f32>> {
         let dims = self.dims(model)?;
         ensure!(dx.len() == m * dims.d && dy.len() == m * dims.c, "syn shapes");
-        Ok(self.timed(|| mlp::soft_grads(&dims, w, None, dx, dy, m).gw))
+        Ok(self.timed(|| {
+            let mut ws = self.ws.borrow_mut();
+            let sg = mlp::soft_grads(&dims, w, None, dx, dy, m, &mut ws);
+            // Move the gradient out (no [P] memcpy); recycle the rest.
+            let mlp::SoftGrads { gw, gx, gdy, gw_dot, gx_dot, gdy_dot, loss: _ } = sg;
+            for buf in [gx, gdy, gw_dot, gx_dot, gdy_dot] {
+                ws.give(buf);
+            }
+            gw
+        }))
     }
 
     fn eval_batch(&self, model: &ModelInfo, w: &[f32], x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
         let dims = self.dims(model)?;
         ensure!(x.len() == y.len() * dims.d, "x len");
-        Ok(self.timed(|| mlp::eval_batch(&dims, w, x, y)))
+        Ok(self.timed(|| {
+            let mut ws = self.ws.borrow_mut();
+            mlp::eval_batch(&dims, w, x, y, &mut ws)
+        }))
     }
 
     fn fedsynth_step(
@@ -316,12 +353,16 @@ impl Backend for NativeBackend {
         ensure!(dxs.len() == k * m * d && dys.len() == k * m * c, "fedsynth shapes");
         ensure!(g_target.len() == model.params, "g_target len");
         Ok(self.timed(|| {
+            let mut ws = self.ws.borrow_mut();
             // Forward: replay the K_sim inner steps, keeping each step's
             // starting weights for the backward sweep.
             let mut wcs: Vec<Vec<f32>> = Vec::with_capacity(k);
-            let mut wc = w.to_vec();
+            let mut wc = ws.take(w.len());
+            wc.copy_from_slice(w);
             for j in 0..k {
-                wcs.push(wc.clone());
+                let mut wj = ws.take(w.len());
+                wj.copy_from_slice(&wc);
+                wcs.push(wj);
                 let sg = mlp::soft_grads(
                     &dims,
                     &wc,
@@ -329,25 +370,31 @@ impl Backend for NativeBackend {
                     &dxs[j * m * d..(j + 1) * m * d],
                     &dys[j * m * c..(j + 1) * m * c],
                     m,
+                    &mut ws,
                 );
                 vecmath::axpy(-lr_inner, &sg.gw, &mut wc);
+                sg.release(&mut ws);
             }
             // fit = ‖(w − w_K) − g_target‖²; residual drives the adjoint.
-            let resid: Vec<f32> = w
-                .iter()
-                .zip(wc.iter())
-                .zip(g_target.iter())
-                .map(|((&w0, &wk), &t)| (w0 - wk) - t)
-                .collect();
+            let mut resid = ws.take(w.len());
+            for (rv, ((&w0, &wk), &t)) in resid
+                .iter_mut()
+                .zip(w.iter().zip(wc.iter()).zip(g_target.iter()))
+            {
+                *rv = (w0 - wk) - t;
+            }
             let fit = vecmath::norm2(&resid) as f32;
             // λ_K = ∂fit/∂w_K = −2·resid; walk the unroll backwards. Per
             // step: the synthetic-batch gradients are the cross second
             // derivatives ∇_{dx,dy}⟨∇_w L, λ⟩ scaled by −lr, and the
             // adjoint update needs the HVP ∇_w⟨∇_w L, λ⟩ — all three are
             // the tangents of one dual pass at (w_j, λ_{j+1}).
-            let mut lam: Vec<f32> = resid.iter().map(|&v| -2.0 * v).collect();
-            let mut gdxs = vec![0.0f32; k * m * d];
-            let mut gdys = vec![0.0f32; k * m * c];
+            let mut lam = ws.take(w.len());
+            for (lv, &rv) in lam.iter_mut().zip(resid.iter()) {
+                *lv = -2.0 * rv;
+            }
+            let mut gdxs = ws.take(k * m * d);
+            let mut gdys = ws.take(k * m * c);
             let mut norms = vec![0.0f32; k];
             for j in (0..k).rev() {
                 let sg = mlp::soft_grads(
@@ -357,6 +404,7 @@ impl Backend for NativeBackend {
                     &dxs[j * m * d..(j + 1) * m * d],
                     &dys[j * m * c..(j + 1) * m * c],
                     m,
+                    &mut ws,
                 );
                 let gdx = &mut gdxs[j * m * d..(j + 1) * m * d];
                 for (o, &t) in gdx.iter_mut().zip(sg.gx_dot.iter()) {
@@ -370,6 +418,7 @@ impl Backend for NativeBackend {
                     *o = -lr_inner * t;
                 }
                 vecmath::axpy(-lr_inner, &sg.gw_dot, &mut lam);
+                sg.release(&mut ws);
             }
             let dxs2: Vec<f32> = dxs
                 .iter()
@@ -381,6 +430,14 @@ impl Backend for NativeBackend {
                 .zip(gdys.iter())
                 .map(|(&y, &g)| y - lr_syn * g)
                 .collect();
+            ws.give(wc);
+            ws.give(resid);
+            ws.give(lam);
+            ws.give(gdxs);
+            ws.give(gdys);
+            for wj in wcs {
+                ws.give(wj);
+            }
             (dxs2, dys2, fit, norms)
         }))
     }
@@ -399,7 +456,9 @@ impl Backend for NativeBackend {
         let (d, c) = (dims.d, dims.c);
         ensure!(dxs.len() == k * m * d && dys.len() == k * m * c, "fedsynth shapes");
         Ok(self.timed(|| {
-            let mut wc = w.to_vec();
+            let mut ws = self.ws.borrow_mut();
+            let mut wc = ws.take(w.len());
+            wc.copy_from_slice(w);
             for j in 0..k {
                 let sg = mlp::soft_grads(
                     &dims,
@@ -408,10 +467,14 @@ impl Backend for NativeBackend {
                     &dxs[j * m * d..(j + 1) * m * d],
                     &dys[j * m * c..(j + 1) * m * c],
                     m,
+                    &mut ws,
                 );
                 vecmath::axpy(-lr_inner, &sg.gw, &mut wc);
+                sg.release(&mut ws);
             }
-            vecmath::sub(w, &wc)
+            let out = vecmath::sub(w, &wc);
+            ws.give(wc);
+            out
         }))
     }
 }
@@ -465,5 +528,22 @@ mod tests {
         let st = be.stats();
         assert_eq!(st.compiles, 0);
         assert_eq!(st.executions, 2);
+    }
+
+    #[test]
+    fn ops_are_pure_functions_of_inputs_despite_workspace_reuse() {
+        // The scratch pool must never leak state between ops: running an
+        // unrelated op in between cannot change a result bit.
+        let be = NativeBackend::new();
+        let model = be.manifest().model("mlp_small").unwrap().clone();
+        let w = be.load_init(&model).unwrap();
+        let x = vec![0.3f32; 8 * 64];
+        let y: Vec<i32> = (0..8).map(|i| (i % 8) as i32).collect();
+        let g1 = be.grad_batch(&model, &w, &x, &y).unwrap();
+        // Interleave other ops that churn the pool with different shapes.
+        be.eval_batch(&model, &w, &x[..64 * 4], &y[..4]).unwrap();
+        be.local_train(&model, 2, &w, &x, &y, 0.1).unwrap();
+        let g2 = be.grad_batch(&model, &w, &x, &y).unwrap();
+        assert_eq!(g1, g2, "grad_batch must be deterministic across pool reuse");
     }
 }

@@ -105,31 +105,28 @@ pub fn kth_magnitude(values: &[f32], k: usize) -> f32 {
     *kth
 }
 
-/// Top-k indices by |value|, ascending index order. O(n + k log k).
+/// Top-k indices by |value|, ascending index order. O(n + k log k): one
+/// `select_nth_unstable_by` partial selection over an index permutation —
+/// no full sort, no threshold re-scans, one allocation. Magnitude ties
+/// keep the *smallest* indices (matching the historical scan order, so
+/// selections are stable under permutation of the tie-free prefix).
 /// Total over NaN inputs: NaN coordinates lose to every finite one and
 /// only pad the result when fewer than k values are finite.
 pub fn topk_indices(values: &[f32], k: usize) -> Vec<u32> {
-    use std::cmp::Ordering;
-    let k = k.min(values.len()).max(1);
-    let thr = kth_magnitude(values, k);
-    let mut idx: Vec<u32> = Vec::with_capacity(k + 16);
-    // First take strictly-above-threshold, then fill ties at the threshold.
-    for (i, &v) in values.iter().enumerate() {
-        if mag_key(v).total_cmp(&thr) == Ordering::Greater {
-            idx.push(i as u32);
-        }
+    let n = values.len();
+    let k = k.min(n).max(1);
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    if k < n {
+        // Ascending by (magnitude, descending index): the k winners land
+        // in the tail, and boundary ties resolve toward smaller indices.
+        let split = n - k;
+        let _ = idx.select_nth_unstable_by(split, |&x, &y| {
+            mag_key(values[x as usize])
+                .total_cmp(&mag_key(values[y as usize]))
+                .then_with(|| y.cmp(&x))
+        });
+        idx.drain(..split);
     }
-    if idx.len() < k {
-        for (i, &v) in values.iter().enumerate() {
-            if mag_key(v).total_cmp(&thr) == Ordering::Equal {
-                idx.push(i as u32);
-                if idx.len() == k {
-                    break;
-                }
-            }
-        }
-    }
-    idx.truncate(k);
     idx.sort_unstable();
     idx
 }

@@ -1,0 +1,117 @@
+//! Allocation-count regression test for the native backend's zero-alloc
+//! op claim (EXPERIMENTS.md §Perf): after warm-up, every hot-path op's
+//! intermediates come from the backend's `Workspace` pool, so the only
+//! heap allocations left are the result vectors the `Backend` trait
+//! hands back to the caller. A counting global allocator pins the exact
+//! counts — any new `vec![...]` sneaking into the op bodies fails here.
+//!
+//! Everything runs inside ONE `#[test]` so no concurrent test body can
+//! perturb the global counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use fed3sfc::runtime::{Backend, NativeBackend};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+/// Allocations performed while running `f`.
+fn allocs_during<R>(f: impl FnOnce() -> R) -> (usize, R) {
+    let before = ALLOCS.load(Ordering::Relaxed);
+    let out = f();
+    (ALLOCS.load(Ordering::Relaxed) - before, out)
+}
+
+#[test]
+fn native_ops_allocate_only_their_results_after_warmup() {
+    let be = NativeBackend::new();
+    let model = be.manifest().model("mlp_small").unwrap().clone();
+    let w = be.load_init(&model).unwrap();
+    let d = model.feature_len();
+
+    let bsz = 8usize;
+    let x: Vec<f32> = (0..bsz * d).map(|i| ((i as f32) * 0.37).sin()).collect();
+    let y: Vec<i32> = (0..bsz).map(|i| (i % model.n_classes) as i32).collect();
+    let k = 2usize; // local_train consumes x as k=2 batches of 4
+    let mut dx = vec![0.25f32; d];
+    dx[0] = 1.0;
+    let dy = vec![0.0f32; model.n_classes];
+    let g_target = be.grad_batch(&model, &w, &x, &y).unwrap();
+
+    // Warm up every op a few times so the workspace pool reaches its
+    // steady state (capacities are monotone, so a handful of cycles in
+    // measurement order suffices).
+    for _ in 0..5 {
+        be.eval_batch(&model, &w, &x, &y).unwrap();
+        be.grad_batch(&model, &w, &x, &y).unwrap();
+        be.local_train(&model, k, &w, &x, &y, 0.1).unwrap();
+        be.syn_grad(&model, 1, &w, &dx, &dy).unwrap();
+        be.syn_step(&model, 1, &w, &g_target, &dx, &dy, 1.0, 0.0).unwrap();
+    }
+
+    // eval_batch returns scalars: fully zero-alloc.
+    let (n, _) = allocs_during(|| be.eval_batch(&model, &w, &x, &y).unwrap());
+    assert_eq!(n, 0, "eval_batch allocated {n} times (want 0)");
+
+    // grad_batch returns one [P] vector.
+    let (n, _) = allocs_during(|| be.grad_batch(&model, &w, &x, &y).unwrap());
+    assert_eq!(n, 1, "grad_batch allocated {n} times (want 1: the gradient)");
+
+    // local_train returns one [P] vector.
+    let (n, _) = allocs_during(|| be.local_train(&model, k, &w, &x, &y, 0.1).unwrap());
+    assert_eq!(n, 1, "local_train allocated {n} times (want 1: the weights)");
+
+    // syn_grad moves its [P] pool checkout out as the result, so each
+    // call consumes one pooled P-sized buffer. Drain the warm surplus
+    // first so the steady-state count (exactly one fresh [P] allocation
+    // per call, pool otherwise untouched) is deterministic.
+    for _ in 0..8 {
+        be.syn_grad(&model, 1, &w, &dx, &dy).unwrap();
+    }
+    let (n, _) = allocs_during(|| be.syn_grad(&model, 1, &w, &dx, &dy).unwrap());
+    assert_eq!(n, 1, "syn_grad allocated {n} times (want 1: the gradient)");
+
+    // Re-warm syn_step (the drain above consumed the pool's spare [P]
+    // buffers), then pin it: returns (dx', dy', cos) — two vectors.
+    for _ in 0..3 {
+        be.syn_step(&model, 1, &w, &g_target, &dx, &dy, 1.0, 0.0).unwrap();
+    }
+    let (n, _) =
+        allocs_during(|| be.syn_step(&model, 1, &w, &g_target, &dx, &dy, 1.0, 0.0).unwrap());
+    assert_eq!(n, 2, "syn_step allocated {n} times (want 2: dx' and dy')");
+
+    // fedsynth_step returns (dxs', dys', fit, norms) plus the unroll's
+    // bookkeeping spine — bounded, though not strictly output-only.
+    let dxs = [&dx[..], &dx[..]].concat();
+    let dys = vec![0.0f32; 2 * model.n_classes];
+    for _ in 0..5 {
+        be.fedsynth_step(&model, 2, 1, &w, &g_target, &dxs, &dys, 0.1, 1.0).unwrap();
+    }
+    let (n, _) = allocs_during(|| {
+        be.fedsynth_step(&model, 2, 1, &w, &g_target, &dxs, &dys, 0.1, 1.0).unwrap()
+    });
+    assert!(n <= 8, "fedsynth_step allocated {n} times (want ≤ 8)");
+}

@@ -1,0 +1,98 @@
+//! Kernel-parity suite: the register-blocked GEMM kernels
+//! (`runtime::kernels`) must match the retained naive oracles
+//! (`runtime::kernels::naive`) to ≤ 1e-5 relative error on random shapes,
+//! including ragged dimensions that are not multiples of the 4×8 register
+//! tile — every tail path (row strip, column strip, depth remainder) gets
+//! exercised by the size sweep.
+
+use fed3sfc::runtime::kernels;
+use fed3sfc::testing::prop::check;
+
+fn rel_close(got: &[f32], want: &[f32]) -> Result<(), String> {
+    if got.len() != want.len() {
+        return Err(format!("len {} vs {}", got.len(), want.len()));
+    }
+    for (i, (&g, &w)) in got.iter().zip(want.iter()).enumerate() {
+        let tol = 1e-5f32 * w.abs().max(1.0);
+        if (g - w).abs() > tol {
+            return Err(format!("[{i}] tiled {g} vs naive {w}"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_mm_matches_naive_oracle() {
+    check("mm-parity", 80, |c| {
+        let m = c.len(13);
+        let k = c.len(48);
+        let n = c.len(41);
+        let a = c.vec_f32(m * k, 1.0);
+        let b = c.vec_f32(k * n, 1.0);
+        let mut got = vec![0.0f32; m * n];
+        let mut want = vec![0.0f32; m * n];
+        kernels::mm(&a, &b, m, k, n, &mut got);
+        kernels::naive::mm(&a, &b, m, k, n, &mut want);
+        rel_close(&got, &want).map_err(|e| format!("mm {m}x{k}x{n} {e}"))
+    });
+}
+
+#[test]
+fn prop_mm_at_acc_matches_naive_oracle() {
+    check("mm-at-parity", 80, |c| {
+        let k = c.len(13);
+        let m = c.len(48);
+        let n = c.len(41);
+        let a = c.vec_f32(k * m, 1.0);
+        let b = c.vec_f32(k * n, 1.0);
+        // Accumulate onto an identical random base to cover the `+=`
+        // contract, not just the zero-start case.
+        let base = c.vec_f32(m * n, 1.0);
+        let mut got = base.clone();
+        let mut want = base;
+        kernels::mm_at_acc(&a, &b, k, m, n, &mut got);
+        kernels::naive::mm_at_acc(&a, &b, k, m, n, &mut want);
+        rel_close(&got, &want).map_err(|e| format!("mm_at {k}x{m}x{n} {e}"))
+    });
+}
+
+#[test]
+fn prop_mm_bt_acc_matches_naive_oracle() {
+    check("mm-bt-parity", 80, |c| {
+        let m = c.len(13);
+        let k = c.len(48);
+        let n = c.len(41);
+        let a = c.vec_f32(m * k, 1.0);
+        let b = c.vec_f32(n * k, 1.0);
+        let base = c.vec_f32(m * n, 1.0);
+        let mut got = base.clone();
+        let mut want = base;
+        kernels::mm_bt_acc(&a, &b, m, k, n, &mut got);
+        kernels::naive::mm_bt_acc(&a, &b, m, k, n, &mut want);
+        rel_close(&got, &want).map_err(|e| format!("mm_bt {m}x{k}x{n} {e}"))
+    });
+}
+
+#[test]
+fn tile_boundary_shapes_exact_paths() {
+    // Deterministic sweep across the exact tile boundaries: 1 below, at,
+    // and 1 above the 4-row / 8-column / 4-lane tile sizes.
+    for &m in &[1usize, 3, 4, 5, 8] {
+        for &k in &[1usize, 3, 4, 5, 16] {
+            for &n in &[1usize, 7, 8, 9, 16] {
+                let a: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.7).sin()).collect();
+                let b: Vec<f32> = (0..k * n).map(|i| (i as f32 * 0.3).cos()).collect();
+                let mut got = vec![0.0f32; m * n];
+                let mut want = vec![0.0f32; m * n];
+                kernels::mm(&a, &b, m, k, n, &mut got);
+                kernels::naive::mm(&a, &b, m, k, n, &mut want);
+                for (i, (&g, &w)) in got.iter().zip(want.iter()).enumerate() {
+                    assert!(
+                        (g - w).abs() <= 1e-5 * w.abs().max(1.0),
+                        "mm {m}x{k}x{n} [{i}]: {g} vs {w}"
+                    );
+                }
+            }
+        }
+    }
+}
