@@ -1,0 +1,88 @@
+//! Event-driven sessions on a jittery edge network: the same workload
+//! under the three aggregation policies — synchronous cohort barrier,
+//! semi-sync deadline, and FedBuff-style buffered asynchrony — compared
+//! on *virtual* time-to-accuracy.
+//!
+//! Every client gets its own link (base edge preset × a seed-pinned
+//! jitter factor), every message is delivered on the simnet virtual
+//! clock, and stragglers behave per policy: the barrier waits for them,
+//! the deadline carries them over with a staleness discount, the async
+//! buffer absorbs them. Runs on the pure-Rust native backend in a bare
+//! container.
+//!
+//!     cargo run --release --example async_edge
+//!
+//! Scale knobs (env): ROUNDS (default 8), CLIENTS (8), TRAIN (400),
+//! THREADS (0 = all cores).
+
+use fed3sfc::bench::env_usize;
+use fed3sfc::config::{CompressorKind, DatasetKind, SessionKind};
+use fed3sfc::coordinator::experiment::Experiment;
+use fed3sfc::runtime::{open_backend, Backend};
+
+fn main() -> anyhow::Result<()> {
+    let rounds = env_usize("ROUNDS", 8);
+    let clients = env_usize("CLIENTS", 8);
+    let train = env_usize("TRAIN", 400);
+    let threads = env_usize("THREADS", 0);
+
+    println!(
+        "== event-driven sessions on a jittery edge link ({clients} clients, {rounds} steps) =="
+    );
+    let sessions = [
+        (SessionKind::Sync, "barrier on the full cohort"),
+        (SessionKind::Deadline, "aggregate whatever arrived each 62.5 ms"),
+        (SessionKind::Async, "aggregate every 3 arrivals, stale-discounted"),
+    ];
+    for (session, blurb) in sessions {
+        let builder = Experiment::builder()
+            .name(format!("async_edge-{}", session.name()))
+            .dataset(DatasetKind::SynthSmall)
+            .compressor(CompressorKind::ThreeSfc)
+            .clients(clients)
+            .rounds(rounds)
+            .lr(0.05)
+            .syn_steps(10)
+            .train_samples(train)
+            .test_samples(100)
+            .threads(threads)
+            // Per-client bandwidth spread of ±60% around the edge preset
+            // (10 Mbps up / 50 Mbps down / 30 ms), on a dedicated seeded
+            // stream — the same five slow clients in every run.
+            .jitter(0.6)
+            .session(session)
+            .deadline_s(0.0625)
+            .buffer_k(3)
+            .staleness_decay(0.5);
+        let backend = open_backend(builder.config())?;
+        let mut exp = builder.build(backend.as_ref())?;
+        println!(
+            "\n-- session = {} ({blurb}; {} backend) --",
+            session.name(),
+            backend.backend_name()
+        );
+        for _ in 0..rounds {
+            let r = exp.run_round()?;
+            println!(
+                "step {:>2}: acc {:.3}  loss {:.3}  aggregated {:>2} upload(s)  stale {:.2}  \
+                 vtime {:>6.2}s  (+{:.3}s)",
+                r.round, r.test_acc, r.test_loss, r.n_selected, r.stale_mean, r.sim_time_s,
+                r.comm_time_s
+            );
+        }
+        let last = exp.metrics.last().unwrap();
+        println!(
+            "=> {}: best acc {:.3} after {:.2} virtual seconds, {} B uploaded",
+            session.name(),
+            exp.metrics.best_acc(),
+            last.sim_time_s,
+            exp.traffic().up_bytes
+        );
+    }
+    println!(
+        "\nReading the table: sync pays the slowest straggler every step; the deadline \
+         session trades staleness for a fixed cadence; the async session keeps every \
+         link busy. See EXPERIMENTS.md §Sessions for the protocol."
+    );
+    Ok(())
+}

@@ -60,7 +60,7 @@ fn main() -> Result<()> {
             .build(backend.as_ref())?;
         let recs = exp.run()?;
         let last = recs.last().unwrap();
-        let t = exp.traffic;
+        let t = exp.traffic();
         println!(
             "{:<10} {:>10.4} {:>10.4} {:>11.1}x {:>14} {:>11.1}s",
             method.name(),

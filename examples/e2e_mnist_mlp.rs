@@ -61,7 +61,7 @@ fn main() -> anyhow::Result<()> {
             }
         }
         exp.metrics.flush()?;
-        let t = exp.traffic;
+        let t = exp.traffic();
         println!(
             "{}: best acc {:.4}, wall {:.1}s, upload {} B, modeled edge-link comm {:.1}s\n",
             method.name(),

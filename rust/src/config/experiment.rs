@@ -173,6 +173,48 @@ impl NetworkKind {
     }
 }
 
+/// How the server turns client uploads into global steps (see
+/// `coordinator::policy`). All three run on the simnet virtual clock;
+/// they differ in *when* the server aggregates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SessionKind {
+    /// Barrier on the selected cohort: aggregate when every selected
+    /// upload has arrived (the paper's protocol; default — reproduces
+    /// the synchronous round loop bit-for-bit).
+    Sync,
+    /// Semi-synchronous: aggregate whatever arrived within `deadline_s`
+    /// virtual seconds of the broadcast; stragglers' uploads carry over
+    /// into the next aggregation with a staleness discount.
+    Deadline,
+    /// FedBuff-style buffered asynchrony: aggregate every `buffer_k`
+    /// arrivals with staleness-discounted weights; finished clients are
+    /// immediately re-dispatched on the current model. The scheduler is
+    /// consulted once, at session start: its cohort becomes the fixed
+    /// in-flight set (FedBuff's "M clients training concurrently"), so
+    /// a partial-participation schedule caps concurrency rather than
+    /// rotating participants.
+    Async,
+}
+
+impl SessionKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "sync" | "synchronous" => SessionKind::Sync,
+            "deadline" | "semi_sync" | "semisync" => SessionKind::Deadline,
+            "async" | "buffered_async" | "fedbuff" => SessionKind::Async,
+            _ => bail!("unknown session mode '{s}' (want sync|deadline|async)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SessionKind::Sync => "sync",
+            SessionKind::Deadline => "deadline",
+            SessionKind::Async => "async",
+        }
+    }
+}
+
 /// Which compute backend executes the fed-ops (see `runtime::backend`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum BackendKind {
@@ -305,6 +347,21 @@ pub struct ExperimentConfig {
     pub net_up_mbps: f64,
     pub net_down_mbps: f64,
     pub net_latency_ms: f64,
+    /// Per-client bandwidth spread in [0, 1): each client's up/down rate
+    /// is scaled by a factor drawn from `[1 − jitter, 1 + jitter]` on a
+    /// dedicated RNG stream (`[network] jitter`). 0 = homogeneous links.
+    pub net_jitter: f64,
+    /// Aggregation policy for the event-driven session (`[session]`
+    /// table / `--session`).
+    pub session: SessionKind,
+    /// Semi-sync aggregation deadline in virtual seconds after each
+    /// broadcast (`session = "deadline"` only).
+    pub deadline_s: f64,
+    /// Aggregate every K arrivals (`session = "async"` only).
+    pub buffer_k: usize,
+    /// Staleness discount base γ ∈ (0, 1]: an update `s` model versions
+    /// old is aggregation-weighted by `|D_i| · γ^s` (deadline/async).
+    pub staleness_decay: f64,
     /// Worker threads for the per-round client fan-out (`[runtime]`
     /// table / `--threads`): `0` = auto (available parallelism, or the
     /// `FED3SFC_THREADS` env var when set), `1` = the sequential seed
@@ -358,6 +415,11 @@ impl Default for ExperimentConfig {
             net_up_mbps: 10.0,
             net_down_mbps: 50.0,
             net_latency_ms: 30.0,
+            net_jitter: 0.0,
+            session: SessionKind::Sync,
+            deadline_s: 0.5,
+            buffer_k: 1,
+            staleness_decay: 0.5,
             threads: 0,
             backend: BackendKind::Auto,
             init_weights: None,
@@ -468,6 +530,18 @@ impl ExperimentConfig {
         if self.net_up_mbps <= 0.0 || self.net_down_mbps <= 0.0 || self.net_latency_ms < 0.0 {
             bail!("network rates must be positive and latency non-negative");
         }
+        if !(0.0..1.0).contains(&self.net_jitter) {
+            bail!("network jitter must be in [0, 1), got {}", self.net_jitter);
+        }
+        if self.deadline_s <= 0.0 {
+            bail!("session deadline_s must be positive, got {}", self.deadline_s);
+        }
+        if self.buffer_k == 0 {
+            bail!("session buffer_k must be >= 1");
+        }
+        if !(self.staleness_decay > 0.0 && self.staleness_decay <= 1.0) {
+            bail!("staleness_decay must be in (0, 1], got {}", self.staleness_decay);
+        }
         Ok(())
     }
 
@@ -515,6 +589,15 @@ impl ExperimentConfig {
                 "network.up_mbps" => self.net_up_mbps = v.as_f64()?,
                 "network.down_mbps" => self.net_down_mbps = v.as_f64()?,
                 "network.latency_ms" => self.net_latency_ms = v.as_f64()?,
+                "jitter" | "network.jitter" => self.net_jitter = v.as_f64()?,
+                "session.mode" | "session.kind" => {
+                    self.session = SessionKind::parse(v.as_str()?)?
+                }
+                "deadline_s" | "session.deadline_s" => self.deadline_s = v.as_f64()?,
+                "buffer_k" | "session.buffer_k" => self.buffer_k = v.as_i64()? as usize,
+                "staleness_decay" | "session.staleness_decay" => {
+                    self.staleness_decay = v.as_f64()?
+                }
                 "threads" | "runtime.threads" => self.threads = v.as_i64()? as usize,
                 "backend" | "runtime.backend" => {
                     self.backend = BackendKind::parse(v.as_str()?)?
@@ -677,6 +760,50 @@ mod tests {
         assert!(ExperimentConfig::from_toml_str("[server_opt]\nmomentum = 1.0").is_err());
         assert!(ExperimentConfig::from_toml_str("[network]\nkind = \"carrier_pigeon\"").is_err());
         assert!(ExperimentConfig::from_toml_str("server_lr = 0.0").is_err());
+    }
+
+    #[test]
+    fn session_toml_table() {
+        let cfg = ExperimentConfig::from_toml_str(
+            r#"
+            clients = 40
+
+            [session]
+            mode = "deadline"
+            deadline_s = 0.25
+            staleness_decay = 0.8
+
+            [network]
+            kind = "edge"
+            jitter = 0.5
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.session, SessionKind::Deadline);
+        assert_eq!(cfg.deadline_s, 0.25);
+        assert_eq!(cfg.staleness_decay, 0.8);
+        assert_eq!(cfg.net_jitter, 0.5);
+        // Async spelling + bare keys work too.
+        let cfg = ExperimentConfig::from_toml_str(
+            "[session]\nkind = \"fedbuff\"\nbuffer_k = 4\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.session, SessionKind::Async);
+        assert_eq!(cfg.buffer_k, 4);
+        for kind in [SessionKind::Sync, SessionKind::Deadline, SessionKind::Async] {
+            assert_eq!(SessionKind::parse(kind.name()).unwrap(), kind);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_session_values() {
+        assert!(ExperimentConfig::from_toml_str("[session]\nmode = \"psychic\"").is_err());
+        assert!(ExperimentConfig::from_toml_str("[session]\ndeadline_s = 0.0").is_err());
+        assert!(ExperimentConfig::from_toml_str("[session]\nbuffer_k = 0").is_err());
+        assert!(ExperimentConfig::from_toml_str("[session]\nstaleness_decay = 0.0").is_err());
+        assert!(ExperimentConfig::from_toml_str("[session]\nstaleness_decay = 1.5").is_err());
+        assert!(ExperimentConfig::from_toml_str("[network]\njitter = 1.0").is_err());
+        assert!(ExperimentConfig::from_toml_str("[network]\njitter = -0.1").is_err());
     }
 
     #[test]

@@ -6,6 +6,6 @@ pub mod toml;
 
 pub use experiment::{
     BackendKind, CompressorKind, DatasetKind, ExperimentConfig, NetworkKind, ScheduleKind,
-    ServerOptKind,
+    ServerOptKind, SessionKind,
 };
 pub use toml::{parse_toml, TomlValue};

@@ -1,23 +1,27 @@
-//! The experiment driver: wires dataset → partition → scheduler → clients
-//! → compressor → server-optimizer into the paper's training loop
-//! (Algorithm 1), generalized into a composable round engine.
+//! The experiment driver: wires dataset → partition → clients →
+//! compressor → event-driven [`FedServer`] into the paper's training
+//! loop (Algorithm 1), generalized into message-passing federation
+//! sessions.
 //!
-//! Per round: the [`ClientScheduler`] picks the participating set, each
-//! selected client trains locally and uploads a compressed payload, the
-//! server aggregates over the *selected* clients only and steps through
-//! its [`crate::coordinator::ServerOptimizer`], and the [`NetworkModel`]
-//! converts the round's
-//! payload sizes into a modeled `comm_time_s` (slowest-selected-client
-//! semantics). Skipped clients keep all state — in particular their
-//! error-feedback memory — untouched until their next participation.
+//! [`Experiment::run_round`] is a thin driver: it pumps
+//! [`FedServer::next_directive`] — computing each
+//! [`Directive::Dispatch`] batch (local training + encode, fanned out
+//! over a [`WorkerPool`] when `threads > 1`) and answering with
+//! [`crate::coordinator::protocol::Upload`] envelopes — until one
+//! aggregation [`Directive::Step`] completes, then evaluates and
+//! records. *When* arrivals become a step is the session's
+//! [`crate::coordinator::AggregationPolicy`] (`[session] mode`):
+//! synchronous cohort barriers reproduce the classic loop bit-for-bit,
+//! deadline and buffered-async sessions run on the same driver with the
+//! simnet virtual clock as their only time source. Skipped clients keep
+//! all state — in particular their error-feedback memory — untouched
+//! until their next participation.
 //!
-//! The per-client work (local training + the S-step 3SFC encoder, the
-//! dominant cost) fans out over a [`WorkerPool`] when `threads > 1`; see
-//! [`crate::coordinator::parallel`] for the determinism contract. The
-//! round loop itself runs in three phases: sequential batch sampling in
-//! selection order, parallel train-and-compress into selection-order
-//! slots, then sequential state write-back and accounting — so records
-//! are bit-identical for every thread count.
+//! Determinism: batches are sampled sequentially in dispatch order,
+//! per-client work fans out into dispatch-order slots (see
+//! [`crate::coordinator::parallel`]), and state write-back happens in
+//! slot order before uploads are submitted — so trajectories are
+//! bit-identical for every thread count, in every session mode.
 //!
 //! Construct experiments with [`ExperimentBuilder`] (or
 //! [`Experiment::new`] from a finished [`ExperimentConfig`]).
@@ -30,56 +34,70 @@ use anyhow::Result;
 use crate::compress::{self, Compressor};
 use crate::config::{
     BackendKind, CompressorKind, DatasetKind, ExperimentConfig, NetworkKind, ScheduleKind,
-    ServerOptKind,
+    ServerOptKind, SessionKind,
 };
+use crate::coordinator::fedserver::{Directive, FedServer};
 use crate::coordinator::opt::build_server_opt;
 use crate::coordinator::parallel::{run_client, ClientJob, ClientUpdate, WorkerPool};
-use crate::coordinator::schedule::{build_scheduler, ClientScheduler};
+use crate::coordinator::policy::build_policy;
+use crate::coordinator::protocol::{Broadcast, ClientMsg, Upload};
+use crate::coordinator::schedule::build_scheduler;
 use crate::coordinator::{ClientState, MetricsSink, Server, Traffic};
 use crate::data::{dirichlet_partition, Dataset};
 use crate::runtime::{Backend, FedOps, RuntimeStats};
-use crate::simnet::NetworkModel;
 use crate::util::rng::Rng;
 
-/// One round's observables.
+/// One aggregation step's observables ("round" in the synchronous
+/// protocol; one server step in deadline/async sessions).
 #[derive(Clone, Copy, Debug)]
 pub struct RoundRecord {
     pub round: usize,
     pub test_acc: f64,
     pub test_loss: f64,
-    /// Clients that participated this round (= n_clients under full
-    /// participation).
+    /// Clients whose uploads were aggregated this step (= n_clients
+    /// under synchronous full participation).
     pub n_selected: usize,
     pub up_bytes_round: u64,
     pub up_bytes_cum: u64,
     /// Mean per-client compression efficiency cos(ĝ, g+e) (Fig 7).
     pub efficiency: f64,
-    /// Mean compression ratio (× vs dense) over this round's payloads.
+    /// Mean compression ratio (× vs dense) over this step's payloads.
     pub ratio: f64,
-    /// Modeled communication time for this round under the configured
-    /// link: slowest selected upload + broadcast + latency.
+    /// Virtual time this step consumed under the configured link model
+    /// (for a synchronous round: slowest selected upload + broadcast +
+    /// latency).
     pub comm_time_s: f64,
+    /// Cumulative virtual-clock time at which this step completed.
+    pub sim_time_s: f64,
+    /// Mean staleness (model versions) of the aggregated updates —
+    /// always 0 in synchronous sessions.
+    pub stale_mean: f64,
+    /// Wall-clock milliseconds of client compute + aggregation only;
+    /// evaluation is reported separately in `eval_ms` so eval cadence
+    /// (`eval_every`) never pollutes per-round throughput numbers.
     pub wall_ms: f64,
+    /// Wall-clock milliseconds spent evaluating this round (≈ 0 when
+    /// the round carried the previous evaluation forward).
+    pub eval_ms: f64,
 }
 
 /// A fully-wired FL experiment.
 pub struct Experiment<'a> {
     pub cfg: ExperimentConfig,
     pub ops: FedOps<'a>,
-    pub server: Server,
+    /// The event-driven server (global model, scheduler, aggregation
+    /// policy, virtual clock, traffic accounting).
+    pub fed: FedServer,
     pub clients: Vec<ClientState>,
-    pub scheduler: Box<dyn ClientScheduler>,
     pub compressor: Box<dyn Compressor>,
-    pub net: NetworkModel,
     pub train: Dataset,
     pub test: Dataset,
-    pub traffic: Traffic,
     pub metrics: MetricsSink,
-    /// The clients that participated in the most recent round
+    /// The clients aggregated in the most recent step
     /// (tests/diagnostics).
     pub last_selected: Vec<usize>,
-    /// Worker pool for the per-round client fan-out; `None` runs the
-    /// sequential (seed-exact) path.
+    /// Worker pool for the dispatch-batch client fan-out; `None` runs
+    /// the sequential (seed-exact) path.
     pool: Option<WorkerPool>,
 }
 
@@ -133,7 +151,21 @@ impl<'a> Experiment<'a> {
         };
         let scheduler = build_scheduler(&cfg, &root);
         let server = Server::with_optimizer(w0, build_server_opt(&cfg));
-        let net = cfg.network_model();
+        // Per-client links on a dedicated stream: `[network] jitter`
+        // spreads bandwidth without perturbing any other randomness.
+        let mut link_rng = root.split(0x11A7_71E5);
+        let links = cfg
+            .network_model()
+            .client_links(cfg.n_clients, cfg.net_jitter, &mut link_rng);
+        let active: Vec<bool> = clients.iter().map(|c| c.n_samples > 0).collect();
+        let fed = FedServer::new(
+            server,
+            scheduler,
+            build_policy(&cfg),
+            links,
+            active,
+            model.params,
+        );
         let compressor = compress::build(&cfg, model);
         let metrics = MetricsSink::new(&cfg.metrics_path)?;
         // One worker per thread, never more workers than clients; a
@@ -151,18 +183,20 @@ impl<'a> Experiment<'a> {
         Ok(Experiment {
             cfg,
             ops,
-            server,
+            fed,
             clients,
-            scheduler,
             compressor,
-            net,
             train,
             test,
-            traffic: Traffic::default(),
             metrics,
             last_selected: Vec::new(),
             pool,
         })
+    }
+
+    /// Cumulative wire traffic (owned by the [`FedServer`]).
+    pub fn traffic(&self) -> Traffic {
+        self.fed.traffic
     }
 
     /// Number of threads executing clients each round (1 = sequential).
@@ -176,38 +210,88 @@ impl<'a> Experiment<'a> {
         self.pool.as_ref().map(|p| p.stats())
     }
 
-    /// Run one communication round; returns the record (evaluation only on
-    /// eval rounds, otherwise acc/loss carry the last evaluation — seeded
-    /// with a real round-0 evaluation of the initial weights).
+    /// Run the session until one aggregation step completes; returns the
+    /// record (evaluation only on eval rounds, otherwise acc/loss carry
+    /// the last evaluation — seeded with a real round-0 evaluation of
+    /// the initial weights).
     pub fn run_round(&mut self) -> Result<RoundRecord> {
         let t0 = Instant::now();
-        let model = self.ops.model;
+        // Fallback evaluation target for a non-eval first record: the
+        // pre-step weights (= the initial weights, since no step has
+        // been applied before the first record exists).
+        let w_before: Option<Vec<f32>> = if self.metrics.records.is_empty() {
+            Some(self.fed.server.w.clone())
+        } else {
+            None
+        };
+
+        // Pump the server: compute every dispatch batch it emits until
+        // its policy turns arrivals into an aggregation step.
+        let summary = loop {
+            match self.fed.next_directive()? {
+                Directive::Dispatch(bcasts) => self.compute_and_submit(&bcasts)?,
+                Directive::Step(s) => break s,
+            }
+        };
+        // Snapshot compute+aggregate time *before* evaluation so eval
+        // cadence never pollutes per-round throughput numbers.
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        let round = summary.round;
+        let t_eval = Instant::now();
+        let (test_loss, test_acc) = if round % self.cfg.eval_every.max(1) == 0 {
+            self.ops
+                .eval_dataset(&self.fed.server.w, &self.test.features, &self.test.labels)?
+        } else {
+            match self.metrics.last() {
+                Some(r) => (r.test_loss, r.test_acc),
+                None => {
+                    let w0 = w_before.as_ref().expect("first record snapshots pre-step weights");
+                    self.ops
+                        .eval_dataset(w0, &self.test.features, &self.test.labels)?
+                }
+            }
+        };
+        let eval_ms = t_eval.elapsed().as_secs_f64() * 1e3;
+
+        let n_selected = summary.clients.len();
+        self.last_selected = summary.clients;
+        let rec = RoundRecord {
+            round,
+            test_acc,
+            test_loss,
+            n_selected,
+            up_bytes_round: summary.up_bytes_step,
+            up_bytes_cum: self.fed.traffic.up_bytes,
+            efficiency: summary.efficiency,
+            ratio: summary.ratio,
+            comm_time_s: summary.comm_time_s,
+            sim_time_s: summary.sim_time_s,
+            stale_mean: summary.stale_mean,
+            wall_ms,
+            eval_ms,
+        };
+        self.metrics.push(rec)?;
+        Ok(rec)
+    }
+
+    /// Execute one dispatch batch: sample local batches sequentially in
+    /// dispatch order, fan train-and-compress out over the pool (bit-
+    /// identical to the sequential path — same `run_client`, results in
+    /// dispatch-order slots), write client state back in slot order, and
+    /// answer the server with one upload envelope per client.
+    fn compute_and_submit(&mut self, bcasts: &[Broadcast]) -> Result<()> {
         let k = self.cfg.k_local;
-        let b = model.train_batch;
-        // One clone of the weights per round, shared by both execution
-        // paths (and the pool workers) through the Arc.
-        let w_global: Arc<Vec<f32>> = Arc::new(self.server.w.clone());
+        let b = self.ops.model.train_batch;
+        debug_assert!(!bcasts.is_empty(), "dispatch batches are never empty");
+        // All broadcasts in a batch share one model version.
+        let w_global: Arc<Vec<f32>> = Arc::clone(&bcasts[0].w);
 
-        let selected = self.scheduler.select(self.server.round, self.clients.len());
-        // Zero-sample clients (possible only when a best-effort partition
-        // cannot give everyone data) carry zero aggregation weight: skip
-        // them instead of panicking in empty-pool sampling or a
-        // zero-total aggregate.
-        let active: Vec<usize> = selected
-            .iter()
-            .copied()
-            .filter(|&ci| self.clients[ci].n_samples > 0)
-            .collect();
-
-        // Phase 1 (sequential, selection order): draw each active
-        // client's local batches and snapshot the state its job needs —
-        // the data-loader streams advance exactly as in the sequential
-        // loop, independent of thread count.
-        let mut jobs: Vec<ClientJob> = Vec::with_capacity(active.len());
-        for (slot, &ci) in active.iter().enumerate() {
-            let client = &mut self.clients[ci];
+        let mut jobs: Vec<ClientJob> = Vec::with_capacity(bcasts.len());
+        for (slot, bc) in bcasts.iter().enumerate() {
+            let client = &mut self.clients[bc.client];
             let (xs, ys) = client.sample_round(&self.train, k, b);
-            // Clone (don't take) the EF memory: if the round errors out
+            // Clone (don't take) the EF memory: if the batch errors out
             // mid-flight the client must keep its accumulated error, not
             // be silently reset to zeros.
             let ef = if self.cfg.error_feedback {
@@ -225,10 +309,6 @@ impl<'a> Experiment<'a> {
             });
         }
 
-        // Phase 2 (parallel): train + compress every client. Updates come
-        // back in slots indexed by selection order; per-client math is
-        // identical on both paths (same `run_client`), so the trajectory
-        // is bit-identical for any thread count.
         let updates: Vec<ClientUpdate> = match &self.pool {
             Some(pool) if jobs.len() > 1 => {
                 pool.run_clients(Arc::clone(&w_global), jobs)?
@@ -241,74 +321,26 @@ impl<'a> Experiment<'a> {
                 .collect::<Result<Vec<_>>>()?,
         };
 
-        // Phase 3 (sequential, selection order): write client state back
-        // and account traffic/efficiency exactly as the sequential loop
-        // did.
-        let mut recons: Vec<Vec<f32>> = Vec::with_capacity(active.len());
-        let mut weights: Vec<f32> = Vec::with_capacity(active.len());
-        let mut up_bytes_each: Vec<u64> = Vec::with_capacity(active.len());
-        let mut round_bytes = 0u64;
-        let mut eff_sum = 0.0f64;
-        let mut ratio_sum = 0.0f64;
         for u in updates {
-            let client = &mut self.clients[active[u.slot]];
+            let bc = &bcasts[u.slot];
+            let client = &mut self.clients[bc.client];
             if self.cfg.error_feedback {
                 client.ef = u.ef;
             }
             client.rng = u.rng;
             client.rounds_participated += 1;
-
-            round_bytes += u.wire_bytes;
-            up_bytes_each.push(u.wire_bytes);
-            ratio_sum += u.ratio;
-            eff_sum += u.efficiency;
-            self.traffic.record_upload(u.wire_bytes as usize);
-            recons.push(u.recon);
-            weights.push(u.weight);
+            let _ack = self.fed.submit_upload(ClientMsg::Upload(Upload {
+                client: bc.client,
+                round: bc.round,
+                sent_at: bc.recv_at,
+                payload: u.payload,
+                recon: u.recon,
+                weight: u.weight,
+                efficiency: u.efficiency,
+                ratio: u.ratio,
+            }))?;
         }
-
-        // Aggregation over the selected set + server-optimizer step
-        // (a no-op round if every selected client was skipped).
-        self.server.apply_round(&recons, &weights);
-        self.traffic.record_broadcast(model.params, active.len());
-        let comm_time_s = self
-            .net
-            .round_time_slowest(&up_bytes_each, (4 * model.params) as u64);
-        self.traffic.record_comm_time(comm_time_s);
-        self.traffic.end_round();
-
-        // 7. Evaluation. Non-eval rounds carry the previous evaluation
-        // forward; before any evaluation exists, evaluate the pre-round
-        // (round-0) weights instead of recording NaN placeholders.
-        let round = self.server.round;
-        let (test_loss, test_acc) = if round % self.cfg.eval_every.max(1) == 0 {
-            self.ops
-                .eval_dataset(&self.server.w, &self.test.features, &self.test.labels)?
-        } else {
-            match self.metrics.last() {
-                Some(r) => (r.test_loss, r.test_acc),
-                None => self
-                    .ops
-                    .eval_dataset(&w_global, &self.test.features, &self.test.labels)?,
-            }
-        };
-
-        let n_selected = active.len();
-        self.last_selected = active;
-        let rec = RoundRecord {
-            round,
-            test_acc,
-            test_loss,
-            n_selected,
-            up_bytes_round: round_bytes,
-            up_bytes_cum: self.traffic.up_bytes,
-            efficiency: if n_selected == 0 { 0.0 } else { eff_sum / n_selected as f64 },
-            ratio: if n_selected == 0 { 0.0 } else { ratio_sum / n_selected as f64 },
-            comm_time_s,
-            wall_ms: t0.elapsed().as_secs_f64() * 1e3,
-        };
-        self.metrics.push(rec)?;
-        Ok(rec)
+        Ok(())
     }
 
     /// Run the configured number of rounds; returns all records.
@@ -553,6 +585,42 @@ impl ExperimentBuilder {
         self.cfg.net_up_mbps = up_mbps;
         self.cfg.net_down_mbps = down_mbps;
         self.cfg.net_latency_ms = latency_ms;
+        self
+    }
+
+    /// Per-client bandwidth spread in [0, 1) (`[network] jitter`): each
+    /// client's link rates are scaled by a seed-deterministic factor in
+    /// `[1 − jitter, 1 + jitter]`.
+    pub fn jitter(mut self, jitter: f64) -> Self {
+        self.cfg.net_jitter = jitter;
+        self
+    }
+
+    /// Aggregation policy of the event-driven session (`[session] mode`):
+    /// synchronous cohort barrier (default), per-round deadline, or
+    /// FedBuff-style buffered asynchrony.
+    pub fn session(mut self, kind: SessionKind) -> Self {
+        self.cfg.session = kind;
+        self
+    }
+
+    /// Semi-sync aggregation deadline in virtual seconds
+    /// (`session = Deadline`).
+    pub fn deadline_s(mut self, s: f64) -> Self {
+        self.cfg.deadline_s = s;
+        self
+    }
+
+    /// Aggregate every K arrivals (`session = Async`).
+    pub fn buffer_k(mut self, k: usize) -> Self {
+        self.cfg.buffer_k = k;
+        self
+    }
+
+    /// Staleness discount base γ ∈ (0, 1] for deadline/async weighting
+    /// (`|D_i| · γ^staleness`; 1.0 disables the discount).
+    pub fn staleness_decay(mut self, gamma: f64) -> Self {
+        self.cfg.staleness_decay = gamma;
         self
     }
 

@@ -1,0 +1,578 @@
+//! The event-driven federation server: consumes [`ClientMsg`] envelopes
+//! off a [`SimClock`] and turns them into global steps through a
+//! pluggable [`AggregationPolicy`].
+//!
+//! `FedServer` is deliberately compute-free — it never trains or encodes
+//! anything. It decides *who* gets the model and *when* arrivals become
+//! an aggregation, and hands the actual client work back to its driver
+//! as [`Directive`]s:
+//!
+//! * [`Directive::Dispatch`] — a batch of [`Broadcast`] envelopes whose
+//!   clients the driver must train-and-compress (the driver may fan the
+//!   batch out over a worker pool), answering each with
+//!   [`FedServer::submit_upload`];
+//! * [`Directive::Step`] — one aggregation was applied to the global
+//!   model; the [`StepSummary`] carries everything a `RoundRecord`
+//!   needs.
+//!
+//! Determinism: the virtual clock is the only time source. Delivery
+//! times are pure functions of payload bytes and the per-client
+//! [`ClientLink`]s, simultaneous arrivals are tie-broken by client
+//! index, and a cycle's deadline timer sorts after same-instant uploads
+//! — so `Deadline` and `BufferedAsync` sessions replay bit-for-bit from
+//! the experiment seed, and `Synchronous` sessions reproduce the classic
+//! blocking round loop exactly (aggregation in ascending-client order,
+//! staleness multiplier exactly 1).
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::coordinator::policy::{AggTrigger, AggregationPolicy, PolicyCtx};
+use crate::coordinator::protocol::{Ack, Broadcast, ClientMsg, ServerMsg, Upload};
+use crate::coordinator::schedule::ClientScheduler;
+use crate::coordinator::{Server, Traffic};
+use crate::simnet::{ClientLink, SimClock, SimEvent};
+
+/// What travels on the virtual clock.
+enum SessionEvent {
+    /// An upload in transit; fires when it lands at the server.
+    Upload(Upload),
+    /// The semi-sync aggregation timer for one broadcast cycle.
+    Deadline { cycle: u64 },
+}
+
+/// What the driver must do next.
+pub enum Directive {
+    /// Train-and-compress these clients (all broadcasts in a batch share
+    /// one model version) and [`FedServer::submit_upload`] each result.
+    Dispatch(Vec<Broadcast>),
+    /// One aggregation step was applied to the global model.
+    Step(StepSummary),
+}
+
+/// Observables of one aggregation step.
+#[derive(Clone, Debug)]
+pub struct StepSummary {
+    /// Server round counter after the step.
+    pub round: usize,
+    /// Clients whose uploads were aggregated, in aggregation order.
+    pub clients: Vec<usize>,
+    /// Wire bytes of the aggregated uploads.
+    pub up_bytes_step: u64,
+    /// Mean client-side compression efficiency cos(ĝ, g+e).
+    pub efficiency: f64,
+    /// Mean compression ratio (× vs dense).
+    pub ratio: f64,
+    /// Mean staleness (model versions) of the aggregated updates.
+    pub stale_mean: f64,
+    /// Virtual time consumed by this step (since the previous step).
+    pub comm_time_s: f64,
+    /// Virtual-clock time at which the step completed.
+    pub sim_time_s: f64,
+}
+
+/// The message-passing federation server.
+pub struct FedServer {
+    /// Global model + server optimizer (public for drivers and tests).
+    pub server: Server,
+    /// Exact wire accounting (uploads charged at arrival, broadcasts at
+    /// dispatch).
+    pub traffic: Traffic,
+    scheduler: Box<dyn ClientScheduler>,
+    policy: Box<dyn AggregationPolicy>,
+    clock: SimClock<SessionEvent>,
+    links: Vec<ClientLink>,
+    /// Clients with data; zero-sample clients are never dispatched.
+    active: Vec<bool>,
+    /// Clients with a broadcast in flight (dispatched, upload not yet
+    /// arrived).
+    busy: Vec<bool>,
+    /// Clients whose upload has been submitted and is in transit
+    /// (guards against duplicate submissions).
+    uploading: Vec<bool>,
+    in_flight: usize,
+    /// Arrived uploads awaiting aggregation, in arrival order.
+    pending: Vec<Upload>,
+    outbox: VecDeque<Directive>,
+    /// A broadcast cycle is in progress (async sessions leave their
+    /// first cycle open forever).
+    cycle_open: bool,
+    cycle_id: u64,
+    /// Size of the current cycle's dispatch cohort.
+    cohort: usize,
+    /// The current model version's broadcast payload, cloned lazily once
+    /// per version (async sessions dispatch per arrival; the model only
+    /// changes at a step, so K−1 of every K dispatches reuse this Arc).
+    w_cache: Option<Arc<Vec<f32>>>,
+    last_step_at: f64,
+    /// Dense broadcast wire bytes per client: u32 length header + 4P.
+    down_bytes: u64,
+    n_clients: usize,
+}
+
+impl FedServer {
+    pub fn new(
+        server: Server,
+        scheduler: Box<dyn ClientScheduler>,
+        policy: Box<dyn AggregationPolicy>,
+        links: Vec<ClientLink>,
+        active: Vec<bool>,
+        n_params: usize,
+    ) -> FedServer {
+        assert_eq!(links.len(), active.len(), "one link and one data mask per client");
+        let n_clients = links.len();
+        FedServer {
+            server,
+            traffic: Traffic::default(),
+            scheduler,
+            policy,
+            clock: SimClock::new(),
+            links,
+            active,
+            busy: vec![false; n_clients],
+            uploading: vec![false; n_clients],
+            in_flight: 0,
+            pending: Vec::new(),
+            outbox: VecDeque::new(),
+            cycle_open: false,
+            cycle_id: 0,
+            cohort: 0,
+            w_cache: None,
+            last_step_at: 0.0,
+            down_bytes: (4 + 4 * n_params) as u64,
+            n_clients,
+        }
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> f64 {
+        self.clock.now()
+    }
+
+    /// The active aggregation policy's name ("sync" / "deadline" /
+    /// "async").
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// Broadcasts dispatched whose uploads have not yet arrived.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+
+    /// Uploads arrived but not yet aggregated.
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Advance the session until the driver has something to do. The
+    /// returned [`Directive`] is either a dispatch batch (compute it and
+    /// submit the uploads before calling again) or a completed step.
+    pub fn next_directive(&mut self) -> Result<Directive> {
+        loop {
+            if let Some(d) = self.outbox.pop_front() {
+                return Ok(d);
+            }
+            if !self.cycle_open {
+                self.start_cycle();
+                continue;
+            }
+            match self.clock.pop() {
+                Some(ev) => self.handle_event(ev)?,
+                None => {
+                    // The queue drained mid-cycle. Outstanding dispatches
+                    // mean the driver broke the submit-before-pump
+                    // contract; otherwise flush what arrived (barrier
+                    // trivially met / end-of-buffer), or report
+                    // starvation (an async cohort of zero clients can
+                    // never make progress).
+                    ensure!(
+                        self.in_flight == 0,
+                        "event queue drained with {} dispatched upload(s) outstanding \
+                         (submit_upload before pumping next_directive)",
+                        self.in_flight
+                    );
+                    let ctx = self.ctx();
+                    if self.policy.ready(AggTrigger::Drained, &ctx) {
+                        self.step();
+                    } else {
+                        bail!(
+                            "session starved: no events in flight, nothing pending \
+                             (policy {}, cohort {})",
+                            self.policy.name(),
+                            self.cohort
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Deliver a client's upload envelope: schedules its arrival on the
+    /// virtual clock (send time + one-way latency + uplink transfer) and
+    /// returns the server's [`Ack`]. Rejects envelopes from unknown
+    /// clients, clients with no broadcast outstanding, and duplicate
+    /// submissions for one broadcast — validation happens here, where
+    /// the envelope enters the server.
+    pub fn submit_upload(&mut self, msg: ClientMsg) -> Result<ServerMsg> {
+        let ClientMsg::Upload(up) = msg;
+        let c = up.client;
+        ensure!(c < self.n_clients, "upload from unknown client {c}");
+        ensure!(self.busy[c], "upload from client {c} with no broadcast outstanding");
+        ensure!(!self.uploading[c], "duplicate upload from client {c} for one broadcast");
+        self.uploading[c] = true;
+        let link = self.links[c];
+        let recv_at =
+            up.sent_at + link.latency_s + link.up_time_s(up.payload.wire_bytes() as u64);
+        let ack = Ack { client: c, round: up.round, recv_at };
+        self.clock.push(recv_at, c, SessionEvent::Upload(up));
+        Ok(ServerMsg::Ack(ack))
+    }
+
+    fn ctx(&self) -> PolicyCtx {
+        PolicyCtx {
+            pending: self.pending.len(),
+            in_flight: self.in_flight,
+            cohort: self.cohort,
+        }
+    }
+
+    /// Begin a broadcast cycle: ask the scheduler for a cohort (among
+    /// clients that have data and are not already in flight), emit the
+    /// dispatch batch, and arm the policy's deadline timer if it has
+    /// one.
+    fn start_cycle(&mut self) {
+        self.cycle_open = true;
+        self.cycle_id += 1;
+        let selected = self.scheduler.select(self.server.round, self.n_clients);
+        let cohort: Vec<usize> = selected
+            .into_iter()
+            .filter(|&c| self.active[c] && !self.busy[c])
+            .collect();
+        self.cohort = cohort.len();
+        if let Some(d) = self.policy.deadline_s() {
+            self.clock.push(
+                self.clock.now() + d,
+                SimClock::<SessionEvent>::NO_CLIENT,
+                SessionEvent::Deadline { cycle: self.cycle_id },
+            );
+        }
+        self.dispatch(cohort);
+    }
+
+    /// Emit broadcast envelopes for `cohort` at the current virtual time
+    /// (per-client delivery times from each client's downlink).
+    fn dispatch(&mut self, cohort: Vec<usize>) {
+        if cohort.is_empty() {
+            return;
+        }
+        self.traffic.record_broadcast(self.server.w.len(), cohort.len());
+        let now = self.clock.now();
+        let round = self.server.round;
+        // One clone per model *version*, not per dispatch: the weights
+        // only change at a step (which invalidates the cache).
+        if self.w_cache.is_none() {
+            self.w_cache = Some(Arc::new(self.server.w.clone()));
+        }
+        let w = Arc::clone(self.w_cache.as_ref().expect("just filled"));
+        let mut batch = Vec::with_capacity(cohort.len());
+        for c in cohort {
+            debug_assert!(!self.busy[c], "client {c} dispatched twice");
+            self.busy[c] = true;
+            self.in_flight += 1;
+            let link = self.links[c];
+            batch.push(Broadcast {
+                round,
+                client: c,
+                w: Arc::clone(&w),
+                sent_at: now,
+                recv_at: now + link.latency_s + link.down_time_s(self.down_bytes),
+            });
+        }
+        self.outbox.push_back(Directive::Dispatch(batch));
+    }
+
+    fn handle_event(&mut self, ev: SimEvent<SessionEvent>) -> Result<()> {
+        match ev.payload {
+            SessionEvent::Upload(up) => {
+                // Validated at submit_upload: busy && uploading && in range.
+                let c = up.client;
+                self.busy[c] = false;
+                self.uploading[c] = false;
+                self.in_flight -= 1;
+                self.traffic.record_upload(up.payload.wire_bytes());
+                self.pending.push(up);
+                let redispatch = self.policy.redispatch();
+                if self.policy.ready(AggTrigger::Upload, &self.ctx()) {
+                    // Aggregate first: a re-dispatched client must train
+                    // on the post-step model (FedBuff semantics).
+                    self.step();
+                }
+                if redispatch && self.active[c] && !self.busy[c] {
+                    self.dispatch(vec![c]);
+                }
+            }
+            SessionEvent::Deadline { cycle } => {
+                // Timers from already-closed cycles are inert.
+                if cycle == self.cycle_id
+                    && self.cycle_open
+                    && self.policy.ready(AggTrigger::DeadlineExpired, &self.ctx())
+                {
+                    self.step();
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Aggregate the pending buffer into a global step and queue its
+    /// [`StepSummary`]. An empty buffer is a no-op round: weights stay
+    /// put, the round counter advances (exactly like the classic loop's
+    /// empty-cohort path).
+    fn step(&mut self) {
+        let at = self.clock.now();
+        let round_before = self.server.round;
+        let mut batch = std::mem::take(&mut self.pending);
+        if self.policy.selection_order() {
+            // Synchronous contract: aggregate in ascending-client order
+            // regardless of arrival order (the whole cohort shares one
+            // round, so this is the classic loop's selection order).
+            batch.sort_by_key(|u| u.client);
+        }
+        let n = batch.len();
+        let mut clients = Vec::with_capacity(n);
+        let mut recons: Vec<Vec<f32>> = Vec::with_capacity(n);
+        let mut weights: Vec<f32> = Vec::with_capacity(n);
+        let mut up_bytes_step = 0u64;
+        let mut eff_sum = 0.0f64;
+        let mut ratio_sum = 0.0f64;
+        let mut stale_sum = 0.0f64;
+        for up in batch {
+            debug_assert!(round_before >= up.round, "upload from the future");
+            let staleness = round_before - up.round;
+            stale_sum += staleness as f64;
+            up_bytes_step += up.payload.wire_bytes() as u64;
+            eff_sum += up.efficiency;
+            ratio_sum += up.ratio;
+            clients.push(up.client);
+            weights.push((up.weight as f64 * self.policy.staleness_weight(staleness)) as f32);
+            recons.push(up.recon);
+        }
+        self.server.apply_round(&recons, &weights);
+        // The model version changed: the next dispatch re-snapshots it.
+        self.w_cache = None;
+        let comm_time_s = at - self.last_step_at;
+        self.last_step_at = at;
+        self.traffic.record_comm_time(comm_time_s);
+        self.traffic.end_round();
+        if self.policy.server_paced() {
+            self.cycle_open = false;
+        }
+        let denom = n.max(1) as f64;
+        self.outbox.push_back(Directive::Step(StepSummary {
+            round: self.server.round,
+            clients,
+            up_bytes_step,
+            efficiency: if n == 0 { 0.0 } else { eff_sum / denom },
+            ratio: if n == 0 { 0.0 } else { ratio_sum / denom },
+            stale_mean: if n == 0 { 0.0 } else { stale_sum / denom },
+            comm_time_s,
+            sim_time_s: at,
+        }));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Payload;
+    use crate::coordinator::policy::{BufferedAsync, Deadline, Synchronous};
+    use crate::coordinator::schedule::FullParticipation;
+    use crate::simnet::NetworkModel;
+    use crate::util::rng::Rng;
+
+    /// A tiny hand-driven session: n clients, 1-param model, uploads
+    /// fabricated by the test (no real training).
+    fn fed(
+        n: usize,
+        policy: Box<dyn AggregationPolicy>,
+        links: Vec<ClientLink>,
+    ) -> FedServer {
+        FedServer::new(
+            Server::new(vec![0.0f32]),
+            Box::new(FullParticipation),
+            policy,
+            links,
+            vec![true; n],
+            1,
+        )
+    }
+
+    fn links(n: usize) -> Vec<ClientLink> {
+        NetworkModel::edge().client_links(n, 0.0, &mut Rng::new(1))
+    }
+
+    fn upload(bc: &Broadcast, value: f32) -> ClientMsg {
+        ClientMsg::Upload(Upload {
+            client: bc.client,
+            round: bc.round,
+            sent_at: bc.recv_at,
+            payload: Payload::Sign { n: 8, bits: vec![0u8], scale: 1.0 },
+            recon: vec![value],
+            weight: 1.0,
+            efficiency: 1.0,
+            ratio: 32.0,
+        })
+    }
+
+    #[test]
+    fn synchronous_session_barriers_on_the_cohort() {
+        let mut fed = fed(3, Box::new(Synchronous), links(3));
+        let bcasts = match fed.next_directive().unwrap() {
+            Directive::Dispatch(b) => b,
+            _ => panic!("expected a dispatch first"),
+        };
+        assert_eq!(bcasts.len(), 3);
+        assert_eq!(bcasts[0].round, 0);
+        for bc in &bcasts {
+            let ServerMsg::Ack(ack) = fed.submit_upload(upload(bc, 1.0)).unwrap() else {
+                panic!("submit must ack")
+            };
+            assert!(ack.recv_at > bc.recv_at);
+        }
+        let Directive::Step(s) = fed.next_directive().unwrap() else {
+            panic!("expected the barrier step")
+        };
+        assert_eq!(s.round, 1);
+        assert_eq!(s.clients, vec![0, 1, 2]);
+        assert_eq!(s.stale_mean, 0.0);
+        assert!(s.comm_time_s > 0.0);
+        assert_eq!(s.sim_time_s, fed.now());
+        // w ← w − mean(recons) = −1.
+        assert!((fed.server.w[0] + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn deadline_session_carries_stragglers_over_with_staleness() {
+        // Client 1's uplink is throttled so its upload misses the 50 ms
+        // deadline: step 1 aggregates {0} alone, and step 2 aggregates
+        // client 0's fresh upload plus the straggler (staleness 1,
+        // weight γ^1).
+        let base = NetworkModel::custom(10.0, 50.0, 1.0);
+        let mut ls = base.client_links(2, 0.0, &mut Rng::new(1));
+        ls[1].up_bps = 1_000.0; // 9-byte upload → 72 ms ≫ the deadline
+        let gamma = 0.5;
+        let mut fed = fed(2, Box::new(Deadline::new(0.05, gamma)), ls);
+
+        let Directive::Dispatch(bcasts) = fed.next_directive().unwrap() else {
+            panic!("dispatch first")
+        };
+        assert_eq!(bcasts.len(), 2);
+        for bc in &bcasts {
+            fed.submit_upload(upload(bc, 2.0)).unwrap();
+        }
+        let Directive::Step(s1) = fed.next_directive().unwrap() else { panic!() };
+        assert_eq!(s1.clients, vec![0], "only the fast client made the deadline");
+        assert_eq!(s1.stale_mean, 0.0);
+        assert!((s1.comm_time_s - 0.05).abs() < 1e-12, "the deadline paces the step");
+        assert!((fed.server.w[0] + 2.0).abs() < 1e-6);
+
+        // Cycle 2 dispatches only the idle client (0); its fresh upload
+        // lands first, then the round-0 straggler — both inside the new
+        // deadline window.
+        let Directive::Dispatch(bcasts) = fed.next_directive().unwrap() else { panic!() };
+        assert_eq!(bcasts.len(), 1);
+        assert_eq!(bcasts[0].client, 0);
+        assert_eq!(bcasts[0].round, 1);
+        fed.submit_upload(upload(&bcasts[0], 4.0)).unwrap();
+        let Directive::Step(s2) = fed.next_directive().unwrap() else { panic!() };
+        assert_eq!(s2.round, 2);
+        assert_eq!(s2.clients, vec![0, 1], "arrival order: fresh upload, then straggler");
+        assert!((s2.stale_mean - 0.5).abs() < 1e-12, "one stale of two");
+        // Weighted mean: (1·4 + γ·2)/(1 + γ) = 5/1.5; w = −2 − that.
+        let expect = -2.0 - (4.0 + gamma as f32 * 2.0) / (1.0 + gamma as f32);
+        assert!((fed.server.w[0] - expect).abs() < 1e-5, "{} vs {expect}", fed.server.w[0]);
+        // Virtual time is monotone and the second step starts where the
+        // first ended.
+        assert!(s2.sim_time_s > s1.sim_time_s);
+        assert!((s2.sim_time_s - s1.sim_time_s - s2.comm_time_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn buffered_async_steps_every_k_and_keeps_clients_in_flight() {
+        let mut fed = fed(3, Box::new(BufferedAsync::new(2, 1.0)), links(3));
+        let Directive::Dispatch(bcasts) = fed.next_directive().unwrap() else { panic!() };
+        assert_eq!(bcasts.len(), 3);
+        for bc in &bcasts {
+            fed.submit_upload(upload(bc, 3.0)).unwrap();
+        }
+        // Homogeneous links + equal payloads: the three arrivals tie and
+        // are processed in client order. Client 0's arrival only fills
+        // the buffer to 1, so it is re-dispatched (still round 0).
+        let Directive::Dispatch(b) = fed.next_directive().unwrap() else { panic!() };
+        assert_eq!((b.len(), b[0].client, b[0].round), (1, 0, 0));
+        fed.submit_upload(upload(&b[0], 3.0)).unwrap();
+        // Client 1's arrival reaches K=2 → step over {0, 1}, then client
+        // 1 is re-dispatched on the post-step model (round 1).
+        let Directive::Step(s1) = fed.next_directive().unwrap() else { panic!() };
+        assert_eq!(s1.clients, vec![0, 1]);
+        assert_eq!(s1.round, 1);
+        assert!((fed.server.w[0] + 3.0).abs() < 1e-6);
+        let Directive::Dispatch(b) = fed.next_directive().unwrap() else { panic!() };
+        assert_eq!((b[0].client, b[0].round), (1, 1), "re-dispatch sees the post-step model");
+        fed.submit_upload(upload(&b[0], 3.0)).unwrap();
+        // Client 2's arrival: buffer back to 1, re-dispatch.
+        let Directive::Dispatch(b) = fed.next_directive().unwrap() else { panic!() };
+        assert_eq!((b[0].client, b[0].round), (2, 1));
+        fed.submit_upload(upload(&b[0], 3.0)).unwrap();
+        assert_eq!(fed.in_flight(), 3);
+        assert_eq!(fed.pending(), 1);
+        // Client 0's second upload completes the next buffer. Both
+        // buffered uploads (client 2's first, client 0's second) were
+        // computed against the round-0 model and the server is at round
+        // 1, so both carry staleness 1.
+        let Directive::Step(s2) = fed.next_directive().unwrap() else { panic!() };
+        assert_eq!(s2.round, 2);
+        assert_eq!(s2.clients, vec![2, 0]);
+        assert_eq!(s2.stale_mean, 1.0, "both buffered uploads trained on the round-0 model");
+        assert!(s2.sim_time_s >= s1.sim_time_s);
+    }
+
+    #[test]
+    fn async_starvation_is_an_error_not_a_hang() {
+        // No client has data: the initial cohort is empty and an async
+        // session can never make progress.
+        let mut fed = FedServer::new(
+            Server::new(vec![0.0f32]),
+            Box::new(FullParticipation),
+            Box::new(BufferedAsync::new(1, 1.0)),
+            links(2),
+            vec![false, false],
+            1,
+        );
+        let err = fed.next_directive().unwrap_err();
+        assert!(err.to_string().contains("starved"), "{err}");
+    }
+
+    #[test]
+    fn sync_empty_cohort_is_a_noop_step() {
+        // All clients zero-sample: the classic loop records a no-op
+        // round; the event-driven server must do the same (round
+        // advances, weights untouched, virtual time does not move).
+        let mut fed = FedServer::new(
+            Server::new(vec![5.0f32]),
+            Box::new(FullParticipation),
+            Box::new(Synchronous),
+            links(2),
+            vec![false, false],
+            1,
+        );
+        let Directive::Step(s) = fed.next_directive().unwrap() else { panic!() };
+        assert_eq!(s.round, 1);
+        assert_eq!(s.clients, Vec::<usize>::new());
+        assert_eq!(s.comm_time_s, 0.0);
+        assert_eq!(fed.server.w, vec![5.0]);
+    }
+}

@@ -37,7 +37,10 @@ impl MetricsSink {
                 .num("efficiency", rec.efficiency)
                 .num("ratio", rec.ratio)
                 .num("comm_time_s", rec.comm_time_s)
+                .num("sim_time_s", rec.sim_time_s)
+                .num("stale_mean", rec.stale_mean)
                 .num("wall_ms", rec.wall_ms)
+                .num("eval_ms", rec.eval_ms)
                 .finish();
             writeln!(f, "{line}")?;
         }
@@ -98,7 +101,10 @@ mod tests {
             efficiency: 0.9,
             ratio,
             comm_time_s: 0.1,
+            sim_time_s: 0.1 * (round as f64 + 1.0),
+            stale_mean: 0.0,
             wall_ms: 1.0,
+            eval_ms: 0.0,
         }
     }
 

@@ -1,52 +1,71 @@
-//! The federated-learning coordinator (L3): a composable round engine —
-//! client schedulers, per-client state, server optimizers, traffic and
-//! network-time accounting, and metrics — that the paper's compressors
-//! plug into.
+//! The federated-learning coordinator (L3): event-driven federation
+//! sessions — a message-passing server, typed wire envelopes, client
+//! schedulers, aggregation policies on a virtual clock, server
+//! optimizers, traffic accounting, and metrics — that the paper's
+//! compressors plug into.
 //!
 //! One process simulates the cluster (exactly like the paper's testbed,
 //! §5: "evaluated on a simulated 40 clients cluster"), but messages,
 //! byte accounting and client/server state are kept strictly separate so
-//! the compressors see the same interface a distributed deployment would.
+//! the compressors see the same interface a distributed deployment would
+//! — the server consumes [`protocol`] envelopes off a
+//! [`crate::simnet::SimClock`], never client internals.
 //!
-//! The round engine is assembled from three pluggable pieces, all chosen
-//! by [`crate::config::ExperimentConfig`] (or the [`ExperimentBuilder`]):
+//! A session is assembled from pluggable pieces, all chosen by
+//! [`crate::config::ExperimentConfig`] (or the [`ExperimentBuilder`]):
 //!
-//! * a [`ClientScheduler`] ([`schedule`]) decides which clients act each
-//!   round — full participation (the paper's protocol), uniform random
-//!   `client_frac` sampling, or round-robin cohorts. Skipped clients keep
-//!   their error-feedback memory untouched until they next participate,
-//!   and aggregation normalizes over the selected set only;
+//! * a [`ClientScheduler`] ([`schedule`]) decides which clients each
+//!   broadcast cycle reaches — full participation (the paper's
+//!   protocol), uniform random `client_frac` sampling, or round-robin
+//!   cohorts. Skipped clients keep their error-feedback memory untouched
+//!   until they next participate, and aggregation normalizes over the
+//!   aggregated set only;
+//! * an [`AggregationPolicy`] ([`policy`]) decides *when* arrived
+//!   uploads become a global step — [`Synchronous`] cohort barrier
+//!   (reproduces the classic blocking round loop bit-for-bit),
+//!   [`Deadline`] semi-sync with straggler carry-over, or
+//!   [`BufferedAsync`] FedBuff-style every-K aggregation with
+//!   staleness-discounted weights;
 //! * a [`ServerOptimizer`] ([`opt`]) turns the aggregated pseudo-gradient
 //!   into the global step — plain GD (`server_lr = 1` reproduces the
 //!   paper's Eq. 3 bit-for-bit), server momentum, or FedAdam;
-//! * a [`crate::simnet::NetworkModel`] converts each round's payload
-//!   sizes into a modeled `comm_time_s` with slowest-selected-client
-//!   semantics, recorded on every [`RoundRecord`].
+//! * a [`crate::simnet::NetworkModel`] plus `[network] jitter` derive
+//!   per-client links; every envelope's delivery time comes from them,
+//!   and each [`RoundRecord`] carries the step's virtual-time cost.
 //!
-//! Execution within a round is parallel ([`parallel`]): the selected
-//! clients' train-and-compress work fans out over a fixed worker pool
-//! (`[runtime] threads` in config, `--threads` on the CLI; default: all
-//! available cores, `1` = the original sequential path). Results are
-//! collected into slots indexed by selection order before any state or
-//! accounting is touched, so trajectories are bit-identical for every
-//! thread count. All of it runs against a pluggable
-//! [`crate::runtime::Backend`] — PJRT artifacts or the pure-Rust native
-//! implementation — with identical semantics.
+//! [`FedServer`] ([`fedserver`]) owns the event loop and hands compute
+//! back to its driver as [`fedserver::Directive`]s; [`Experiment`] is
+//! that driver. Dispatch batches fan out over a fixed worker pool
+//! ([`parallel`]; `[runtime] threads`, `--threads`; `1` = the original
+//! sequential path) into dispatch-order slots before any state is
+//! touched, so trajectories are bit-identical for every thread count.
+//! All of it runs against a pluggable [`crate::runtime::Backend`] — PJRT
+//! artifacts or the pure-Rust native implementation — with identical
+//! semantics.
 
 pub mod client;
 pub mod experiment;
+pub mod fedserver;
 pub mod metrics;
 pub mod opt;
 pub mod parallel;
+pub mod policy;
+pub mod protocol;
 pub mod schedule;
 pub mod server;
 pub mod traffic;
 
 pub use client::ClientState;
 pub use experiment::{Experiment, ExperimentBuilder, RoundRecord};
+pub use fedserver::{Directive, FedServer, StepSummary};
 pub use metrics::MetricsSink;
 pub use opt::{build_server_opt, FedAdam, ServerGd, ServerMomentum, ServerOptimizer};
 pub use parallel::{run_client, ClientJob, ClientUpdate, WorkerPool};
+pub use policy::{
+    build_policy, AggTrigger, AggregationPolicy, BufferedAsync, Deadline, PolicyCtx,
+    Synchronous,
+};
+pub use protocol::{Ack, Broadcast, ClientMsg, ServerMsg, Upload};
 pub use schedule::{
     build_scheduler, ClientScheduler, FullParticipation, RoundRobin, UniformSampler,
 };

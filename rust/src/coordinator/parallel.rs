@@ -33,7 +33,7 @@ use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::compress::{self, Compressor, EncodeCtx};
+use crate::compress::{self, Compressor, EncodeCtx, Payload};
 use crate::config::ExperimentConfig;
 use crate::runtime::{Backend, BackendSpec, FedOps, RuntimeStats};
 use crate::util::rng::Rng;
@@ -61,6 +61,10 @@ pub struct ClientJob {
 /// One client's round outcome, in wire/aggregation order fields.
 pub struct ClientUpdate {
     pub slot: usize,
+    /// The wire payload itself (`payload.wire_bytes()` is what the
+    /// uplink is priced at; the upload envelope carries it to the
+    /// server).
+    pub payload: Payload,
     /// Reconstructed (decoded) update the server aggregates.
     pub recon: Vec<f32>,
     /// Updated EF memory (empty when EF is disabled).
@@ -68,7 +72,6 @@ pub struct ClientUpdate {
     /// The advanced RNG stream, to write back into the client.
     pub rng: Rng,
     pub weight: f32,
-    pub wire_bytes: u64,
     /// Compression ratio (× vs dense) of this payload.
     pub ratio: f64,
     /// cos(ĝ, g+e) — the paper's compression-efficiency metric (Fig 7).
@@ -107,16 +110,15 @@ pub fn run_client(
         job.ef
     };
 
-    let wire = payload.wire_bytes();
     Ok(ClientUpdate {
         slot: job.slot,
         efficiency: vecmath::cosine(&recon, &target),
         ratio: payload.ratio(ops.model.params),
-        wire_bytes: wire as u64,
         weight: job.weight,
         ef,
         rng: job.rng,
         recon,
+        payload,
     })
 }
 

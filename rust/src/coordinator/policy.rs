@@ -1,0 +1,281 @@
+//! Aggregation policies: *when* the event-driven server turns buffered
+//! uploads into a global step.
+//!
+//! The [`crate::coordinator::FedServer`] processes arrivals off the
+//! simnet virtual clock and consults an [`AggregationPolicy`] at each
+//! trigger; the policy decides whether to aggregate now, whether the
+//! uploading client is immediately re-dispatched (asynchrony), and how
+//! staleness discounts aggregation weights. Three implementations cover
+//! the scenario matrix ([`crate::config::SessionKind`]):
+//!
+//! * [`Synchronous`] — barrier on the selected cohort; reproduces the
+//!   classic synchronous round loop bit-for-bit (staleness is always 0
+//!   and the weight multiplier exactly 1).
+//! * [`Deadline`] — semi-sync: aggregate whatever arrived within
+//!   `deadline_s` virtual seconds of the broadcast; stragglers' uploads
+//!   stay queued and join a later aggregation with a staleness discount.
+//! * [`BufferedAsync`] — FedBuff-style: aggregate every `buffer_k`
+//!   arrivals; each finished client is instantly re-dispatched on the
+//!   current model, so staleness accrues naturally.
+//!
+//! Staleness weighting: an update whose broadcast round is `s` server
+//! steps behind the aggregation is weighted `|D_i| · γ^s` with
+//! `γ = staleness_decay ∈ (0, 1]` (γ = 1 disables the discount;
+//! `γ^0 = 1` exactly, which is what keeps [`Synchronous`] bit-faithful).
+
+use crate::config::{ExperimentConfig, SessionKind};
+
+/// What just happened on the virtual clock.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AggTrigger {
+    /// An upload landed at the server (already counted in
+    /// [`PolicyCtx::pending`]).
+    Upload,
+    /// The per-cycle deadline timer fired.
+    DeadlineExpired,
+    /// The event queue drained with uploads still buffered (e.g. the
+    /// experiment's last partial buffer) — flush semantics.
+    Drained,
+}
+
+/// Server state snapshot handed to the policy at each trigger.
+#[derive(Clone, Copy, Debug)]
+pub struct PolicyCtx {
+    /// Uploads buffered and not yet aggregated.
+    pub pending: usize,
+    /// Broadcasts dispatched whose uploads have not yet arrived.
+    pub in_flight: usize,
+    /// Size of the most recent dispatch cohort.
+    pub cohort: usize,
+}
+
+/// Decides when buffered uploads become a global step.
+pub trait AggregationPolicy {
+    fn name(&self) -> &'static str;
+
+    /// Should the server aggregate the pending buffer now?
+    fn ready(&self, trigger: AggTrigger, ctx: &PolicyCtx) -> bool;
+
+    /// Virtual seconds after each broadcast at which the server stops
+    /// waiting (`None` = no timer; barrier / arrival-count policies).
+    fn deadline_s(&self) -> Option<f64> {
+        None
+    }
+
+    /// Server-paced sessions begin a fresh broadcast cycle after every
+    /// aggregation step (sync / deadline). Async sessions instead keep
+    /// clients perpetually in flight via [`Self::redispatch`].
+    fn server_paced(&self) -> bool {
+        true
+    }
+
+    /// Re-dispatch a client on the current model the moment its upload
+    /// arrives (after any aggregation that arrival triggered).
+    fn redispatch(&self) -> bool {
+        false
+    }
+
+    /// Aggregate in ascending-client (selection) order rather than
+    /// arrival order. Only meaningful when every buffered upload is from
+    /// the same cycle — the synchronous bit-identity contract.
+    fn selection_order(&self) -> bool {
+        false
+    }
+
+    /// Aggregation-weight multiplier for an update `staleness` model
+    /// versions old.
+    fn staleness_weight(&self, _staleness: usize) -> f64 {
+        1.0
+    }
+}
+
+/// Barrier on the selected cohort (the paper's protocol; default).
+pub struct Synchronous;
+
+impl AggregationPolicy for Synchronous {
+    fn name(&self) -> &'static str {
+        "sync"
+    }
+
+    fn ready(&self, trigger: AggTrigger, ctx: &PolicyCtx) -> bool {
+        match trigger {
+            AggTrigger::Upload => ctx.in_flight == 0,
+            // A cycle whose cohort was entirely zero-sample clients has
+            // nothing to wait for: flush (possibly empty) immediately.
+            AggTrigger::Drained | AggTrigger::DeadlineExpired => true,
+        }
+    }
+
+    fn selection_order(&self) -> bool {
+        true
+    }
+}
+
+/// Semi-synchronous: a per-cycle deadline bounds the wait.
+pub struct Deadline {
+    deadline_s: f64,
+    decay: f64,
+}
+
+impl Deadline {
+    pub fn new(deadline_s: f64, decay: f64) -> Deadline {
+        assert!(deadline_s > 0.0, "deadline must be positive");
+        assert!(decay > 0.0 && decay <= 1.0, "decay must be in (0, 1]");
+        Deadline { deadline_s, decay }
+    }
+}
+
+impl AggregationPolicy for Deadline {
+    fn name(&self) -> &'static str {
+        "deadline"
+    }
+
+    fn ready(&self, trigger: AggTrigger, ctx: &PolicyCtx) -> bool {
+        match trigger {
+            // Uploads wait for the timer (an upload landing exactly at
+            // the deadline is included: the timer event sorts after
+            // same-instant uploads — see `SimClock::NO_CLIENT`).
+            AggTrigger::Upload => false,
+            AggTrigger::DeadlineExpired => true,
+            AggTrigger::Drained => ctx.pending > 0,
+        }
+    }
+
+    fn deadline_s(&self) -> Option<f64> {
+        Some(self.deadline_s)
+    }
+
+    fn staleness_weight(&self, staleness: usize) -> f64 {
+        self.decay.powi(staleness as i32)
+    }
+}
+
+/// FedBuff-style buffered asynchrony: aggregate every K arrivals.
+///
+/// Not server-paced: the scheduler is consulted once, when the session
+/// starts, and that cohort becomes the *fixed* in-flight set — each
+/// finisher is re-dispatched immediately (FedBuff's "M concurrent
+/// clients" model). Under a partial-participation schedule this caps
+/// concurrency at the initial cohort; clients outside it never
+/// participate (pinned by `tests/session_test.rs`).
+pub struct BufferedAsync {
+    k: usize,
+    decay: f64,
+}
+
+impl BufferedAsync {
+    pub fn new(k: usize, decay: f64) -> BufferedAsync {
+        assert!(k >= 1, "buffer_k must be >= 1");
+        assert!(decay > 0.0 && decay <= 1.0, "decay must be in (0, 1]");
+        BufferedAsync { k, decay }
+    }
+}
+
+impl AggregationPolicy for BufferedAsync {
+    fn name(&self) -> &'static str {
+        "async"
+    }
+
+    fn ready(&self, trigger: AggTrigger, ctx: &PolicyCtx) -> bool {
+        match trigger {
+            AggTrigger::Upload => ctx.pending >= self.k,
+            AggTrigger::DeadlineExpired => false,
+            AggTrigger::Drained => ctx.pending > 0,
+        }
+    }
+
+    fn server_paced(&self) -> bool {
+        false
+    }
+
+    fn redispatch(&self) -> bool {
+        true
+    }
+
+    fn staleness_weight(&self, staleness: usize) -> f64 {
+        self.decay.powi(staleness as i32)
+    }
+}
+
+/// Build the policy an [`ExperimentConfig`]'s `[session]` table asks for.
+pub fn build_policy(cfg: &ExperimentConfig) -> Box<dyn AggregationPolicy> {
+    match cfg.session {
+        SessionKind::Sync => Box::new(Synchronous),
+        SessionKind::Deadline => {
+            Box::new(Deadline::new(cfg.deadline_s, cfg.staleness_decay))
+        }
+        SessionKind::Async => {
+            Box::new(BufferedAsync::new(cfg.buffer_k, cfg.staleness_decay))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(pending: usize, in_flight: usize, cohort: usize) -> PolicyCtx {
+        PolicyCtx { pending, in_flight, cohort }
+    }
+
+    #[test]
+    fn synchronous_waits_for_the_whole_cohort() {
+        let p = Synchronous;
+        assert!(!p.ready(AggTrigger::Upload, &ctx(1, 3, 4)));
+        assert!(!p.ready(AggTrigger::Upload, &ctx(3, 1, 4)));
+        assert!(p.ready(AggTrigger::Upload, &ctx(4, 0, 4)));
+        assert!(p.selection_order());
+        assert!(p.server_paced());
+        assert!(!p.redispatch());
+        assert_eq!(p.deadline_s(), None);
+        // Sync never discounts — the bit-identity contract.
+        for s in 0..5 {
+            assert_eq!(p.staleness_weight(s).to_bits(), 1.0f64.to_bits());
+        }
+    }
+
+    #[test]
+    fn deadline_aggregates_on_timer_not_arrivals() {
+        let p = Deadline::new(0.25, 0.5);
+        assert!(!p.ready(AggTrigger::Upload, &ctx(4, 0, 4)));
+        assert!(p.ready(AggTrigger::DeadlineExpired, &ctx(2, 2, 4)));
+        assert!(p.ready(AggTrigger::DeadlineExpired, &ctx(0, 4, 4)));
+        assert_eq!(p.deadline_s(), Some(0.25));
+        assert!(p.server_paced());
+        assert!(!p.selection_order());
+    }
+
+    #[test]
+    fn buffered_async_steps_every_k_and_redispatches() {
+        let p = BufferedAsync::new(3, 0.5);
+        assert!(!p.ready(AggTrigger::Upload, &ctx(2, 5, 8)));
+        assert!(p.ready(AggTrigger::Upload, &ctx(3, 5, 8)));
+        assert!(p.ready(AggTrigger::Upload, &ctx(4, 5, 8)));
+        assert!(p.redispatch());
+        assert!(!p.server_paced());
+        assert!(p.ready(AggTrigger::Drained, &ctx(1, 0, 8)));
+        assert!(!p.ready(AggTrigger::Drained, &ctx(0, 0, 8)));
+    }
+
+    #[test]
+    fn staleness_weights_decay_geometrically() {
+        let p = BufferedAsync::new(2, 0.5);
+        assert_eq!(p.staleness_weight(0).to_bits(), 1.0f64.to_bits());
+        assert!((p.staleness_weight(1) - 0.5).abs() < 1e-15);
+        assert!((p.staleness_weight(3) - 0.125).abs() < 1e-15);
+        // γ = 1 disables the discount entirely.
+        let flat = Deadline::new(1.0, 1.0);
+        assert_eq!(flat.staleness_weight(7).to_bits(), 1.0f64.to_bits());
+    }
+
+    #[test]
+    fn build_policy_matches_session_kind() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(build_policy(&cfg).name(), "sync");
+        cfg.session = SessionKind::Deadline;
+        assert_eq!(build_policy(&cfg).name(), "deadline");
+        cfg.session = SessionKind::Async;
+        cfg.buffer_k = 4;
+        assert_eq!(build_policy(&cfg).name(), "async");
+    }
+}

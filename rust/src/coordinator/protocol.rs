@@ -1,0 +1,89 @@
+//! Typed wire envelopes of the event-driven federation session.
+//!
+//! A session is message passing over the simnet virtual clock: the
+//! server emits [`ServerMsg`]s (model broadcasts, upload acks) and
+//! clients answer with [`ClientMsg`]s (compressed uploads). Every
+//! envelope carries the round metadata the aggregation policies need —
+//! [`Upload::round`] is the model *version* the client trained against,
+//! so staleness at aggregation time is simply
+//! `server_round − upload.round`.
+//!
+//! Byte accounting stays wire-honest: the upload envelope carries the
+//! actual [`Payload`] (its `wire_bytes()` — including the u32 framing
+//! headers — is what the uplink transfer is priced at), and the
+//! broadcast is priced as the dense f32 weight vector plus the same u32
+//! length header the upload path charges
+//! ([`crate::coordinator::Traffic::record_broadcast`]). The envelope
+//! additionally carries the client-side reconstruction so the simulation
+//! decodes once — `tests/prop_compressor_test.rs` pins
+//! `Compressor::decode(payload) == recon` bit-for-bit, so this is a
+//! cache of the server-side decode, not a side channel.
+
+use std::sync::Arc;
+
+use crate::compress::Payload;
+
+/// Server → client: the global model for one training task.
+#[derive(Clone, Debug)]
+pub struct Broadcast {
+    /// Model version (the server round counter at send time).
+    pub round: usize,
+    /// Addressee.
+    pub client: usize,
+    /// The dense global weights w^t (shared, not copied, per cohort).
+    pub w: Arc<Vec<f32>>,
+    /// Virtual send time at the server.
+    pub sent_at: f64,
+    /// Virtual delivery time at the client: `sent_at` + one-way latency
+    /// + dense-broadcast transfer on this client's downlink.
+    pub recv_at: f64,
+}
+
+/// Server → client: receipt confirmation for an upload (the round trip
+/// that lets a real client free its send buffer; here it closes the
+/// loop for diagnostics and tests).
+#[derive(Clone, Copy, Debug)]
+pub struct Ack {
+    pub client: usize,
+    /// The round of the acknowledged upload.
+    pub round: usize,
+    /// Virtual time the upload lands at the server (= when the policy
+    /// sees it).
+    pub recv_at: f64,
+}
+
+/// Everything the server can send.
+#[derive(Clone, Debug)]
+pub enum ServerMsg {
+    Broadcast(Broadcast),
+    Ack(Ack),
+}
+
+/// Client → server: one compressed model update.
+#[derive(Clone, Debug)]
+pub struct Upload {
+    pub client: usize,
+    /// The [`Broadcast::round`] this update was computed against.
+    pub round: usize,
+    /// Virtual send time at the client (= the broadcast's `recv_at`;
+    /// local compute is free on the virtual clock — the session models
+    /// communication, the wall-clock benches model compute).
+    pub sent_at: f64,
+    /// The wire payload; `payload.wire_bytes()` prices the uplink.
+    pub payload: Payload,
+    /// Decoded update (bit-identical to `Compressor::decode(payload)`;
+    /// see module docs).
+    pub recon: Vec<f32>,
+    /// Aggregation weight |D_i|.
+    pub weight: f32,
+    /// Client-side diagnostic cos(ĝ, g+e) (Fig 7).
+    pub efficiency: f64,
+    /// Compression ratio (× vs dense) of this payload.
+    pub ratio: f64,
+}
+
+/// Everything a client can send.
+#[derive(Clone, Debug)]
+pub enum ClientMsg {
+    Upload(Upload),
+}

@@ -197,6 +197,46 @@ mod tests {
     }
 
     #[test]
+    fn round_robin_wraps_mid_cohort_when_n_not_divisible() {
+        // n = 5, cohort 2: the third cohort wraps around the end of the
+        // client range mid-cohort — [4, 0] — and the rotation keeps its
+        // phase afterwards (no client skipped, none double-covered per
+        // wrap cycle).
+        let mut s = RoundRobin::new(0.4);
+        assert_eq!(s.select(0, 5), vec![0, 1]);
+        assert_eq!(s.select(1, 5), vec![2, 3]);
+        assert_eq!(s.select(2, 5), vec![0, 4], "wrap-around cohort, returned ascending");
+        assert_eq!(s.select(3, 5), vec![1, 2]);
+        assert_eq!(s.select(4, 5), vec![3, 4]);
+        // After 5 cohorts of 2 over 5 clients, every client served
+        // exactly twice and the cursor is back at 0.
+        assert_eq!(s.select(5, 5), vec![0, 1]);
+        // n = 7 at frac 0.5 (cohort 4): wrap places the cursor so that
+        // successive cohorts stay contiguous mod n.
+        let mut s = RoundRobin::new(0.5);
+        assert_eq!(s.select(0, 7), vec![0, 1, 2, 3]);
+        assert_eq!(s.select(1, 7), vec![0, 4, 5, 6]);
+        assert_eq!(s.select(2, 7), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn uniform_sampler_at_frac_extremes() {
+        // frac → 0 clamps to a single-client cohort (never empty)…
+        let mut tiny = UniformSampler::new(1e-12, Rng::new(9));
+        for round in 0..10 {
+            let sel = tiny.select(round, 10);
+            assert_eq!(sel.len(), 1, "cohort floor is one client");
+            assert!(sel[0] < 10);
+        }
+        // …and frac → 1 (just below) selects everyone, exactly once.
+        let mut full = UniformSampler::new(1.0 - 1e-12, Rng::new(9));
+        assert_eq!(full.select(0, 10), (0..10).collect::<Vec<_>>());
+        // Single-client populations are served at any fraction.
+        let mut one = UniformSampler::new(0.3, Rng::new(9));
+        assert_eq!(one.select(0, 1), vec![0]);
+    }
+
+    #[test]
     fn cohort_size_bounds() {
         assert_eq!(cohort_size(0.1, 10), 1);
         assert_eq!(cohort_size(0.1, 5), 1); // ceil(0.5) = 1

@@ -22,8 +22,15 @@ impl Traffic {
         self.comm_s += seconds;
     }
 
+    /// Charge one dense model broadcast to `n_clients` receivers.
+    ///
+    /// Wire-honesty is symmetric with the upload path: each per-client
+    /// broadcast is priced as the dense f32 vector *plus the same u32
+    /// length header* every upload payload charges
+    /// ([`crate::compress::Payload::wire_bytes`]) — a real serializer
+    /// frames the buffer in both directions.
     pub fn record_broadcast(&mut self, n_params: usize, n_clients: usize) {
-        self.down_bytes += (4 * n_params * n_clients) as u64;
+        self.down_bytes += ((4 + 4 * n_params) * n_clients) as u64;
     }
 
     pub fn end_round(&mut self) {
@@ -49,12 +56,14 @@ mod tests {
         let mut t = Traffic::default();
         t.record_upload(100);
         t.record_upload(50);
-        t.record_broadcast(10, 3);
         t.record_comm_time(1.5);
         t.record_comm_time(0.5);
         t.end_round();
+        // Broadcast framing is symmetric with the upload path: 4-byte
+        // u32 length header + 4·P per receiving client.
+        t.record_broadcast(10, 3);
         assert_eq!(t.up_bytes, 150);
-        assert_eq!(t.down_bytes, 120);
+        assert_eq!(t.down_bytes, 3 * (4 + 40));
         assert_eq!(t.up_per_round(), 150.0);
         assert_eq!(t.comm_s, 2.0);
     }

@@ -6,12 +6,14 @@
 //!
 //! Three-layer architecture (see `DESIGN.md`):
 //!
-//! * **L3 (this crate)** — the federated-learning coordinator: a
-//!   composable round engine (pluggable client schedulers and server
-//!   optimizers, simnet-aware round accounting), the full compressor zoo
-//!   (FedAvg / DGC / signSGD / STC / 3SFC / FedSynth), error-feedback
-//!   state, non-i.i.d. data partitioning, traffic accounting, metrics,
-//!   config and CLI.
+//! * **L3 (this crate)** — the federated-learning coordinator:
+//!   event-driven federation sessions (a message-passing `FedServer`
+//!   with sync / deadline / buffered-async aggregation policies on a
+//!   simnet virtual clock, pluggable client schedulers and server
+//!   optimizers), the full compressor zoo (FedAvg / DGC / signSGD / STC
+//!   / 3SFC / FedSynth), error-feedback state, non-i.i.d. data
+//!   partitioning, wire-honest traffic accounting, metrics, config and
+//!   CLI.
 //! * **L2 (python/compile)** — jax fed-ops over flat parameter vectors,
 //!   AOT-lowered once to HLO text artifacts (`make artifacts`).
 //! * **L1 (python/compile/kernels)** — Pallas kernels (tiled matmul, fused
@@ -39,6 +41,7 @@ pub mod testing;
 pub mod util;
 
 pub use coordinator::experiment::{Experiment, ExperimentBuilder, RoundRecord};
+pub use coordinator::{AggregationPolicy, FedServer};
 pub use runtime::{open_backend, Backend, NativeBackend};
 #[cfg(feature = "pjrt")]
 pub use runtime::{PjrtBackend, Runtime};

@@ -15,7 +15,7 @@ use anyhow::{bail, Result};
 use fed3sfc::cli::Args;
 use fed3sfc::config::{
     BackendKind, CompressorKind, DatasetKind, ExperimentConfig, NetworkKind, ScheduleKind,
-    ServerOptKind,
+    ServerOptKind, SessionKind,
 };
 use fed3sfc::coordinator::experiment::Experiment;
 use fed3sfc::data::{dirichlet_partition, Dataset};
@@ -48,6 +48,12 @@ run options:
   --beta1 F --beta2 F --tau F   FedAdam moments + adaptivity
   --network NAME         edge|datacenter|custom (default edge)
   --up-mbps F --down-mbps F --latency-ms F   custom link rates
+  --jitter F             per-client bandwidth spread in [0,1) (default 0)
+  --session NAME         sync|deadline|async aggregation policy
+                         (default sync = the paper's blocking rounds)
+  --deadline-s F         semi-sync aggregation deadline, virtual seconds
+  --buffer-k N           async: aggregate every K arrivals
+  --staleness-decay F    staleness discount base in (0,1] (default 0.5)
   --threads N            worker threads for the per-round client fan-out
                          (0 = auto: all cores, or FED3SFC_THREADS;
                          1 = sequential; results identical for any N)
@@ -144,6 +150,13 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     cfg.net_up_mbps = args.get_f64("up-mbps", cfg.net_up_mbps)?;
     cfg.net_down_mbps = args.get_f64("down-mbps", cfg.net_down_mbps)?;
     cfg.net_latency_ms = args.get_f64("latency-ms", cfg.net_latency_ms)?;
+    cfg.net_jitter = args.get_f64("jitter", cfg.net_jitter)?;
+    if let Some(v) = args.get("session") {
+        cfg.session = SessionKind::parse(v)?;
+    }
+    cfg.deadline_s = args.get_f64("deadline-s", cfg.deadline_s)?;
+    cfg.buffer_k = args.get_usize("buffer-k", cfg.buffer_k)?;
+    cfg.staleness_decay = args.get_f64("staleness-decay", cfg.staleness_decay)?;
     cfg.threads = args.get_usize("threads", cfg.threads)?;
     if let Some(v) = args.get("backend") {
         cfg.backend = BackendKind::parse(v)?;
@@ -157,7 +170,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     let backend = open_backend(&cfg)?;
     println!(
         "fed3sfc run: {} on {} ({} backend, {}), {} clients, {} rounds, K={}, method={}, \
-         schedule={} (frac {}), server_opt={}, network={}",
+         schedule={} (frac {}), server_opt={}, network={} (jitter {}), session={}",
         cfg.model_key(),
         cfg.dataset.name(),
         backend.backend_name(),
@@ -170,13 +183,15 @@ fn cmd_run(args: &Args) -> Result<()> {
         cfg.client_frac,
         cfg.server_opt.name(),
         cfg.network.name(),
+        cfg.net_jitter,
+        cfg.session.name(),
     );
     let mut exp = Experiment::new(cfg, backend.as_ref())?;
     println!("client execution: {} thread(s)", exp.threads());
     for _ in 0..exp.cfg.rounds {
         let rec = exp.run_round()?;
         println!(
-            "round {:>4}  acc {:.4}  loss {:.4}  sel {:>3}  up {:>10} B (cum {:>12})  eff {:.3}  ratio {:>8.1}x  comm {:>7.2}s  {:>7.0} ms",
+            "round {:>4}  acc {:.4}  loss {:.4}  sel {:>3}  up {:>10} B (cum {:>12})  eff {:.3}  ratio {:>8.1}x  comm {:>7.2}s  vt {:>8.2}s  stale {:.2}  {:>7.0} ms (+{:.0} eval)",
             rec.round,
             rec.test_acc,
             rec.test_loss,
@@ -186,11 +201,14 @@ fn cmd_run(args: &Args) -> Result<()> {
             rec.efficiency,
             rec.ratio,
             rec.comm_time_s,
+            rec.sim_time_s,
+            rec.stale_mean,
             rec.wall_ms,
+            rec.eval_ms,
         );
     }
     exp.metrics.flush()?;
-    let t = exp.traffic;
+    let t = exp.traffic();
     println!(
         "done. best acc {:.4}; traffic up {} B / down {} B; modeled comm time ({} link): {:.1}s",
         exp.metrics.best_acc(),

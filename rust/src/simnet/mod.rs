@@ -1,17 +1,28 @@
-//! Network simulator: converts byte counts into wall-clock communication
-//! time under a bandwidth/latency model — the paper's motivation is that
-//! FL clients sit on slow, unreliable links (§1), so time-to-accuracy is
-//! the headline metric, not just bytes.
+//! Network simulator: a virtual clock, per-client links, and a
+//! bandwidth/latency model that converts byte counts into modeled
+//! communication time — the paper's motivation is that FL clients sit on
+//! slow, unreliable links (§1), so time-to-accuracy is the headline
+//! metric, not just bytes.
 //!
-//! The model is threaded through the round loop itself (see
-//! `coordinator::Experiment`): each `RoundRecord` carries a modeled
-//! `comm_time_s` computed with synchronous-round semantics — the round
-//! finishes when the *slowest selected* client has uploaded
-//! ([`NetworkModel::round_time_slowest`]), which matters once a scheduler
-//! makes participation partial or payload sizes differ across clients.
-//! [`NetworkModel::total_time_s`] remains for post-hoc aggregate
-//! estimates from `Traffic` totals. Presets are selected by the
-//! `[network]` config table (`edge` / `datacenter` / `custom`).
+//! The simulator is threaded through the coordinator as an *event queue*
+//! (see `coordinator::FedServer`): every message the server sends or
+//! receives is scheduled on a [`SimClock`] at a per-client delivery time
+//! computed from that client's [`ClientLink`]. Links are derived from the
+//! base [`NetworkModel`] preset; the `[network] jitter` knob spreads
+//! per-client bandwidth on a dedicated RNG stream
+//! ([`NetworkModel::client_links`]) so heterogeneous-link scenarios
+//! replay bit-for-bit from the experiment seed.
+//!
+//! [`NetworkModel::round_time_slowest`] and
+//! [`NetworkModel::total_time_s`] remain for post-hoc aggregate estimates
+//! from `Traffic` totals (under homogeneous links and synchronous rounds
+//! the event queue reduces to exactly those formulas). Presets are
+//! selected by the `[network]` config table (`edge` / `datacenter` /
+//! `custom`).
+
+use crate::util::rng::Rng;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
 
 /// A symmetric-per-client link model.
 #[derive(Clone, Copy, Debug)]
@@ -62,6 +73,29 @@ impl NetworkModel {
         self.round_time_s(slowest as f64, down_bytes_per_client as f64)
     }
 
+    /// Materialize per-client links from this base model.
+    ///
+    /// `jitter ∈ [0, 1)` spreads each client's bandwidth by a factor
+    /// drawn uniformly from `[1 − jitter, 1 + jitter]` — one factor per
+    /// client, applied to both directions (a slow client is slow both
+    /// ways); latency is left untouched. `rng` must be a dedicated
+    /// stream (see `Experiment::new`): the draw order is the client
+    /// index, so link assignments replay bit-for-bit from the seed and
+    /// never perturb any other randomness. `jitter = 0` yields links
+    /// exactly equal to the base model.
+    pub fn client_links(&self, n: usize, jitter: f64, rng: &mut Rng) -> Vec<ClientLink> {
+        (0..n)
+            .map(|_| {
+                let f = if jitter > 0.0 { 1.0 - jitter + 2.0 * jitter * rng.f64() } else { 1.0 };
+                ClientLink {
+                    up_bps: self.up_bps * f,
+                    down_bps: self.down_bps * f,
+                    latency_s: self.latency_s,
+                }
+            })
+            .collect()
+    }
+
     /// Total modeled communication time for an experiment.
     pub fn total_time_s(
         &self,
@@ -76,6 +110,134 @@ impl NetworkModel {
         let per_round_up = up_bytes_total as f64 / rounds as f64 / n_clients as f64;
         let per_round_down = down_bytes_total as f64 / rounds as f64 / n_clients as f64;
         rounds as f64 * self.round_time_s(per_round_up, per_round_down)
+    }
+}
+
+/// One client's link to the server (a jittered instance of the base
+/// [`NetworkModel`]).
+#[derive(Clone, Copy, Debug)]
+pub struct ClientLink {
+    pub up_bps: f64,
+    pub down_bps: f64,
+    pub latency_s: f64,
+}
+
+impl ClientLink {
+    /// Transfer time for `bytes` on the uplink (excluding latency).
+    pub fn up_time_s(&self, bytes: u64) -> f64 {
+        8.0 * bytes as f64 / self.up_bps
+    }
+
+    /// Transfer time for `bytes` on the downlink (excluding latency).
+    pub fn down_time_s(&self, bytes: u64) -> f64 {
+        8.0 * bytes as f64 / self.down_bps
+    }
+}
+
+/// A scheduled delivery: `at` is virtual seconds, `client` the sender
+/// (or [`SimClock::NO_CLIENT`] for server-local timers), `payload`
+/// whatever message the consumer queued.
+#[derive(Debug)]
+pub struct SimEvent<T> {
+    pub at: f64,
+    pub client: usize,
+    pub payload: T,
+    seq: u64,
+}
+
+impl<T> SimEvent<T> {
+    /// Deterministic total order: time, then client index, then insertion
+    /// sequence. The client tie-break is the contract that makes
+    /// simultaneous arrivals (homogeneous links, equal payloads) process
+    /// in ascending client order on every run; server-local timers use
+    /// `NO_CLIENT = usize::MAX` so a deadline expiring at time `t` fires
+    /// *after* every upload that lands exactly at `t`.
+    fn key(&self) -> (f64, usize, u64) {
+        (self.at, self.client, self.seq)
+    }
+}
+
+impl<T> PartialEq for SimEvent<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl<T> Eq for SimEvent<T> {}
+impl<T> PartialOrd for SimEvent<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for SimEvent<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        let (ta, ca, sa) = self.key();
+        let (tb, cb, sb) = other.key();
+        // Reversed: BinaryHeap is a max-heap, we want the earliest event.
+        tb.total_cmp(&ta).then(cb.cmp(&ca)).then(sb.cmp(&sa))
+    }
+}
+
+/// Deterministic discrete-event queue over virtual time.
+///
+/// The clock is the *only* time source of an event-driven session: it
+/// advances exactly to each popped event's timestamp, never backwards
+/// (pushing an event earlier than `now` panics — virtual sends always
+/// happen at or after the present). Ties are broken by client index and
+/// then by insertion order, so a run's event sequence is a pure function
+/// of what was scheduled, independent of wall clock or thread timing.
+#[derive(Debug)]
+pub struct SimClock<T> {
+    now: f64,
+    seq: u64,
+    heap: BinaryHeap<SimEvent<T>>,
+}
+
+impl<T> Default for SimClock<T> {
+    fn default() -> Self {
+        SimClock::new()
+    }
+}
+
+impl<T> SimClock<T> {
+    /// Client index reserved for server-local timers (sorts after every
+    /// real client at the same timestamp).
+    pub const NO_CLIENT: usize = usize::MAX;
+
+    pub fn new() -> SimClock<T> {
+        SimClock { now: 0.0, seq: 0, heap: BinaryHeap::new() }
+    }
+
+    /// Current virtual time (the timestamp of the last popped event).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Schedule `payload` for delivery at virtual time `at` (≥ `now`).
+    pub fn push(&mut self, at: f64, client: usize, payload: T) {
+        assert!(
+            at >= self.now && at.is_finite(),
+            "event scheduled in the past or at a non-finite time: at={at}, now={}",
+            self.now
+        );
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(SimEvent { at, client, payload, seq });
+    }
+
+    /// Pop the earliest event and advance the clock to it.
+    pub fn pop(&mut self) -> Option<SimEvent<T>> {
+        let ev = self.heap.pop()?;
+        debug_assert!(ev.at >= self.now, "virtual time went backwards");
+        self.now = ev.at;
+        Some(ev)
     }
 }
 
@@ -158,5 +320,91 @@ mod tests {
         let t1 = net.total_time_s(10, 1_000_000, 1_000_000, 10);
         let t2 = net.total_time_s(20, 2_000_000, 2_000_000, 10);
         assert!((t2 / t1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sim_clock_orders_by_time_then_client() {
+        let mut clock: SimClock<&'static str> = SimClock::new();
+        clock.push(2.0, 0, "late");
+        clock.push(1.0, 7, "early-high-client");
+        clock.push(1.0, 3, "early-low-client");
+        clock.push(1.0, SimClock::<&str>::NO_CLIENT, "timer");
+        let order: Vec<&str> = std::iter::from_fn(|| clock.pop().map(|e| e.payload)).collect();
+        assert_eq!(order, vec!["early-low-client", "early-high-client", "timer", "late"]);
+    }
+
+    #[test]
+    fn sim_clock_is_monotone_and_tracks_now() {
+        let mut clock: SimClock<u32> = SimClock::new();
+        clock.push(0.5, 1, 1);
+        clock.push(0.25, 2, 2);
+        assert_eq!(clock.now(), 0.0);
+        let mut last = 0.0;
+        while let Some(ev) = clock.pop() {
+            assert!(ev.at >= last, "virtual time regressed");
+            assert_eq!(clock.now(), ev.at);
+            last = ev.at;
+            // Scheduling relative to `now` mid-drain is fine…
+            if ev.payload == 2 {
+                clock.push(clock.now() + 0.1, 9, 3);
+            }
+        }
+        assert!((last - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "scheduled in the past")]
+    fn sim_clock_rejects_events_in_the_past() {
+        let mut clock: SimClock<()> = SimClock::new();
+        clock.push(1.0, 0, ());
+        let _ = clock.pop();
+        clock.push(0.5, 0, ());
+    }
+
+    #[test]
+    fn sim_clock_same_instant_same_client_keeps_insertion_order() {
+        let mut clock: SimClock<u32> = SimClock::new();
+        clock.push(1.0, 4, 10);
+        clock.push(1.0, 4, 20);
+        assert_eq!(clock.pop().unwrap().payload, 10);
+        assert_eq!(clock.pop().unwrap().payload, 20);
+    }
+
+    #[test]
+    fn zero_jitter_links_equal_base_model_exactly() {
+        let net = NetworkModel::edge();
+        let mut rng = crate::util::rng::Rng::new(3);
+        for link in net.client_links(5, 0.0, &mut rng) {
+            assert_eq!(link.up_bps.to_bits(), net.up_bps.to_bits());
+            assert_eq!(link.down_bps.to_bits(), net.down_bps.to_bits());
+            assert_eq!(link.latency_s.to_bits(), net.latency_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn jittered_links_are_bounded_deterministic_and_spread() {
+        let net = NetworkModel::edge();
+        let links = net.client_links(64, 0.5, &mut crate::util::rng::Rng::new(7));
+        let again = net.client_links(64, 0.5, &mut crate::util::rng::Rng::new(7));
+        let mut distinct = false;
+        for (a, b) in links.iter().zip(again.iter()) {
+            assert_eq!(a.up_bps.to_bits(), b.up_bps.to_bits(), "links must replay from seed");
+            assert!(a.up_bps >= 0.5 * net.up_bps - 1e-6 && a.up_bps <= 1.5 * net.up_bps + 1e-6);
+            // One factor, both directions.
+            assert!((a.up_bps / net.up_bps - a.down_bps / net.down_bps).abs() < 1e-12);
+            assert_eq!(a.latency_s.to_bits(), net.latency_s.to_bits());
+            if (a.up_bps - net.up_bps).abs() > 1e-3 {
+                distinct = true;
+            }
+        }
+        assert!(distinct, "jitter produced no spread");
+    }
+
+    #[test]
+    fn link_transfer_times_match_model_formula() {
+        let net = NetworkModel::edge();
+        let link = net.client_links(1, 0.0, &mut crate::util::rng::Rng::new(1))[0];
+        let t = link.latency_s + link.down_time_s(4_000) + link.latency_s + link.up_time_s(1_000);
+        assert!((t - net.round_time_slowest(&[1_000], 4_000)).abs() < 1e-12);
     }
 }

@@ -149,12 +149,14 @@ fn traffic_accounting_is_exact() {
     let model = exp.ops.model;
     // 3SFC payload is fixed-size: m(d+C)+1 floats per client per round.
     let per = model.syn_payload_bytes(1) as u64;
-    assert_eq!(exp.traffic.up_bytes, per * clients * rounds);
+    assert_eq!(exp.traffic().up_bytes, per * clients * rounds);
+    // Downlink framing mirrors the upload path: u32 length header + 4P
+    // per receiving client.
     assert_eq!(
-        exp.traffic.down_bytes,
-        4 * model.params as u64 * clients * rounds
+        exp.traffic().down_bytes,
+        (4 + 4 * model.params as u64) * clients * rounds
     );
-    assert_eq!(exp.traffic.rounds, rounds);
+    assert_eq!(exp.traffic().rounds, rounds);
     // Full participation: every round selects every client, and the
     // modeled per-round comm time accumulates into the traffic totals.
     assert!(exp
@@ -162,9 +164,13 @@ fn traffic_accounting_is_exact() {
         .records
         .iter()
         .all(|r| r.n_selected == clients as usize));
-    assert!(exp.traffic.comm_s > 0.0);
+    assert!(exp.traffic().comm_s > 0.0);
     let sum: f64 = exp.metrics.records.iter().map(|r| r.comm_time_s).sum();
-    assert!((exp.traffic.comm_s - sum).abs() < 1e-9);
+    assert!((exp.traffic().comm_s - sum).abs() < 1e-9);
+    // The virtual clock is cumulative: the last record's sim_time_s is
+    // the total modeled communication time.
+    let last = exp.metrics.records.last().unwrap();
+    assert!((last.sim_time_s - exp.traffic().comm_s).abs() < 1e-9);
 }
 
 #[test]

@@ -123,10 +123,12 @@ fn partial_participation_halves_round_traffic() {
     // 3SFC payloads are fixed-size, so half the clients → half the bytes,
     // and the broadcast only reaches the selected clients.
     assert_eq!(recs[0].up_bytes_round * 2, full);
+    // Broadcast framing is wire-symmetric with uploads: u32 header + 4P
+    // per selected client.
     let params = exp.ops.model.params as u64;
     assert_eq!(
-        exp.traffic.down_bytes,
-        4 * params * 2 * exp.cfg.rounds as u64
+        exp.traffic().down_bytes,
+        (4 + 4 * params) * 2 * exp.cfg.rounds as u64
     );
     // Modeled comm time is present and positive on every record.
     assert!(recs.iter().all(|r| r.comm_time_s > 0.0));

@@ -1,0 +1,388 @@
+//! Event-driven session acceptance tests.
+//!
+//! * **Golden equivalence**: the `Synchronous` policy through the new
+//!   message-passing `FedServer` must reproduce the pre-refactor
+//!   blocking round loop **bit-for-bit** — weights, bytes, EF state —
+//!   for `threads ∈ {1, 4}`. The reference is an independent replica of
+//!   the old loop (selection-order sequential `run_client`, aggregate,
+//!   server step) built from the same public pieces.
+//! * **Determinism**: `Deadline` and `BufferedAsync` sessions are pure
+//!   functions of the seed — the virtual clock is the only time source,
+//!   ties break by client index — and virtual time is monotone.
+
+mod common;
+
+use fed3sfc::compress;
+use fed3sfc::config::{
+    CompressorKind, DatasetKind, ExperimentConfig, NetworkKind, ScheduleKind, SessionKind,
+};
+use fed3sfc::coordinator::{
+    build_scheduler, build_server_opt, run_client, ClientJob, ClientState, Experiment, Server,
+};
+use fed3sfc::data::{dirichlet_partition, Dataset};
+use fed3sfc::runtime::{Backend, FedOps};
+use fed3sfc::util::rng::Rng;
+use fed3sfc::RoundRecord;
+
+fn golden_cfg(method: CompressorKind, threads: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        dataset: DatasetKind::SynthSmall,
+        compressor: method,
+        n_clients: 5,
+        rounds: 5,
+        k_local: 5,
+        lr: 0.05,
+        syn_steps: 6,
+        train_samples: 200,
+        test_samples: 50,
+        eval_every: 5,
+        seed: 42,
+        // Partial participation exercises the scheduler stream and EF
+        // persistence across skips on both sides of the comparison.
+        schedule: ScheduleKind::Uniform,
+        client_frac: 0.6,
+        threads,
+        ..ExperimentConfig::default()
+    }
+}
+
+/// Per-round observables of the legacy loop (the fields the golden
+/// contract pins bit-for-bit; comm/wall times are not part of it).
+struct LegacyRound {
+    n_selected: usize,
+    up_bytes: u64,
+    efficiency: f64,
+    ratio: f64,
+}
+
+struct LegacyRun {
+    weights: Vec<f32>,
+    efs: Vec<Vec<f32>>,
+    rounds: Vec<LegacyRound>,
+    up_cum: u64,
+    down_cum: u64,
+}
+
+/// The pre-refactor round loop, replicated from the same public pieces
+/// the experiment wires together (identical RNG stream derivations):
+/// select → filter zero-sample → sample batches in selection order →
+/// sequential `run_client` → write-back → weighted aggregate → server
+/// step.
+fn legacy_run(cfg: &ExperimentConfig, backend: &dyn Backend) -> LegacyRun {
+    let ops = FedOps::new(backend, cfg.model_key()).unwrap();
+    let model = ops.model;
+    let root = Rng::new(cfg.seed);
+    let train = Dataset::generate_split(cfg.dataset, cfg.train_samples, cfg.seed, 0);
+    let mut part_rng = root.split(0x9A87_1710);
+    let parts = dirichlet_partition(&train, cfg.n_clients, cfg.alpha, &mut part_rng);
+    let mut clients: Vec<ClientState> = parts
+        .into_iter()
+        .enumerate()
+        .map(|(i, idxs)| ClientState::new(i, idxs, model.params, &root))
+        .collect();
+    let w0 = backend.load_init(model).unwrap();
+    let mut scheduler = build_scheduler(cfg, &root);
+    let mut server = Server::with_optimizer(w0, build_server_opt(cfg));
+    let compressor = compress::build(cfg, model);
+
+    let mut rounds = Vec::with_capacity(cfg.rounds);
+    let mut up_cum = 0u64;
+    let mut down_cum = 0u64;
+    for _ in 0..cfg.rounds {
+        let w_global = server.w.clone();
+        let selected = scheduler.select(server.round, clients.len());
+        let active: Vec<usize> = selected
+            .into_iter()
+            .filter(|&ci| clients[ci].n_samples > 0)
+            .collect();
+        let mut recons: Vec<Vec<f32>> = Vec::new();
+        let mut weights: Vec<f32> = Vec::new();
+        let mut bytes = 0u64;
+        let mut eff = 0.0f64;
+        let mut ratio = 0.0f64;
+        for (slot, &ci) in active.iter().enumerate() {
+            let client = &mut clients[ci];
+            let (xs, ys) = client.sample_round(&train, cfg.k_local, model.train_batch);
+            let ef = if cfg.error_feedback { client.ef.clone() } else { Vec::new() };
+            let job = ClientJob {
+                slot,
+                xs,
+                ys,
+                ef,
+                rng: client.rng.clone(),
+                weight: client.n_samples as f32,
+            };
+            let u = run_client(&ops, compressor.as_ref(), cfg, &w_global, job).unwrap();
+            if cfg.error_feedback {
+                client.ef = u.ef;
+            }
+            client.rng = u.rng;
+            bytes += u.payload.wire_bytes() as u64;
+            eff += u.efficiency;
+            ratio += u.ratio;
+            recons.push(u.recon);
+            weights.push(u.weight);
+        }
+        server.apply_round(&recons, &weights);
+        up_cum += bytes;
+        down_cum += (4 + 4 * model.params as u64) * active.len() as u64;
+        let n = active.len();
+        rounds.push(LegacyRound {
+            n_selected: n,
+            up_bytes: bytes,
+            efficiency: if n == 0 { 0.0 } else { eff / n as f64 },
+            ratio: if n == 0 { 0.0 } else { ratio / n as f64 },
+        });
+    }
+    LegacyRun {
+        weights: server.w,
+        efs: clients.into_iter().map(|c| c.ef).collect(),
+        rounds,
+        up_cum,
+        down_cum,
+    }
+}
+
+fn check_golden(method: CompressorKind, threads: usize) {
+    let be = common::native();
+    let cfg = golden_cfg(method, threads);
+    let legacy = legacy_run(&cfg, &be);
+
+    let mut exp = Experiment::new(cfg, &be).unwrap();
+    let recs = exp.run().unwrap();
+
+    assert_eq!(recs.len(), legacy.rounds.len());
+    for (r, l) in recs.iter().zip(legacy.rounds.iter()) {
+        assert_eq!(r.n_selected, l.n_selected, "round {}", r.round);
+        assert_eq!(r.up_bytes_round, l.up_bytes, "round {}", r.round);
+        assert_eq!(
+            r.efficiency.to_bits(),
+            l.efficiency.to_bits(),
+            "round {} efficiency",
+            r.round
+        );
+        assert_eq!(r.ratio.to_bits(), l.ratio.to_bits(), "round {} ratio", r.round);
+        assert_eq!(r.stale_mean, 0.0, "sync staleness is identically zero");
+    }
+    // Global weights bit-identical after the full trajectory.
+    assert_eq!(exp.fed.server.w.len(), legacy.weights.len());
+    for (i, (a, b)) in exp.fed.server.w.iter().zip(legacy.weights.iter()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "w[{i}] (threads={threads})");
+    }
+    // Per-client error-feedback state bit-identical.
+    for (ci, (a, b)) in exp.clients.iter().zip(legacy.efs.iter()).enumerate() {
+        assert_eq!(a.ef.len(), b.len(), "client {ci}");
+        for (i, (x, y)) in a.ef.iter().zip(b.iter()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "client {ci} ef[{i}]");
+        }
+    }
+    // Exact traffic totals (uploads and header-framed broadcasts).
+    assert_eq!(exp.traffic().up_bytes, legacy.up_cum);
+    assert_eq!(exp.traffic().down_bytes, legacy.down_cum);
+}
+
+#[test]
+fn golden_sync_equals_legacy_loop_threesfc_threads1() {
+    check_golden(CompressorKind::ThreeSfc, 1);
+}
+
+#[test]
+fn golden_sync_equals_legacy_loop_threesfc_threads4() {
+    check_golden(CompressorKind::ThreeSfc, 4);
+}
+
+#[test]
+fn golden_sync_equals_legacy_loop_dgc_threads1() {
+    check_golden(CompressorKind::Dgc, 1);
+}
+
+#[test]
+fn golden_sync_equals_legacy_loop_dgc_threads4() {
+    check_golden(CompressorKind::Dgc, 4);
+}
+
+// ---------------------------------------------------------------------
+// Deadline / async determinism on the virtual clock.
+
+fn deadline_cfg(threads: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        dataset: DatasetKind::SynthSmall,
+        compressor: CompressorKind::Dgc,
+        n_clients: 6,
+        rounds: 6,
+        k_local: 5,
+        lr: 0.05,
+        train_samples: 240,
+        test_samples: 50,
+        eval_every: 6,
+        seed: 42,
+        session: SessionKind::Deadline,
+        // Slow asymmetric custom link + wide jitter: transfer times
+        // dominate latency, so the deadline genuinely splits the cohort
+        // and stragglers carry over.
+        network: NetworkKind::Custom,
+        net_up_mbps: 0.1,
+        net_down_mbps: 1.0,
+        net_latency_ms: 1.0,
+        net_jitter: 0.5,
+        deadline_s: 0.08,
+        staleness_decay: 0.5,
+        threads,
+        ..ExperimentConfig::default()
+    }
+}
+
+fn async_cfg(threads: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        dataset: DatasetKind::SynthSmall,
+        compressor: CompressorKind::Dgc,
+        n_clients: 4,
+        rounds: 6,
+        k_local: 5,
+        lr: 0.05,
+        train_samples: 200,
+        test_samples: 50,
+        eval_every: 6,
+        seed: 42,
+        session: SessionKind::Async,
+        buffer_k: 2,
+        staleness_decay: 0.5,
+        net_jitter: 0.3,
+        threads,
+        ..ExperimentConfig::default()
+    }
+}
+
+fn run_records(cfg: ExperimentConfig) -> (Vec<RoundRecord>, Vec<Vec<f32>>) {
+    let be = common::native();
+    let mut exp = Experiment::new(cfg, &be).unwrap();
+    let recs = exp.run().unwrap();
+    let efs = exp.clients.iter().map(|c| c.ef.clone()).collect();
+    (recs, efs)
+}
+
+fn assert_records_bit_identical(a: &[RoundRecord], b: &[RoundRecord]) {
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b.iter()) {
+        assert_eq!(x.round, y.round);
+        assert_eq!(x.n_selected, y.n_selected, "round {}", x.round);
+        assert_eq!(x.test_acc.to_bits(), y.test_acc.to_bits(), "round {}", x.round);
+        assert_eq!(x.up_bytes_round, y.up_bytes_round, "round {}", x.round);
+        assert_eq!(x.up_bytes_cum, y.up_bytes_cum, "round {}", x.round);
+        assert_eq!(x.efficiency.to_bits(), y.efficiency.to_bits(), "round {}", x.round);
+        assert_eq!(x.sim_time_s.to_bits(), y.sim_time_s.to_bits(), "round {}", x.round);
+        assert_eq!(x.stale_mean.to_bits(), y.stale_mean.to_bits(), "round {}", x.round);
+        assert_eq!(x.comm_time_s.to_bits(), y.comm_time_s.to_bits(), "round {}", x.round);
+    }
+}
+
+fn assert_virtual_time_monotone(recs: &[RoundRecord]) {
+    let mut last = 0.0f64;
+    for r in recs {
+        assert!(r.comm_time_s >= 0.0, "round {}: negative step time", r.round);
+        assert!(r.sim_time_s >= last, "round {}: virtual time regressed", r.round);
+        assert!(
+            (r.sim_time_s - last - r.comm_time_s).abs() < 1e-9,
+            "round {}: sim_time_s must accumulate comm_time_s",
+            r.round
+        );
+        last = r.sim_time_s;
+    }
+}
+
+#[test]
+fn deadline_session_is_deterministic_and_monotone() {
+    let (a, ef_a) = run_records(deadline_cfg(1));
+    let (b, ef_b) = run_records(deadline_cfg(1));
+    assert_records_bit_identical(&a, &b);
+    assert_eq!(ef_a, ef_b);
+    assert_virtual_time_monotone(&a);
+    // The deadline paces the session: every step consumes at least one
+    // full deadline window of virtual time.
+    for r in &a {
+        assert!(r.comm_time_s >= 0.08 - 1e-12, "round {}: {}", r.round, r.comm_time_s);
+    }
+    // The slow jittered links actually produce stragglers: some step
+    // aggregates a stale (carried-over) upload, and some step misses
+    // part of the cohort.
+    assert!(a.iter().any(|r| r.stale_mean > 0.0), "no straggler ever carried over");
+    assert!(a.iter().any(|r| r.n_selected < 6), "deadline never split the cohort");
+    assert!(a.iter().all(|r| r.test_acc.is_finite() && r.test_loss.is_finite()));
+}
+
+#[test]
+fn deadline_session_is_thread_count_independent() {
+    let (a, ef_a) = run_records(deadline_cfg(1));
+    let (b, ef_b) = run_records(deadline_cfg(4));
+    assert_records_bit_identical(&a, &b);
+    assert_eq!(ef_a, ef_b);
+}
+
+#[test]
+fn async_session_is_deterministic_and_monotone() {
+    let (a, ef_a) = run_records(async_cfg(1));
+    let (b, ef_b) = run_records(async_cfg(1));
+    assert_records_bit_identical(&a, &b);
+    assert_eq!(ef_a, ef_b);
+    assert_virtual_time_monotone(&a);
+    // With every client perpetually in flight, each step aggregates
+    // exactly buffer_k uploads.
+    assert!(a.iter().all(|r| r.n_selected == 2), "every async step is K arrivals");
+    // Buffered uploads trained against an older model accrue staleness.
+    assert!(a.iter().any(|r| r.stale_mean > 0.0), "async never observed staleness");
+    assert!(a.iter().all(|r| r.test_acc.is_finite() && r.test_loss.is_finite()));
+}
+
+#[test]
+fn async_partial_schedule_fixes_the_inflight_set() {
+    // Documented semantic: in async mode the scheduler runs once, at
+    // session start, and its cohort becomes the fixed concurrency set
+    // (FedBuff's "M concurrent clients") — clients outside the initial
+    // cohort never participate.
+    let mut cfg = async_cfg(1);
+    cfg.n_clients = 6;
+    cfg.train_samples = 240;
+    cfg.schedule = ScheduleKind::Uniform;
+    cfg.client_frac = 0.5;
+    let be = common::native();
+    let mut exp = Experiment::new(cfg, &be).unwrap();
+    let recs = exp.run().unwrap();
+    // Steps still aggregate exactly buffer_k uploads each…
+    assert!(recs.iter().all(|r| r.n_selected == 2));
+    // …but only the 3 clients of the initial cohort (⌈0.5·6⌉) ever
+    // train; everyone else sits outside the in-flight set.
+    let participants = exp.clients.iter().filter(|c| c.rounds_participated > 0).count();
+    assert_eq!(participants, 3, "exactly the initial cohort participates");
+    let dispatched: usize = exp.clients.iter().map(|c| c.rounds_participated).sum();
+    // Every aggregated upload came from a dispatch (stragglers may still
+    // be in flight at the end, so dispatches ≥ aggregations).
+    let aggregated: usize = recs.iter().map(|r| r.n_selected).sum();
+    assert!(dispatched >= aggregated);
+}
+
+#[test]
+fn async_session_is_thread_count_independent() {
+    let (a, ef_a) = run_records(async_cfg(1));
+    let (b, ef_b) = run_records(async_cfg(2));
+    assert_records_bit_identical(&a, &b);
+    assert_eq!(ef_a, ef_b);
+}
+
+#[test]
+fn sync_trajectory_is_invariant_to_link_jitter() {
+    // Jitter reshuffles *arrival order*, but the synchronous barrier
+    // aggregates in selection order — so the training trajectory (and
+    // every byte) is identical; only modeled times change.
+    let mut jittered = golden_cfg(CompressorKind::Dgc, 1);
+    jittered.net_jitter = 0.8;
+    let (a, ef_a) = run_records(golden_cfg(CompressorKind::Dgc, 1));
+    let (b, ef_b) = run_records(jittered);
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b.iter()) {
+        assert_eq!(x.test_acc.to_bits(), y.test_acc.to_bits(), "round {}", x.round);
+        assert_eq!(x.up_bytes_cum, y.up_bytes_cum);
+        assert_eq!(x.efficiency.to_bits(), y.efficiency.to_bits());
+        assert_eq!(x.n_selected, y.n_selected);
+    }
+    assert_eq!(ef_a, ef_b);
+}
