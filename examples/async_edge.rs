@@ -76,7 +76,7 @@ fn main() -> anyhow::Result<()> {
             session.name(),
             exp.metrics.best_acc(),
             last.sim_time_s,
-            exp.traffic().up_bytes
+            exp.traffic().uplink_bytes
         );
     }
     println!(

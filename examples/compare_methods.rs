@@ -67,7 +67,7 @@ fn main() -> Result<()> {
             last.test_acc,
             exp.metrics.best_acc(),
             last.ratio,
-            t.up_bytes,
+            t.uplink_bytes,
             t.comm_s,
         );
     }

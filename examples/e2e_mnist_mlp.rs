@@ -67,7 +67,7 @@ fn main() -> anyhow::Result<()> {
             method.name(),
             exp.metrics.best_acc(),
             t0.elapsed().as_secs_f64(),
-            t.up_bytes,
+            t.uplink_bytes,
             t.comm_s,
         );
     }

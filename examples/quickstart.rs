@@ -44,9 +44,9 @@ fn main() -> anyhow::Result<()> {
     }
     println!(
         "total upload: {} B vs {} B dense — saved {:.1}%; modeled edge-link comm {:.1}s",
-        exp.traffic().up_bytes,
-        exp.traffic().down_bytes,
-        100.0 * (1.0 - exp.traffic().up_bytes as f64 / exp.traffic().down_bytes as f64),
+        exp.traffic().uplink_bytes,
+        exp.traffic().downlink_bytes,
+        100.0 * (1.0 - exp.traffic().uplink_bytes as f64 / exp.traffic().downlink_bytes as f64),
         exp.traffic().comm_s
     );
     Ok(())

@@ -1,0 +1,518 @@
+//! Downlink (server → client) broadcast compression — the E-3SFC
+//! double-way extension (arXiv 2502.03092; STC, arXiv 1903.02891, makes
+//! the same argument): once uplink payloads are compressed, the dense
+//! model broadcast (4 + 4P bytes per client per round) dominates total
+//! wire traffic, so the server synthesizes/sparsifies its *model delta*
+//! too.
+//!
+//! Shape of the subsystem:
+//!
+//! * [`DeltaPayload`] is the broadcast wire format: either a dense
+//!   [`DeltaPayload::Keyframe`] (priced exactly like the legacy dense
+//!   broadcast, u32 length header + 4P) or a compressed
+//!   [`DeltaPayload::Delta`] — a base model *version* plus any upload
+//!   [`Payload`] from the existing zoo, encoding `w^t − ŵ_c` against the
+//!   weights client `c` already holds.
+//! * [`DownlinkTx`] is the server-side encoder slot. [`FedServer`]
+//!   (`coordinator::fedserver`) stays compute-free: its driver passes the
+//!   encoder into `next_directive`, and the server calls it once per
+//!   dispatched client, charging `wire_bytes()` per broadcast.
+//! * [`DenseDownlink`] is the bit-identical default: every broadcast is a
+//!   keyframe sharing one `Arc` per model version — byte-for-byte and
+//!   trajectory-identical to the pre-downlink dense path.
+//! * [`DeltaDownlink`] holds the per-client **ledger**: the last version
+//!   sent to each client and a *shadow replica* of the client's
+//!   reconstructed weights. Each delta targets `w^t − shadow_c`, so the
+//!   residual the inner compressor drops stays in the next round's
+//!   target — the shadow **is** the server-side error-feedback memory
+//!   (ŵ^{t+1} = ŵ^t + C(w^t − ŵ^t), the per-client form of E-3SFC's
+//!   Eq. 6-style server EF). Clients that fall more than `gap` versions
+//!   behind (stragglers, new arrivals) get a dense keyframe, which
+//!   resynchronizes the shadow exactly.
+//!
+//! Determinism: encoding runs on the main thread in dispatch order with
+//! a dedicated RNG stream, so downlink-compressed sessions stay
+//! bit-identical across thread counts and session modes
+//! (`tests/downlink_test.rs`).
+//!
+//! [`FedServer`]: crate::coordinator::FedServer
+
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::compress::{Compressor, EncodeCtx, Payload, Stc, ThreeSfc, TopK};
+use crate::config::{DownlinkKind, ExperimentConfig};
+use crate::model::ModelInfo;
+use crate::runtime::FedOps;
+use crate::util::rng::Rng;
+use crate::util::vecmath;
+
+/// What the server puts on the wire for one broadcast.
+#[derive(Clone, Debug)]
+pub enum DeltaPayload {
+    /// Dense weights — the resynchronization frame. Priced exactly like
+    /// the legacy dense broadcast (u32 length header + 4P), so an
+    /// identity downlink is byte-identical to the pre-downlink ledger.
+    /// `Arc`-backed: one allocation per model version, shared across the
+    /// cohort and with the envelope's reconstruction cache.
+    Keyframe { w: Arc<Vec<f32>> },
+    /// A compressed model delta against the weights the client holds:
+    /// `base` is the model version of those weights (the ledger's last
+    /// acked version for this client), `inner` any upload payload
+    /// encoding `w^t − ŵ_c`.
+    Delta { base: u32, inner: Payload },
+}
+
+impl DeltaPayload {
+    /// Exact broadcast size in bytes. Keyframes charge the u32 length
+    /// header + dense f32s (= the legacy dense-broadcast price); deltas
+    /// charge a u32 base-version header + the inner payload's own
+    /// wire bytes.
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            DeltaPayload::Keyframe { w } => 4 + 4 * w.len(),
+            DeltaPayload::Delta { inner, .. } => 4 + inner.wire_bytes(),
+        }
+    }
+
+    /// Downlink compression ratio (× vs the dense keyframe price).
+    pub fn ratio(&self, n_params: usize) -> f64 {
+        (4 + 4 * n_params) as f64 / (self.wire_bytes() as f64).max(1e-300)
+    }
+
+    /// Out-of-band payload tag: `"keyframe"` or `"delta:<inner kind>"`.
+    pub fn kind(&self) -> String {
+        match self {
+            DeltaPayload::Keyframe { .. } => "keyframe".to_string(),
+            DeltaPayload::Delta { inner, .. } => format!("delta:{}", inner.kind()),
+        }
+    }
+
+    /// The ledger version a delta is based on (`None` for keyframes).
+    pub fn base_version(&self) -> Option<usize> {
+        match self {
+            DeltaPayload::Keyframe { .. } => None,
+            DeltaPayload::Delta { base, .. } => Some(*base as usize),
+        }
+    }
+
+    /// The actual wire encoding (little-endian), mirroring
+    /// [`Payload::serialize`]: exactly the headers [`wire_bytes`] charges,
+    /// in declaration order — `serialize().len() == wire_bytes()` is
+    /// property-tested (`tests/prop_compressor_test.rs`).
+    ///
+    /// [`wire_bytes`]: DeltaPayload::wire_bytes
+    pub fn serialize(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.wire_bytes());
+        match self {
+            DeltaPayload::Keyframe { w } => {
+                out.extend((w.len() as u32).to_le_bytes());
+                for v in w.iter() {
+                    out.extend(v.to_le_bytes());
+                }
+            }
+            DeltaPayload::Delta { base, inner } => {
+                out.extend(base.to_le_bytes());
+                out.extend(inner.serialize());
+            }
+        }
+        out
+    }
+
+    /// Inverse of [`DeltaPayload::serialize`]. `kind` is the out-of-band
+    /// tag ([`DeltaPayload::kind`]); model geometry supplies the shapes
+    /// the wire format does not repeat, exactly like
+    /// [`Payload::deserialize`].
+    pub fn deserialize(
+        kind: &str,
+        bytes: &[u8],
+        n_params: usize,
+        feature_len: usize,
+        n_classes: usize,
+    ) -> Result<DeltaPayload> {
+        if kind == "keyframe" {
+            ensure!(bytes.len() >= 4, "truncated keyframe header");
+            let n = u32::from_le_bytes(bytes[..4].try_into().unwrap()) as usize;
+            ensure!(n == n_params, "keyframe for {n} params, model has {n_params}");
+            ensure!(bytes.len() == 4 + 4 * n, "keyframe length mismatch");
+            let w = bytes[4..]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            return Ok(DeltaPayload::Keyframe { w: Arc::new(w) });
+        }
+        let Some(inner_kind) = kind.strip_prefix("delta:") else {
+            bail!("unknown downlink payload kind '{kind}'");
+        };
+        ensure!(bytes.len() >= 4, "truncated delta base-version header");
+        let base = u32::from_le_bytes(bytes[..4].try_into().unwrap());
+        let inner =
+            Payload::deserialize(inner_kind, &bytes[4..], n_params, feature_len, n_classes)?;
+        Ok(DeltaPayload::Delta { base, inner })
+    }
+}
+
+/// The server-side downlink encoder slot.
+///
+/// Object-safe so [`crate::coordinator::FedServer`] can take
+/// `&mut dyn DownlinkTx` per `next_directive` pump and stay compute-free
+/// — all encoding state (ledger, shadows, RNG) lives behind this trait,
+/// held by the driver.
+///
+/// `encode` returns the wire payload *and* the exact weights the client
+/// reconstructs from it (keyframe weights, or `shadow + decode(delta)`),
+/// which the broadcast envelope carries as its reconstruction cache —
+/// the mirror of `Upload::recon` on the uplink.
+pub trait DownlinkTx {
+    fn name(&self) -> String;
+
+    /// Encode the broadcast for `client` at model `version` (the server
+    /// round counter) with current global weights `w`.
+    fn encode(
+        &mut self,
+        client: usize,
+        version: usize,
+        w: &[f32],
+    ) -> Result<(DeltaPayload, Arc<Vec<f32>>)>;
+}
+
+/// The bit-identical default: every broadcast is a dense keyframe.
+///
+/// Keeps one `Arc` per model version (the version only changes at an
+/// aggregation step), so a cohort of N clients — or an async session's
+/// K−1 same-version redispatches — share a single clone of the weights,
+/// exactly like the pre-downlink `w_cache`.
+#[derive(Default)]
+pub struct DenseDownlink {
+    cache: Option<(usize, Arc<Vec<f32>>)>,
+}
+
+impl DenseDownlink {
+    pub fn new() -> DenseDownlink {
+        DenseDownlink { cache: None }
+    }
+}
+
+impl DownlinkTx for DenseDownlink {
+    fn name(&self) -> String {
+        "identity".to_string()
+    }
+
+    fn encode(
+        &mut self,
+        _client: usize,
+        version: usize,
+        w: &[f32],
+    ) -> Result<(DeltaPayload, Arc<Vec<f32>>)> {
+        let arc = match &self.cache {
+            Some((v, a)) if *v == version => Arc::clone(a),
+            _ => {
+                let a = Arc::new(w.to_vec());
+                self.cache = Some((version, Arc::clone(&a)));
+                a
+            }
+        };
+        Ok((DeltaPayload::Keyframe { w: Arc::clone(&arc) }, arc))
+    }
+}
+
+/// One ledger entry: what the server knows client `c` holds.
+struct LedgerSlot {
+    /// Model version of the client's weights (last broadcast sent).
+    version: usize,
+    /// Exact replica of the client's reconstructed weights ŵ_c. The
+    /// residual `w^t − shadow` accumulates everything past deltas
+    /// dropped, so this doubles as the per-client server-side EF memory.
+    shadow: Vec<f32>,
+}
+
+/// Compressing downlink: per-client version ledger + shadow-replica EF,
+/// any zoo [`Compressor`] on the model delta.
+pub struct DeltaDownlink<'a> {
+    ops: FedOps<'a>,
+    comp: Box<dyn Compressor>,
+    /// Keyframe fallback threshold: a client whose ledger version trails
+    /// the current model by *more than* `gap` versions is resynchronized
+    /// with a dense keyframe (`gap = 0` → keyframe whenever the version
+    /// advanced at all, i.e. dense-equivalent in server-paced sessions).
+    gap: usize,
+    /// Dedicated stream (synthetic-feature init for a 3SFC downlink);
+    /// encoding happens sequentially in dispatch order on the main
+    /// thread, so consumption is thread-count independent.
+    rng: Rng,
+    slots: Vec<Option<LedgerSlot>>,
+    /// One dense clone per model version for keyframe broadcasts.
+    kf_cache: Option<(usize, Arc<Vec<f32>>)>,
+    /// Keyframes / deltas sent (diagnostics, tests).
+    pub keyframes: u64,
+    pub deltas: u64,
+}
+
+impl<'a> DeltaDownlink<'a> {
+    pub fn new(
+        ops: FedOps<'a>,
+        comp: Box<dyn Compressor>,
+        n_clients: usize,
+        gap: usize,
+        rng: Rng,
+    ) -> DeltaDownlink<'a> {
+        DeltaDownlink {
+            ops,
+            comp,
+            gap,
+            rng,
+            slots: (0..n_clients).map(|_| None).collect(),
+            kf_cache: None,
+            keyframes: 0,
+            deltas: 0,
+        }
+    }
+
+    /// The ledger's last-sent model version for `client` (tests).
+    pub fn ledger_version(&self, client: usize) -> Option<usize> {
+        self.slots.get(client)?.as_ref().map(|s| s.version)
+    }
+
+    /// The shadow replica of `client`'s weights (tests pin it against
+    /// the client's actual reconstruction bit-for-bit).
+    pub fn shadow(&self, client: usize) -> Option<&[f32]> {
+        self.slots.get(client)?.as_ref().map(|s| s.shadow.as_slice())
+    }
+
+    fn keyframe(&mut self, client: usize, version: usize, w: &[f32]) -> (DeltaPayload, Arc<Vec<f32>>) {
+        let arc = match &self.kf_cache {
+            Some((v, a)) if *v == version => Arc::clone(a),
+            _ => {
+                let a = Arc::new(w.to_vec());
+                self.kf_cache = Some((version, Arc::clone(&a)));
+                a
+            }
+        };
+        // The keyframe resynchronizes the shadow exactly — any
+        // accumulated EF residual is flushed by construction.
+        self.slots[client] = Some(LedgerSlot { version, shadow: w.to_vec() });
+        self.keyframes += 1;
+        (DeltaPayload::Keyframe { w: Arc::clone(&arc) }, arc)
+    }
+}
+
+impl DownlinkTx for DeltaDownlink<'_> {
+    fn name(&self) -> String {
+        format!("{}(gap {})", self.comp.name(), self.gap)
+    }
+
+    fn encode(
+        &mut self,
+        client: usize,
+        version: usize,
+        w: &[f32],
+    ) -> Result<(DeltaPayload, Arc<Vec<f32>>)> {
+        ensure!(client < self.slots.len(), "downlink encode for unknown client {client}");
+        let stale = match &self.slots[client] {
+            None => return Ok(self.keyframe(client, version, w)),
+            Some(s) => version.saturating_sub(s.version),
+        };
+        if stale > self.gap {
+            return Ok(self.keyframe(client, version, w));
+        }
+        let mut slot = self.slots[client].take().expect("ledger slot checked above");
+        // Delta target: everything the client is missing, *including* the
+        // residual of past compressed deltas (shadow-replica EF).
+        let target = vecmath::sub(w, &slot.shadow);
+        // The encoder optimizes at the weights the client actually holds
+        // (a 3SFC downlink decodes at ŵ_c, Eq. 10 symmetry).
+        let mut ctx =
+            EncodeCtx { ops: &self.ops, w_global: &slot.shadow, rng: &mut self.rng };
+        let (inner, recon, _stats) = self.comp.encode(&mut ctx, &target)?;
+        vecmath::add_assign(&mut slot.shadow, &recon);
+        let base = slot.version as u32;
+        slot.version = version;
+        let w_client = Arc::new(slot.shadow.clone());
+        self.slots[client] = Some(slot);
+        self.deltas += 1;
+        Ok((DeltaPayload::Delta { base, inner }, w_client))
+    }
+}
+
+/// Build the downlink encoder an [`ExperimentConfig`] asks for.
+///
+/// Identity (the default) is [`DenseDownlink`] — bit-identical to the
+/// pre-downlink dense path. The compressed kinds wrap a zoo encoder in a
+/// [`DeltaDownlink`]: 3SFC reuses the uplink's synthetic-feature knobs
+/// (`budget_mult`, `syn_steps`, `lr_syn`, `lambda`); top-k takes
+/// `downlink_rate` or, at 0, the 3SFC byte budget (the same protocol the
+/// uplink zoo uses); STC takes `downlink_rate` or its natural 1/32.
+pub fn build_downlink<'a>(
+    cfg: &ExperimentConfig,
+    model: &ModelInfo,
+    ops: FedOps<'a>,
+    rng: Rng,
+) -> Box<dyn DownlinkTx + 'a> {
+    let n = model.params;
+    let comp: Box<dyn Compressor> = match cfg.downlink {
+        DownlinkKind::Identity => return Box::new(DenseDownlink::new()),
+        DownlinkKind::ThreeSfc => Box::new(ThreeSfc::new(
+            cfg.syn_m(),
+            cfg.syn_steps,
+            cfg.lr_syn,
+            cfg.lambda,
+        )),
+        DownlinkKind::TopK => {
+            let k = if cfg.downlink_rate > 0.0 {
+                ((n as f64 * cfg.downlink_rate).round() as usize).clamp(1, n)
+            } else {
+                (model.syn_payload_bytes(cfg.syn_m()).saturating_sub(4) / 8).clamp(1, n)
+            };
+            Box::new(TopK::new(k))
+        }
+        DownlinkKind::Stc => {
+            let rate = if cfg.downlink_rate > 0.0 { cfg.downlink_rate } else { 1.0 / 32.0 };
+            Box::new(Stc::with_rate(n, rate))
+        }
+    };
+    Box::new(DeltaDownlink::new(ops, comp, cfg.n_clients, cfg.downlink_gap, rng))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{Backend, NativeBackend};
+
+    #[test]
+    fn delta_payload_byte_accounting_and_roundtrip() {
+        let kf = DeltaPayload::Keyframe { w: Arc::new(vec![0.5f32; 10]) };
+        assert_eq!(kf.wire_bytes(), 4 + 40, "keyframe = the legacy dense broadcast price");
+        assert_eq!(kf.kind(), "keyframe");
+        assert_eq!(kf.base_version(), None);
+
+        let delta = DeltaPayload::Delta {
+            base: 7,
+            inner: Payload::TopK { n: 10, idx: vec![1, 4], val: vec![0.5, -1.0] },
+        };
+        assert_eq!(delta.wire_bytes(), 4 + (4 + 8 + 8));
+        assert_eq!(delta.kind(), "delta:topk");
+        assert_eq!(delta.base_version(), Some(7));
+        assert!(delta.ratio(10) > 1.0);
+
+        for p in [kf, delta] {
+            let bytes = p.serialize();
+            assert_eq!(bytes.len(), p.wire_bytes(), "{}", p.kind());
+            let back = DeltaPayload::deserialize(&p.kind(), &bytes, 10, 4, 3).unwrap();
+            assert_eq!(back.kind(), p.kind());
+            assert_eq!(back.serialize(), bytes, "{} roundtrip", p.kind());
+        }
+    }
+
+    #[test]
+    fn delta_payload_rejects_malformed() {
+        let kf = DeltaPayload::Keyframe { w: Arc::new(vec![0.0f32; 10]) };
+        let bytes = kf.serialize();
+        // Truncated, trailing, wrong model size, unknown kind.
+        assert!(DeltaPayload::deserialize("keyframe", &bytes[..bytes.len() - 1], 10, 4, 3)
+            .is_err());
+        let mut trailing = bytes.clone();
+        trailing.push(0);
+        assert!(DeltaPayload::deserialize("keyframe", &trailing, 10, 4, 3).is_err());
+        assert!(DeltaPayload::deserialize("keyframe", &bytes, 12, 4, 3).is_err());
+        assert!(DeltaPayload::deserialize("zip", &bytes, 10, 4, 3).is_err());
+        // A delta with an out-of-range inner index must not survive.
+        let bad = DeltaPayload::Delta {
+            base: 0,
+            inner: Payload::TopK { n: 10, idx: vec![99], val: vec![1.0] },
+        };
+        assert!(DeltaPayload::deserialize("delta:topk", &bad.serialize(), 10, 4, 3).is_err());
+    }
+
+    #[test]
+    fn dense_downlink_shares_one_arc_per_version() {
+        let mut dl = DenseDownlink::new();
+        let w = vec![1.0f32, 2.0];
+        let (p0, r0) = dl.encode(0, 5, &w).unwrap();
+        let (_p1, r1) = dl.encode(1, 5, &w).unwrap();
+        assert!(Arc::ptr_eq(&r0, &r1), "same version → same allocation");
+        let DeltaPayload::Keyframe { w: kw } = p0 else { panic!("identity sends keyframes") };
+        assert!(Arc::ptr_eq(&kw, &r0), "payload and recon share the Arc");
+        // A new version invalidates the cache.
+        let (_, r2) = dl.encode(0, 6, &w).unwrap();
+        assert!(!Arc::ptr_eq(&r0, &r2));
+        assert_eq!(*r2, w);
+    }
+
+    #[test]
+    fn delta_downlink_ledger_keyframes_then_deltas_and_gap_resync() {
+        let backend = NativeBackend::new();
+        let ops = FedOps::new(&backend, "mlp_small").unwrap();
+        let n = ops.model.params;
+        let ops2 = FedOps::new(&backend, "mlp_small").unwrap();
+        let comp: Box<dyn Compressor> = Box::new(TopK::new(n / 10));
+        let mut dl = DeltaDownlink::new(ops2, comp, 2, 1, Rng::new(7));
+
+        let w0 = backend.load_init(ops.model).unwrap();
+        // First contact is always a keyframe and seeds the shadow exactly.
+        let (p, recon) = dl.encode(0, 0, &w0).unwrap();
+        assert_eq!(p.kind(), "keyframe");
+        assert_eq!(*recon, w0);
+        assert_eq!(dl.ledger_version(0), Some(0));
+        assert_eq!(dl.shadow(0).unwrap(), &w0[..]);
+
+        // One version later: a delta against base 0, and the returned
+        // reconstruction is exactly shadow_before + decode(inner).
+        let mut w1 = w0.clone();
+        for (i, v) in w1.iter_mut().enumerate() {
+            *v += 0.01 * ((i % 13) as f32 - 6.0);
+        }
+        let shadow_before = dl.shadow(0).unwrap().to_vec();
+        let (p, recon) = dl.encode(0, 1, &w1).unwrap();
+        assert_eq!(p.base_version(), Some(0));
+        let DeltaPayload::Delta { inner, .. } = &p else { panic!("expected a delta") };
+        let dctx = crate::compress::DecodeCtx { ops: &ops, w_global: &shadow_before };
+        let decoded = TopK::new(n / 10).decode(&dctx, inner).unwrap();
+        let mut expect = shadow_before.clone();
+        vecmath::add_assign(&mut expect, &decoded);
+        for (a, b) in recon.iter().zip(expect.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "recon must be shadow + decode(inner)");
+        }
+        assert_eq!(dl.shadow(0).unwrap(), &expect[..]);
+        assert_eq!((dl.keyframes, dl.deltas), (1, 1));
+
+        // A client 3 versions behind gap=1 is resynchronized densely.
+        let (p, recon) = dl.encode(0, 4, &w1).unwrap();
+        assert_eq!(p.kind(), "keyframe", "stale past the gap → keyframe");
+        assert_eq!(*recon, w1);
+        assert_eq!(dl.ledger_version(0), Some(4));
+
+        // An unseen client starts with a keyframe regardless of version.
+        let (p, _) = dl.encode(1, 4, &w1).unwrap();
+        assert_eq!(p.kind(), "keyframe");
+    }
+
+    #[test]
+    fn delta_downlink_ef_residual_is_carried_by_the_shadow() {
+        // With a heavily truncating inner compressor, w − shadow after a
+        // delta is exactly the dropped residual, and the next target
+        // includes it — the EF identity ŵ' = ŵ + C(w − ŵ).
+        let backend = NativeBackend::new();
+        let ops = FedOps::new(&backend, "mlp_small").unwrap();
+        let comp: Box<dyn Compressor> = Box::new(TopK::new(1));
+        let mut dl = DeltaDownlink::new(ops, comp, 1, usize::MAX, Rng::new(3));
+        let ops_chk = FedOps::new(&backend, "mlp_small").unwrap();
+        let w0 = backend.load_init(ops_chk.model).unwrap();
+        dl.encode(0, 0, &w0).unwrap();
+        let mut w1 = w0.clone();
+        w1[0] += 1.0;
+        w1[1] += 0.25;
+        dl.encode(0, 1, &w1).unwrap();
+        // Top-1 keeps only coordinate 0; the shadow carries the miss.
+        let shadow = dl.shadow(0).unwrap();
+        assert!((shadow[0] - w1[0]).abs() < 1e-6);
+        assert_eq!(shadow[1], w0[1], "dropped coordinate stays in the residual");
+        // Next delta at the same weights: the residual is the target.
+        let (p, recon) = dl.encode(0, 2, &w1).unwrap();
+        assert_eq!(p.base_version(), Some(1));
+        assert!(
+            (recon[1] - w1[1]).abs() < 1e-6,
+            "EF residual recovered one round later"
+        );
+    }
+}

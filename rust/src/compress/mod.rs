@@ -17,6 +17,7 @@
 //! requires `Send + Sync`; all state a compressor holds is immutable
 //! configuration.
 
+pub mod downlink;
 pub mod fedsynth;
 pub mod identity;
 pub mod payload;
@@ -27,6 +28,7 @@ pub mod topk;
 
 use anyhow::Result;
 
+pub use downlink::{build_downlink, DeltaDownlink, DeltaPayload, DenseDownlink, DownlinkTx};
 pub use fedsynth::FedSynth;
 pub use identity::Identity;
 pub use payload::Payload;

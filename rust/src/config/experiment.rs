@@ -288,6 +288,44 @@ impl CompressorKind {
     }
 }
 
+/// Downlink (broadcast) compression method (`[downlink]` table /
+/// `--downlink`). The server compresses its model *delta* against each
+/// client's last acked version with server-side error feedback
+/// (E-3SFC's double-way construction; see `compress::downlink`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DownlinkKind {
+    /// Dense keyframe broadcasts — bit-identical to the pre-downlink
+    /// ledger (default).
+    Identity,
+    /// 3SFC synthesizing the model delta (the E-3SFC extension).
+    ThreeSfc,
+    /// DGC-style top-k on the model delta.
+    TopK,
+    /// STC ternary top-k on the model delta.
+    Stc,
+}
+
+impl DownlinkKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "identity" | "dense" | "none" => DownlinkKind::Identity,
+            "3sfc" | "threesfc" => DownlinkKind::ThreeSfc,
+            "topk" | "dgc" => DownlinkKind::TopK,
+            "stc" => DownlinkKind::Stc,
+            _ => bail!("unknown downlink '{s}' (want identity|3sfc|topk|stc)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DownlinkKind::Identity => "identity",
+            DownlinkKind::ThreeSfc => "3sfc",
+            DownlinkKind::TopK => "topk",
+            DownlinkKind::Stc => "stc",
+        }
+    }
+}
+
 /// Full experiment description. Defaults mirror the paper's §6.1 settings
 /// (lr=0.01, K=5, λ=0, EF on) at the scaled-down workload sizes of DESIGN §3.
 #[derive(Clone, Debug)]
@@ -374,6 +412,15 @@ pub struct ExperimentConfig {
     /// backend-parity test pins both backends to one init). `None` asks
     /// the backend for its deterministic He-normal init.
     pub init_weights: Option<Vec<f32>>,
+    /// Downlink broadcast compression (`[downlink]` table / `--downlink`).
+    pub downlink: DownlinkKind,
+    /// Keyframe fallback threshold: clients more than `gap` model
+    /// versions behind get a dense keyframe instead of a delta.
+    pub downlink_gap: usize,
+    /// Explicit sparsity rate for a top-k/STC downlink; 0 → top-k matches
+    /// 3SFC's byte budget and STC uses its natural 1/32 (same protocol as
+    /// the uplink zoo).
+    pub downlink_rate: f64,
 }
 
 impl Default for ExperimentConfig {
@@ -423,6 +470,9 @@ impl Default for ExperimentConfig {
             threads: 0,
             backend: BackendKind::Auto,
             init_weights: None,
+            downlink: DownlinkKind::Identity,
+            downlink_gap: 4,
+            downlink_rate: 0.0,
         }
     }
 }
@@ -542,6 +592,9 @@ impl ExperimentConfig {
         if !(self.staleness_decay > 0.0 && self.staleness_decay <= 1.0) {
             bail!("staleness_decay must be in (0, 1], got {}", self.staleness_decay);
         }
+        if !(0.0..=1.0).contains(&self.downlink_rate) {
+            bail!("downlink_rate must be in [0, 1], got {}", self.downlink_rate);
+        }
         Ok(())
     }
 
@@ -602,6 +655,13 @@ impl ExperimentConfig {
                 "backend" | "runtime.backend" => {
                     self.backend = BackendKind::parse(v.as_str()?)?
                 }
+                "downlink" | "downlink.kind" => {
+                    self.downlink = DownlinkKind::parse(v.as_str()?)?
+                }
+                "downlink_gap" | "downlink.gap" => {
+                    self.downlink_gap = v.as_i64()? as usize
+                }
+                "downlink_rate" | "downlink.rate" => self.downlink_rate = v.as_f64()?,
                 other => bail!("unknown config key '{other}'"),
             }
         }
@@ -793,6 +853,46 @@ mod tests {
         for kind in [SessionKind::Sync, SessionKind::Deadline, SessionKind::Async] {
             assert_eq!(SessionKind::parse(kind.name()).unwrap(), kind);
         }
+    }
+
+    #[test]
+    fn downlink_toml_table() {
+        // Defaults: identity, gap 4, budget-matched rate.
+        let cfg = ExperimentConfig::default();
+        assert_eq!(cfg.downlink, DownlinkKind::Identity);
+        assert_eq!(cfg.downlink_gap, 4);
+        assert_eq!(cfg.downlink_rate, 0.0);
+        let cfg = ExperimentConfig::from_toml_str(
+            r#"
+            [downlink]
+            kind = "3sfc"
+            gap = 2
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.downlink, DownlinkKind::ThreeSfc);
+        assert_eq!(cfg.downlink_gap, 2);
+        // Bare keys (CLI-style flat configs) and every alias.
+        let cfg =
+            ExperimentConfig::from_toml_str("downlink = \"dgc\"\ndownlink_rate = 0.02\n")
+                .unwrap();
+        assert_eq!(cfg.downlink, DownlinkKind::TopK);
+        assert_eq!(cfg.downlink_rate, 0.02);
+        for kind in [
+            DownlinkKind::Identity,
+            DownlinkKind::ThreeSfc,
+            DownlinkKind::TopK,
+            DownlinkKind::Stc,
+        ] {
+            assert_eq!(DownlinkKind::parse(kind.name()).unwrap(), kind);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_downlink_values() {
+        assert!(ExperimentConfig::from_toml_str("[downlink]\nkind = \"zip\"").is_err());
+        assert!(ExperimentConfig::from_toml_str("[downlink]\nrate = 1.5").is_err());
+        assert!(ExperimentConfig::from_toml_str("downlink_rate = -0.1").is_err());
     }
 
     #[test]

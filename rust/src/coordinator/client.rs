@@ -14,6 +14,10 @@ pub struct ClientState {
     pub n_samples: usize,
     /// Rounds this client was selected in (partial-participation stats).
     pub rounds_participated: usize,
+    /// Model version of the last broadcast this client reconstructed —
+    /// the client-side mirror of the server's downlink ledger
+    /// (`compress::downlink`). `None` until first participation.
+    pub last_version: Option<usize>,
 }
 
 impl ClientState {
@@ -26,6 +30,7 @@ impl ClientState {
             rng: root_rng.split(0xC11EFF + id as u64),
             n_samples,
             rounds_participated: 0,
+            last_version: None,
         }
     }
 

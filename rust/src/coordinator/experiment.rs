@@ -31,10 +31,10 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::compress::{self, Compressor};
+use crate::compress::{self, Compressor, DownlinkTx};
 use crate::config::{
-    BackendKind, CompressorKind, DatasetKind, ExperimentConfig, NetworkKind, ScheduleKind,
-    ServerOptKind, SessionKind,
+    BackendKind, CompressorKind, DatasetKind, DownlinkKind, ExperimentConfig, NetworkKind,
+    ScheduleKind, ServerOptKind, SessionKind,
 };
 use crate::coordinator::fedserver::{Directive, FedServer};
 use crate::coordinator::opt::build_server_opt;
@@ -59,6 +59,11 @@ pub struct RoundRecord {
     pub n_selected: usize,
     pub up_bytes_round: u64,
     pub up_bytes_cum: u64,
+    /// Downlink wire bytes of the broadcasts dispatched in this step's
+    /// interval (keyframes and/or compressed deltas, priced per
+    /// envelope).
+    pub down_bytes_round: u64,
+    pub down_bytes_cum: u64,
     /// Mean per-client compression efficiency cos(ĝ, g+e) (Fig 7).
     pub efficiency: f64,
     /// Mean compression ratio (× vs dense) over this step's payloads.
@@ -99,6 +104,11 @@ pub struct Experiment<'a> {
     /// Worker pool for the dispatch-batch client fan-out; `None` runs
     /// the sequential (seed-exact) path.
     pool: Option<WorkerPool>,
+    /// Server-side downlink encoder (`[downlink]`): the per-client
+    /// version ledger + shadow-replica EF, or the dense keyframe path.
+    /// Driver-owned and passed into every `next_directive` pump so the
+    /// server itself stays compute-free.
+    downlink: Box<dyn DownlinkTx + 'a>,
 }
 
 impl<'a> Experiment<'a> {
@@ -167,6 +177,15 @@ impl<'a> Experiment<'a> {
             model.params,
         );
         let compressor = compress::build(&cfg, model);
+        // The downlink encoder runs on the main thread (sequentially, in
+        // dispatch order) with its own FedOps handle and RNG stream — so
+        // compressed broadcasts are identical for every thread count.
+        let downlink = compress::build_downlink(
+            &cfg,
+            model,
+            FedOps::new(backend, cfg.model_key())?,
+            root.split(0xD114_C0DE),
+        );
         let metrics = MetricsSink::new(&cfg.metrics_path)?;
         // One worker per thread, never more workers than clients; a
         // single thread skips the pool entirely and reproduces the
@@ -191,6 +210,7 @@ impl<'a> Experiment<'a> {
             metrics,
             last_selected: Vec::new(),
             pool,
+            downlink,
         })
     }
 
@@ -228,7 +248,7 @@ impl<'a> Experiment<'a> {
         // Pump the server: compute every dispatch batch it emits until
         // its policy turns arrivals into an aggregation step.
         let summary = loop {
-            match self.fed.next_directive()? {
+            match self.fed.next_directive(self.downlink.as_mut())? {
                 Directive::Dispatch(bcasts) => self.compute_and_submit(&bcasts)?,
                 Directive::Step(s) => break s,
             }
@@ -262,7 +282,9 @@ impl<'a> Experiment<'a> {
             test_loss,
             n_selected,
             up_bytes_round: summary.up_bytes_step,
-            up_bytes_cum: self.fed.traffic.up_bytes,
+            up_bytes_cum: self.fed.traffic.uplink_bytes,
+            down_bytes_round: summary.down_bytes_step,
+            down_bytes_cum: self.fed.traffic.downlink_bytes,
             efficiency: summary.efficiency,
             ratio: summary.ratio,
             comm_time_s: summary.comm_time_s,
@@ -284,10 +306,12 @@ impl<'a> Experiment<'a> {
         let k = self.cfg.k_local;
         let b = self.ops.model.train_batch;
         debug_assert!(!bcasts.is_empty(), "dispatch batches are never empty");
-        // All broadcasts in a batch share one model version.
-        let w_global: Arc<Vec<f32>> = Arc::clone(&bcasts[0].w);
 
-        let mut jobs: Vec<ClientJob> = Vec::with_capacity(bcasts.len());
+        // Each client trains on its *own* broadcast reconstruction
+        // (`bc.w`): with a compressed downlink the cohort's weights can
+        // differ per client (ledger/EF state); dense keyframes share one
+        // Arc so the classic path still clones nothing.
+        let mut jobs: Vec<(Arc<Vec<f32>>, ClientJob)> = Vec::with_capacity(bcasts.len());
         for (slot, bc) in bcasts.iter().enumerate() {
             let client = &mut self.clients[bc.client];
             let (xs, ys) = client.sample_round(&self.train, k, b);
@@ -299,24 +323,25 @@ impl<'a> Experiment<'a> {
             } else {
                 Vec::new()
             };
-            jobs.push(ClientJob {
-                slot,
-                xs,
-                ys,
-                ef,
-                rng: client.rng.clone(),
-                weight: client.n_samples as f32,
-            });
+            jobs.push((
+                Arc::clone(&bc.w),
+                ClientJob {
+                    slot,
+                    xs,
+                    ys,
+                    ef,
+                    rng: client.rng.clone(),
+                    weight: client.n_samples as f32,
+                },
+            ));
         }
 
         let updates: Vec<ClientUpdate> = match &self.pool {
-            Some(pool) if jobs.len() > 1 => {
-                pool.run_clients(Arc::clone(&w_global), jobs)?
-            }
+            Some(pool) if jobs.len() > 1 => pool.run_clients(jobs)?,
             _ => jobs
                 .into_iter()
-                .map(|job| {
-                    run_client(&self.ops, self.compressor.as_ref(), &self.cfg, &w_global, job)
+                .map(|(w, job)| {
+                    run_client(&self.ops, self.compressor.as_ref(), &self.cfg, &w, job)
                 })
                 .collect::<Result<Vec<_>>>()?,
         };
@@ -329,6 +354,7 @@ impl<'a> Experiment<'a> {
             }
             client.rng = u.rng;
             client.rounds_participated += 1;
+            client.last_version = Some(bc.round);
             let _ack = self.fed.submit_upload(ClientMsg::Upload(Upload {
                 client: bc.client,
                 round: bc.round,
@@ -355,14 +381,30 @@ impl<'a> Experiment<'a> {
     /// Convenience label "method (ratio×)" like the paper's tables. The
     /// ratio is the *mean* over all recorded rounds — a single round's
     /// value is noisy under partial participation — and the suffix is
-    /// omitted before any round has run.
+    /// omitted before any round has run. With a compressed downlink a
+    /// `/ down <name> (ratio×)` segment reports the broadcast direction
+    /// too.
     pub fn label(&self) -> String {
         let ratio = self.metrics.mean_ratio();
-        if ratio.is_finite() {
+        let mut label = if ratio.is_finite() {
             format!("{} ({:.1}x)", self.compressor.name(), ratio)
         } else {
             self.compressor.name()
+        };
+        if self.cfg.downlink != DownlinkKind::Identity {
+            let dense = (4 + 4 * self.ops.model.params) as u64;
+            let down = self.fed.traffic.down_ratio(dense);
+            if down.is_finite() {
+                label.push_str(&format!(
+                    " / down {} ({:.1}x)",
+                    self.downlink.name(),
+                    down
+                ));
+            } else {
+                label.push_str(&format!(" / down {}", self.downlink.name()));
+            }
         }
+        label
     }
 
     /// Compressor-kind accessor for reporting.
@@ -621,6 +663,28 @@ impl ExperimentBuilder {
     /// (`|D_i| · γ^staleness`; 1.0 disables the discount).
     pub fn staleness_decay(mut self, gamma: f64) -> Self {
         self.cfg.staleness_decay = gamma;
+        self
+    }
+
+    /// Downlink broadcast compression (`[downlink] kind`): identity
+    /// keyframes (default, bit-identical to the classic dense path),
+    /// or 3sfc/top-k/STC on the per-client model delta.
+    pub fn downlink(mut self, kind: DownlinkKind) -> Self {
+        self.cfg.downlink = kind;
+        self
+    }
+
+    /// Keyframe fallback threshold (`[downlink] gap`): clients more than
+    /// `gap` model versions behind get a dense keyframe.
+    pub fn downlink_gap(mut self, gap: usize) -> Self {
+        self.cfg.downlink_gap = gap;
+        self
+    }
+
+    /// Explicit downlink sparsity rate (`[downlink] rate`); 0 keeps the
+    /// budget-matched default.
+    pub fn downlink_rate(mut self, rate: f64) -> Self {
+        self.cfg.downlink_rate = rate;
         self
     }
 

@@ -25,10 +25,10 @@
 //! staleness multiplier exactly 1).
 
 use std::collections::VecDeque;
-use std::sync::Arc;
 
 use anyhow::{bail, ensure, Result};
 
+use crate::compress::DownlinkTx;
 use crate::coordinator::policy::{AggTrigger, AggregationPolicy, PolicyCtx};
 use crate::coordinator::protocol::{Ack, Broadcast, ClientMsg, ServerMsg, Upload};
 use crate::coordinator::schedule::ClientScheduler;
@@ -61,6 +61,9 @@ pub struct StepSummary {
     pub clients: Vec<usize>,
     /// Wire bytes of the aggregated uploads.
     pub up_bytes_step: u64,
+    /// Wire bytes of the broadcasts dispatched since the previous step
+    /// (the downlink side of this aggregation interval).
+    pub down_bytes_step: u64,
     /// Mean client-side compression efficiency cos(ĝ, g+e).
     pub efficiency: f64,
     /// Mean compression ratio (× vs dense).
@@ -102,13 +105,10 @@ pub struct FedServer {
     cycle_id: u64,
     /// Size of the current cycle's dispatch cohort.
     cohort: usize,
-    /// The current model version's broadcast payload, cloned lazily once
-    /// per version (async sessions dispatch per arrival; the model only
-    /// changes at a step, so K−1 of every K dispatches reuse this Arc).
-    w_cache: Option<Arc<Vec<f32>>>,
     last_step_at: f64,
-    /// Dense broadcast wire bytes per client: u32 length header + 4P.
-    down_bytes: u64,
+    /// `traffic.downlink_bytes` at the previous step (prices each step's
+    /// `down_bytes_step`).
+    down_at_last_step: u64,
     n_clients: usize,
 }
 
@@ -122,6 +122,7 @@ impl FedServer {
         n_params: usize,
     ) -> FedServer {
         assert_eq!(links.len(), active.len(), "one link and one data mask per client");
+        assert_eq!(server.w.len(), n_params, "model size mismatch");
         let n_clients = links.len();
         FedServer {
             server,
@@ -139,9 +140,8 @@ impl FedServer {
             cycle_open: false,
             cycle_id: 0,
             cohort: 0,
-            w_cache: None,
             last_step_at: 0.0,
-            down_bytes: (4 + 4 * n_params) as u64,
+            down_at_last_step: 0,
             n_clients,
         }
     }
@@ -170,17 +170,23 @@ impl FedServer {
     /// Advance the session until the driver has something to do. The
     /// returned [`Directive`] is either a dispatch batch (compute it and
     /// submit the uploads before calling again) or a completed step.
-    pub fn next_directive(&mut self) -> Result<Directive> {
+    ///
+    /// `dl` is the driver-owned downlink encoder ([`DownlinkTx`]): the
+    /// server stays compute-free and calls it once per dispatched client,
+    /// in dispatch order on the caller's thread — which keeps compressed
+    /// downlinks bit-identical across worker-thread counts. Pass
+    /// [`crate::compress::DenseDownlink`] for the classic dense path.
+    pub fn next_directive(&mut self, dl: &mut dyn DownlinkTx) -> Result<Directive> {
         loop {
             if let Some(d) = self.outbox.pop_front() {
                 return Ok(d);
             }
             if !self.cycle_open {
-                self.start_cycle();
+                self.start_cycle(dl)?;
                 continue;
             }
             match self.clock.pop() {
-                Some(ev) => self.handle_event(ev)?,
+                Some(ev) => self.handle_event(ev, dl)?,
                 None => {
                     // The queue drained mid-cycle. Outstanding dispatches
                     // mean the driver broke the submit-before-pump
@@ -243,7 +249,7 @@ impl FedServer {
     /// clients that have data and are not already in flight), emit the
     /// dispatch batch, and arm the policy's deadline timer if it has
     /// one.
-    fn start_cycle(&mut self) {
+    fn start_cycle(&mut self, dl: &mut dyn DownlinkTx) -> Result<()> {
         self.cycle_open = true;
         self.cycle_id += 1;
         let selected = self.scheduler.select(self.server.round, self.n_clients);
@@ -259,42 +265,43 @@ impl FedServer {
                 SessionEvent::Deadline { cycle: self.cycle_id },
             );
         }
-        self.dispatch(cohort);
+        self.dispatch(cohort, dl)
     }
 
-    /// Emit broadcast envelopes for `cohort` at the current virtual time
-    /// (per-client delivery times from each client's downlink).
-    fn dispatch(&mut self, cohort: Vec<usize>) {
+    /// Emit broadcast envelopes for `cohort` at the current virtual time.
+    /// The downlink encoder prices each envelope individually (a dense
+    /// keyframe costs exactly the legacy u32-header + 4P broadcast; a
+    /// compressed delta its actual serialization), so per-client delivery
+    /// times follow each client's *own* payload bytes and downlink rate.
+    fn dispatch(&mut self, cohort: Vec<usize>, dl: &mut dyn DownlinkTx) -> Result<()> {
         if cohort.is_empty() {
-            return;
+            return Ok(());
         }
-        self.traffic.record_broadcast(self.server.w.len(), cohort.len());
         let now = self.clock.now();
         let round = self.server.round;
-        // One clone per model *version*, not per dispatch: the weights
-        // only change at a step (which invalidates the cache).
-        if self.w_cache.is_none() {
-            self.w_cache = Some(Arc::new(self.server.w.clone()));
-        }
-        let w = Arc::clone(self.w_cache.as_ref().expect("just filled"));
         let mut batch = Vec::with_capacity(cohort.len());
         for c in cohort {
             debug_assert!(!self.busy[c], "client {c} dispatched twice");
             self.busy[c] = true;
             self.in_flight += 1;
+            let (payload, w) = dl.encode(c, round, &self.server.w)?;
+            let bytes = payload.wire_bytes() as u64;
+            self.traffic.record_broadcast(bytes);
             let link = self.links[c];
             batch.push(Broadcast {
                 round,
                 client: c,
-                w: Arc::clone(&w),
+                payload,
+                w,
                 sent_at: now,
-                recv_at: now + link.latency_s + link.down_time_s(self.down_bytes),
+                recv_at: now + link.latency_s + link.down_time_s(bytes),
             });
         }
         self.outbox.push_back(Directive::Dispatch(batch));
+        Ok(())
     }
 
-    fn handle_event(&mut self, ev: SimEvent<SessionEvent>) -> Result<()> {
+    fn handle_event(&mut self, ev: SimEvent<SessionEvent>, dl: &mut dyn DownlinkTx) -> Result<()> {
         match ev.payload {
             SessionEvent::Upload(up) => {
                 // Validated at submit_upload: busy && uploading && in range.
@@ -311,7 +318,7 @@ impl FedServer {
                     self.step();
                 }
                 if redispatch && self.active[c] && !self.busy[c] {
-                    self.dispatch(vec![c]);
+                    self.dispatch(vec![c], dl)?;
                 }
             }
             SessionEvent::Deadline { cycle } => {
@@ -361,12 +368,12 @@ impl FedServer {
             recons.push(up.recon);
         }
         self.server.apply_round(&recons, &weights);
-        // The model version changed: the next dispatch re-snapshots it.
-        self.w_cache = None;
         let comm_time_s = at - self.last_step_at;
         self.last_step_at = at;
         self.traffic.record_comm_time(comm_time_s);
         self.traffic.end_round();
+        let down_bytes_step = self.traffic.downlink_bytes - self.down_at_last_step;
+        self.down_at_last_step = self.traffic.downlink_bytes;
         if self.policy.server_paced() {
             self.cycle_open = false;
         }
@@ -375,6 +382,7 @@ impl FedServer {
             round: self.server.round,
             clients,
             up_bytes_step,
+            down_bytes_step,
             efficiency: if n == 0 { 0.0 } else { eff_sum / denom },
             ratio: if n == 0 { 0.0 } else { ratio_sum / denom },
             stale_mean: if n == 0 { 0.0 } else { stale_sum / denom },
@@ -387,7 +395,7 @@ impl FedServer {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compress::Payload;
+    use crate::compress::{DenseDownlink, Payload};
     use crate::coordinator::policy::{BufferedAsync, Deadline, Synchronous};
     use crate::coordinator::schedule::FullParticipation;
     use crate::simnet::NetworkModel;
@@ -429,8 +437,9 @@ mod tests {
 
     #[test]
     fn synchronous_session_barriers_on_the_cohort() {
+        let mut dl = DenseDownlink::new();
         let mut fed = fed(3, Box::new(Synchronous), links(3));
-        let bcasts = match fed.next_directive().unwrap() {
+        let bcasts = match fed.next_directive(&mut dl).unwrap() {
             Directive::Dispatch(b) => b,
             _ => panic!("expected a dispatch first"),
         };
@@ -442,7 +451,7 @@ mod tests {
             };
             assert!(ack.recv_at > bc.recv_at);
         }
-        let Directive::Step(s) = fed.next_directive().unwrap() else {
+        let Directive::Step(s) = fed.next_directive(&mut dl).unwrap() else {
             panic!("expected the barrier step")
         };
         assert_eq!(s.round, 1);
@@ -464,16 +473,17 @@ mod tests {
         let mut ls = base.client_links(2, 0.0, &mut Rng::new(1));
         ls[1].up_bps = 1_000.0; // 9-byte upload → 72 ms ≫ the deadline
         let gamma = 0.5;
+        let mut dl = DenseDownlink::new();
         let mut fed = fed(2, Box::new(Deadline::new(0.05, gamma)), ls);
 
-        let Directive::Dispatch(bcasts) = fed.next_directive().unwrap() else {
+        let Directive::Dispatch(bcasts) = fed.next_directive(&mut dl).unwrap() else {
             panic!("dispatch first")
         };
         assert_eq!(bcasts.len(), 2);
         for bc in &bcasts {
             fed.submit_upload(upload(bc, 2.0)).unwrap();
         }
-        let Directive::Step(s1) = fed.next_directive().unwrap() else { panic!() };
+        let Directive::Step(s1) = fed.next_directive(&mut dl).unwrap() else { panic!() };
         assert_eq!(s1.clients, vec![0], "only the fast client made the deadline");
         assert_eq!(s1.stale_mean, 0.0);
         assert!((s1.comm_time_s - 0.05).abs() < 1e-12, "the deadline paces the step");
@@ -482,12 +492,12 @@ mod tests {
         // Cycle 2 dispatches only the idle client (0); its fresh upload
         // lands first, then the round-0 straggler — both inside the new
         // deadline window.
-        let Directive::Dispatch(bcasts) = fed.next_directive().unwrap() else { panic!() };
+        let Directive::Dispatch(bcasts) = fed.next_directive(&mut dl).unwrap() else { panic!() };
         assert_eq!(bcasts.len(), 1);
         assert_eq!(bcasts[0].client, 0);
         assert_eq!(bcasts[0].round, 1);
         fed.submit_upload(upload(&bcasts[0], 4.0)).unwrap();
-        let Directive::Step(s2) = fed.next_directive().unwrap() else { panic!() };
+        let Directive::Step(s2) = fed.next_directive(&mut dl).unwrap() else { panic!() };
         assert_eq!(s2.round, 2);
         assert_eq!(s2.clients, vec![0, 1], "arrival order: fresh upload, then straggler");
         assert!((s2.stale_mean - 0.5).abs() < 1e-12, "one stale of two");
@@ -502,8 +512,9 @@ mod tests {
 
     #[test]
     fn buffered_async_steps_every_k_and_keeps_clients_in_flight() {
+        let mut dl = DenseDownlink::new();
         let mut fed = fed(3, Box::new(BufferedAsync::new(2, 1.0)), links(3));
-        let Directive::Dispatch(bcasts) = fed.next_directive().unwrap() else { panic!() };
+        let Directive::Dispatch(bcasts) = fed.next_directive(&mut dl).unwrap() else { panic!() };
         assert_eq!(bcasts.len(), 3);
         for bc in &bcasts {
             fed.submit_upload(upload(bc, 3.0)).unwrap();
@@ -511,20 +522,20 @@ mod tests {
         // Homogeneous links + equal payloads: the three arrivals tie and
         // are processed in client order. Client 0's arrival only fills
         // the buffer to 1, so it is re-dispatched (still round 0).
-        let Directive::Dispatch(b) = fed.next_directive().unwrap() else { panic!() };
+        let Directive::Dispatch(b) = fed.next_directive(&mut dl).unwrap() else { panic!() };
         assert_eq!((b.len(), b[0].client, b[0].round), (1, 0, 0));
         fed.submit_upload(upload(&b[0], 3.0)).unwrap();
         // Client 1's arrival reaches K=2 → step over {0, 1}, then client
         // 1 is re-dispatched on the post-step model (round 1).
-        let Directive::Step(s1) = fed.next_directive().unwrap() else { panic!() };
+        let Directive::Step(s1) = fed.next_directive(&mut dl).unwrap() else { panic!() };
         assert_eq!(s1.clients, vec![0, 1]);
         assert_eq!(s1.round, 1);
         assert!((fed.server.w[0] + 3.0).abs() < 1e-6);
-        let Directive::Dispatch(b) = fed.next_directive().unwrap() else { panic!() };
+        let Directive::Dispatch(b) = fed.next_directive(&mut dl).unwrap() else { panic!() };
         assert_eq!((b[0].client, b[0].round), (1, 1), "re-dispatch sees the post-step model");
         fed.submit_upload(upload(&b[0], 3.0)).unwrap();
         // Client 2's arrival: buffer back to 1, re-dispatch.
-        let Directive::Dispatch(b) = fed.next_directive().unwrap() else { panic!() };
+        let Directive::Dispatch(b) = fed.next_directive(&mut dl).unwrap() else { panic!() };
         assert_eq!((b[0].client, b[0].round), (2, 1));
         fed.submit_upload(upload(&b[0], 3.0)).unwrap();
         assert_eq!(fed.in_flight(), 3);
@@ -533,7 +544,7 @@ mod tests {
         // buffered uploads (client 2's first, client 0's second) were
         // computed against the round-0 model and the server is at round
         // 1, so both carry staleness 1.
-        let Directive::Step(s2) = fed.next_directive().unwrap() else { panic!() };
+        let Directive::Step(s2) = fed.next_directive(&mut dl).unwrap() else { panic!() };
         assert_eq!(s2.round, 2);
         assert_eq!(s2.clients, vec![2, 0]);
         assert_eq!(s2.stale_mean, 1.0, "both buffered uploads trained on the round-0 model");
@@ -552,7 +563,8 @@ mod tests {
             vec![false, false],
             1,
         );
-        let err = fed.next_directive().unwrap_err();
+        let mut dl = DenseDownlink::new();
+        let err = fed.next_directive(&mut dl).unwrap_err();
         assert!(err.to_string().contains("starved"), "{err}");
     }
 
@@ -569,10 +581,36 @@ mod tests {
             vec![false, false],
             1,
         );
-        let Directive::Step(s) = fed.next_directive().unwrap() else { panic!() };
+        let mut dl = DenseDownlink::new();
+        let Directive::Step(s) = fed.next_directive(&mut dl).unwrap() else { panic!() };
         assert_eq!(s.round, 1);
         assert_eq!(s.clients, Vec::<usize>::new());
         assert_eq!(s.comm_time_s, 0.0);
+        assert_eq!(s.down_bytes_step, 0);
         assert_eq!(fed.server.w, vec![5.0]);
+    }
+
+    #[test]
+    fn dispatch_charges_downlink_per_payload_and_summarizes() {
+        // Identity downlink, P = 1: every envelope is a keyframe priced
+        // at the u32 length header + 4·P, the ledger splits by direction,
+        // and the step reports the interval's downlink bytes.
+        let mut dl = DenseDownlink::new();
+        let mut fed = fed(3, Box::new(Synchronous), links(3));
+        let Directive::Dispatch(bcasts) = fed.next_directive(&mut dl).unwrap() else {
+            panic!()
+        };
+        for bc in &bcasts {
+            assert_eq!(bc.payload.kind(), "keyframe");
+            assert_eq!(bc.payload.wire_bytes(), 4 + 4);
+            fed.submit_upload(upload(bc, 1.0)).unwrap();
+        }
+        assert_eq!(fed.traffic.downlink_bytes, 3 * 8);
+        assert_eq!(fed.traffic.broadcasts, 3);
+        let Directive::Step(s) = fed.next_directive(&mut dl).unwrap() else { panic!() };
+        assert_eq!(s.down_bytes_step, 3 * 8);
+        // Uploads are 9-byte Sign payloads (1 + 4 + 4).
+        assert_eq!(fed.traffic.uplink_bytes, 3 * 9);
+        assert_eq!(fed.traffic.total_bytes(), 3 * 9 + 3 * 8);
     }
 }

@@ -34,6 +34,8 @@ impl MetricsSink {
                 .int("n_selected", rec.n_selected as i64)
                 .int("up_bytes_round", rec.up_bytes_round as i64)
                 .int("up_bytes_cum", rec.up_bytes_cum as i64)
+                .int("down_bytes_round", rec.down_bytes_round as i64)
+                .int("down_bytes_cum", rec.down_bytes_cum as i64)
                 .num("efficiency", rec.efficiency)
                 .num("ratio", rec.ratio)
                 .num("comm_time_s", rec.comm_time_s)
@@ -98,6 +100,8 @@ mod tests {
             n_selected: 2,
             up_bytes_round: 10,
             up_bytes_cum: 10 * (round as u64 + 1),
+            down_bytes_round: 88,
+            down_bytes_cum: 88 * (round as u64 + 1),
             efficiency: 0.9,
             ratio,
             comm_time_s: 0.1,

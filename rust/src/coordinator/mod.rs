@@ -39,6 +39,11 @@
 //! ([`parallel`]; `[runtime] threads`, `--threads`; `1` = the original
 //! sequential path) into dispatch-order slots before any state is
 //! touched, so trajectories are bit-identical for every thread count.
+//! Broadcasts go through a driver-owned downlink encoder
+//! ([`crate::compress::DownlinkTx`], `[downlink]`): dense keyframes by
+//! default (bit-identical to the classic path), or E-3SFC-style
+//! compressed model deltas against each client's last acked version with
+//! server-side error feedback — both priced per envelope in [`Traffic`].
 //! All of it runs against a pluggable [`crate::runtime::Backend`] — PJRT
 //! artifacts or the pure-Rust native implementation — with identical
 //! semantics.

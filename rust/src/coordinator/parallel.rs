@@ -193,17 +193,19 @@ impl WorkerPool {
         *self.stats.lock().unwrap_or_else(|p| p.into_inner())
     }
 
-    /// Execute one round's client jobs on the pool. Returns the updates
+    /// Execute one round's client jobs on the pool, each against its own
+    /// weight snapshot (with a compressed downlink the cohort's
+    /// reconstructions differ per client; dense keyframes share one Arc,
+    /// so this costs nothing in the classic path). Returns the updates
     /// sorted by `slot` (selection order); fails if any client failed.
     pub fn run_clients(
         &self,
-        w_global: Arc<Vec<f32>>,
-        jobs: Vec<ClientJob>,
+        jobs: Vec<(Arc<Vec<f32>>, ClientJob)>,
     ) -> Result<Vec<ClientUpdate>> {
         let n = jobs.len();
         let tx = self.job_tx.as_ref().expect("pool is alive");
-        for job in jobs {
-            tx.send(Job::Client { w_global: Arc::clone(&w_global), job })
+        for (w_global, job) in jobs {
+            tx.send(Job::Client { w_global, job })
                 .map_err(|_| anyhow!("worker pool has shut down"))?;
         }
         let mut slots: Vec<Option<ClientUpdate>> = (0..n).map(|_| None).collect();

@@ -22,6 +22,14 @@
 //! steps behind the aggregation is weighted `|D_i| · γ^s` with
 //! `γ = staleness_decay ∈ (0, 1]` (γ = 1 disables the discount;
 //! `γ^0 = 1` exactly, which is what keeps [`Synchronous`] bit-faithful).
+//!
+//! Policies are downlink-agnostic: they only decide *when* a step
+//! happens, never what a broadcast carries, so every policy composes
+//! with any [`crate::compress::DownlinkTx`]. The one interaction worth
+//! knowing: [`Deadline`] carry-over and [`BufferedAsync`] re-dispatch
+//! mean a client can be sent several versions while holding an older
+//! one — exactly the gap the downlink ledger's keyframe fallback
+//! (`[downlink] gap`) resynchronizes.
 
 use crate::config::{ExperimentConfig, SessionKind};
 

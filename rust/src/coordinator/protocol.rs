@@ -8,20 +8,22 @@
 //! so staleness at aggregation time is simply
 //! `server_round − upload.round`.
 //!
-//! Byte accounting stays wire-honest: the upload envelope carries the
-//! actual [`Payload`] (its `wire_bytes()` — including the u32 framing
-//! headers — is what the uplink transfer is priced at), and the
-//! broadcast is priced as the dense f32 weight vector plus the same u32
-//! length header the upload path charges
-//! ([`crate::coordinator::Traffic::record_broadcast`]). The envelope
-//! additionally carries the client-side reconstruction so the simulation
-//! decodes once — `tests/prop_compressor_test.rs` pins
-//! `Compressor::decode(payload) == recon` bit-for-bit, so this is a
-//! cache of the server-side decode, not a side channel.
+//! Byte accounting stays wire-honest in *both* directions: the upload
+//! envelope carries the actual [`Payload`] (its `wire_bytes()` —
+//! including the u32 framing headers — is what the uplink transfer is
+//! priced at), and the broadcast carries a [`DeltaPayload`] (keyframe or
+//! compressed model delta; `compress::downlink`) priced the same way
+//! ([`crate::coordinator::Traffic::record_broadcast`]). Each envelope
+//! additionally carries the receiving side's reconstruction so the
+//! simulation decodes once — `tests/prop_compressor_test.rs` pins
+//! `Compressor::decode(payload) == recon` bit-for-bit for uploads, and
+//! the downlink encoder returns the client's exact reconstruction for
+//! broadcasts ([`Broadcast::w`]) — caches of the wire decode, not side
+//! channels.
 
 use std::sync::Arc;
 
-use crate::compress::Payload;
+use crate::compress::{DeltaPayload, Payload};
 
 /// Server → client: the global model for one training task.
 #[derive(Clone, Debug)]
@@ -30,12 +32,18 @@ pub struct Broadcast {
     pub round: usize,
     /// Addressee.
     pub client: usize,
-    /// The dense global weights w^t (shared, not copied, per cohort).
+    /// The wire payload — a dense keyframe or a compressed delta against
+    /// this client's last acked version; `payload.wire_bytes()` prices
+    /// the downlink transfer.
+    pub payload: DeltaPayload,
+    /// The weights the client reconstructs from `payload` (the downlink
+    /// mirror of [`Upload::recon`]; shared, not copied, per cohort on
+    /// keyframes). The client trains on exactly these.
     pub w: Arc<Vec<f32>>,
     /// Virtual send time at the server.
     pub sent_at: f64,
     /// Virtual delivery time at the client: `sent_at` + one-way latency
-    /// + dense-broadcast transfer on this client's downlink.
+    /// + this payload's transfer on the client's downlink.
     pub recv_at: f64,
 }
 

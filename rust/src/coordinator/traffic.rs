@@ -1,12 +1,17 @@
-//! Communication accounting: exact bytes on the (simulated) wire.
+//! Communication accounting: exact bytes on the (simulated) wire,
+//! split by direction — since the downlink subsystem the broadcast side
+//! is charged per *envelope* (each broadcast's own payload wire bytes),
+//! not as a flat dense price.
 
 /// Cumulative traffic for one experiment.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Traffic {
     /// Client→server payload bytes (the compressed uploads).
-    pub up_bytes: u64,
-    /// Server→client bytes (dense global-model broadcasts).
-    pub down_bytes: u64,
+    pub uplink_bytes: u64,
+    /// Server→client payload bytes (keyframes and/or compressed deltas).
+    pub downlink_bytes: u64,
+    /// Number of broadcast envelopes charged.
+    pub broadcasts: u64,
     /// Cumulative modeled communication time (simnet, slowest-client
     /// round semantics) in seconds.
     pub comm_s: f64,
@@ -15,26 +20,32 @@ pub struct Traffic {
 
 impl Traffic {
     pub fn record_upload(&mut self, bytes: usize) {
-        self.up_bytes += bytes as u64;
+        self.uplink_bytes += bytes as u64;
     }
 
     pub fn record_comm_time(&mut self, seconds: f64) {
         self.comm_s += seconds;
     }
 
-    /// Charge one dense model broadcast to `n_clients` receivers.
+    /// Charge one broadcast envelope at its exact wire size.
     ///
-    /// Wire-honesty is symmetric with the upload path: each per-client
-    /// broadcast is priced as the dense f32 vector *plus the same u32
-    /// length header* every upload payload charges
-    /// ([`crate::compress::Payload::wire_bytes`]) — a real serializer
-    /// frames the buffer in both directions.
-    pub fn record_broadcast(&mut self, n_params: usize, n_clients: usize) {
-        self.down_bytes += ((4 + 4 * n_params) * n_clients) as u64;
+    /// Wire-honesty is symmetric with the upload path: `bytes` is the
+    /// payload's own `wire_bytes()`
+    /// ([`crate::compress::DeltaPayload::wire_bytes`]) — a dense keyframe
+    /// prices exactly like the legacy dense broadcast (u32 length header
+    /// + 4·P), a compressed delta its actual serialization.
+    pub fn record_broadcast(&mut self, bytes: u64) {
+        self.downlink_bytes += bytes;
+        self.broadcasts += 1;
     }
 
     pub fn end_round(&mut self) {
         self.rounds += 1;
+    }
+
+    /// Both directions combined.
+    pub fn total_bytes(&self) -> u64 {
+        self.uplink_bytes + self.downlink_bytes
     }
 
     /// Mean upload bytes per round.
@@ -42,8 +53,15 @@ impl Traffic {
         if self.rounds == 0 {
             0.0
         } else {
-            self.up_bytes as f64 / self.rounds as f64
+            self.uplink_bytes as f64 / self.rounds as f64
         }
+    }
+
+    /// Downlink compression ratio vs pricing every sent envelope at the
+    /// dense broadcast cost `dense_bytes` (= 4 + 4·P). NaN before any
+    /// broadcast.
+    pub fn down_ratio(&self, dense_bytes: u64) -> f64 {
+        (self.broadcasts * dense_bytes) as f64 / self.downlink_bytes as f64
     }
 }
 
@@ -59,12 +77,19 @@ mod tests {
         t.record_comm_time(1.5);
         t.record_comm_time(0.5);
         t.end_round();
-        // Broadcast framing is symmetric with the upload path: 4-byte
-        // u32 length header + 4·P per receiving client.
-        t.record_broadcast(10, 3);
-        assert_eq!(t.up_bytes, 150);
-        assert_eq!(t.down_bytes, 3 * (4 + 40));
+        // Per-envelope broadcast charging: 3 dense keyframes of a P=10
+        // model (4-byte u32 length header + 4·P each)…
+        for _ in 0..3 {
+            t.record_broadcast(4 + 40);
+        }
+        // …and one compressed delta.
+        t.record_broadcast(13);
+        assert_eq!(t.uplink_bytes, 150);
+        assert_eq!(t.downlink_bytes, 3 * (4 + 40) + 13);
+        assert_eq!(t.broadcasts, 4);
+        assert_eq!(t.total_bytes(), 150 + 3 * 44 + 13);
         assert_eq!(t.up_per_round(), 150.0);
         assert_eq!(t.comm_s, 2.0);
+        assert!((t.down_ratio(44) - (4.0 * 44.0) / 145.0).abs() < 1e-12);
     }
 }

@@ -14,8 +14,8 @@ use anyhow::{bail, Result};
 
 use fed3sfc::cli::Args;
 use fed3sfc::config::{
-    BackendKind, CompressorKind, DatasetKind, ExperimentConfig, NetworkKind, ScheduleKind,
-    ServerOptKind, SessionKind,
+    BackendKind, CompressorKind, DatasetKind, DownlinkKind, ExperimentConfig, NetworkKind,
+    ScheduleKind, ServerOptKind, SessionKind,
 };
 use fed3sfc::coordinator::experiment::Experiment;
 use fed3sfc::data::{dirichlet_partition, Dataset};
@@ -54,6 +54,13 @@ run options:
   --deadline-s F         semi-sync aggregation deadline, virtual seconds
   --buffer-k N           async: aggregate every K arrivals
   --staleness-decay F    staleness discount base in (0,1] (default 0.5)
+  --downlink NAME        identity|3sfc|topk|stc broadcast compression
+                         (default identity = dense keyframes; others send
+                         compressed model deltas with server-side EF)
+  --downlink-gap N       keyframe fallback: clients > N versions behind
+                         get a dense keyframe (default 4)
+  --downlink-rate F      explicit downlink top-k/STC rate in [0,1]
+                         (default 0 = budget-matched)
   --threads N            worker threads for the per-round client fan-out
                          (0 = auto: all cores, or FED3SFC_THREADS;
                          1 = sequential; results identical for any N)
@@ -157,6 +164,11 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     cfg.deadline_s = args.get_f64("deadline-s", cfg.deadline_s)?;
     cfg.buffer_k = args.get_usize("buffer-k", cfg.buffer_k)?;
     cfg.staleness_decay = args.get_f64("staleness-decay", cfg.staleness_decay)?;
+    if let Some(v) = args.get("downlink") {
+        cfg.downlink = DownlinkKind::parse(v)?;
+    }
+    cfg.downlink_gap = args.get_usize("downlink-gap", cfg.downlink_gap)?;
+    cfg.downlink_rate = args.get_f64("downlink-rate", cfg.downlink_rate)?;
     cfg.threads = args.get_usize("threads", cfg.threads)?;
     if let Some(v) = args.get("backend") {
         cfg.backend = BackendKind::parse(v)?;
@@ -170,7 +182,8 @@ fn cmd_run(args: &Args) -> Result<()> {
     let backend = open_backend(&cfg)?;
     println!(
         "fed3sfc run: {} on {} ({} backend, {}), {} clients, {} rounds, K={}, method={}, \
-         schedule={} (frac {}), server_opt={}, network={} (jitter {}), session={}",
+         downlink={} (gap {}), schedule={} (frac {}), server_opt={}, network={} (jitter {}), \
+         session={}",
         cfg.model_key(),
         cfg.dataset.name(),
         backend.backend_name(),
@@ -179,6 +192,8 @@ fn cmd_run(args: &Args) -> Result<()> {
         cfg.rounds,
         cfg.k_local,
         cfg.compressor.name(),
+        cfg.downlink.name(),
+        cfg.downlink_gap,
         cfg.effective_schedule().name(),
         cfg.client_frac,
         cfg.server_opt.name(),
@@ -191,13 +206,15 @@ fn cmd_run(args: &Args) -> Result<()> {
     for _ in 0..exp.cfg.rounds {
         let rec = exp.run_round()?;
         println!(
-            "round {:>4}  acc {:.4}  loss {:.4}  sel {:>3}  up {:>10} B (cum {:>12})  eff {:.3}  ratio {:>8.1}x  comm {:>7.2}s  vt {:>8.2}s  stale {:.2}  {:>7.0} ms (+{:.0} eval)",
+            "round {:>4}  acc {:.4}  loss {:.4}  sel {:>3}  up {:>10} B (cum {:>12})  down {:>10} B (cum {:>12})  eff {:.3}  ratio {:>8.1}x  comm {:>7.2}s  vt {:>8.2}s  stale {:.2}  {:>7.0} ms (+{:.0} eval)",
             rec.round,
             rec.test_acc,
             rec.test_loss,
             rec.n_selected,
             rec.up_bytes_round,
             rec.up_bytes_cum,
+            rec.down_bytes_round,
+            rec.down_bytes_cum,
             rec.efficiency,
             rec.ratio,
             rec.comm_time_s,
@@ -210,10 +227,12 @@ fn cmd_run(args: &Args) -> Result<()> {
     exp.metrics.flush()?;
     let t = exp.traffic();
     println!(
-        "done. best acc {:.4}; traffic up {} B / down {} B; modeled comm time ({} link): {:.1}s",
+        "done. best acc {:.4}; traffic up {} B / down {} B / total {} B; modeled comm time \
+         ({} link): {:.1}s",
         exp.metrics.best_acc(),
-        t.up_bytes,
-        t.down_bytes,
+        t.uplink_bytes,
+        t.downlink_bytes,
+        t.total_bytes(),
         exp.cfg.network.name(),
         t.comm_s,
     );

@@ -1,0 +1,434 @@
+//! Downlink-compression acceptance tests (`compress::downlink`).
+//!
+//! * **Dense equivalence**: `gap = 0` forces a keyframe whenever the
+//!   model version advanced, so in server-paced sessions (sync,
+//!   deadline) a compressed downlink degenerates to the dense path —
+//!   bit-for-bit, bytes included. This is also the version-gap
+//!   reconstruction contract: a client that missed rounds (deadline
+//!   straggler carry-over) is resynchronized by keyframe and the run
+//!   ends bit-identical to a dense-broadcast run.
+//! * **Thread independence**: downlink encoding happens on the main
+//!   thread in dispatch order, so compressed-downlink sessions are
+//!   bit-identical for `threads ∈ {1, 4}` in all three session modes.
+//! * **Ledger semantics**: a hand-driven deadline session pins the
+//!   keyframe/delta decisions, the base versions, and — through an
+//!   actual serialize → deserialize → decode → apply client replica —
+//!   that every broadcast's reconstruction cache `Broadcast::w` is
+//!   exactly what a remote client would reconstruct from the wire.
+//! * **Traffic**: compressing the downlink cuts total (up + down) wire
+//!   bytes by well over the 40% acceptance bar at equal rounds.
+
+mod common;
+
+use std::sync::Arc;
+
+use fed3sfc::compress::{Compressor, DecodeCtx, DeltaDownlink, DeltaPayload, TopK};
+use fed3sfc::config::{
+    CompressorKind, DatasetKind, DownlinkKind, ExperimentConfig, NetworkKind, ScheduleKind,
+    SessionKind,
+};
+use fed3sfc::coordinator::{
+    Broadcast, ClientMsg, Deadline, Directive, Experiment, FedServer, FullParticipation, Server,
+    Upload,
+};
+use fed3sfc::runtime::{Backend, FedOps};
+use fed3sfc::simnet::NetworkModel;
+use fed3sfc::util::rng::Rng;
+use fed3sfc::util::vecmath;
+use fed3sfc::RoundRecord;
+
+// ---------------------------------------------------------------------
+// Shared harness (mirrors tests/session_test.rs).
+
+fn sync_cfg(threads: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        dataset: DatasetKind::SynthSmall,
+        compressor: CompressorKind::Dgc,
+        n_clients: 5,
+        rounds: 5,
+        k_local: 5,
+        lr: 0.05,
+        train_samples: 200,
+        test_samples: 50,
+        eval_every: 5,
+        seed: 42,
+        schedule: ScheduleKind::Uniform,
+        client_frac: 0.6,
+        threads,
+        ..ExperimentConfig::default()
+    }
+}
+
+fn deadline_cfg(threads: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        dataset: DatasetKind::SynthSmall,
+        compressor: CompressorKind::Dgc,
+        n_clients: 6,
+        rounds: 6,
+        k_local: 5,
+        lr: 0.05,
+        train_samples: 240,
+        test_samples: 50,
+        eval_every: 6,
+        seed: 42,
+        session: SessionKind::Deadline,
+        network: NetworkKind::Custom,
+        net_up_mbps: 0.1,
+        net_down_mbps: 1.0,
+        net_latency_ms: 1.0,
+        net_jitter: 0.5,
+        deadline_s: 0.08,
+        staleness_decay: 0.5,
+        threads,
+        ..ExperimentConfig::default()
+    }
+}
+
+fn async_cfg(threads: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        dataset: DatasetKind::SynthSmall,
+        compressor: CompressorKind::Dgc,
+        n_clients: 4,
+        rounds: 6,
+        k_local: 5,
+        lr: 0.05,
+        train_samples: 200,
+        test_samples: 50,
+        eval_every: 6,
+        seed: 42,
+        session: SessionKind::Async,
+        buffer_k: 2,
+        staleness_decay: 0.5,
+        net_jitter: 0.3,
+        threads,
+        ..ExperimentConfig::default()
+    }
+}
+
+fn with_downlink(
+    mut cfg: ExperimentConfig,
+    kind: DownlinkKind,
+    gap: usize,
+    rate: f64,
+) -> ExperimentConfig {
+    cfg.downlink = kind;
+    cfg.downlink_gap = gap;
+    cfg.downlink_rate = rate;
+    cfg
+}
+
+/// Records + final weights + per-client EF of one full run.
+fn run_full(cfg: ExperimentConfig) -> (Vec<RoundRecord>, Vec<f32>, Vec<Vec<f32>>) {
+    let be = common::native();
+    let mut exp = Experiment::new(cfg, &be).unwrap();
+    let recs = exp.run().unwrap();
+    let efs = exp.clients.iter().map(|c| c.ef.clone()).collect();
+    (recs, exp.fed.server.w.clone(), efs)
+}
+
+fn assert_records_bit_identical(a: &[RoundRecord], b: &[RoundRecord]) {
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b.iter()) {
+        assert_eq!(x.round, y.round);
+        assert_eq!(x.n_selected, y.n_selected, "round {}", x.round);
+        assert_eq!(x.test_acc.to_bits(), y.test_acc.to_bits(), "round {}", x.round);
+        assert_eq!(x.up_bytes_round, y.up_bytes_round, "round {}", x.round);
+        assert_eq!(x.up_bytes_cum, y.up_bytes_cum, "round {}", x.round);
+        assert_eq!(x.down_bytes_round, y.down_bytes_round, "round {}", x.round);
+        assert_eq!(x.down_bytes_cum, y.down_bytes_cum, "round {}", x.round);
+        assert_eq!(x.efficiency.to_bits(), y.efficiency.to_bits(), "round {}", x.round);
+        assert_eq!(x.sim_time_s.to_bits(), y.sim_time_s.to_bits(), "round {}", x.round);
+        assert_eq!(x.stale_mean.to_bits(), y.stale_mean.to_bits(), "round {}", x.round);
+        assert_eq!(x.comm_time_s.to_bits(), y.comm_time_s.to_bits(), "round {}", x.round);
+    }
+}
+
+fn assert_runs_bit_identical(
+    a: &(Vec<RoundRecord>, Vec<f32>, Vec<Vec<f32>>),
+    b: &(Vec<RoundRecord>, Vec<f32>, Vec<Vec<f32>>),
+) {
+    assert_records_bit_identical(&a.0, &b.0);
+    assert_eq!(a.1.len(), b.1.len());
+    for (i, (x, y)) in a.1.iter().zip(b.1.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "w[{i}]");
+    }
+    assert_eq!(a.2, b.2, "per-client EF state");
+}
+
+// ---------------------------------------------------------------------
+// Dense equivalence: gap = 0 in server-paced sessions is the dense path.
+
+#[test]
+fn gap_zero_downlink_is_bit_identical_to_dense_in_sync() {
+    // In a sync session every dispatch follows a step, so the ledger is
+    // always exactly one version behind and `gap = 0` keyframes every
+    // broadcast — bytes, times, and trajectory must match identity.
+    let dense = run_full(sync_cfg(1));
+    let gap0 = run_full(with_downlink(sync_cfg(1), DownlinkKind::TopK, 0, 0.05));
+    assert_runs_bit_identical(&dense, &gap0);
+}
+
+#[test]
+fn gap_zero_downlink_is_bit_identical_to_dense_under_deadline_stragglers() {
+    // Version-gap reconstruction (satellite): the jittery slow links make
+    // clients miss whole aggregation windows, so redispatches see ledger
+    // gaps > 1 — every one of them must come back as a keyframe, leaving
+    // the run bit-identical to the dense-broadcast run.
+    let dense = run_full(deadline_cfg(1));
+    let gap0 = run_full(with_downlink(deadline_cfg(1), DownlinkKind::TopK, 0, 0.05));
+    assert_runs_bit_identical(&dense, &gap0);
+    // The scenario really exercises carried-over stragglers.
+    assert!(dense.0.iter().any(|r| r.stale_mean > 0.0), "no straggler carried over");
+}
+
+// ---------------------------------------------------------------------
+// Thread-count independence with a *compressing* downlink.
+
+#[test]
+fn compressed_downlink_is_thread_independent_in_sync() {
+    let a = run_full(with_downlink(sync_cfg(1), DownlinkKind::TopK, 4, 0.05));
+    let b = run_full(with_downlink(sync_cfg(4), DownlinkKind::TopK, 4, 0.05));
+    assert_runs_bit_identical(&a, &b);
+}
+
+#[test]
+fn compressed_downlink_is_thread_independent_under_deadline() {
+    let a = run_full(with_downlink(deadline_cfg(1), DownlinkKind::TopK, 4, 0.05));
+    let b = run_full(with_downlink(deadline_cfg(4), DownlinkKind::TopK, 4, 0.05));
+    assert_runs_bit_identical(&a, &b);
+}
+
+#[test]
+fn compressed_downlink_is_thread_independent_in_async() {
+    let a = run_full(with_downlink(async_cfg(1), DownlinkKind::TopK, 2, 0.05));
+    let b = run_full(with_downlink(async_cfg(4), DownlinkKind::TopK, 2, 0.05));
+    assert_runs_bit_identical(&a, &b);
+}
+
+#[test]
+fn threesfc_downlink_is_thread_independent_and_trains() {
+    // The synthesizing downlink consumes its own RNG stream per encode;
+    // main-thread dispatch-order encoding keeps that stream identical
+    // for any worker count.
+    let mut cfg = sync_cfg(1);
+    cfg.syn_steps = 6;
+    let a = run_full(with_downlink(cfg.clone(), DownlinkKind::ThreeSfc, 4, 0.0));
+    let mut cfg4 = cfg;
+    cfg4.threads = 4;
+    let b = run_full(with_downlink(cfg4, DownlinkKind::ThreeSfc, 4, 0.0));
+    assert_runs_bit_identical(&a, &b);
+    assert!(a.0.iter().all(|r| r.test_acc.is_finite() && r.test_loss.is_finite()));
+}
+
+// ---------------------------------------------------------------------
+// Traffic: both-way compression at equal rounds.
+
+#[test]
+fn compressed_downlink_cuts_total_traffic_at_least_40pct_at_equal_rounds() {
+    let mut base = sync_cfg(1);
+    base.schedule = ScheduleKind::Full;
+    base.client_frac = 1.0;
+    base.rounds = 8;
+    base.eval_every = 8;
+    base.topk_rate = 0.01;
+    let be = common::native();
+
+    let mut dense = Experiment::new(base.clone(), &be).unwrap();
+    let dense_recs = dense.run().unwrap();
+    let mut comp =
+        Experiment::new(with_downlink(base, DownlinkKind::TopK, 4, 0.01), &be).unwrap();
+    let comp_recs = comp.run().unwrap();
+
+    assert_eq!(dense_recs.len(), comp_recs.len(), "equal rounds");
+    let (td, tc) = (dense.traffic(), comp.traffic());
+    // Fixed-size top-k uploads: the uplink trajectory prices identically.
+    assert_eq!(td.uplink_bytes, tc.uplink_bytes);
+    assert!(tc.downlink_bytes < td.downlink_bytes);
+    let saved = 1.0 - tc.total_bytes() as f64 / td.total_bytes() as f64;
+    assert!(
+        saved >= 0.40,
+        "total wire bytes only dropped {:.1}% ({} -> {})",
+        100.0 * saved,
+        td.total_bytes(),
+        tc.total_bytes()
+    );
+    // The label surfaces the downlink method + measured ratio.
+    assert!(comp.label().contains("down "), "label: {}", comp.label());
+}
+
+#[test]
+fn async_compressed_downlink_is_deterministic_and_cheaper_than_dense() {
+    // Async sessions redispatch on upload arrival — sometimes at an
+    // unchanged model version (a pure EF-residual delta), sometimes
+    // several versions later. The ledger must keep the run deterministic
+    // and strictly cheaper than keyframing every broadcast.
+    let cfg = with_downlink(async_cfg(1), DownlinkKind::TopK, 2, 0.02);
+    let a = run_full(cfg.clone());
+    let b = run_full(cfg.clone());
+    assert_runs_bit_identical(&a, &b);
+    assert!(a.0.iter().all(|r| r.test_acc.is_finite() && r.test_loss.is_finite()));
+
+    let be = common::native();
+    let mut exp = Experiment::new(cfg, &be).unwrap();
+    exp.run().unwrap();
+    let t = exp.traffic();
+    let dense_price = (4 + 4 * exp.ops.model.params as u64) * t.broadcasts;
+    assert!(
+        t.downlink_bytes < dense_price,
+        "{} broadcast(s) cost {} B, dense would be {} B",
+        t.broadcasts,
+        t.downlink_bytes,
+        dense_price
+    );
+}
+
+// ---------------------------------------------------------------------
+// Hand-driven ledger semantics: keyframe/delta decisions, base versions,
+// and the wire → client-replica reconstruction contract.
+
+fn fake_upload(bc: &Broadcast, n: usize, value: f32) -> ClientMsg {
+    ClientMsg::Upload(Upload {
+        client: bc.client,
+        round: bc.round,
+        sent_at: bc.recv_at,
+        payload: fed3sfc::compress::Payload::Sign { n: 8, bits: vec![0u8], scale: 1.0 },
+        recon: vec![value; n],
+        weight: 1.0,
+        efficiency: 1.0,
+        ratio: 32.0,
+    })
+}
+
+/// What a remote client would do with the envelope: deserialize the
+/// actual wire bytes, decode against the weights it holds, apply — and
+/// the result must be bit-identical to the envelope's reconstruction
+/// cache `bc.w` (and therefore to the server's shadow).
+fn client_reconstruct(
+    ops: &FedOps,
+    comp: &dyn Compressor,
+    replica: &mut Option<(usize, Vec<f32>)>,
+    bc: &Broadcast,
+) {
+    let model = ops.model;
+    let bytes = bc.payload.serialize();
+    assert_eq!(bytes.len(), bc.payload.wire_bytes(), "wire-honest broadcast");
+    let decoded = DeltaPayload::deserialize(
+        &bc.payload.kind(),
+        &bytes,
+        model.params,
+        model.feature_len(),
+        model.n_classes,
+    )
+    .unwrap();
+    let w_new = match decoded {
+        DeltaPayload::Keyframe { w } => w.as_ref().clone(),
+        DeltaPayload::Delta { base, inner } => {
+            let (ver, w_held) = replica.as_ref().expect("delta sent to a cold client");
+            assert_eq!(*ver, base as usize, "delta base must be the held version");
+            let dctx = DecodeCtx { ops, w_global: w_held };
+            let d = comp.decode(&dctx, &inner).unwrap();
+            let mut w = w_held.clone();
+            vecmath::add_assign(&mut w, &d);
+            w
+        }
+    };
+    for (i, (a, b)) in w_new.iter().zip(bc.w.iter()).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "client {} coord {i}: wire reconstruction != Broadcast::w",
+            bc.client
+        );
+    }
+    *replica = Some((bc.round, w_new));
+}
+
+#[test]
+fn deadline_ledger_keyframes_past_the_gap_and_deltas_within() {
+    // Two clients on a deadline session, client 1's uplink throttled so
+    // it misses every 50 ms window (the fedserver straggler scenario),
+    // downlink = top-k with gap 1:
+    //   cycle 1 (v0): both cold            → keyframes.
+    //   cycle 2 (v1): client 0 alone, lag 1 → delta on base 0.
+    //   cycle 3 (v2): client 0 lag 1 → delta on base 1;
+    //                 client 1 lag 2 > gap  → keyframe resync.
+    let be = common::native();
+    let ops = FedOps::new(&be, "mlp_small").unwrap();
+    let n = ops.model.params;
+    let w0 = be.load_init(ops.model).unwrap();
+
+    let k = (n / 10).max(1);
+    let dl_ops = FedOps::new(&be, "mlp_small").unwrap();
+    let mut dl = DeltaDownlink::new(dl_ops, Box::new(TopK::new(k)), 2, 1, Rng::new(7));
+    let decode_comp = TopK::new(k);
+
+    let base_net = NetworkModel::custom(10.0, 50.0, 1.0);
+    let mut ls = base_net.client_links(2, 0.0, &mut Rng::new(1));
+    ls[1].up_bps = 1_000.0; // 9-byte upload → 72 ms ≫ the deadline
+    let mut fed = FedServer::new(
+        Server::new(w0),
+        Box::new(FullParticipation),
+        Box::new(Deadline::new(0.05, 0.5)),
+        ls,
+        vec![true; 2],
+        n,
+    );
+    let mut replicas: Vec<Option<(usize, Vec<f32>)>> = vec![None, None];
+
+    // Cycle 1: both clients cold → dense keyframes at version 0.
+    let Directive::Dispatch(bcasts) = fed.next_directive(&mut dl).unwrap() else { panic!() };
+    assert_eq!(bcasts.len(), 2);
+    for bc in &bcasts {
+        assert_eq!(bc.payload.kind(), "keyframe");
+        assert_eq!(bc.payload.wire_bytes(), 4 + 4 * n, "dense keyframe price");
+        client_reconstruct(&ops, &decode_comp, &mut replicas[bc.client], bc);
+        fed.submit_upload(fake_upload(bc, n, 0.01)).unwrap();
+    }
+    // Cohort keyframes share one allocation (per-version Arc cache).
+    assert!(Arc::ptr_eq(&bcasts[0].w, &bcasts[1].w));
+
+    // Step 1 aggregates the fast client alone; the straggler flies on.
+    let Directive::Step(s1) = fed.next_directive(&mut dl).unwrap() else { panic!() };
+    assert_eq!(s1.clients, vec![0]);
+
+    // Cycle 2: only client 0 is free; one version behind → delta.
+    let Directive::Dispatch(bcasts) = fed.next_directive(&mut dl).unwrap() else { panic!() };
+    assert_eq!((bcasts.len(), bcasts[0].client), (1, 0));
+    assert_eq!(bcasts[0].payload.kind(), "delta:topk");
+    assert_eq!(bcasts[0].payload.base_version(), Some(0));
+    assert!(bcasts[0].payload.wire_bytes() < 4 + 4 * n, "delta beats dense");
+    client_reconstruct(&ops, &decode_comp, &mut replicas[0], &bcasts[0]);
+    fed.submit_upload(fake_upload(&bcasts[0], n, 0.02)).unwrap();
+
+    // Step 2 absorbs the fresh upload + the round-0 straggler.
+    let Directive::Step(s2) = fed.next_directive(&mut dl).unwrap() else { panic!() };
+    assert_eq!(s2.clients, vec![0, 1]);
+
+    // Cycle 3: client 0 is 1 behind (delta on base 1); client 1 is 2
+    // behind — past gap 1 — and must be keyframed back in sync.
+    let Directive::Dispatch(bcasts) = fed.next_directive(&mut dl).unwrap() else { panic!() };
+    assert_eq!(bcasts.len(), 2);
+    let by_client = |c: usize| bcasts.iter().find(|b| b.client == c).unwrap();
+    assert_eq!(by_client(0).payload.kind(), "delta:topk");
+    assert_eq!(by_client(0).payload.base_version(), Some(1));
+    assert_eq!(by_client(1).payload.kind(), "keyframe", "stale past the gap → keyframe");
+    for bc in &bcasts {
+        client_reconstruct(&ops, &decode_comp, &mut replicas[bc.client], bc);
+    }
+    assert_eq!((dl.keyframes, dl.deltas), (3, 2));
+
+    // The server's shadow ledger is exactly each client replica.
+    for c in 0..2 {
+        assert_eq!(dl.ledger_version(c), Some(2));
+        let (_, replica_w) = replicas[c].as_ref().unwrap();
+        let shadow = dl.shadow(c).unwrap();
+        for (i, (a, b)) in shadow.iter().zip(replica_w.iter()).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "client {c} shadow[{i}]");
+        }
+    }
+    // And the keyframed straggler holds the *current* global weights.
+    let (_, r1) = replicas[1].as_ref().unwrap();
+    for (a, b) in r1.iter().zip(fed.server.w.iter()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "keyframe resync = current model");
+    }
+}

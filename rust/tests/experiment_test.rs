@@ -149,12 +149,17 @@ fn traffic_accounting_is_exact() {
     let model = exp.ops.model;
     // 3SFC payload is fixed-size: m(d+C)+1 floats per client per round.
     let per = model.syn_payload_bytes(1) as u64;
-    assert_eq!(exp.traffic().up_bytes, per * clients * rounds);
+    assert_eq!(exp.traffic().uplink_bytes, per * clients * rounds);
     // Downlink framing mirrors the upload path: u32 length header + 4P
-    // per receiving client.
+    // per receiving client (the identity downlink ships one keyframe per
+    // broadcast, priced exactly like the legacy dense path).
     assert_eq!(
-        exp.traffic().down_bytes,
+        exp.traffic().downlink_bytes,
         (4 + 4 * model.params as u64) * clients * rounds
+    );
+    assert_eq!(
+        exp.traffic().total_bytes(),
+        exp.traffic().uplink_bytes + exp.traffic().downlink_bytes
     );
     assert_eq!(exp.traffic().rounds, rounds);
     // Full participation: every round selects every client, and the

@@ -14,8 +14,10 @@
 mod common;
 
 use fed3sfc::compress::{
-    Compressor, DecodeCtx, EncodeCtx, FedSynth, Identity, Payload, SignSgd, Stc, ThreeSfc, TopK,
+    Compressor, DecodeCtx, DeltaPayload, EncodeCtx, FedSynth, Identity, Payload, SignSgd, Stc,
+    ThreeSfc, TopK,
 };
+use std::sync::Arc;
 use fed3sfc::runtime::{Backend, FedOps, NativeBackend};
 use fed3sfc::testing::prop::{assert_close, check, Case};
 use fed3sfc::util::rng::Rng;
@@ -117,6 +119,91 @@ fn prop_wire_bytes_is_a_real_serialized_length() {
             let decoded = comp.decode(&dctx, &back).unwrap();
             assert_close(&recon, &decoded, 1e-6)
                 .map_err(|e| format!("{} wire roundtrip: {e}", payload.kind()))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_downlink_delta_payloads_are_wire_honest_over_the_zoo() {
+    // The downlink envelope (compress::downlink) must keep the uplink's
+    // wire-honesty contract for every inner payload the zoo can produce,
+    // plus the keyframe variant: `serialize().len() == wire_bytes()`, the
+    // byte roundtrip reproduces kind + base version, and decoding the
+    // roundtripped inner payload reproduces the encoder's reconstruction.
+    let backend = common::native();
+    let model = backend.manifest().model("mlp_small").unwrap().clone();
+    let n = model.params;
+    check("downlink-delta-wire-honest", 6, |c| {
+        let target = heavy_tailed_target(c, n);
+        let base = c.rng.below(1000) as u32;
+        for comp in zoo(n) {
+            let (inner, recon) = encode_with(&backend, comp.as_ref(), &target, c.seed);
+            let dp = DeltaPayload::Delta { base, inner };
+            let bytes = dp.serialize();
+            if bytes.len() != dp.wire_bytes() {
+                return Err(format!(
+                    "{}: serialized {} B but wire_bytes charges {} B",
+                    dp.kind(),
+                    bytes.len(),
+                    dp.wire_bytes()
+                ));
+            }
+            let back = DeltaPayload::deserialize(
+                &dp.kind(),
+                &bytes,
+                n,
+                model.feature_len(),
+                model.n_classes,
+            )
+            .map_err(|e| format!("{}: {e}", dp.kind()))?;
+            if back.base_version() != Some(base as usize) {
+                return Err(format!(
+                    "{}: base {:?} after roundtrip, wanted {base}",
+                    dp.kind(),
+                    back.base_version()
+                ));
+            }
+            let DeltaPayload::Delta { inner: inner_back, .. } = back else {
+                return Err(format!("{}: roundtripped to a keyframe", dp.kind()));
+            };
+            let ops = FedOps::new(&backend, "mlp_small").unwrap();
+            let w = backend.load_init(ops.model).unwrap();
+            let dctx = DecodeCtx { ops: &ops, w_global: &w };
+            let decoded = comp.decode(&dctx, &inner_back).unwrap();
+            assert_close(&recon, &decoded, 1e-6)
+                .map_err(|e| format!("{} wire roundtrip: {e}", dp.kind()))?;
+        }
+        // Keyframe variant: dense pricing (4 + 4P) and a bit-exact
+        // roundtrip of the weights themselves.
+        let kf = DeltaPayload::Keyframe { w: Arc::new(target.clone()) };
+        let bytes = kf.serialize();
+        if bytes.len() != kf.wire_bytes() || kf.wire_bytes() != 4 + 4 * n {
+            return Err(format!(
+                "keyframe: serialized {} B, wire_bytes {} B, dense charge {} B",
+                bytes.len(),
+                kf.wire_bytes(),
+                4 + 4 * n
+            ));
+        }
+        let back = DeltaPayload::deserialize(
+            &kf.kind(),
+            &bytes,
+            n,
+            model.feature_len(),
+            model.n_classes,
+        )
+        .map_err(|e| format!("keyframe: {e}"))?;
+        if back.base_version().is_some() {
+            return Err("keyframe: roundtrip grew a base version".into());
+        }
+        let DeltaPayload::Keyframe { w } = back else {
+            return Err("keyframe: roundtripped to a delta".into());
+        };
+        for (i, (a, b)) in target.iter().zip(w.iter()).enumerate() {
+            if a.to_bits() != b.to_bits() {
+                return Err(format!("keyframe lost coord {i}: {a} vs {b}"));
+            }
         }
         Ok(())
     });

@@ -127,7 +127,7 @@ fn partial_participation_halves_round_traffic() {
     // per selected client.
     let params = exp.ops.model.params as u64;
     assert_eq!(
-        exp.traffic().down_bytes,
+        exp.traffic().downlink_bytes,
         (4 + 4 * params) * 2 * exp.cfg.rounds as u64
     );
     // Modeled comm time is present and positive on every record.

@@ -176,9 +176,11 @@ fn check_golden(method: CompressorKind, threads: usize) {
             assert_eq!(x.to_bits(), y.to_bits(), "client {ci} ef[{i}]");
         }
     }
-    // Exact traffic totals (uploads and header-framed broadcasts).
-    assert_eq!(exp.traffic().up_bytes, legacy.up_cum);
-    assert_eq!(exp.traffic().down_bytes, legacy.down_cum);
+    // Exact traffic totals (uploads and header-framed broadcasts; the
+    // identity downlink prices every keyframe exactly like the legacy
+    // dense broadcast).
+    assert_eq!(exp.traffic().uplink_bytes, legacy.up_cum);
+    assert_eq!(exp.traffic().downlink_bytes, legacy.down_cum);
 }
 
 #[test]
@@ -269,6 +271,8 @@ fn assert_records_bit_identical(a: &[RoundRecord], b: &[RoundRecord]) {
         assert_eq!(x.test_acc.to_bits(), y.test_acc.to_bits(), "round {}", x.round);
         assert_eq!(x.up_bytes_round, y.up_bytes_round, "round {}", x.round);
         assert_eq!(x.up_bytes_cum, y.up_bytes_cum, "round {}", x.round);
+        assert_eq!(x.down_bytes_round, y.down_bytes_round, "round {}", x.round);
+        assert_eq!(x.down_bytes_cum, y.down_bytes_cum, "round {}", x.round);
         assert_eq!(x.efficiency.to_bits(), y.efficiency.to_bits(), "round {}", x.round);
         assert_eq!(x.sim_time_s.to_bits(), y.sim_time_s.to_bits(), "round {}", x.round);
         assert_eq!(x.stale_mean.to_bits(), y.stale_mean.to_bits(), "round {}", x.round);
