@@ -1,7 +1,7 @@
 //! Per-client state: local data sampler, error-feedback memory, RNG.
 
 use crate::data::{ClientSampler, Dataset};
-use crate::util::rng::Rng;
+use crate::util::rng::{stream, Rng};
 
 pub struct ClientState {
     pub id: usize,
@@ -25,9 +25,12 @@ impl ClientState {
         let n_samples = indices.len();
         ClientState {
             id,
-            sampler: ClientSampler::new(indices, root_rng.split(0xC11E00 + id as u64)),
+            sampler: ClientSampler::new(
+                indices,
+                root_rng.split(stream::CLIENT_SAMPLER_BASE + id as u64),
+            ),
             ef: vec![0.0f32; n_params],
-            rng: root_rng.split(0xC11EFF + id as u64),
+            rng: root_rng.split(stream::CLIENT_LOCAL_BASE + id as u64),
             n_samples,
             rounds_participated: 0,
             last_version: None,

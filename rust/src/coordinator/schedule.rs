@@ -18,7 +18,7 @@
 //! error-feedback memory) untouched until their next participation.
 
 use crate::config::{ExperimentConfig, ScheduleKind};
-use crate::util::rng::Rng;
+use crate::util::rng::{stream, Rng};
 
 /// Decides the participating client set for each round.
 pub trait ClientScheduler {
@@ -123,7 +123,7 @@ pub fn build_scheduler(cfg: &ExperimentConfig, root: &Rng) -> Box<dyn ClientSche
         ScheduleKind::Full => Box::new(FullParticipation),
         ScheduleKind::Uniform => Box::new(UniformSampler::new(
             cfg.client_frac,
-            root.split(0x5C4E_D111),
+            root.split(stream::SCHEDULE),
         )),
         ScheduleKind::RoundRobin => Box::new(RoundRobin::new(cfg.client_frac)),
     }
@@ -144,8 +144,8 @@ mod tests {
     fn uniform_is_deterministic_under_fixed_seed() {
         // Satellite: same selected-set sequence across two identical runs.
         let root = Rng::new(42);
-        let mut a = UniformSampler::new(0.3, root.split(0x5C4E_D111));
-        let mut b = UniformSampler::new(0.3, root.split(0x5C4E_D111));
+        let mut a = UniformSampler::new(0.3, root.split(stream::SCHEDULE));
+        let mut b = UniformSampler::new(0.3, root.split(stream::SCHEDULE));
         for round in 0..50 {
             assert_eq!(a.select(round, 10), b.select(round, 10));
         }

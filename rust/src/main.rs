@@ -20,7 +20,7 @@ use fed3sfc::config::{
 use fed3sfc::coordinator::experiment::Experiment;
 use fed3sfc::data::{dirichlet_partition, Dataset};
 use fed3sfc::runtime::{open_backend, open_backend_kind, Backend};
-use fed3sfc::util::rng::Rng;
+use fed3sfc::util::rng::{stream, Rng};
 
 const USAGE: &str = "\
 fed3sfc — Single-Step Synthetic Features Compressor for federated learning
@@ -265,7 +265,9 @@ fn cmd_partition_viz(args: &Args) -> Result<()> {
     let samples = args.get_usize("samples", 2000)?;
     let seed = args.get_u64("seed", 42)?;
     let ds = Dataset::generate(dataset, samples, seed);
-    let mut rng = Rng::new(seed).split(0x9A87_1710);
+    // detlint: allow(DET003) -- CLI seed plumbing: rebuilds the experiment
+    // root from `--seed` so the viz shows the exact partition a run uses.
+    let mut rng = Rng::new(seed).split(stream::PARTITION);
     let parts = dirichlet_partition(&ds, clients, alpha, &mut rng);
     println!(
         "Dirichlet(alpha={alpha}) partition of {} ({} samples, {} classes) across {clients} clients:",

@@ -1,0 +1,60 @@
+//! POD byte views: `&[f32]` / `&[i32]` → `&[u8]` reinterpretation.
+//!
+//! The only raw-pointer casts in the tree live here, in one
+//! feature-independent module, so the `cargo miri test` CI job can
+//! sanitize them on the native build (the PJRT caller in
+//! `runtime::literal` is gated behind FFI miri cannot run).
+
+/// View an f32 slice as its raw little-endian-of-the-host bytes.
+pub fn bytes_of_f32(data: &[f32]) -> &[u8] {
+    // SAFETY: `f32` is plain-old-data with no padding or invalid bit
+    // patterns at `u8`; the pointer and length come from a live slice
+    // (`size_of_val` is exactly the byte span), and the returned borrow
+    // keeps `data` alive.
+    unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data)) }
+}
+
+/// View an i32 slice as its raw little-endian-of-the-host bytes.
+pub fn bytes_of_i32(data: &[i32]) -> &[u8] {
+    // SAFETY: same as `bytes_of_f32` — `i32` is POD, the span is
+    // `size_of_val(data)` bytes of a live slice, lifetime is inherited.
+    unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data)) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_bytes_roundtrip() {
+        let data = [1.5f32, -2.0, 0.25, f32::MIN_POSITIVE, 0.0, -0.0];
+        let bytes = bytes_of_f32(&data);
+        assert_eq!(bytes.len(), data.len() * 4);
+        let back: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_ne_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        assert_eq!(back.len(), data.len());
+        for (a, b) in back.iter().zip(data.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn i32_bytes_roundtrip() {
+        let data = [0i32, -1, i32::MAX, i32::MIN, 131];
+        let bytes = bytes_of_i32(&data);
+        assert_eq!(bytes.len(), data.len() * 4);
+        let back: Vec<i32> = bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_ne_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn empty_slices_are_empty_bytes() {
+        assert!(bytes_of_f32(&[]).is_empty());
+        assert!(bytes_of_i32(&[]).is_empty());
+    }
+}

@@ -57,6 +57,8 @@ impl PjrtBackend {
             return Ok(exe.clone());
         }
         let path = self.manifest.dir.join(file);
+        // detlint: allow(DET001) -- RuntimeStats compile-time diagnostics:
+        // reported at exit, never fed into trajectories or the sim clock.
         let t0 = Instant::now();
         let proto = HloModuleProto::from_text_file(path.to_str().unwrap())
             .with_context(|| format!("parsing HLO text {path:?}"))?;
@@ -77,6 +79,8 @@ impl PjrtBackend {
     /// flattened output tuple (aot.py lowers with `return_tuple=True`).
     pub fn execute(&self, file: &str, inputs: &[Literal]) -> Result<Vec<Literal>> {
         let exe = self.executable(file)?;
+        // detlint: allow(DET001) -- RuntimeStats execute-time diagnostics:
+        // reported at exit, never fed into trajectories or the sim clock.
         let t0 = Instant::now();
         let result = exe.execute::<Literal>(inputs)?;
         let lit = result[0][0].to_literal_sync()?;

@@ -3,14 +3,7 @@
 use anyhow::{ensure, Result};
 use xla::{ElementType, Literal};
 
-fn bytes_of_f32(data: &[f32]) -> &[u8] {
-    // f32 slices are plain-old-data; reinterpret for the untyped-literal API.
-    unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) }
-}
-
-fn bytes_of_i32(data: &[i32]) -> &[u8] {
-    unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) }
-}
+use super::bytes::{bytes_of_f32, bytes_of_i32};
 
 /// f32 literal of the given logical shape.
 pub fn f32_literal(dims: &[usize], data: &[f32]) -> Result<Literal> {

@@ -18,6 +18,7 @@
 //! `--backend`, `FED3SFC_BACKEND`, default auto).
 
 pub mod backend;
+pub mod bytes;
 #[cfg(feature = "pjrt")]
 pub mod client;
 pub mod fedops;

@@ -143,6 +143,8 @@ impl NativeBackend {
 
     /// Run `f` under the execution counters.
     fn timed<T>(&self, f: impl FnOnce() -> T) -> T {
+        // detlint: allow(DET001) -- RuntimeStats wall-time diagnostics:
+        // reported at exit, never fed into trajectories or the sim clock.
         let t0 = Instant::now();
         let out = f();
         let mut st = self.stats.borrow_mut();
@@ -182,6 +184,9 @@ impl Backend for NativeBackend {
             .name
             .bytes()
             .fold(0u64, |acc, b| acc.wrapping_mul(131).wrapping_add(b as u64));
+        // detlint: allow(DET003) -- fixed-constant root by design: init
+        // weights depend only on the model name, identical on any backend
+        // instance (the experiment seed must not perturb them).
         let mut rng = Rng::new(0xF3D_0E17).split(name_tag);
         let mut w = vec![0.0f32; dims.params()];
         {

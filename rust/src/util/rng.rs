@@ -168,6 +168,33 @@ impl Rng {
     }
 }
 
+/// The registry of RNG stream tags.
+///
+/// Every purpose that splits a stream off the experiment root gets its own
+/// named constant here, so two purposes can never silently share a tag
+/// (shared tags mean correlated draws: `split` derives the child purely
+/// from parent state + tag). detlint's DET004 rule enforces this table:
+/// literal `split(0x…)` call sites are rejected when a value recurs, and
+/// the constants below are themselves part of the duplicate scan.
+pub mod stream {
+    /// Dirichlet partition of the dataset across clients
+    /// (`coordinator/experiment.rs` and the `partition-viz` CLI share this
+    /// stream deliberately: the viz must show the exact partition a run uses).
+    pub const PARTITION: u64 = 0x9A87_1710;
+    /// Per-round link jitter in simulated network delays.
+    pub const LINK_JITTER: u64 = 0x11A7_71E5;
+    /// Downlink (server→client) broadcast path.
+    pub const DOWNLINK: u64 = 0xD114_C0DE;
+    /// Client participation scheduling.
+    pub const SCHEDULE: u64 = 0x5C4E_D111;
+    /// Base tag for per-client batch samplers (client id is added).
+    pub const CLIENT_SAMPLER_BASE: u64 = 0xC11E00;
+    /// Base tag for per-client local RNGs (client id is added).
+    pub const CLIENT_LOCAL_BASE: u64 = 0xC11EFF;
+    /// Dataset synthesis, xor-mixed with the split index.
+    pub const DATA_SPLIT: u64 = 0xDA7A;
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,24 @@
+//! Self-check: the real `src/` tree stays detlint-clean.
+//!
+//! This is the library-level twin of the CI job that runs
+//! `cargo run -p detlint -- check` — having it in the test suite means a
+//! plain `cargo test` catches a determinism/wire-honesty regression (or a
+//! stale/un-reasoned pragma, which is a DET000 error) without the extra
+//! binary invocation.
+
+use std::path::Path;
+
+#[test]
+fn src_tree_is_detlint_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let result = detlint::lint_tree(&root).expect("lint src tree");
+    assert!(
+        result.diagnostics.is_empty(),
+        "detlint found {} issue(s) in src/:\n{}",
+        result.diagnostics.len(),
+        detlint::render_text(&result.diagnostics, "src")
+    );
+    // The scan actually covered the tree (guards against a path typo
+    // silently turning this test into a no-op).
+    assert!(result.files > 40, "only {} files scanned", result.files);
+}

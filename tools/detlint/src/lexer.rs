@@ -1,0 +1,315 @@
+//! A minimal hand-rolled Rust lexer — just enough structure for the
+//! detlint rules: a comment/string-free token stream with 1-based
+//! line/col positions, plus the comments kept aside (pragmas and
+//! `// SAFETY:` annotations live there).
+//!
+//! Handled: line and (nested) block comments, plain/byte/raw string
+//! literals (`"…"`, `b"…"`, `r"…"`, `r#"…"#`), char literals vs
+//! lifetimes, identifiers, integer-ish literals (`0x9A87_1710` comes out
+//! as one token), and single-char punctuation. Anything fancier is not
+//! needed: rules match short token patterns, never full syntax.
+
+/// Token class, to the extent the rules care.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword.
+    Ident,
+    /// Numeric literal (starts with an ASCII digit; `0x…`/`_` kept whole).
+    Int,
+    /// Single punctuation character.
+    Punct,
+}
+
+/// One source token with its 1-based position.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+    pub col: u32,
+}
+
+/// A comment, anchored at the line/col it starts on. `text` includes the
+/// `//` / `/*` markers.
+#[derive(Clone, Debug)]
+pub struct Comment {
+    pub line: u32,
+    pub col: u32,
+    /// True when no token precedes the comment on its line (a whole-line
+    /// comment, as opposed to one trailing code).
+    pub own_line: bool,
+    pub text: String,
+}
+
+/// Lexer output: the token stream and the comment sidecar.
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub comments: Vec<Comment>,
+}
+
+struct Cursor {
+    cs: Vec<char>,
+    i: usize,
+    line: u32,
+    col: u32,
+}
+
+impl Cursor {
+    fn peek(&self, k: usize) -> Option<char> {
+        self.cs.get(self.i + k).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.cs.get(self.i).copied()?;
+        self.i += 1;
+        if c == '\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        Some(c)
+    }
+}
+
+/// True when the cursor (sitting on `r` or `b`) starts a raw/byte string
+/// literal rather than an identifier (`r#ident` raw identifiers and plain
+/// `r`/`b` variables fall through to the identifier path).
+fn is_string_start(cur: &Cursor) -> bool {
+    let mut k = 0;
+    if cur.peek(k) == Some('b') {
+        k += 1;
+    }
+    if cur.peek(k) == Some('r') {
+        k += 1;
+        while cur.peek(k) == Some('#') {
+            k += 1;
+        }
+    }
+    k > 0 && cur.peek(k) == Some('"')
+}
+
+/// Consume a string literal (cursor on `"`, `b`, or `r`).
+fn consume_string(cur: &mut Cursor) {
+    if cur.peek(0) == Some('b') {
+        cur.bump();
+    }
+    let raw = cur.peek(0) == Some('r');
+    if raw {
+        cur.bump();
+    }
+    let mut hashes = 0usize;
+    while cur.peek(0) == Some('#') {
+        hashes += 1;
+        cur.bump();
+    }
+    if cur.peek(0) != Some('"') {
+        return;
+    }
+    cur.bump();
+    loop {
+        let Some(ch) = cur.peek(0) else { break };
+        if !raw && ch == '\\' {
+            cur.bump();
+            cur.bump();
+            continue;
+        }
+        if ch == '"' {
+            let closed = (0..hashes).all(|k| cur.peek(1 + k) == Some('#'));
+            if closed {
+                cur.bump();
+                for _ in 0..hashes {
+                    cur.bump();
+                }
+                break;
+            }
+        }
+        cur.bump();
+    }
+}
+
+/// Lex `src` into tokens + comments.
+pub fn lex(src: &str) -> Lexed {
+    let mut cur = Cursor { cs: src.chars().collect(), i: 0, line: 1, col: 1 };
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut comments: Vec<Comment> = Vec::new();
+    // Line of the most recent token, for `own_line` comment tracking.
+    let mut last_tok_line: u32 = 0;
+
+    loop {
+        let Some(c) = cur.peek(0) else { break };
+        let (line0, col0) = (cur.line, cur.col);
+
+        if c.is_whitespace() {
+            cur.bump();
+            continue;
+        }
+
+        // Line comment (incl. `///` docs).
+        if c == '/' && cur.peek(1) == Some('/') {
+            let mut text = String::new();
+            while let Some(ch) = cur.peek(0) {
+                if ch == '\n' {
+                    break;
+                }
+                text.push(ch);
+                cur.bump();
+            }
+            comments.push(Comment { line: line0, col: col0, own_line: last_tok_line != line0, text });
+            continue;
+        }
+
+        // Block comment; Rust block comments nest.
+        if c == '/' && cur.peek(1) == Some('*') {
+            let mut depth = 0i32;
+            let mut text = String::new();
+            while let Some(ch) = cur.peek(0) {
+                if ch == '/' && cur.peek(1) == Some('*') {
+                    depth += 1;
+                    text.push_str("/*");
+                    cur.bump();
+                    cur.bump();
+                    continue;
+                }
+                if ch == '*' && cur.peek(1) == Some('/') {
+                    depth -= 1;
+                    text.push_str("*/");
+                    cur.bump();
+                    cur.bump();
+                    if depth == 0 {
+                        break;
+                    }
+                    continue;
+                }
+                text.push(ch);
+                cur.bump();
+            }
+            comments.push(Comment { line: line0, col: col0, own_line: last_tok_line != line0, text });
+            continue;
+        }
+
+        // String literals contribute no tokens.
+        if c == '"' || ((c == 'r' || c == 'b') && is_string_start(&cur)) {
+            consume_string(&mut cur);
+            continue;
+        }
+
+        // Char literal vs lifetime.
+        if c == '\'' {
+            let c1 = cur.peek(1);
+            let is_char = match c1 {
+                Some('\\') => true,
+                Some(x) if x != '\'' => cur.peek(2) == Some('\''),
+                _ => false,
+            };
+            cur.bump();
+            if is_char {
+                if cur.peek(0) == Some('\\') {
+                    cur.bump();
+                }
+                cur.bump();
+                if cur.peek(0) == Some('\'') {
+                    cur.bump();
+                }
+            } else {
+                // Lifetime: `'ident`, no closing quote.
+                while matches!(cur.peek(0), Some(x) if x.is_alphanumeric() || x == '_') {
+                    cur.bump();
+                }
+            }
+            continue;
+        }
+
+        // Identifier / keyword.
+        if c.is_alphabetic() || c == '_' {
+            let mut text = String::new();
+            while let Some(x) = cur.peek(0) {
+                if x.is_alphanumeric() || x == '_' {
+                    text.push(x);
+                    cur.bump();
+                } else {
+                    break;
+                }
+            }
+            toks.push(Tok { kind: TokKind::Ident, text, line: line0, col: col0 });
+            last_tok_line = line0;
+            continue;
+        }
+
+        // Number: consume the alphanumeric/underscore run so `0x9A87_1710`
+        // (and suffixed forms like `1u64`) stay one token.
+        if c.is_ascii_digit() {
+            let mut text = String::new();
+            while let Some(x) = cur.peek(0) {
+                if x.is_alphanumeric() || x == '_' {
+                    text.push(x);
+                    cur.bump();
+                } else {
+                    break;
+                }
+            }
+            toks.push(Tok { kind: TokKind::Int, text, line: line0, col: col0 });
+            last_tok_line = line0;
+            continue;
+        }
+
+        // Everything else: one punctuation character per token.
+        cur.bump();
+        toks.push(Tok { kind: TokKind::Punct, text: c.to_string(), line: line0, col: col0 });
+        last_tok_line = line0;
+    }
+
+    Lexed { toks, comments }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        lex(src).toks.into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn strips_comments_and_strings() {
+        let src = "let a = \"Instant::now\"; // Instant::now\n/* thread_rng */ let b = 1;";
+        let t = texts(src);
+        assert!(!t.contains(&"Instant".to_string()));
+        assert!(!t.contains(&"thread_rng".to_string()));
+        assert_eq!(t.iter().filter(|x| x.as_str() == "let").count(), 2);
+        let lexed = lex(src);
+        assert_eq!(lexed.comments.len(), 2);
+        assert!(!lexed.comments[0].own_line);
+    }
+
+    #[test]
+    fn raw_strings_and_chars() {
+        let src = "let s = r#\"quote \" inside\"#; let c = '\\''; let l: &'static str = \"x\";";
+        let t = texts(src);
+        assert!(!t.contains(&"inside".to_string()));
+        assert!(!t.contains(&"static".to_string()));
+        assert_eq!(t.iter().filter(|x| x.as_str() == "let").count(), 3);
+    }
+
+    #[test]
+    fn hex_literals_are_single_tokens() {
+        let lexed = lex("root.split(0x9A87_1710);");
+        let ints: Vec<&Tok> = lexed.toks.iter().filter(|t| t.kind == TokKind::Int).collect();
+        assert_eq!(ints.len(), 1);
+        assert_eq!(ints[0].text, "0x9A87_1710");
+        assert_eq!(ints[0].line, 1);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let t = texts("/* outer /* inner */ still comment */ fn f() {}");
+        assert_eq!(t[0], "fn");
+    }
+
+    #[test]
+    fn positions_are_one_based() {
+        let lexed = lex("a\n  bb");
+        assert_eq!((lexed.toks[0].line, lexed.toks[0].col), (1, 1));
+        assert_eq!((lexed.toks[1].line, lexed.toks[1].col), (2, 3));
+    }
+}

@@ -1,0 +1,131 @@
+//! detlint — determinism & wire-honesty static analysis for the fed3sfc
+//! source tree.
+//!
+//! The library half exists so the fixture golden tests and the repo's
+//! self-check integration test (`rust/tests/detlint_test.rs`) can lint
+//! in-memory sources and real trees without shelling out to the binary.
+//!
+//! Entry points:
+//! - [`lint_files`] — lint a corpus of `(relative_path, source)` pairs
+//!   (DET004 duplicate-tag detection is cross-file, so corpora lint as
+//!   one unit);
+//! - [`lint_source`] — convenience wrapper for a single in-memory file;
+//! - [`lint_tree`] — recursively lint every `*.rs` under a root, in
+//!   sorted path order;
+//! - [`render_text`] / [`render_json`] — ruff-style and machine-readable
+//!   rendering of the diagnostics.
+
+mod lexer;
+mod rules;
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+pub use rules::{lint_files, rule, Diagnostic, LintResult, Rule, RULES};
+
+/// Lint a single in-memory file under a virtual relative path (rules are
+/// path-sensitive: e.g. DET002 only fires under `coordinator/`,
+/// `compress/`, `simnet/`).
+pub fn lint_source(rel: &str, src: &str) -> LintResult {
+    lint_files(&[(rel.to_string(), src.to_string())])
+}
+
+/// Recursively collect every `*.rs` file under `root` (sorted by relative
+/// path, `/`-separated on every platform) and lint them as one corpus.
+pub fn lint_tree(root: &Path) -> io::Result<LintResult> {
+    let mut found: Vec<(String, PathBuf)> = Vec::new();
+    collect_rs(root, "", &mut found)?;
+    found.sort_by(|a, b| a.0.cmp(&b.0));
+    let mut files: Vec<(String, String)> = Vec::new();
+    for (rel, path) in found {
+        files.push((rel, fs::read_to_string(&path)?));
+    }
+    Ok(lint_files(&files))
+}
+
+fn collect_rs(dir: &Path, rel: &str, out: &mut Vec<(String, PathBuf)>) -> io::Result<()> {
+    let mut entries: Vec<fs::DirEntry> = fs::read_dir(dir)?.collect::<io::Result<_>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let name = e.file_name().to_string_lossy().into_owned();
+        let sub = if rel.is_empty() { name.clone() } else { format!("{rel}/{name}") };
+        if e.file_type()?.is_dir() {
+            collect_rs(&e.path(), &sub, out)?;
+        } else if name.ends_with(".rs") {
+            out.push((sub, e.path()));
+        }
+    }
+    Ok(())
+}
+
+/// Ruff-style text rendering: `error[CODE]: msg`, a `-->` locus line, and
+/// the rule's one-line help. `prefix` (usually the scan root) is joined
+/// onto each relative path so the locus is clickable from the invocation
+/// directory.
+pub fn render_text(diags: &[Diagnostic], prefix: &str) -> String {
+    let mut out = String::new();
+    for d in diags {
+        let path = if prefix.is_empty() {
+            d.path.clone()
+        } else {
+            format!("{}/{}", prefix.trim_end_matches('/'), d.path)
+        };
+        out.push_str(&format!("error[{}]: {}\n", d.code, d.message));
+        out.push_str(&format!("  --> {}:{}:{}\n", path, d.line, d.col));
+        if let Some(r) = rule(d.code) {
+            out.push_str(&format!("  = help: {}\n", r.help));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Machine-readable rendering (one stable JSON object; no serde — the
+/// shape is flat enough to emit by hand).
+pub fn render_json(result: &LintResult, prefix: &str) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str(&format!("  \"files\": {},\n", result.files));
+    out.push_str(&format!("  \"suppressed\": {},\n", result.suppressed));
+    out.push_str(&format!("  \"count\": {},\n", result.diagnostics.len()));
+    out.push_str("  \"diagnostics\": [");
+    for (i, d) in result.diagnostics.iter().enumerate() {
+        let path = if prefix.is_empty() {
+            d.path.clone()
+        } else {
+            format!("{}/{}", prefix.trim_end_matches('/'), d.path)
+        };
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n    {{\"code\": \"{}\", \"path\": \"{}\", \"line\": {}, \"col\": {}, \"message\": \"{}\"}}",
+            json_escape(d.code),
+            json_escape(&path),
+            d.line,
+            d.col,
+            json_escape(&d.message)
+        ));
+    }
+    if !result.diagnostics.is_empty() {
+        out.push_str("\n  ");
+    }
+    out.push_str("]\n}\n");
+    out
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}

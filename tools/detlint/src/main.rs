@@ -1,0 +1,144 @@
+//! detlint CLI.
+//!
+//! ```text
+//! cargo run -p detlint -- check [ROOT] [--format text|json]
+//! cargo run -p detlint -- rules
+//! cargo run -p detlint -- explain DET002
+//! ```
+//!
+//! `check` exits 0 on a clean tree, 1 when diagnostics survive, 2 on
+//! usage or I/O errors. With no ROOT argument it scans `src/` when
+//! invoked from the workspace root (`rust/`) and falls back to
+//! `rust/src/` when invoked from the repository root.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use detlint::{lint_tree, render_json, render_text, rule, RULES};
+
+const USAGE: &str = "\
+detlint — determinism & wire-honesty static analysis for the fed3sfc tree
+
+USAGE:
+    detlint check [ROOT] [--format text|json]   lint every *.rs under ROOT
+    detlint rules                               list the rule index
+    detlint explain <CODE>                      long-form rationale for one rule
+
+Suppression: `// detlint: allow(<RULE>[, <RULE>]) -- <reason>` on the
+finding's line (trailing) or the line directly above (own line). The
+reason is mandatory; stale or malformed pragmas are DET000 errors.
+
+`check` exits 0 when clean, 1 when diagnostics survive, 2 on usage/I/O
+errors.";
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        None | Some("--help") | Some("-h") | Some("help") => {
+            println!("{USAGE}");
+            ExitCode::SUCCESS
+        }
+        Some("rules") => {
+            for r in RULES {
+                println!("{}  {}", r.code, r.summary);
+            }
+            ExitCode::SUCCESS
+        }
+        Some("explain") | Some("--explain") => match args.get(1).map(|c| (c, rule(c))) {
+            Some((code, Some(r))) => {
+                println!("{}: {}\n", code, r.summary);
+                println!("{}", r.explain);
+                ExitCode::SUCCESS
+            }
+            Some((code, None)) => {
+                eprintln!("detlint: unknown rule `{code}` (try `detlint rules`)");
+                ExitCode::from(2)
+            }
+            None => {
+                eprintln!("detlint: `explain` needs a rule code (try `detlint rules`)");
+                ExitCode::from(2)
+            }
+        },
+        Some("check") => check(&args[1..]),
+        Some(other) => {
+            eprintln!("detlint: unknown command `{other}`\n\n{USAGE}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn check(args: &[String]) -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut format = "text".to_string();
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--format" => match it.next() {
+                Some(f) if f == "text" || f == "json" => format = f.clone(),
+                Some(f) => {
+                    eprintln!("detlint: unknown format `{f}` (expected `text` or `json`)");
+                    return ExitCode::from(2);
+                }
+                None => {
+                    eprintln!("detlint: `--format` needs a value (`text` or `json`)");
+                    return ExitCode::from(2);
+                }
+            },
+            flag if flag.starts_with('-') => {
+                eprintln!("detlint: unknown flag `{flag}`\n\n{USAGE}");
+                return ExitCode::from(2);
+            }
+            path if root.is_none() => root = Some(PathBuf::from(path)),
+            extra => {
+                eprintln!("detlint: unexpected argument `{extra}`");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    let root = root.unwrap_or_else(|| {
+        // From the workspace root (rust/) the tree is ./src; from the
+        // repository root it is rust/src.
+        if Path::new("src").is_dir() && Path::new("Cargo.toml").is_file() {
+            PathBuf::from("src")
+        } else {
+            PathBuf::from("rust/src")
+        }
+    });
+    if !root.is_dir() {
+        eprintln!("detlint: scan root `{}` is not a directory", root.display());
+        return ExitCode::from(2);
+    }
+
+    let result = match lint_tree(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("detlint: failed to read `{}`: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    let prefix = root.to_string_lossy().replace('\\', "/");
+    match format.as_str() {
+        "json" => print!("{}", render_json(&result, &prefix)),
+        _ => {
+            print!("{}", render_text(&result.diagnostics, &prefix));
+            if result.diagnostics.is_empty() {
+                println!(
+                    "detlint: clean — {} files checked, {} finding(s) suppressed by pragma",
+                    result.files, result.suppressed
+                );
+            } else {
+                println!(
+                    "detlint: {} error(s) across {} files ({} finding(s) suppressed by pragma)",
+                    result.diagnostics.len(),
+                    result.files,
+                    result.suppressed
+                );
+            }
+        }
+    }
+    if result.diagnostics.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

@@ -1,0 +1,28 @@
+// Fixture: idiomatic deterministic code (linted as coordinator/clean.rs).
+// Ordered containers, a named stream tag, and test-only code that is free
+// to use stopwatches and scratch hash maps — zero diagnostics expected.
+use std::collections::BTreeMap;
+
+use crate::util::rng::{stream, Rng};
+
+pub fn fold_updates(updates: &BTreeMap<u32, f32>) -> f32 {
+    updates.values().sum()
+}
+
+pub fn schedule_stream(root: &Rng) -> Rng {
+    root.split(stream::SCHEDULE)
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+    use std::time::Instant;
+
+    #[test]
+    fn tests_may_use_wall_clocks_and_hash_maps() {
+        let t0 = Instant::now();
+        let mut scratch = HashMap::new();
+        scratch.insert(1u32, t0.elapsed().as_secs_f64());
+        assert_eq!(scratch.len(), 1);
+    }
+}

@@ -1,0 +1,11 @@
+// Fixture: wall-clock reads on the sim path (linted as simnet/latency.rs).
+use std::time::{Instant, SystemTime};
+
+pub fn wall_probe() -> f64 {
+    let t0 = Instant::now();
+    t0.elapsed().as_secs_f64()
+}
+
+pub fn clock_entropy() -> SystemTime {
+    SystemTime::now()
+}

@@ -1,0 +1,11 @@
+// Fixture: unordered container in aggregation code (linted as
+// coordinator/policy.rs — the seeded-violation example from the issue).
+use std::collections::HashMap;
+
+pub fn tally(xs: &[(u32, f32)]) -> f32 {
+    let mut by_client: HashMap<u32, f32> = HashMap::new();
+    for (id, v) in xs {
+        *by_client.entry(*id).or_insert(0.0) += v;
+    }
+    by_client.values().sum()
+}

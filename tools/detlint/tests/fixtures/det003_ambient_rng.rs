@@ -1,0 +1,12 @@
+// Fixture: ambient randomness (linted as data/sampler.rs).
+use crate::util::rng::Rng;
+
+pub fn jitter() -> u64 {
+    let mut rng = Rng::new(0xBAD_5EED);
+    rng.next_u64() ^ rand::random::<u64>()
+}
+
+pub fn ambient() -> u64 {
+    let mut rng = rand::thread_rng();
+    rng.gen()
+}

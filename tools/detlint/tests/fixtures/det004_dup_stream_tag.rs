@@ -1,0 +1,9 @@
+// Fixture: two purposes splitting the same literal tag (linted as
+// coordinator/warmup.rs).
+use crate::util::rng::Rng;
+
+pub fn two_streams(root: &Rng) -> (Rng, Rng) {
+    let warmup = root.split(0xD00D_F00D);
+    let cooldown = root.split(0xD00D_F00D);
+    (warmup, cooldown)
+}

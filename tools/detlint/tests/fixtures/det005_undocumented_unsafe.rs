@@ -1,0 +1,10 @@
+// Fixture: one documented and one undocumented unsafe block (linted as
+// runtime/view.rs). Only the second may be flagged.
+pub fn documented(data: &[u32]) -> &[u8] {
+    // SAFETY: u32 is POD; the span is the exact byte length of a live slice.
+    unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, 4 * data.len()) }
+}
+
+pub fn undocumented(data: &[u32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, 4 * data.len()) }
+}

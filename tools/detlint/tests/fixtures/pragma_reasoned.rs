@@ -1,0 +1,11 @@
+// Fixture: both pragma forms with reasons (linted as simnet/probe.rs).
+// Every finding is suppressed; zero diagnostics, two suppressions.
+use std::time::Instant;
+
+pub fn probe_ms() -> f64 {
+    // detlint: allow(DET001) -- debug probe, printed only, and the
+    // own-line form may flow over comment continuation lines like this.
+    let t0 = Instant::now();
+    let t1 = Instant::now(); // detlint: allow(DET001) -- trailing form demo
+    (t1 - t0).as_secs_f64() * 1e3
+}

@@ -1,0 +1,16 @@
+// Fixture: pragma hygiene failures (linted as simnet/sloppy.rs). The
+// un-reasoned pragma does NOT suppress its finding, the unknown rule and
+// the stale allow are DET000s of their own.
+use std::time::Instant;
+
+pub fn sloppy_ms() -> f64 {
+    let t0 = Instant::now(); // detlint: allow(DET001)
+    // detlint: allow(DET999) -- no such rule
+    let t1 = Instant::now();
+    (t1 - t0).as_secs_f64() * 1e3
+}
+
+// detlint: allow(DET002) -- nothing here uses a hash map
+pub fn stale() -> u32 {
+    7
+}

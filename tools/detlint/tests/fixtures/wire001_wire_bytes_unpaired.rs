@@ -1,0 +1,27 @@
+// Fixture: a compress/ type pricing bytes it cannot ship (linted as
+// compress/sketch.rs). `Honest` carries the full trio and stays clean.
+pub struct Sketch {
+    pub bits: Vec<u8>,
+}
+
+impl Sketch {
+    pub fn wire_bytes(&self) -> usize {
+        8 + self.bits.len()
+    }
+}
+
+pub struct Honest;
+
+impl Honest {
+    pub fn wire_bytes(&self) -> usize {
+        8
+    }
+
+    pub fn serialize(&self) -> Vec<u8> {
+        vec![0; 8]
+    }
+
+    pub fn deserialize(_bytes: &[u8]) -> Honest {
+        Honest
+    }
+}

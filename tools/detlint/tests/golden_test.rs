@@ -1,0 +1,220 @@
+//! Golden tests: each rule demonstrated by a minimal fixture whose
+//! rendered diagnostic text must match byte-for-byte (ruff-style
+//! snapshots, hand-pinned). Fixtures live under `tests/fixtures/` and are
+//! linted under *virtual* paths because the rules are path-sensitive.
+
+use detlint::{lint_files, lint_source, render_text};
+
+/// Lint `src` as if it sat at `vpath` under the scan root and compare the
+/// rendered text + suppression count against the pinned snapshot.
+fn check(vpath: &str, src: &str, expected_suppressed: usize, expected: &str) {
+    let result = lint_source(vpath, src);
+    assert_eq!(
+        result.suppressed, expected_suppressed,
+        "suppression count for {vpath}"
+    );
+    let text = render_text(&result.diagnostics, "");
+    assert_eq!(text, expected, "diagnostic text for {vpath}");
+}
+
+#[test]
+fn det001_wall_clock_reads() {
+    check(
+        "simnet/latency.rs",
+        include_str!("fixtures/det001_wallclock.rs"),
+        0,
+        r"error[DET001]: wall-clock read (`SystemTime`) outside an allowlisted timing site
+  --> simnet/latency.rs:2:26
+  = help: sim-path code takes time from `simnet::SimClock`; real stopwatches are confined to `bench/`, `coordinator/metrics.rs`, and the wall_ms/eval_ms probes in `coordinator/experiment.rs`
+
+error[DET001]: wall-clock read (`Instant::now`) outside an allowlisted timing site
+  --> simnet/latency.rs:5:14
+  = help: sim-path code takes time from `simnet::SimClock`; real stopwatches are confined to `bench/`, `coordinator/metrics.rs`, and the wall_ms/eval_ms probes in `coordinator/experiment.rs`
+
+error[DET001]: wall-clock read (`SystemTime`) outside an allowlisted timing site
+  --> simnet/latency.rs:9:27
+  = help: sim-path code takes time from `simnet::SimClock`; real stopwatches are confined to `bench/`, `coordinator/metrics.rs`, and the wall_ms/eval_ms probes in `coordinator/experiment.rs`
+
+error[DET001]: wall-clock read (`SystemTime`) outside an allowlisted timing site
+  --> simnet/latency.rs:10:5
+  = help: sim-path code takes time from `simnet::SimClock`; real stopwatches are confined to `bench/`, `coordinator/metrics.rs`, and the wall_ms/eval_ms probes in `coordinator/experiment.rs`
+
+",
+    );
+}
+
+#[test]
+fn det002_hash_containers_in_aggregation_code() {
+    check(
+        "coordinator/policy.rs",
+        include_str!("fixtures/det002_hashmap.rs"),
+        0,
+        r"error[DET002]: `HashMap` in deterministic aggregation code (iteration order is unordered)
+  --> coordinator/policy.rs:3:23
+  = help: use `BTreeMap`/`Vec` so iteration order is defined; a keyed-lookup-only use may be pragma'd with a reason
+
+error[DET002]: `HashMap` in deterministic aggregation code (iteration order is unordered)
+  --> coordinator/policy.rs:6:24
+  = help: use `BTreeMap`/`Vec` so iteration order is defined; a keyed-lookup-only use may be pragma'd with a reason
+
+error[DET002]: `HashMap` in deterministic aggregation code (iteration order is unordered)
+  --> coordinator/policy.rs:6:44
+  = help: use `BTreeMap`/`Vec` so iteration order is defined; a keyed-lookup-only use may be pragma'd with a reason
+
+",
+    );
+}
+
+#[test]
+fn det002_is_scoped_to_deterministic_dirs() {
+    // The identical source under runtime/ is legal (e.g. the PJRT
+    // executable cache does keyed lookup there).
+    let result = lint_source("runtime/cache.rs", include_str!("fixtures/det002_hashmap.rs"));
+    assert!(result.diagnostics.is_empty(), "{:?}", result.diagnostics);
+}
+
+#[test]
+fn det003_ambient_randomness() {
+    check(
+        "data/sampler.rs",
+        include_str!("fixtures/det003_ambient_rng.rs"),
+        0,
+        r"error[DET003]: root RNG construction (`Rng::new`) outside the config/seed plumbing
+  --> data/sampler.rs:5:19
+  = help: all randomness descends from the experiment root via `Rng::split` with a `util::rng::stream` tag; root construction is confined to the seed plumbing
+
+error[DET003]: ambient randomness (`rand::random`) outside the seeded RNG plumbing
+  --> data/sampler.rs:6:22
+  = help: all randomness descends from the experiment root via `Rng::split` with a `util::rng::stream` tag; root construction is confined to the seed plumbing
+
+error[DET003]: ambient randomness (`thread_rng`) outside the seeded RNG plumbing
+  --> data/sampler.rs:10:25
+  = help: all randomness descends from the experiment root via `Rng::split` with a `util::rng::stream` tag; root construction is confined to the seed plumbing
+
+",
+    );
+}
+
+#[test]
+fn det004_duplicate_stream_tags_single_file() {
+    check(
+        "coordinator/warmup.rs",
+        include_str!("fixtures/det004_dup_stream_tag.rs"),
+        0,
+        r"error[DET004]: RNG stream tag `0xD00D_F00D` is also used at coordinator/warmup.rs:7
+  --> coordinator/warmup.rs:6:29
+  = help: two streams sharing a tag draw correlated values; mint a fresh constant in `util::rng::stream`
+
+error[DET004]: RNG stream tag `0xD00D_F00D` is also used at coordinator/warmup.rs:6
+  --> coordinator/warmup.rs:7:31
+  = help: two streams sharing a tag draw correlated values; mint a fresh constant in `util::rng::stream`
+
+",
+    );
+}
+
+#[test]
+fn det004_duplicate_stream_tags_cross_file() {
+    // The same value written two ways (hex with separators vs decimal) in
+    // two different files is still one tag — the scan is corpus-wide and
+    // compares numeric values, not spellings.
+    let a = "pub fn s(r: &crate::util::rng::Rng) -> crate::util::rng::Rng { r.split(0x2A) }\n";
+    let b = "pub fn t(r: &crate::util::rng::Rng) -> crate::util::rng::Rng { r.split(42) }\n";
+    let result = lint_files(&[
+        ("coordinator/a.rs".to_string(), a.to_string()),
+        ("coordinator/b.rs".to_string(), b.to_string()),
+    ]);
+    let codes: Vec<&str> = result.diagnostics.iter().map(|d| d.code).collect();
+    assert_eq!(codes, ["DET004", "DET004"], "{:?}", result.diagnostics);
+    assert!(result.diagnostics[0].message.contains("coordinator/b.rs:1"));
+    assert!(result.diagnostics[1].message.contains("coordinator/a.rs:1"));
+}
+
+#[test]
+fn det005_undocumented_unsafe() {
+    check(
+        "runtime/view.rs",
+        include_str!("fixtures/det005_undocumented_unsafe.rs"),
+        0,
+        r"error[DET005]: `unsafe` block without a `// SAFETY:` comment
+  --> runtime/view.rs:9:5
+  = help: state the invariant that makes the block sound on the line(s) directly above (`clippy::undocumented_unsafe_blocks` is `deny` in rust/Cargo.toml)
+
+",
+    );
+}
+
+#[test]
+fn wire001_unpaired_wire_bytes() {
+    check(
+        "compress/sketch.rs",
+        include_str!("fixtures/wire001_wire_bytes_unpaired.rs"),
+        0,
+        r"error[WIRE001]: `Sketch::wire_bytes` lacks a paired `serialize`/`deserialize` on the same type
+  --> compress/sketch.rs:8:12
+  = help: `wire_bytes` must price exactly the bytes `serialize` emits; implement both plus `deserialize` on the same type and keep the round-trip property tests green
+
+",
+    );
+}
+
+#[test]
+fn wire001_only_applies_under_compress() {
+    let result = lint_source(
+        "coordinator/sketch.rs",
+        include_str!("fixtures/wire001_wire_bytes_unpaired.rs"),
+    );
+    assert!(result.diagnostics.is_empty(), "{:?}", result.diagnostics);
+}
+
+#[test]
+fn clean_fixture_is_clean() {
+    // Ordered containers, named stream tags, and `#[cfg(test)]` regions
+    // (where stopwatches and hash maps are legal) produce nothing.
+    check("coordinator/clean.rs", include_str!("fixtures/clean.rs"), 0, "");
+}
+
+#[test]
+fn reasoned_pragmas_suppress_both_forms() {
+    check("simnet/probe.rs", include_str!("fixtures/pragma_reasoned.rs"), 2, "");
+}
+
+#[test]
+fn pragma_hygiene_failures_are_det000() {
+    check(
+        "simnet/sloppy.rs",
+        include_str!("fixtures/pragma_unreasoned.rs"),
+        0,
+        r"error[DET001]: wall-clock read (`Instant::now`) outside an allowlisted timing site
+  --> simnet/sloppy.rs:7:14
+  = help: sim-path code takes time from `simnet::SimClock`; real stopwatches are confined to `bench/`, `coordinator/metrics.rs`, and the wall_ms/eval_ms probes in `coordinator/experiment.rs`
+
+error[DET000]: detlint pragma without a reason: append ` -- <why this site is exempt>`
+  --> simnet/sloppy.rs:7:30
+  = help: pragma syntax is `// detlint: allow(<RULE>) -- <reason>`; the reason is mandatory and the pragma must suppress at least one finding
+
+error[DET000]: unknown rule `DET999` in detlint pragma (known: DET001–DET005, WIRE001)
+  --> simnet/sloppy.rs:8:5
+  = help: pragma syntax is `// detlint: allow(<RULE>) -- <reason>`; the reason is mandatory and the pragma must suppress at least one finding
+
+error[DET001]: wall-clock read (`Instant::now`) outside an allowlisted timing site
+  --> simnet/sloppy.rs:9:14
+  = help: sim-path code takes time from `simnet::SimClock`; real stopwatches are confined to `bench/`, `coordinator/metrics.rs`, and the wall_ms/eval_ms probes in `coordinator/experiment.rs`
+
+error[DET000]: detlint pragma suppresses nothing (stale allow?)
+  --> simnet/sloppy.rs:13:1
+  = help: pragma syntax is `// detlint: allow(<RULE>) -- <reason>`; the reason is mandatory and the pragma must suppress at least one finding
+
+",
+    );
+}
+
+#[test]
+fn every_rule_has_registry_metadata() {
+    for code in ["DET000", "DET001", "DET002", "DET003", "DET004", "DET005", "WIRE001"] {
+        let rule = detlint::rule(code).unwrap_or_else(|| panic!("missing rule {code}"));
+        assert!(!rule.summary.is_empty());
+        assert!(!rule.help.is_empty());
+        assert!(!rule.explain.is_empty());
+    }
+}
