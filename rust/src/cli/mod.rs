@@ -6,6 +6,8 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Result};
 
+pub mod scenarios;
+
 #[derive(Clone, Debug, Default)]
 pub struct Args {
     pub subcommand: String,

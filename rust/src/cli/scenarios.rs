@@ -1,0 +1,436 @@
+//! Adversarial-reality scenario pack: the `bench` and `report`
+//! subcommands.
+//!
+//! Each `bench` scenario is a small, fully deterministic harness over the
+//! protocol layer — no training, no wall clock, no thread pool — so its
+//! stdout is byte-stable across machines and is pinned by the snapshot
+//! tests in `tests/cli_snapshot_test.rs`:
+//!
+//! * `bench byzantine` — fires one of every malformed upload envelope at
+//!   a live [`FedServer`] and tabulates the typed rejections
+//!   ([`crate::coordinator::UploadError`]); the session then completes on the honest
+//!   envelopes alone, proving rejections leave no residue.
+//! * `bench faults` — replays *one* fault stream (same seed, same
+//!   dropout draws) through all three aggregation policies: deadline and
+//!   async absorb the losses, the synchronous barrier fails with its
+//!   diagnostic.
+//! * `bench tiers` — prints the correlated device-class fate table a
+//!   `[faults]` config draws (tier → bandwidth × compute × reliability).
+//! * `bench new` — emits a ready-to-run `[faults]` TOML preset
+//!   (self-validated through [`ExperimentConfig::from_toml_str`]).
+//!
+//! `report` summarizes a metrics JSONL file written by `run --metrics`,
+//! rendering the ledger's NaN no-data sentinels (serialized as JSON
+//! `null`) as `-` instead of a misleading zero.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::cli::Args;
+use crate::compress::{DenseDownlink, Payload};
+use crate::config::ExperimentConfig;
+use crate::coordinator::{
+    AggregationPolicy, BufferedAsync, ClientMsg, Deadline, Directive, FedServer,
+    FullParticipation, Server, ServerMsg, Synchronous, Upload,
+};
+use crate::simnet::{FaultLayer, FaultsConfig, NetworkModel};
+use crate::util::json::{parse as parse_json, Value};
+use crate::util::rng::{stream, Rng};
+
+/// Every scenario RNG descends from here.
+fn scenario_rng(seed: u64) -> Rng {
+    // detlint: allow(DET003) -- CLI seed plumbing: scenario harnesses
+    // rebuild their root from an explicit seed, exactly like `run`.
+    Rng::new(seed)
+}
+
+pub fn cmd_bench(args: &Args) -> Result<()> {
+    let which = args.positionals.first().map(|s| s.as_str()).unwrap_or("");
+    let out = match which {
+        "byzantine" => bench_byzantine()?,
+        "faults" => bench_faults()?,
+        "tiers" => bench_tiers(args)?,
+        "new" => bench_new(args)?,
+        other => bail!("unknown bench scenario '{other}' (try byzantine|faults|tiers|new)"),
+    };
+    print!("{out}");
+    Ok(())
+}
+
+fn sign_payload() -> Payload {
+    Payload::Sign { n: 8, bits: vec![0u8], scale: 1.0 }
+}
+
+fn envelope(
+    client: usize,
+    round: usize,
+    sent_at: f64,
+    recon: Vec<f32>,
+    weight: f32,
+    payload: Payload,
+) -> ClientMsg {
+    ClientMsg::Upload(Upload {
+        client,
+        round,
+        sent_at,
+        payload,
+        recon,
+        weight,
+        efficiency: 1.0,
+        ratio: 32.0,
+    })
+}
+
+fn bench_byzantine() -> Result<String> {
+    // 3 clients on identical custom links (1 Mbps up / 10 Mbps down /
+    // 25 ms), client 2 idle (zero samples): its envelope has no
+    // broadcast to answer. P = 4 model, synchronous barrier.
+    let links =
+        NetworkModel::custom(1.0, 10.0, 25.0).client_links(3, 0.0, &mut scenario_rng(1));
+    let mut fed = FedServer::new(
+        Server::new(vec![0.0f32; 4]),
+        Box::new(FullParticipation),
+        Box::new(Synchronous),
+        links,
+        vec![true, true, false],
+        4,
+    );
+    let mut dl = DenseDownlink::new();
+    let Directive::Dispatch(bcasts) = fed.next_directive(&mut dl)? else {
+        bail!("expected the opening dispatch");
+    };
+    let t0 = bcasts[0].recv_at;
+    let good = || vec![0.1f32; 4];
+
+    let mut out = String::new();
+    out.push_str("fed3sfc bench byzantine — upload-envelope validation at the server boundary\n");
+    out.push_str("fleet 3 (client 2 idle), model P=4, links 1/10 Mbps 25 ms, policy sync\n\n");
+    out.push_str(&format!("{:<22}  {:<8}  {}\n", "probe", "verdict", "server says"));
+    out.push_str(&format!("{:-<22}  {:-<8}  {:-<11}\n", "", "", ""));
+    let mut rows = String::new();
+    let mut probe = |fed: &mut FedServer, name: &str, msg: ClientMsg| {
+        let cell = match fed.submit_upload(msg) {
+            Ok(ServerMsg::Ack(a)) => ("accepted", format!("ack, lands at t={:.6}s", a.recv_at)),
+            Ok(other) => ("accepted", format!("{other:?}")),
+            Err(e) => ("rejected", format!("{e}")),
+        };
+        rows.push_str(&format!("{:<22}  {:<8}  {}\n", name, cell.0, cell.1));
+    };
+
+    probe(&mut fed, "future round", envelope(0, 7, t0, good(), 1.0, sign_payload()));
+    probe(&mut fed, "short recon", envelope(0, 0, t0, vec![0.1; 3], 1.0, sign_payload()));
+    probe(
+        &mut fed,
+        "NaN recon",
+        envelope(0, 0, t0, vec![0.1, 0.1, f32::NAN, 0.1], 1.0, sign_payload()),
+    );
+    probe(&mut fed, "infinite weight", envelope(0, 0, t0, good(), f32::INFINITY, sign_payload()));
+    probe(&mut fed, "negative weight", envelope(0, 0, t0, good(), -2.0, sign_payload()));
+    probe(
+        &mut fed,
+        "lying sign header",
+        envelope(0, 0, t0, good(), 1.0, Payload::Sign { n: 8, bits: vec![], scale: 1.0 }),
+    );
+    probe(
+        &mut fed,
+        "non-finite scale",
+        envelope(0, 0, t0, good(), 1.0, Payload::Sign { n: 8, bits: vec![0u8], scale: f32::NAN }),
+    );
+    probe(&mut fed, "time travel", envelope(0, 0, -1.0, good(), 1.0, sign_payload()));
+    probe(&mut fed, "unknown client", envelope(9, 0, t0, good(), 1.0, sign_payload()));
+    probe(&mut fed, "idle client", envelope(2, 0, t0, good(), 1.0, sign_payload()));
+    probe(&mut fed, "honest envelope", envelope(0, 0, t0, good(), 1.0, sign_payload()));
+    probe(&mut fed, "duplicate", envelope(0, 0, t0, good(), 1.0, sign_payload()));
+    out.push_str(&rows);
+
+    // The rejections left no residue: the barrier completes on the two
+    // honest envelopes alone.
+    let t1 = bcasts[1].recv_at;
+    fed.submit_upload(envelope(1, 0, t1, good(), 1.0, sign_payload()))?;
+    let Directive::Step(s) = fed.next_directive(&mut dl)? else {
+        bail!("expected the barrier step");
+    };
+    out.push_str(&format!(
+        "\nbarrier step: round {}, clients {:?}, t={:.6}s, w[0]={:.4}\n",
+        s.round, s.clients, s.sim_time_s, fed.server.w[0]
+    ));
+    Ok(out)
+}
+
+/// One row of the `bench faults` table.
+struct SessionRow {
+    kind: &'static str,
+    steps: usize,
+    aggregated: usize,
+    lost: u64,
+    recovered: u64,
+    round: usize,
+    sim_time_s: f64,
+}
+
+/// Drive one fabricated-upload session under the shared fault stream
+/// until `target_steps` aggregations complete.
+fn drive_session(policy: Box<dyn AggregationPolicy>, target_steps: usize) -> Result<SessionRow> {
+    let n = 4;
+    let kind = policy.name();
+    let links =
+        NetworkModel::custom(1.0, 10.0, 25.0).client_links(n, 0.0, &mut scenario_rng(7));
+    let fcfg = FaultsConfig {
+        enabled: true,
+        dropout_p: 0.25,
+        recover_s: 2.0,
+        ..FaultsConfig::default()
+    };
+    let faults = FaultLayer::new(&fcfg, n, scenario_rng(7).split(stream::FAULTS));
+    let mut fed = FedServer::with_faults(
+        Server::new(vec![0.0f32]),
+        Box::new(FullParticipation),
+        policy,
+        links,
+        vec![true; n],
+        1,
+        faults,
+    );
+    let mut dl = DenseDownlink::new();
+    let (mut steps, mut aggregated, mut round) = (0usize, 0usize, 0usize);
+    let mut sim_time_s = 0.0;
+    let mut pumps = 0usize;
+    while steps < target_steps {
+        pumps += 1;
+        if pumps > 10_000 {
+            bail!("scenario runaway: {kind} did not reach {target_steps} steps");
+        }
+        match fed.next_directive(&mut dl)? {
+            Directive::Dispatch(bcasts) => {
+                for bc in &bcasts {
+                    // Dropped replies are the point of the scenario;
+                    // everything else must ack.
+                    fed.submit_upload(envelope(
+                        bc.client,
+                        bc.round,
+                        bc.recv_at,
+                        vec![0.1],
+                        1.0,
+                        sign_payload(),
+                    ))?;
+                }
+            }
+            Directive::Step(s) => {
+                steps += 1;
+                aggregated += s.clients.len();
+                round = s.round;
+                sim_time_s = s.sim_time_s;
+            }
+        }
+    }
+    Ok(SessionRow {
+        kind,
+        steps,
+        aggregated,
+        lost: fed.lost_uploads(),
+        recovered: fed.recovered_clients(),
+        round,
+        sim_time_s,
+    })
+}
+
+fn bench_faults() -> Result<String> {
+    let mut out = String::new();
+    out.push_str("fed3sfc bench faults — one fault stream, three aggregation policies\n");
+    out.push_str(
+        "fleet 4, links 1/10 Mbps 25 ms, dropout_p 0.25, recover_s 2.0, seed 7, 6 steps\n\n",
+    );
+    out.push_str(&format!(
+        "{:<9}  {:>5}  {:>10}  {:>4}  {:>9}  {:>5}  {:>9}\n",
+        "session", "steps", "aggregated", "lost", "recovered", "round", "sim_s"
+    ));
+    for policy in [
+        Box::new(Deadline::new(0.5, 0.5)) as Box<dyn AggregationPolicy>,
+        Box::new(BufferedAsync::new(2, 0.5)),
+    ] {
+        let r = drive_session(policy, 6)?;
+        out.push_str(&format!(
+            "{:<9}  {:>5}  {:>10}  {:>4}  {:>9}  {:>5}  {:>9.3}\n",
+            r.kind, r.steps, r.aggregated, r.lost, r.recovered, r.round, r.sim_time_s
+        ));
+    }
+    // The same stream under a barrier: the first doomed upload is a
+    // diagnostic error, not a hang.
+    match drive_session(Box::new(Synchronous), 6) {
+        Ok(_) => bail!("sync session unexpectedly survived certain dropouts"),
+        Err(e) => out.push_str(&format!("\nsync: failed as designed — {e}\n")),
+    }
+    Ok(out)
+}
+
+fn bench_tiers(args: &Args) -> Result<String> {
+    let n = args.get_usize("clients", 8)?;
+    let seed = args.get_u64("seed", 11)?;
+    let fcfg = FaultsConfig {
+        enabled: true,
+        dropout_p: args.get_f64("dropout-p", 0.1)?,
+        tiers: args.get_usize("tiers", 4)?,
+        tier_spread: args.get_f64("tier-spread", 0.8)?,
+        tier_compute_s: args.get_f64("tier-compute-s", 0.1)?,
+        ..FaultsConfig::default()
+    };
+    let layer = FaultLayer::new(&fcfg, n, scenario_rng(seed).split(stream::FAULTS));
+    let mut links = NetworkModel::edge().client_links(n, 0.0, &mut scenario_rng(seed));
+    layer.scale_links(&mut links);
+    let mut out = String::new();
+    out.push_str("fed3sfc bench tiers — correlated device-class fates\n");
+    out.push_str(&format!(
+        "fleet {n}, {} tiers, spread {}, compute_s {}, dropout_p {}, seed {seed}, edge links\n\n",
+        fcfg.tiers, fcfg.tier_spread, fcfg.tier_compute_s, fcfg.dropout_p
+    ));
+    out.push_str(&format!(
+        "{:>6}  {:>4}  {:>7}  {:>9}  {:>8}  {:>6}  {:>7}  {:>9}\n",
+        "client", "tier", "bw_mult", "compute_s", "rel_mult", "loss_p", "up_mbps", "down_mbps"
+    ));
+    let mut per_tier = vec![0usize; fcfg.tiers];
+    for (c, (fate, link)) in layer.fates().iter().zip(&links).enumerate() {
+        per_tier[fate.tier] += 1;
+        out.push_str(&format!(
+            "{:>6}  {:>4}  {:>7.3}  {:>9.3}  {:>8.3}  {:>6.3}  {:>7.2}  {:>9.2}\n",
+            c,
+            fate.tier,
+            fate.bw_mult,
+            fate.compute_s,
+            fate.rel_mult,
+            layer.loss_probability(c, 0.0),
+            link.up_bps / 1e6,
+            link.down_bps / 1e6,
+        ));
+    }
+    let counts: Vec<String> =
+        per_tier.iter().enumerate().map(|(t, k)| format!("tier {t}: {k}")).collect();
+    out.push_str(&format!("\n{}\n", counts.join(", ")));
+    Ok(out)
+}
+
+/// The preset `bench new` emits — kept in sync with the `[faults]`
+/// config table by the self-validation below and the snapshot test.
+const FAULTS_PRESET: &str = "\
+# fed3sfc adversarial-reality preset: a deadline session that tolerates
+# mid-round dropouts, crash windows, a diurnal outage wave, and three
+# correlated device-class tiers. Run with:
+#   fed3sfc run --config faults.toml
+clients = 8
+rounds = 10
+
+[session]
+kind = \"deadline\"
+deadline_s = 0.5
+staleness_decay = 0.5
+
+[network]
+kind = \"edge\"
+
+[faults]
+enabled = true
+dropout_p = 0.15
+recover_s = 2.0
+diurnal_amp = 0.3
+diurnal_period_s = 600.0
+tiers = 3
+tier_spread = 0.6
+tier_compute_s = 0.05
+";
+
+fn bench_new(args: &Args) -> Result<String> {
+    let cfg = ExperimentConfig::from_toml_str(FAULTS_PRESET)
+        .context("generated preset failed self-validation")?;
+    debug_assert!(cfg.faults_config().enabled);
+    if let Some(path) = args.get("out") {
+        if path != "-" {
+            std::fs::write(path, FAULTS_PRESET)
+                .map_err(|_| anyhow!("cannot write preset to '{path}'"))?;
+            return Ok(format!("wrote {path} ({} bytes)\n", FAULTS_PRESET.len()));
+        }
+    }
+    Ok(FAULTS_PRESET.to_string())
+}
+
+/// Numeric field of one JSONL record; `None` for JSON `null` (the NaN
+/// no-data sentinel) and for absent keys.
+fn num(rec: &Value, key: &str) -> Option<f64> {
+    match rec.get(key) {
+        Some(Value::Num(x)) => Some(*x),
+        _ => None,
+    }
+}
+
+/// `{v:.prec$}`, or `-` when the value is a no-data sentinel.
+fn opt_cell(v: Option<f64>, prec: usize) -> String {
+    match v {
+        Some(x) if x.is_finite() => format!("{x:.prec$}"),
+        _ => "-".to_string(),
+    }
+}
+
+pub fn cmd_report(args: &Args) -> Result<()> {
+    let path = args
+        .get("metrics")
+        .ok_or_else(|| anyhow!("report needs --metrics PATH (a JSONL file from `run`)"))?;
+    let text = std::fs::read_to_string(path)
+        .map_err(|_| anyhow!("cannot read metrics file '{path}'"))?;
+    let mut out = String::new();
+    out.push_str(&format!("fed3sfc report — {path}\n\n"));
+    out.push_str(&format!(
+        "{:>5}  {:>7}  {:>7}  {:>4}  {:>11}  {:>11}  {:>8}  {:>6}  {:>8}\n",
+        "round", "acc", "loss", "sel", "up_cum", "down_cum", "ratio", "stale", "sim_s"
+    ));
+    let mut rounds = 0usize;
+    let mut best_acc: Option<f64> = None;
+    let mut last_up = 0.0f64;
+    let mut last_down = 0.0f64;
+    let mut ratio_sum = 0.0f64;
+    let mut ratio_n = 0usize;
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let rec = parse_json(line).with_context(|| format!("{path}:{} bad JSONL", i + 1))?;
+        let sel = num(&rec, "n_selected").unwrap_or(0.0);
+        let acc = num(&rec, "test_acc");
+        if let Some(a) = acc {
+            best_acc = Some(best_acc.map_or(a, |b: f64| b.max(a)));
+        }
+        if let Some(r) = num(&rec, "ratio") {
+            if sel > 0.0 {
+                ratio_sum += r;
+                ratio_n += 1;
+            }
+        }
+        last_up = num(&rec, "up_bytes_cum").unwrap_or(last_up);
+        last_down = num(&rec, "down_bytes_cum").unwrap_or(last_down);
+        rounds += 1;
+        out.push_str(&format!(
+            "{:>5}  {:>7}  {:>7}  {:>4}  {:>11}  {:>11}  {:>8}  {:>6}  {:>8}\n",
+            opt_cell(num(&rec, "round"), 0),
+            opt_cell(acc, 4),
+            opt_cell(num(&rec, "test_loss"), 4),
+            opt_cell(num(&rec, "n_selected"), 0),
+            opt_cell(num(&rec, "up_bytes_cum"), 0),
+            opt_cell(num(&rec, "down_bytes_cum"), 0),
+            opt_cell(num(&rec, "ratio"), 1),
+            opt_cell(num(&rec, "stale_mean"), 2),
+            opt_cell(num(&rec, "sim_time_s"), 3),
+        ));
+    }
+    if rounds == 0 {
+        out.push_str("(no rounds recorded)\n");
+    }
+    let mean_ratio = if ratio_n > 0 { Some(ratio_sum / ratio_n as f64) } else { None };
+    out.push_str(&format!(
+        "\nrounds {rounds}; best acc {}; total up {:.0} B, down {:.0} B; mean ratio {}\n",
+        opt_cell(best_acc, 4),
+        last_up,
+        last_down,
+        match mean_ratio {
+            Some(r) => format!("{r:.1}x"),
+            None => "-".to_string(),
+        }
+    ));
+    print!("{out}");
+    Ok(())
+}

@@ -221,6 +221,67 @@ impl Payload {
         ensure!(off == bytes.len(), "trailing bytes after {kind} payload");
         Ok(payload)
     }
+
+    /// Structural self-consistency check for an *untrusted* in-memory
+    /// payload (the uplink boundary's mirror of the header checks
+    /// [`Payload::deserialize`] applies to untrusted bytes): buffer
+    /// lengths must match the declared counts and scalar scales must be
+    /// finite, otherwise [`Payload::wire_bytes`] — and therefore the
+    /// traffic ledger — would be priced off a lie. Returns a short
+    /// description of the first violation, or `None` for a well-formed
+    /// payload. Value finiteness of the update itself is checked on
+    /// `Upload::recon` (what is actually aggregated), not here.
+    pub fn shape_error(&self) -> Option<&'static str> {
+        match self {
+            Payload::Dense { .. } => None,
+            Payload::TopK { n, idx, val } => {
+                if idx.len() != val.len() {
+                    Some("top-k index/value length mismatch")
+                } else if idx.len() > *n || idx.iter().any(|&i| i as usize >= *n) {
+                    Some("top-k index out of range")
+                } else {
+                    None
+                }
+            }
+            Payload::Sign { n, bits, scale } => {
+                if bits.len() != n.div_ceil(8) {
+                    Some("sign bitset length disagrees with n")
+                } else if !scale.is_finite() {
+                    Some("sign scale is not finite")
+                } else {
+                    None
+                }
+            }
+            Payload::Ternary { n, idx, neg, mu } => {
+                if neg.len() != idx.len().div_ceil(8) {
+                    Some("ternary sign bitset length disagrees with k")
+                } else if idx.len() > *n || idx.iter().any(|&i| i as usize >= *n) {
+                    Some("ternary index out of range")
+                } else if !mu.is_finite() {
+                    Some("ternary magnitude is not finite")
+                } else {
+                    None
+                }
+            }
+            Payload::Syn { m, dx, dy, s } => {
+                if *m == 0 || dx.len() % *m != 0 || dy.len() % *m != 0 {
+                    Some("synthetic batch shape disagrees with m")
+                } else if !s.is_finite() {
+                    Some("synthetic scale is not finite")
+                } else {
+                    None
+                }
+            }
+            Payload::SynMulti { k, m, dxs, dys } => {
+                let km = k.checked_mul(*m).unwrap_or(0);
+                if km == 0 || dxs.len() % km != 0 || dys.len() % km != 0 {
+                    Some("multi-batch shape disagrees with k x m")
+                } else {
+                    None
+                }
+            }
+        }
+    }
 }
 
 /// Pack sign bits (true = negative) into a byte vector, LSB-first.
@@ -313,6 +374,43 @@ mod tests {
         // k > n_params is implausible framing.
         let fat = Payload::TopK { n: 20, idx: vec![0; 21], val: vec![0.0; 21] };
         assert!(Payload::deserialize("topk", &fat.serialize(), 20, 4, 3).is_err());
+    }
+
+    #[test]
+    fn shape_error_flags_inconsistent_payloads() {
+        // Honest shapes pass…
+        assert!(Payload::Dense { g: vec![0.0; 4] }.shape_error().is_none());
+        assert!(Payload::Sign { n: 20, bits: vec![0; 3], scale: 1.0 }.shape_error().is_none());
+        assert!(Payload::TopK { n: 20, idx: vec![1, 7], val: vec![0.5, -2.0] }
+            .shape_error()
+            .is_none());
+        assert!(Payload::Ternary { n: 20, idx: vec![2, 9], neg: vec![0b01], mu: 1.5 }
+            .shape_error()
+            .is_none());
+        assert!(Payload::Syn { m: 2, dx: vec![0.1; 8], dy: vec![0.2; 6], s: 1.0 }
+            .shape_error()
+            .is_none());
+        // …lying headers and non-finite scales do not. A short bitset
+        // would under-price `wire_bytes` — the ledger's honesty is the
+        // point of the check.
+        assert!(Payload::Sign { n: 20, bits: vec![0; 2], scale: 1.0 }.shape_error().is_some());
+        assert!(Payload::Sign { n: 20, bits: vec![0; 3], scale: f32::NAN }
+            .shape_error()
+            .is_some());
+        assert!(Payload::TopK { n: 20, idx: vec![1], val: vec![0.5, 0.5] }
+            .shape_error()
+            .is_some());
+        assert!(Payload::TopK { n: 20, idx: vec![25], val: vec![0.5] }.shape_error().is_some());
+        assert!(Payload::Ternary { n: 20, idx: vec![2, 9], neg: vec![], mu: 1.5 }
+            .shape_error()
+            .is_some());
+        assert!(Payload::Syn { m: 0, dx: vec![], dy: vec![], s: 1.0 }.shape_error().is_some());
+        assert!(Payload::Syn { m: 3, dx: vec![0.1; 8], dy: vec![0.2; 6], s: 1.0 }
+            .shape_error()
+            .is_some());
+        assert!(Payload::SynMulti { k: 0, m: 1, dxs: vec![], dys: vec![] }
+            .shape_error()
+            .is_some());
     }
 
     #[test]

@@ -421,6 +421,25 @@ pub struct ExperimentConfig {
     /// 3SFC's byte budget and STC uses its natural 1/32 (same protocol as
     /// the uplink zoo).
     pub downlink_rate: f64,
+    /// Adversarial fault layer master switch (`[faults]` table /
+    /// `--faults`). Off by default; off means *zero* RNG draws and
+    /// bit-identical trajectories to pre-fault builds.
+    pub faults: bool,
+    /// Base per-dispatch upload-loss probability in [0, 1].
+    pub fault_dropout_p: f64,
+    /// Virtual seconds a client stays down after losing an upload.
+    pub fault_recover_s: f64,
+    /// Diurnal availability-wave amplitude in [0, 1]; 0 disables it.
+    pub fault_diurnal_amp: f64,
+    /// Diurnal wave period in virtual seconds.
+    pub fault_diurnal_period_s: f64,
+    /// Device-class tiers (1 = homogeneous; >1 draws one correlated
+    /// compute × bandwidth × reliability tier per client).
+    pub fault_tiers: usize,
+    /// How far the worst tier sits from the best, in [0, 1].
+    pub fault_tier_spread: f64,
+    /// Extra upload delay (seconds) of the worst tier at spread 1.
+    pub fault_tier_compute_s: f64,
 }
 
 impl Default for ExperimentConfig {
@@ -473,6 +492,14 @@ impl Default for ExperimentConfig {
             downlink: DownlinkKind::Identity,
             downlink_gap: 4,
             downlink_rate: 0.0,
+            faults: false,
+            fault_dropout_p: 0.1,
+            fault_recover_s: 5.0,
+            fault_diurnal_amp: 0.0,
+            fault_diurnal_period_s: 86_400.0,
+            fault_tiers: 1,
+            fault_tier_spread: 0.5,
+            fault_tier_compute_s: 0.05,
         }
     }
 }
@@ -529,6 +556,20 @@ impl ExperimentConfig {
         std::thread::available_parallelism()
             .map(|n| n.get())
             .unwrap_or(1)
+    }
+
+    /// The `[faults]` table as the simnet layer consumes it.
+    pub fn faults_config(&self) -> crate::simnet::FaultsConfig {
+        crate::simnet::FaultsConfig {
+            enabled: self.faults,
+            dropout_p: self.fault_dropout_p,
+            recover_s: self.fault_recover_s,
+            diurnal_amp: self.fault_diurnal_amp,
+            diurnal_period_s: self.fault_diurnal_period_s,
+            tiers: self.fault_tiers,
+            tier_spread: self.fault_tier_spread,
+            tier_compute_s: self.fault_tier_compute_s,
+        }
     }
 
     /// Synthetic sample count m for 3SFC at this budget multiplier.
@@ -594,6 +635,33 @@ impl ExperimentConfig {
         }
         if !(0.0..=1.0).contains(&self.downlink_rate) {
             bail!("downlink_rate must be in [0, 1], got {}", self.downlink_rate);
+        }
+        if !(0.0..=1.0).contains(&self.fault_dropout_p) {
+            bail!("faults dropout_p must be in [0, 1], got {}", self.fault_dropout_p);
+        }
+        if !(self.fault_recover_s >= 0.0) {
+            bail!("faults recover_s must be non-negative, got {}", self.fault_recover_s);
+        }
+        if !(0.0..=1.0).contains(&self.fault_diurnal_amp) {
+            bail!("faults diurnal_amp must be in [0, 1], got {}", self.fault_diurnal_amp);
+        }
+        if !(self.fault_diurnal_period_s > 0.0) {
+            bail!(
+                "faults diurnal_period_s must be positive, got {}",
+                self.fault_diurnal_period_s
+            );
+        }
+        if self.fault_tiers == 0 {
+            bail!("faults tiers must be >= 1");
+        }
+        if !(0.0..=1.0).contains(&self.fault_tier_spread) {
+            bail!("faults tier_spread must be in [0, 1], got {}", self.fault_tier_spread);
+        }
+        if !(self.fault_tier_compute_s >= 0.0) {
+            bail!(
+                "faults tier_compute_s must be non-negative, got {}",
+                self.fault_tier_compute_s
+            );
         }
         Ok(())
     }
@@ -662,6 +730,14 @@ impl ExperimentConfig {
                     self.downlink_gap = v.as_i64()? as usize
                 }
                 "downlink_rate" | "downlink.rate" => self.downlink_rate = v.as_f64()?,
+                "faults" | "faults.enabled" => self.faults = v.as_bool()?,
+                "dropout_p" | "faults.dropout_p" => self.fault_dropout_p = v.as_f64()?,
+                "faults.recover_s" => self.fault_recover_s = v.as_f64()?,
+                "faults.diurnal_amp" => self.fault_diurnal_amp = v.as_f64()?,
+                "faults.diurnal_period_s" => self.fault_diurnal_period_s = v.as_f64()?,
+                "faults.tiers" => self.fault_tiers = v.as_i64()? as usize,
+                "faults.tier_spread" => self.fault_tier_spread = v.as_f64()?,
+                "faults.tier_compute_s" => self.fault_tier_compute_s = v.as_f64()?,
                 other => bail!("unknown config key '{other}'"),
             }
         }
@@ -797,6 +873,69 @@ mod tests {
         for kind in [BackendKind::Auto, BackendKind::Pjrt, BackendKind::Native] {
             assert_eq!(BackendKind::parse(kind.name()).unwrap(), kind);
         }
+    }
+
+    #[test]
+    fn faults_table_parses_and_validates() {
+        let cfg = ExperimentConfig::from_toml_str(
+            r#"
+            rounds = 5
+
+            [faults]
+            enabled = true
+            dropout_p = 0.25
+            recover_s = 2.0
+            diurnal_amp = 0.4
+            diurnal_period_s = 120.0
+            tiers = 3
+            tier_spread = 0.8
+            tier_compute_s = 0.1
+            "#,
+        )
+        .unwrap();
+        assert!(cfg.faults);
+        let fc = cfg.faults_config();
+        assert!(fc.enabled);
+        assert_eq!(fc.dropout_p, 0.25);
+        assert_eq!(fc.recover_s, 2.0);
+        assert_eq!(fc.diurnal_amp, 0.4);
+        assert_eq!(fc.diurnal_period_s, 120.0);
+        assert_eq!(fc.tiers, 3);
+        assert_eq!(fc.tier_spread, 0.8);
+        assert_eq!(fc.tier_compute_s, 0.1);
+        // Bare keys work for CLI-style flat configs, and the default is
+        // firmly off.
+        let cfg = ExperimentConfig::from_toml_str("faults = true\ndropout_p = 0.5\n").unwrap();
+        assert!(cfg.faults);
+        assert_eq!(cfg.fault_dropout_p, 0.5);
+        assert!(!ExperimentConfig::default().faults_config().enabled);
+    }
+
+    #[test]
+    fn faults_knobs_are_range_checked() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.fault_dropout_p = 1.5;
+        assert!(cfg.validate().unwrap_err().to_string().contains("dropout_p"));
+        cfg.fault_dropout_p = 0.1;
+        cfg.fault_recover_s = -1.0;
+        assert!(cfg.validate().unwrap_err().to_string().contains("recover_s"));
+        cfg.fault_recover_s = 5.0;
+        cfg.fault_diurnal_amp = 2.0;
+        assert!(cfg.validate().unwrap_err().to_string().contains("diurnal_amp"));
+        cfg.fault_diurnal_amp = 0.0;
+        cfg.fault_diurnal_period_s = 0.0;
+        assert!(cfg.validate().unwrap_err().to_string().contains("diurnal_period_s"));
+        cfg.fault_diurnal_period_s = 60.0;
+        cfg.fault_tiers = 0;
+        assert!(cfg.validate().unwrap_err().to_string().contains("tiers"));
+        cfg.fault_tiers = 2;
+        cfg.fault_tier_spread = -0.1;
+        assert!(cfg.validate().unwrap_err().to_string().contains("tier_spread"));
+        cfg.fault_tier_spread = 0.5;
+        cfg.fault_tier_compute_s = -0.5;
+        assert!(cfg.validate().unwrap_err().to_string().contains("tier_compute_s"));
+        cfg.fault_tier_compute_s = 0.0;
+        cfg.validate().unwrap();
     }
 
     #[test]

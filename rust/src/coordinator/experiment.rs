@@ -45,6 +45,7 @@ use crate::coordinator::schedule::build_scheduler;
 use crate::coordinator::{ClientState, MetricsSink, Server, Traffic};
 use crate::data::{dirichlet_partition, Dataset};
 use crate::runtime::{Backend, FedOps, RuntimeStats};
+use crate::simnet::FaultLayer;
 use crate::util::rng::{stream, Rng};
 
 /// One aggregation step's observables ("round" in the synchronous
@@ -166,17 +167,24 @@ impl<'a> Experiment<'a> {
         // Per-client links on a dedicated stream: `[network] jitter`
         // spreads bandwidth without perturbing any other randomness.
         let mut link_rng = root.split(stream::LINK_JITTER);
-        let links = cfg
+        let mut links = cfg
             .network_model()
             .client_links(cfg.n_clients, cfg.net_jitter, &mut link_rng);
+        // The fault layer owns its dedicated stream; `[faults]` off means
+        // zero draws and identity link scaling — bit-identical to a
+        // server built without the layer.
+        let faults =
+            FaultLayer::new(&cfg.faults_config(), cfg.n_clients, root.split(stream::FAULTS));
+        faults.scale_links(&mut links);
         let active: Vec<bool> = clients.iter().map(|c| c.n_samples > 0).collect();
-        let fed = FedServer::new(
+        let fed = FedServer::with_faults(
             server,
             scheduler,
             build_policy(&cfg),
             links,
             active,
             model.params,
+            faults,
         );
         let compressor = compress::build(&cfg, model);
         // The downlink encoder runs on the main thread (sequentially, in
@@ -687,6 +695,43 @@ impl ExperimentBuilder {
     /// budget-matched default.
     pub fn downlink_rate(mut self, rate: f64) -> Self {
         self.cfg.downlink_rate = rate;
+        self
+    }
+
+    /// Adversarial fault layer master switch (`[faults] enabled`).
+    pub fn faults(mut self, on: bool) -> Self {
+        self.cfg.faults = on;
+        self
+    }
+
+    /// Base per-dispatch upload-loss probability (`[faults] dropout_p`).
+    pub fn dropout_p(mut self, p: f64) -> Self {
+        self.cfg.fault_dropout_p = p;
+        self
+    }
+
+    /// Crash-window length in virtual seconds (`[faults] recover_s`).
+    pub fn fault_recovery(mut self, s: f64) -> Self {
+        self.cfg.fault_recover_s = s;
+        self
+    }
+
+    /// Diurnal availability wave (`[faults] diurnal_amp` /
+    /// `diurnal_period_s`): loss probability swings by ±`amp` over each
+    /// `period_s` of virtual time.
+    pub fn diurnal(mut self, amp: f64, period_s: f64) -> Self {
+        self.cfg.fault_diurnal_amp = amp;
+        self.cfg.fault_diurnal_period_s = period_s;
+        self
+    }
+
+    /// Correlated device-class tiers (`[faults] tiers` / `tier_spread` /
+    /// `tier_compute_s`): one draw per client decides bandwidth, compute
+    /// delay and reliability together.
+    pub fn device_tiers(mut self, tiers: usize, spread: f64, compute_s: f64) -> Self {
+        self.cfg.fault_tiers = tiers;
+        self.cfg.fault_tier_spread = spread;
+        self.cfg.fault_tier_compute_s = compute_s;
         self
     }
 

@@ -30,10 +30,12 @@ use anyhow::{bail, ensure, Result};
 
 use crate::compress::DownlinkTx;
 use crate::coordinator::policy::{AggTrigger, AggregationPolicy, PolicyCtx};
-use crate::coordinator::protocol::{Ack, Broadcast, ClientMsg, ServerMsg, Upload};
+use crate::coordinator::protocol::{
+    Ack, Broadcast, ClientMsg, ServerMsg, Upload, UploadError,
+};
 use crate::coordinator::schedule::ClientScheduler;
 use crate::coordinator::{Server, Traffic};
-use crate::simnet::{ClientLink, SimClock, SimEvent};
+use crate::simnet::{ClientLink, FaultLayer, SimClock, SimEvent};
 
 /// What travels on the virtual clock.
 enum SessionEvent {
@@ -41,6 +43,8 @@ enum SessionEvent {
     Upload(Upload),
     /// The semi-sync aggregation timer for one broadcast cycle.
     Deadline { cycle: u64 },
+    /// A crashed client's recovery timer (fault layer).
+    Recover { client: usize },
 }
 
 /// What the driver must do next.
@@ -110,6 +114,20 @@ pub struct FedServer {
     /// `down_bytes_step`).
     down_at_last_step: u64,
     n_clients: usize,
+    /// Model parameter count — the only recon length `submit_upload`
+    /// accepts.
+    n_params: usize,
+    /// The adversarial-reality layer consulted at dispatch (loss draws,
+    /// crash windows) and submit (compute delay, loss resolution) time.
+    faults: FaultLayer,
+    /// Clients whose outstanding upload the fault layer declared lost at
+    /// dispatch time; resolved (dropped, never scheduled) at submit.
+    doomed: Vec<bool>,
+    /// Round of each client's outstanding broadcast (envelope validation).
+    outstanding_round: Vec<usize>,
+    /// Dispatch time of each client's outstanding broadcast — the
+    /// earliest legal `Upload::sent_at`.
+    outstanding_sent_at: Vec<f64>,
 }
 
 impl FedServer {
@@ -121,8 +139,33 @@ impl FedServer {
         active: Vec<bool>,
         n_params: usize,
     ) -> FedServer {
+        let n = links.len();
+        FedServer::with_faults(
+            server,
+            scheduler,
+            policy,
+            links,
+            active,
+            n_params,
+            FaultLayer::disabled(n),
+        )
+    }
+
+    /// Like [`FedServer::new`] with an explicit fault layer. A
+    /// [`FaultLayer::disabled`] layer is a bitwise no-op — identical
+    /// trajectories to a server built before faults existed.
+    pub fn with_faults(
+        server: Server,
+        scheduler: Box<dyn ClientScheduler>,
+        policy: Box<dyn AggregationPolicy>,
+        links: Vec<ClientLink>,
+        active: Vec<bool>,
+        n_params: usize,
+        faults: FaultLayer,
+    ) -> FedServer {
         assert_eq!(links.len(), active.len(), "one link and one data mask per client");
         assert_eq!(server.w.len(), n_params, "model size mismatch");
+        assert_eq!(faults.fates().len(), links.len(), "one fate per client");
         let n_clients = links.len();
         FedServer {
             server,
@@ -143,6 +186,11 @@ impl FedServer {
             last_step_at: 0.0,
             down_at_last_step: 0,
             n_clients,
+            n_params,
+            faults,
+            doomed: vec![false; n_clients],
+            outstanding_round: vec![0; n_clients],
+            outstanding_sent_at: vec![0.0; n_clients],
         }
     }
 
@@ -165,6 +213,28 @@ impl FedServer {
     /// Uploads arrived but not yet aggregated.
     pub fn pending(&self) -> usize {
         self.pending.len()
+    }
+
+    /// Uploads the fault layer declared lost so far.
+    pub fn lost_uploads(&self) -> u64 {
+        self.faults.lost()
+    }
+
+    /// Crash windows that have ended (clients back in rotation).
+    pub fn recovered_clients(&self) -> u64 {
+        self.faults.recovered()
+    }
+
+    /// The fault layer (drawn tiers, crash windows, counters).
+    pub fn faults(&self) -> &FaultLayer {
+        &self.faults
+    }
+
+    /// Scenario-scripting access to the fault layer (e.g. pin a victim's
+    /// reliability or end an outage mid-session). Levers only — the
+    /// layer's RNG stream position is not exposed.
+    pub fn faults_mut(&mut self) -> &mut FaultLayer {
+        &mut self.faults
     }
 
     /// Advance the session until the driver has something to do. The
@@ -190,15 +260,21 @@ impl FedServer {
                 None => {
                     // The queue drained mid-cycle. Outstanding dispatches
                     // mean the driver broke the submit-before-pump
-                    // contract; otherwise flush what arrived (barrier
-                    // trivially met / end-of-buffer), or report
-                    // starvation (an async cohort of zero clients can
-                    // never make progress).
+                    // contract — a fault-layer loss is *not* this case:
+                    // lost uploads are resolved (and `in_flight`
+                    // decremented) at submit time, so a nonzero count
+                    // here is always a driver bug. Otherwise flush what
+                    // arrived (barrier trivially met / end-of-buffer), or
+                    // report starvation (an async cohort of zero clients
+                    // can never make progress).
                     ensure!(
                         self.in_flight == 0,
-                        "event queue drained with {} dispatched upload(s) outstanding \
-                         (submit_upload before pumping next_directive)",
-                        self.in_flight
+                        "event queue drained with {} dispatched upload(s) outstanding — \
+                         the driver must submit_upload every broadcast (even ones the \
+                         fault layer will drop; {} lost upload(s) are already resolved) \
+                         before pumping next_directive",
+                        self.in_flight,
+                        self.faults.lost()
                     );
                     let ctx = self.ctx();
                     if self.policy.ready(AggTrigger::Drained, &ctx) {
@@ -216,22 +292,103 @@ impl FedServer {
         }
     }
 
-    /// Deliver a client's upload envelope: schedules its arrival on the
-    /// virtual clock (send time + one-way latency + uplink transfer) and
-    /// returns the server's [`Ack`]. Rejects envelopes from unknown
-    /// clients, clients with no broadcast outstanding, and duplicate
-    /// submissions for one broadcast — validation happens here, where
-    /// the envelope enters the server.
+    /// Deliver a client's upload envelope. The full envelope is
+    /// validated *here*, where it enters the server — every rejection is
+    /// a typed [`UploadError`] (recover it with
+    /// `err.downcast_ref::<UploadError>()`):
+    ///
+    /// * session-state checks: known client, broadcast outstanding, no
+    ///   duplicate submission;
+    /// * byzantine-envelope checks: claimed round must match the
+    ///   outstanding broadcast (a future round would underflow the
+    ///   staleness computation), `recon` must have exactly `n_params`
+    ///   finite values, the weight must be finite and non-negative, the
+    ///   payload internally consistent
+    ///   ([`crate::compress::Payload::shape_error`]), and `sent_at` must
+    ///   not predate the broadcast (the virtual clock rejects events in
+    ///   the past).
+    ///
+    /// A valid envelope schedules its arrival (send time + tier compute
+    /// delay + one-way latency + uplink transfer) and returns
+    /// [`ServerMsg::Ack`] — unless the fault layer doomed this client's
+    /// upload at dispatch time, in which case the envelope never lands:
+    /// loss-tolerant policies get [`ServerMsg::Dropped`] and the client
+    /// enters its crash window; a synchronous barrier gets the
+    /// [`UploadError::LossUnderBarrier`] diagnostic, because the cohort
+    /// could otherwise never complete.
     pub fn submit_upload(&mut self, msg: ClientMsg) -> Result<ServerMsg> {
         let ClientMsg::Upload(up) = msg;
         let c = up.client;
-        ensure!(c < self.n_clients, "upload from unknown client {c}");
-        ensure!(self.busy[c], "upload from client {c} with no broadcast outstanding");
-        ensure!(!self.uploading[c], "duplicate upload from client {c} for one broadcast");
-        self.uploading[c] = true;
+        if c >= self.n_clients {
+            return Err(UploadError::UnknownClient { client: c, n_clients: self.n_clients }.into());
+        }
+        if !self.busy[c] {
+            return Err(UploadError::NoBroadcast { client: c }.into());
+        }
+        if self.uploading[c] {
+            return Err(UploadError::Duplicate { client: c }.into());
+        }
+        if up.round != self.outstanding_round[c] {
+            return Err(UploadError::RoundMismatch {
+                client: c,
+                got: up.round,
+                expect: self.outstanding_round[c],
+            }
+            .into());
+        }
+        if up.recon.len() != self.n_params {
+            return Err(UploadError::WrongLength {
+                client: c,
+                got: up.recon.len(),
+                expect: self.n_params,
+            }
+            .into());
+        }
+        if let Some(index) = up.recon.iter().position(|v| !v.is_finite()) {
+            return Err(UploadError::NonFiniteRecon { client: c, index }.into());
+        }
+        if !(up.weight.is_finite() && up.weight >= 0.0) {
+            return Err(UploadError::BadWeight { client: c, weight: up.weight }.into());
+        }
+        if let Some(detail) = up.payload.shape_error() {
+            return Err(UploadError::MalformedPayload { client: c, detail }.into());
+        }
+        let dispatched_at = self.outstanding_sent_at[c];
+        if !(up.sent_at.is_finite() && up.sent_at >= dispatched_at) {
+            return Err(UploadError::BadSendTime {
+                client: c,
+                sent_at: up.sent_at,
+                dispatched_at,
+            }
+            .into());
+        }
         let link = self.links[c];
-        let recv_at =
-            up.sent_at + link.latency_s + link.up_time_s(up.payload.wire_bytes() as u64);
+        let recv_at = up.sent_at
+            + self.faults.compute_delay(c)
+            + link.latency_s
+            + link.up_time_s(up.payload.wire_bytes() as u64);
+        if self.doomed[c] {
+            // The dispatch-time Bernoulli said this upload dies on the
+            // wire: resolve the loss instead of scheduling the arrival.
+            // The client's in-flight slot frees NOW (the driver did its
+            // part) and its crash window runs from the would-be arrival.
+            self.doomed[c] = false;
+            self.busy[c] = false;
+            self.in_flight -= 1;
+            let back_at = recv_at + self.faults.recover_s();
+            self.faults.mark_down(c, back_at);
+            if !self.policy.tolerates_loss() {
+                return Err(UploadError::LossUnderBarrier {
+                    client: c,
+                    round: up.round,
+                    at: recv_at,
+                }
+                .into());
+            }
+            self.clock.push(back_at, c, SessionEvent::Recover { client: c });
+            return Ok(ServerMsg::Dropped { client: c, round: up.round });
+        }
+        self.uploading[c] = true;
         let ack = Ack { client: c, round: up.round, recv_at };
         self.clock.push(recv_at, c, SessionEvent::Upload(up));
         Ok(ServerMsg::Ack(ack))
@@ -252,10 +409,11 @@ impl FedServer {
     fn start_cycle(&mut self, dl: &mut dyn DownlinkTx) -> Result<()> {
         self.cycle_open = true;
         self.cycle_id += 1;
+        let now = self.clock.now();
         let selected = self.scheduler.select(self.server.round, self.n_clients);
         let cohort: Vec<usize> = selected
             .into_iter()
-            .filter(|&c| self.active[c] && !self.busy[c])
+            .filter(|&c| self.active[c] && !self.busy[c] && !self.faults.is_down(c, now))
             .collect();
         self.cohort = cohort.len();
         if let Some(d) = self.policy.deadline_s() {
@@ -284,6 +442,13 @@ impl FedServer {
             debug_assert!(!self.busy[c], "client {c} dispatched twice");
             self.busy[c] = true;
             self.in_flight += 1;
+            self.outstanding_round[c] = round;
+            self.outstanding_sent_at[c] = now;
+            // One loss draw per broadcast, in dispatch order — the doomed
+            // upload is resolved when the driver submits it.
+            if self.faults.draw_loss(c, now) {
+                self.doomed[c] = true;
+            }
             let (payload, w) = dl.encode(c, round, &self.server.w)?;
             let bytes = payload.wire_bytes() as u64;
             self.traffic.record_broadcast(bytes);
@@ -330,6 +495,16 @@ impl FedServer {
                     self.step();
                 }
             }
+            SessionEvent::Recover { client } => {
+                // Crash window over. Server-paced policies pick the
+                // client up at their next cycle (cohort filtering is by
+                // `is_down`, which this timer postdates); async sessions
+                // re-dispatch it now to restore their concurrency level.
+                self.faults.mark_up(client);
+                if self.policy.redispatch() && self.active[client] && !self.busy[client] {
+                    self.dispatch(vec![client], dl)?;
+                }
+            }
         }
         Ok(())
     }
@@ -357,8 +532,12 @@ impl FedServer {
         let mut ratio_sum = 0.0f64;
         let mut stale_sum = 0.0f64;
         for up in batch {
+            // Future rounds are rejected at `submit_upload` (the
+            // `RoundMismatch` boundary check); saturate anyway so a
+            // release build can never underflow into a 2^64-ish
+            // staleness even if that invariant regresses.
             debug_assert!(round_before >= up.round, "upload from the future");
-            let staleness = round_before - up.round;
+            let staleness = round_before.saturating_sub(up.round);
             stale_sum += staleness as f64;
             up_bytes_step += up.payload.wire_bytes() as u64;
             eff_sum += up.efficiency;
@@ -398,8 +577,8 @@ mod tests {
     use crate::compress::{DenseDownlink, Payload};
     use crate::coordinator::policy::{BufferedAsync, Deadline, Synchronous};
     use crate::coordinator::schedule::FullParticipation;
-    use crate::simnet::NetworkModel;
-    use crate::util::rng::Rng;
+    use crate::simnet::{FaultsConfig, NetworkModel};
+    use crate::util::rng::{stream, Rng};
 
     /// A tiny hand-driven session: n clients, 1-param model, uploads
     /// fabricated by the test (no real training).
@@ -612,5 +791,316 @@ mod tests {
         // Uploads are 9-byte Sign payloads (1 + 4 + 4).
         assert_eq!(fed.traffic.uplink_bytes, 3 * 9);
         assert_eq!(fed.traffic.total_bytes(), 3 * 9 + 3 * 8);
+    }
+
+    /// Build a server whose fault layer is live (dedicated stream split
+    /// from a fixed seed, exactly as `Experiment::new` wires it).
+    fn faulty_fed(
+        n: usize,
+        policy: Box<dyn AggregationPolicy>,
+        cfg: &FaultsConfig,
+    ) -> FedServer {
+        FedServer::with_faults(
+            Server::new(vec![0.0f32]),
+            Box::new(FullParticipation),
+            policy,
+            links(n),
+            vec![true; n],
+            1,
+            FaultLayer::new(cfg, n, Rng::new(1).split(stream::FAULTS)),
+        )
+    }
+
+    fn reject(fed: &mut FedServer, msg: ClientMsg) -> UploadError {
+        fed.submit_upload(msg).unwrap_err().downcast::<UploadError>().unwrap()
+    }
+
+    #[test]
+    fn byzantine_envelopes_are_rejected_with_typed_errors() {
+        let mut dl = DenseDownlink::new();
+        // Client 1 has no data, so it never gets a broadcast — the
+        // NoBroadcast probe below.
+        let mut fed = FedServer::new(
+            Server::new(vec![0.0f32]),
+            Box::new(FullParticipation),
+            Box::new(Synchronous),
+            links(2),
+            vec![true, false],
+            1,
+        );
+        let Directive::Dispatch(bcasts) = fed.next_directive(&mut dl).unwrap() else {
+            panic!()
+        };
+        assert_eq!(bcasts.len(), 1);
+        let bc = &bcasts[0];
+        let mk = |client: usize, round: usize, sent_at: f64, recon: Vec<f32>, weight: f32| {
+            ClientMsg::Upload(Upload {
+                client,
+                round,
+                sent_at,
+                payload: Payload::Sign { n: 8, bits: vec![0u8], scale: 1.0 },
+                recon,
+                weight,
+                efficiency: 1.0,
+                ratio: 32.0,
+            })
+        };
+        assert_eq!(
+            reject(&mut fed, mk(99, 0, bc.recv_at, vec![1.0], 1.0)),
+            UploadError::UnknownClient { client: 99, n_clients: 2 }
+        );
+        assert_eq!(
+            reject(&mut fed, mk(1, 0, bc.recv_at, vec![1.0], 1.0)),
+            UploadError::NoBroadcast { client: 1 }
+        );
+        // A *future* round — before the boundary check this underflowed
+        // the staleness subtraction in release builds.
+        assert_eq!(
+            reject(&mut fed, mk(0, 5, bc.recv_at, vec![1.0], 1.0)),
+            UploadError::RoundMismatch { client: 0, got: 5, expect: 0 }
+        );
+        assert_eq!(
+            reject(&mut fed, mk(0, 0, bc.recv_at, vec![1.0, 2.0], 1.0)),
+            UploadError::WrongLength { client: 0, got: 2, expect: 1 }
+        );
+        assert_eq!(
+            reject(&mut fed, mk(0, 0, bc.recv_at, vec![f32::NAN], 1.0)),
+            UploadError::NonFiniteRecon { client: 0, index: 0 }
+        );
+        assert!(matches!(
+            reject(&mut fed, mk(0, 0, bc.recv_at, vec![1.0], f32::NAN)),
+            UploadError::BadWeight { client: 0, .. }
+        ));
+        assert_eq!(
+            reject(&mut fed, mk(0, 0, bc.recv_at, vec![1.0], -1.0)),
+            UploadError::BadWeight { client: 0, weight: -1.0 }
+        );
+        // A lying Sign header (bitset shorter than n says) — would
+        // under-price the uplink ledger.
+        let lying = ClientMsg::Upload(Upload {
+            client: 0,
+            round: 0,
+            sent_at: bc.recv_at,
+            payload: Payload::Sign { n: 8, bits: vec![], scale: 1.0 },
+            recon: vec![1.0],
+            weight: 1.0,
+            efficiency: 1.0,
+            ratio: 32.0,
+        });
+        assert_eq!(
+            reject(&mut fed, lying),
+            UploadError::MalformedPayload {
+                client: 0,
+                detail: "sign bitset length disagrees with n"
+            }
+        );
+        // Time travel: a send before the broadcast's dispatch would
+        // schedule an event in the virtual past.
+        assert!(matches!(
+            reject(&mut fed, mk(0, 0, -1.0, vec![1.0], 1.0)),
+            UploadError::BadSendTime { client: 0, .. }
+        ));
+        assert!(matches!(
+            reject(&mut fed, mk(0, 0, f64::NAN, vec![1.0], 1.0)),
+            UploadError::BadSendTime { client: 0, .. }
+        ));
+        // None of the rejections disturbed the session: the honest
+        // envelope still acks, a duplicate is refused, and the barrier
+        // step completes on the honest upload alone.
+        assert_eq!(fed.server.w, vec![0.0]);
+        let ServerMsg::Ack(_) = fed.submit_upload(upload(bc, 1.0)).unwrap() else {
+            panic!("honest upload must ack")
+        };
+        assert_eq!(reject(&mut fed, upload(bc, 1.0)), UploadError::Duplicate { client: 0 });
+        let Directive::Step(s) = fed.next_directive(&mut dl).unwrap() else { panic!() };
+        assert_eq!(s.clients, vec![0]);
+        assert!((fed.server.w[0] + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn upload_landing_exactly_at_the_deadline_is_included() {
+        // 9-byte Sign upload over a 144 bps uplink = exactly 0.5 s, the
+        // deadline. The upload event carries a real client index, the
+        // timer NO_CLIENT — same instant, upload first.
+        let ls =
+            vec![ClientLink { up_bps: 144.0, down_bps: f64::INFINITY, latency_s: 0.0 }];
+        let mut dl = DenseDownlink::new();
+        let mut fed = fed(1, Box::new(Deadline::new(0.5, 0.5)), ls);
+        let Directive::Dispatch(b) = fed.next_directive(&mut dl).unwrap() else { panic!() };
+        assert_eq!(b[0].recv_at, 0.0, "free downlink: the broadcast lands instantly");
+        fed.submit_upload(upload(&b[0], 1.0)).unwrap();
+        let Directive::Step(s) = fed.next_directive(&mut dl).unwrap() else { panic!() };
+        assert_eq!(s.clients, vec![0], "a deadline-instant upload makes the cut");
+        assert_eq!(s.sim_time_s, 0.5);
+        assert_eq!(s.stale_mean, 0.0);
+    }
+
+    /// Barrier-with-timeout test policy: steps when the cohort is in
+    /// (like sync) *and* arms a deadline timer — the only way a timer
+    /// can outlive its cycle.
+    struct SyncWithTimer;
+    impl AggregationPolicy for SyncWithTimer {
+        fn name(&self) -> &'static str {
+            "sync+timer"
+        }
+        fn ready(&self, trigger: AggTrigger, ctx: &PolicyCtx) -> bool {
+            match trigger {
+                AggTrigger::Upload => ctx.in_flight == 0,
+                AggTrigger::DeadlineExpired | AggTrigger::Drained => true,
+            }
+        }
+        fn deadline_s(&self) -> Option<f64> {
+            Some(10.0)
+        }
+        fn selection_order(&self) -> bool {
+            true
+        }
+    }
+
+    #[test]
+    fn timers_from_closed_cycles_are_inert() {
+        let mut dl = DenseDownlink::new();
+        let mut fed = fed(1, Box::new(SyncWithTimer), links(1));
+        // Cycle 1: the barrier closes the cycle long before its 10 s
+        // timer fires; the timer stays queued.
+        let Directive::Dispatch(b) = fed.next_directive(&mut dl).unwrap() else { panic!() };
+        fed.submit_upload(upload(&b[0], 1.0)).unwrap();
+        let Directive::Step(s1) = fed.next_directive(&mut dl).unwrap() else { panic!() };
+        assert_eq!(s1.round, 1);
+        assert!(s1.sim_time_s < 10.0, "the barrier beat the timer");
+        // Cycle 2: hold the upload until after the *stale* cycle-1 timer
+        // has popped. If that timer were live it would flush an empty
+        // step here; instead the next directive must be cycle 2's real
+        // barrier step.
+        let Directive::Dispatch(b) = fed.next_directive(&mut dl).unwrap() else { panic!() };
+        let late = ClientMsg::Upload(Upload {
+            client: 0,
+            round: b[0].round,
+            sent_at: b[0].recv_at + 15.0,
+            payload: Payload::Sign { n: 8, bits: vec![0u8], scale: 1.0 },
+            recon: vec![2.0],
+            weight: 1.0,
+            efficiency: 1.0,
+            ratio: 32.0,
+        });
+        fed.submit_upload(late).unwrap();
+        let Directive::Step(s2) = fed.next_directive(&mut dl).unwrap() else { panic!() };
+        assert_eq!(s2.round, 2);
+        assert_eq!(s2.clients, vec![0], "the stale timer did not flush an empty step");
+        assert!(s2.sim_time_s > 15.0, "the step waited for the held upload");
+    }
+
+    #[test]
+    fn dropout_under_a_synchronous_barrier_is_a_diagnostic_error() {
+        let cfg = FaultsConfig { enabled: true, dropout_p: 1.0, ..FaultsConfig::default() };
+        let mut fed = faulty_fed(2, Box::new(Synchronous), &cfg);
+        let mut dl = DenseDownlink::new();
+        let Directive::Dispatch(bcasts) = fed.next_directive(&mut dl).unwrap() else {
+            panic!()
+        };
+        let err = fed.submit_upload(upload(&bcasts[0], 1.0)).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<UploadError>(),
+            Some(UploadError::LossUnderBarrier { client: 0, round: 0, .. })
+        ));
+        let msg = err.to_string();
+        assert!(msg.contains("barrier"), "{msg}");
+        assert!(msg.contains("deadline or async"), "the error must point at the fix: {msg}");
+        assert_eq!(fed.lost_uploads(), 1);
+    }
+
+    #[test]
+    fn deadline_session_absorbs_a_dropout_and_skips_the_crashed_client() {
+        // Client 0 is made immortal, client 1 always loses: the first
+        // step aggregates the survivor alone and the next cycle skips
+        // the crashed client (its 5 s recovery window is still open at
+        // the 50 ms mark).
+        let cfg = FaultsConfig { enabled: true, dropout_p: 1.0, ..FaultsConfig::default() };
+        let mut fed = faulty_fed(2, Box::new(Deadline::new(0.05, 0.5)), &cfg);
+        fed.faults_mut().set_reliability(0, 0.0);
+        let mut dl = DenseDownlink::new();
+        let Directive::Dispatch(bcasts) = fed.next_directive(&mut dl).unwrap() else {
+            panic!()
+        };
+        assert_eq!(bcasts.len(), 2);
+        let ServerMsg::Ack(_) = fed.submit_upload(upload(&bcasts[0], 1.0)).unwrap() else {
+            panic!("the immortal client must ack")
+        };
+        let ServerMsg::Dropped { client: 1, round: 0 } =
+            fed.submit_upload(upload(&bcasts[1], 1.0)).unwrap()
+        else {
+            panic!("the doomed upload must report as dropped, not error")
+        };
+        assert_eq!(fed.in_flight(), 1, "the lost upload freed its slot immediately");
+        let Directive::Step(s) = fed.next_directive(&mut dl).unwrap() else { panic!() };
+        assert_eq!(s.clients, vec![0], "the survivor aggregates alone");
+        assert_eq!(fed.lost_uploads(), 1);
+        let Directive::Dispatch(b) = fed.next_directive(&mut dl).unwrap() else { panic!() };
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0].client, 0, "the crashed client sits out the next cycle");
+        assert_eq!(b[0].round, 1);
+    }
+
+    #[test]
+    fn async_session_recovers_and_redispatches_a_dropped_client() {
+        // Clients 0 and 2 immortal, client 1 always loses; a short
+        // recovery window so its Recover timer fires while the session
+        // is still pumping. The K=2 step aggregates the survivors and
+        // the victim is re-dispatched on a post-loss model.
+        let cfg = FaultsConfig {
+            enabled: true,
+            dropout_p: 1.0,
+            recover_s: 0.5,
+            ..FaultsConfig::default()
+        };
+        let mut fed = faulty_fed(3, Box::new(BufferedAsync::new(2, 1.0)), &cfg);
+        fed.faults_mut().set_reliability(0, 0.0);
+        fed.faults_mut().set_reliability(2, 0.0);
+        let mut dl = DenseDownlink::new();
+        let Directive::Dispatch(bcasts) = fed.next_directive(&mut dl).unwrap() else {
+            panic!()
+        };
+        assert_eq!(bcasts.len(), 3);
+        let mut dropped = 0;
+        for bc in &bcasts {
+            match fed.submit_upload(upload(bc, 1.0)).unwrap() {
+                ServerMsg::Dropped { client, round } => {
+                    dropped += 1;
+                    assert_eq!((client, round), (1, 0));
+                }
+                ServerMsg::Ack(_) => {}
+                other => panic!("unexpected reply {other:?}"),
+            }
+        }
+        assert_eq!(dropped, 1);
+        assert_eq!(fed.lost_uploads(), 1);
+        // Pump until the recovered victim is re-dispatched, answering
+        // every other dispatch honestly along the way.
+        let mut first_step = None;
+        let mut victim_round = None;
+        for _ in 0..80 {
+            match fed.next_directive(&mut dl).unwrap() {
+                Directive::Dispatch(bs) => {
+                    if let Some(bc) = bs.iter().find(|b| b.client == 1) {
+                        victim_round = Some(bc.round);
+                        break;
+                    }
+                    for bc in &bs {
+                        fed.submit_upload(upload(bc, 1.0)).unwrap();
+                    }
+                }
+                Directive::Step(s) => {
+                    if first_step.is_none() {
+                        first_step = Some(s);
+                    }
+                }
+            }
+        }
+        let s = first_step.expect("the survivors must reach the K=2 buffer");
+        assert_eq!(s.clients, vec![0, 2], "survivors aggregate without the victim");
+        assert_eq!(s.round, 1);
+        let r = victim_round.expect("the victim must be re-dispatched after recovery");
+        assert!(r >= 1, "recovery re-dispatch sees a post-loss model (round {r})");
+        assert_eq!(fed.recovered_clients(), 1);
     }
 }

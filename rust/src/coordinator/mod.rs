@@ -70,7 +70,7 @@ pub use policy::{
     build_policy, AggTrigger, AggregationPolicy, BufferedAsync, Deadline, PolicyCtx,
     Synchronous,
 };
-pub use protocol::{Ack, Broadcast, ClientMsg, ServerMsg, Upload};
+pub use protocol::{Ack, Broadcast, ClientMsg, ServerMsg, Upload, UploadError};
 pub use schedule::{
     build_scheduler, ClientScheduler, FullParticipation, RoundRobin, UniformSampler,
 };

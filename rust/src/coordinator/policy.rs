@@ -95,6 +95,23 @@ pub trait AggregationPolicy {
     fn staleness_weight(&self, _staleness: usize) -> f64 {
         1.0
     }
+
+    /// Whether the session survives an upload that legitimately never
+    /// arrives (the fault layer declared the client dead mid-transfer).
+    /// Barrier policies cannot — their cohort would block forever — so
+    /// the server turns the loss into a diagnostic error instead of
+    /// starving ([`crate::coordinator::protocol::UploadError::LossUnderBarrier`]).
+    fn tolerates_loss(&self) -> bool {
+        false
+    }
+}
+
+/// Saturating `γ^s` for staleness discounting: `usize` staleness values
+/// beyond `i32::MAX` clamp instead of wrapping — a (byzantine or buggy)
+/// huge staleness must *discount toward zero*, never wrap negative and
+/// inflate the weight (`powi` of a negative exponent is `1/γ^|s|`).
+pub fn decay_pow(decay: f64, staleness: usize) -> f64 {
+    decay.powi(i32::try_from(staleness).unwrap_or(i32::MAX))
 }
 
 /// Barrier on the selected cohort (the paper's protocol; default).
@@ -154,7 +171,11 @@ impl AggregationPolicy for Deadline {
     }
 
     fn staleness_weight(&self, staleness: usize) -> f64 {
-        self.decay.powi(staleness as i32)
+        decay_pow(self.decay, staleness)
+    }
+
+    fn tolerates_loss(&self) -> bool {
+        true
     }
 }
 
@@ -201,7 +222,11 @@ impl AggregationPolicy for BufferedAsync {
     }
 
     fn staleness_weight(&self, staleness: usize) -> f64 {
-        self.decay.powi(staleness as i32)
+        decay_pow(self.decay, staleness)
+    }
+
+    fn tolerates_loss(&self) -> bool {
+        true
     }
 }
 
@@ -274,6 +299,30 @@ mod tests {
         // γ = 1 disables the discount entirely.
         let flat = Deadline::new(1.0, 1.0);
         assert_eq!(flat.staleness_weight(7).to_bits(), 1.0f64.to_bits());
+    }
+
+    #[test]
+    fn huge_staleness_saturates_instead_of_inflating() {
+        // Before the saturating exponent, `staleness as i32` wrapped
+        // negative for values past i32::MAX and `γ^(-s) = 1/γ^s` *blew
+        // the weight up* instead of discounting it. Pin the fix: a
+        // byzantine-huge staleness discounts to (essentially) zero.
+        let p = Deadline::new(1.0, 0.5);
+        let w = p.staleness_weight(usize::MAX);
+        assert!((0.0..1.0).contains(&w), "weight {w} must stay in [0, 1)");
+        let q = BufferedAsync::new(2, 0.9);
+        let w = q.staleness_weight((i32::MAX as usize) + 1);
+        assert!((0.0..1.0).contains(&w), "weight {w} must stay in [0, 1)");
+        // And the saturation point itself behaves.
+        assert_eq!(decay_pow(0.5, 0).to_bits(), 1.0f64.to_bits());
+        assert!(decay_pow(0.5, i32::MAX as usize) < 1e-300);
+    }
+
+    #[test]
+    fn loss_tolerance_matches_policy_semantics() {
+        assert!(!Synchronous.tolerates_loss());
+        assert!(Deadline::new(0.5, 0.5).tolerates_loss());
+        assert!(BufferedAsync::new(2, 0.5).tolerates_loss());
     }
 
     #[test]

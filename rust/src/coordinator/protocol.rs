@@ -65,7 +65,104 @@ pub struct Ack {
 pub enum ServerMsg {
     Broadcast(Broadcast),
     Ack(Ack),
+    /// The fault layer declared this upload lost mid-transfer: the
+    /// envelope will never land on the virtual clock and the client is
+    /// down for its recovery window. Only loss-tolerant policies
+    /// (deadline/async) ever see this — under a synchronous barrier the
+    /// same event is the [`UploadError::LossUnderBarrier`] error.
+    Dropped {
+        client: usize,
+        /// The round of the lost upload.
+        round: usize,
+    },
 }
+
+/// Typed rejections of [`crate::coordinator::FedServer::submit_upload`] —
+/// every way a client envelope can fail validation at the server
+/// boundary, plus the one legitimate loss a barrier policy cannot
+/// absorb. Carried inside `anyhow::Error`; recover the variant with
+/// `err.downcast_ref::<UploadError>()`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum UploadError {
+    /// `client` index out of range for the fleet.
+    UnknownClient { client: usize, n_clients: usize },
+    /// No broadcast outstanding for this client.
+    NoBroadcast { client: usize },
+    /// A second submission for one broadcast.
+    Duplicate { client: usize },
+    /// The envelope's claimed round does not match the outstanding
+    /// broadcast — a future round would *underflow* the staleness
+    /// computation and inflate the aggregation weight, so it is rejected
+    /// here at the boundary.
+    RoundMismatch { client: usize, got: usize, expect: usize },
+    /// `recon` length differs from the model's parameter count.
+    WrongLength { client: usize, got: usize, expect: usize },
+    /// `recon[index]` is NaN or infinite.
+    NonFiniteRecon { client: usize, index: usize },
+    /// Aggregation weight is NaN, infinite, or negative.
+    BadWeight { client: usize, weight: f32 },
+    /// Payload shape is internally inconsistent (see
+    /// [`crate::compress::Payload::shape_error`]).
+    MalformedPayload { client: usize, detail: &'static str },
+    /// `sent_at` is non-finite or predates the broadcast's dispatch —
+    /// accepting it would schedule an event in the virtual past.
+    BadSendTime { client: usize, sent_at: f64, dispatched_at: f64 },
+    /// The fault layer declared the upload lost, and the active policy
+    /// is a barrier that can never complete without it.
+    LossUnderBarrier { client: usize, round: usize, at: f64 },
+}
+
+impl std::fmt::Display for UploadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            UploadError::UnknownClient { client, n_clients } => {
+                write!(f, "upload from unknown client {client} (fleet has {n_clients})")
+            }
+            UploadError::NoBroadcast { client } => {
+                write!(f, "upload from client {client} with no broadcast outstanding")
+            }
+            UploadError::Duplicate { client } => {
+                write!(f, "duplicate upload from client {client} for one broadcast")
+            }
+            UploadError::RoundMismatch { client, got, expect } => write!(
+                f,
+                "byzantine envelope from client {client}: claims round {got}, \
+                 outstanding broadcast is round {expect}"
+            ),
+            UploadError::WrongLength { client, got, expect } => write!(
+                f,
+                "byzantine envelope from client {client}: recon has {got} values, \
+                 model has {expect} parameters"
+            ),
+            UploadError::NonFiniteRecon { client, index } => write!(
+                f,
+                "byzantine envelope from client {client}: recon[{index}] is not finite"
+            ),
+            UploadError::BadWeight { client, weight } => write!(
+                f,
+                "byzantine envelope from client {client}: aggregation weight {weight} \
+                 must be finite and non-negative"
+            ),
+            UploadError::MalformedPayload { client, detail } => write!(
+                f,
+                "byzantine envelope from client {client}: malformed payload ({detail})"
+            ),
+            UploadError::BadSendTime { client, sent_at, dispatched_at } => write!(
+                f,
+                "byzantine envelope from client {client}: sent_at {sent_at} predates \
+                 its broadcast (dispatched at {dispatched_at})"
+            ),
+            UploadError::LossUnderBarrier { client, round, at } => write!(
+                f,
+                "client {client} dropped mid-round at t={at:.3}s (round {round}): a \
+                 synchronous barrier can never complete under faults — use a deadline \
+                 or async session, or disable [faults]"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for UploadError {}
 
 /// Client → server: one compressed model update.
 #[derive(Clone, Debug)]

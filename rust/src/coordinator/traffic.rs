@@ -48,10 +48,15 @@ impl Traffic {
         self.uplink_bytes + self.downlink_bytes
     }
 
-    /// Mean upload bytes per round.
+    /// Mean upload bytes per round. NaN before any round completes —
+    /// the ledger-wide no-data sentinel ([`Traffic::down_ratio`] and
+    /// `MetricsSink::mean_ratio` already use NaN; a literal `0.0` here
+    /// read as "zero bytes per round", which is a real measurement, not
+    /// "no rounds yet"). Display code is expected to guard with
+    /// `is_finite()` and omit the figure.
     pub fn up_per_round(&self) -> f64 {
         if self.rounds == 0 {
-            0.0
+            f64::NAN
         } else {
             self.uplink_bytes as f64 / self.rounds as f64
         }
@@ -68,6 +73,15 @@ impl Traffic {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn no_data_sentinels_are_nan_in_both_directions() {
+        // Before any round/broadcast the per-round figures are *unknown*,
+        // not zero: both directions agree on NaN.
+        let t = Traffic::default();
+        assert!(t.up_per_round().is_nan());
+        assert!(t.down_ratio(44).is_nan());
+    }
 
     #[test]
     fn accounting() {

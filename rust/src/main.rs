@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   run            run one FL experiment (flags or --config preset)
+//!   bench          deterministic adversarial scenarios (snapshot-tested)
+//!   report         summarize a metrics JSONL file from `run`
 //!   partition-viz  print the Fig-5-style Dirichlet partition histogram
 //!   list-models    list models/ops available in the artifact manifest
 //!   info           runtime/platform details
@@ -25,7 +27,7 @@ use fed3sfc::util::rng::{stream, Rng};
 const USAGE: &str = "\
 fed3sfc — Single-Step Synthetic Features Compressor for federated learning
 
-USAGE: fed3sfc <run|partition-viz|list-models|info> [--options]
+USAGE: fed3sfc <run|bench|report|partition-viz|list-models|info> [--options]
 
 run options:
   --config PATH          TOML preset (flags below override it)
@@ -64,10 +66,26 @@ run options:
   --threads N            worker threads for the per-round client fan-out
                          (0 = auto: all cores, or FED3SFC_THREADS;
                          1 = sequential; results identical for any N)
+  --faults               enable the [faults] adversarial-reality layer
+  --dropout-p F          per-upload dropout probability in [0,1]
+  --recover-s F          crash-and-recover window, virtual seconds
+  --diurnal-amp F        diurnal availability wave amplitude in [0,1]
+  --diurnal-period-s F   diurnal wave period, virtual seconds
+  --tiers N              correlated device-class tiers (1 = homogeneous)
+  --tier-spread F        tier severity in [0,1]
+  --tier-compute-s F     worst-tier extra compute delay, virtual seconds
   --backend NAME         auto|pjrt|native (default auto: PJRT when the
                          artifact dir exists, else the pure-Rust native
                          backend; FED3SFC_BACKEND overrides auto)
 
+bench scenarios (deterministic stdout, pinned by snapshot tests):
+  bench byzantine        malformed-envelope probes vs the server boundary
+  bench faults           one fault stream through sync|deadline|async
+  bench tiers            device-class fate table [--clients --seed --tiers
+                         --tier-spread --tier-compute-s --dropout-p]
+  bench new [--out PATH] emit a ready-to-run [faults] TOML preset
+
+report options: --metrics PATH   (JSONL written by run --metrics)
 partition-viz options: --dataset --clients --alpha --samples --seed
 list-models / info options: --backend
 ";
@@ -81,13 +99,15 @@ fn main() {
 }
 
 fn dispatch(argv: Vec<String>) -> Result<()> {
-    let args = Args::parse(argv, &["no-ef", "help", "verbose"])?;
+    let args = Args::parse(argv, &["no-ef", "help", "verbose", "faults"])?;
     if args.has_flag("help") || args.subcommand.is_empty() {
         print!("{USAGE}");
         return Ok(());
     }
     match args.subcommand.as_str() {
         "run" => cmd_run(&args),
+        "bench" => fed3sfc::cli::scenarios::cmd_bench(&args),
+        "report" => fed3sfc::cli::scenarios::cmd_report(&args),
         "partition-viz" => cmd_partition_viz(&args),
         "list-models" => cmd_list_models(&args),
         "info" => cmd_info(&args),
@@ -169,6 +189,17 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     }
     cfg.downlink_gap = args.get_usize("downlink-gap", cfg.downlink_gap)?;
     cfg.downlink_rate = args.get_f64("downlink-rate", cfg.downlink_rate)?;
+    if args.has_flag("faults") {
+        cfg.faults = true;
+    }
+    cfg.fault_dropout_p = args.get_f64("dropout-p", cfg.fault_dropout_p)?;
+    cfg.fault_recover_s = args.get_f64("recover-s", cfg.fault_recover_s)?;
+    cfg.fault_diurnal_amp = args.get_f64("diurnal-amp", cfg.fault_diurnal_amp)?;
+    cfg.fault_diurnal_period_s =
+        args.get_f64("diurnal-period-s", cfg.fault_diurnal_period_s)?;
+    cfg.fault_tiers = args.get_usize("tiers", cfg.fault_tiers)?;
+    cfg.fault_tier_spread = args.get_f64("tier-spread", cfg.fault_tier_spread)?;
+    cfg.fault_tier_compute_s = args.get_f64("tier-compute-s", cfg.fault_tier_compute_s)?;
     cfg.threads = args.get_usize("threads", cfg.threads)?;
     if let Some(v) = args.get("backend") {
         cfg.backend = BackendKind::parse(v)?;

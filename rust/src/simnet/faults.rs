@@ -1,0 +1,379 @@
+//! Adversarial-reality fault layer: the failure modes a production fleet
+//! sees, driven entirely from config (`[faults]`) and one dedicated RNG
+//! stream ([`crate::util::rng::stream::FAULTS`]).
+//!
+//! Modeled faults:
+//!
+//! * **Mid-round dropout** — at dispatch time every cohort member draws
+//!   one Bernoulli against its effective loss probability; a losing
+//!   client's upload is *declared lost at submit time* (the envelope
+//!   never lands on the virtual clock), exactly the "upload never
+//!   arrives" case deadline/async policies already absorb.
+//! * **Crash-and-recover windows** — a client that loses an upload is
+//!   down for `recover_s` virtual seconds (it is skipped by cohort
+//!   selection and re-dispatched, for async sessions, when its
+//!   recovery timer fires).
+//! * **Diurnal availability waves** — the loss probability is modulated
+//!   by a triangle wave of virtual time (amplitude `diurnal_amp`,
+//!   period `diurnal_period_s`; outage pressure peaks mid-period).
+//!   A triangle — not a sinusoid — keeps the whole layer in exact
+//!   `+ − × ÷` arithmetic, reproducible across every libm.
+//! * **Correlated device-class tiers** — one uniform draw per client
+//!   assigns a tier, and *all three* tier factors (bandwidth multiplier,
+//!   extra compute delay, dropout multiplier) are derived from that one
+//!   tier index: a slow device is slow, laggy and flaky together, never
+//!   independently.
+//!
+//! Determinism contract: draws happen in dispatch order on the dedicated
+//! stream (tier assignment first, in client order, at construction), so
+//! fault trajectories replay bit-for-bit from the experiment seed and
+//! are independent of worker-thread count — the server is the only
+//! caller and it is single-threaded. A disabled layer consumes **zero**
+//! draws and scales nothing, so `[faults]`-off runs are bit-identical to
+//! builds that predate the layer.
+
+use crate::simnet::ClientLink;
+use crate::util::rng::Rng;
+
+/// The `[faults]` config table (see `ExperimentConfig::faults_config`).
+#[derive(Clone, Copy, Debug)]
+pub struct FaultsConfig {
+    /// Master switch; `false` makes the layer a zero-draw no-op.
+    pub enabled: bool,
+    /// Base per-dispatch upload-loss probability in [0, 1].
+    pub dropout_p: f64,
+    /// Virtual seconds a client stays down after losing an upload.
+    pub recover_s: f64,
+    /// Diurnal wave amplitude in [0, 1]; 0 disables the wave.
+    pub diurnal_amp: f64,
+    /// Diurnal wave period in virtual seconds.
+    pub diurnal_period_s: f64,
+    /// Number of device-class tiers (1 = homogeneous fleet).
+    pub tiers: usize,
+    /// How far the worst tier sits from the best, in [0, 1].
+    pub tier_spread: f64,
+    /// Extra upload delay (seconds) of the worst tier at spread 1.
+    pub tier_compute_s: f64,
+}
+
+impl Default for FaultsConfig {
+    fn default() -> Self {
+        FaultsConfig {
+            enabled: false,
+            dropout_p: 0.1,
+            recover_s: 5.0,
+            diurnal_amp: 0.0,
+            diurnal_period_s: 86_400.0,
+            tiers: 1,
+            tier_spread: 0.5,
+            tier_compute_s: 0.05,
+        }
+    }
+}
+
+/// One client's drawn destiny: its device-class tier, the three factors
+/// that tier implies, and its current crash window.
+#[derive(Clone, Copy, Debug)]
+pub struct ClientFate {
+    /// Device-class tier, 0 = best. All other fields are pure functions
+    /// of this index — the correlation is by construction.
+    pub tier: usize,
+    /// Bandwidth multiplier applied to both link directions (1.0 for the
+    /// best tier, down to `1/(1 + 3·spread)` for the worst).
+    pub bw_mult: f64,
+    /// Extra per-upload compute delay in virtual seconds.
+    pub compute_s: f64,
+    /// Dropout-probability multiplier (1.0 best, `1 + 2·spread` worst).
+    pub rel_mult: f64,
+    /// Virtual time until which this client is crashed (`-inf` = up).
+    pub down_until: f64,
+}
+
+/// The fault layer a [`crate::coordinator::FedServer`] consults at
+/// dispatch and submit time. Owns its RNG stream; an enabled layer draws
+/// exactly once per dispatched broadcast (plus one tier draw per client
+/// at construction when `tiers > 1`).
+#[derive(Debug)]
+pub struct FaultLayer {
+    cfg: FaultsConfig,
+    fates: Vec<ClientFate>,
+    /// `None` only for [`FaultLayer::disabled`]; an enabled layer always
+    /// carries its dedicated stream.
+    rng: Option<Rng>,
+    lost: u64,
+    recovered: u64,
+}
+
+impl FaultLayer {
+    /// The zero-draw identity layer (`[faults]` absent or off).
+    pub fn disabled(n: usize) -> FaultLayer {
+        FaultLayer {
+            cfg: FaultsConfig { enabled: false, ..FaultsConfig::default() },
+            fates: (0..n).map(|_| ClientFate::best()).collect(),
+            rng: None,
+            lost: 0,
+            recovered: 0,
+        }
+    }
+
+    /// Build the layer for `n` clients. `rng` must be the dedicated
+    /// [`crate::util::rng::stream::FAULTS`] split of the experiment root.
+    /// Tier assignment draws once per client, in client order, only when
+    /// the layer is enabled with more than one tier.
+    pub fn new(cfg: &FaultsConfig, n: usize, mut rng: Rng) -> FaultLayer {
+        let tiers = cfg.tiers.max(1);
+        let fates = (0..n)
+            .map(|_| {
+                let tier = if cfg.enabled && tiers > 1 { rng.below(tiers) } else { 0 };
+                // One scalar position u ∈ [0, 1] per tier; every factor
+                // is a pure function of u so the three degradations are
+                // perfectly correlated.
+                let u = if tiers > 1 { tier as f64 / (tiers - 1) as f64 } else { 0.0 };
+                ClientFate {
+                    tier,
+                    bw_mult: 1.0 / (1.0 + 3.0 * cfg.tier_spread * u),
+                    compute_s: cfg.tier_compute_s * cfg.tier_spread * u,
+                    rel_mult: 1.0 + 2.0 * cfg.tier_spread * u,
+                    down_until: f64::NEG_INFINITY,
+                }
+            })
+            .collect();
+        FaultLayer { cfg: *cfg, fates, rng: Some(rng), lost: 0, recovered: 0 }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled
+    }
+
+    pub fn fate(&self, c: usize) -> &ClientFate {
+        &self.fates[c]
+    }
+
+    pub fn fates(&self) -> &[ClientFate] {
+        &self.fates
+    }
+
+    /// Uploads lost to a dropout so far.
+    pub fn lost(&self) -> u64 {
+        self.lost
+    }
+
+    /// Crash windows that have ended (recovery events fired).
+    pub fn recovered(&self) -> u64 {
+        self.recovered
+    }
+
+    /// Scale per-client links by each client's tier bandwidth multiplier.
+    /// Best-tier (and disabled-layer) multipliers are exactly 1.0, which
+    /// is a bitwise no-op on finite rates.
+    pub fn scale_links(&self, links: &mut [ClientLink]) {
+        for (link, fate) in links.iter_mut().zip(&self.fates) {
+            link.up_bps *= fate.bw_mult;
+            link.down_bps *= fate.bw_mult;
+        }
+    }
+
+    /// Diurnal availability wave at virtual time `now`: a triangle in
+    /// `[1 − amp, 1 + amp]` with the outage peak at mid-period (sessions
+    /// start in the calm trough at t = 0).
+    pub fn wave(&self, now: f64) -> f64 {
+        if self.cfg.diurnal_amp <= 0.0 {
+            return 1.0;
+        }
+        let pos = (now / self.cfg.diurnal_period_s).rem_euclid(1.0);
+        let tri = 1.0 - 4.0 * (pos - 0.5).abs();
+        1.0 + self.cfg.diurnal_amp * tri
+    }
+
+    /// Effective upload-loss probability for client `c` at time `now`:
+    /// base rate × tier reliability × diurnal wave, clamped to [0, 1].
+    pub fn loss_probability(&self, c: usize, now: f64) -> f64 {
+        (self.cfg.dropout_p * self.fates[c].rel_mult * self.wave(now)).clamp(0.0, 1.0)
+    }
+
+    /// One Bernoulli draw for a broadcast dispatched to `c` at `now`.
+    /// An enabled layer *always* consumes exactly one draw here — even
+    /// at probability 0 — so the stream position depends only on the
+    /// dispatch sequence, never on tier or wave values. Disabled layers
+    /// draw nothing.
+    pub fn draw_loss(&mut self, c: usize, now: f64) -> bool {
+        if !self.cfg.enabled {
+            return false;
+        }
+        let p = self.loss_probability(c, now);
+        let u = self.rng.as_mut().expect("enabled fault layer carries its stream").f64();
+        u < p
+    }
+
+    /// Extra per-upload compute delay of client `c`'s device tier.
+    pub fn compute_delay(&self, c: usize) -> f64 {
+        self.fates[c].compute_s
+    }
+
+    /// Virtual seconds a crashed client stays down.
+    pub fn recover_s(&self) -> f64 {
+        self.cfg.recover_s
+    }
+
+    /// Is client `c` inside a crash window at `now`?
+    pub fn is_down(&self, c: usize, now: f64) -> bool {
+        self.fates[c].down_until > now
+    }
+
+    /// Open a crash window for `c` until virtual time `until`.
+    pub fn mark_down(&mut self, c: usize, until: f64) {
+        self.fates[c].down_until = until;
+        self.lost += 1;
+    }
+
+    /// Close `c`'s crash window (its recovery timer fired).
+    pub fn mark_up(&mut self, c: usize) {
+        self.fates[c].down_until = f64::NEG_INFINITY;
+        self.recovered += 1;
+    }
+
+    /// Scenario-harness lever: override the base dropout probability
+    /// mid-session (e.g. "the outage ends").
+    pub fn set_dropout_p(&mut self, p: f64) {
+        self.cfg.dropout_p = p.clamp(0.0, 1.0);
+    }
+
+    /// Scenario-harness lever: pin one client's reliability multiplier
+    /// (0 makes it immortal, large values make it the designated victim).
+    pub fn set_reliability(&mut self, c: usize, mult: f64) {
+        self.fates[c].rel_mult = mult;
+    }
+}
+
+impl ClientFate {
+    /// The best-tier fate: every factor the identity, no crash window.
+    fn best() -> ClientFate {
+        ClientFate {
+            tier: 0,
+            bw_mult: 1.0,
+            compute_s: 0.0,
+            rel_mult: 1.0,
+            down_until: f64::NEG_INFINITY,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simnet::NetworkModel;
+    use crate::util::rng::{stream, Rng};
+
+    fn cfg(enabled: bool) -> FaultsConfig {
+        FaultsConfig { enabled, ..FaultsConfig::default() }
+    }
+
+    #[test]
+    fn disabled_layer_is_a_bitwise_noop() {
+        let mut layer = FaultLayer::disabled(3);
+        let base = NetworkModel::edge();
+        let mut links = base.client_links(3, 0.0, &mut Rng::new(1));
+        layer.scale_links(&mut links);
+        for link in &links {
+            assert_eq!(link.up_bps.to_bits(), base.up_bps.to_bits());
+            assert_eq!(link.down_bps.to_bits(), base.down_bps.to_bits());
+        }
+        for c in 0..3 {
+            assert!(!layer.draw_loss(c, 0.0));
+            assert!(!layer.is_down(c, 0.0));
+            assert_eq!(layer.fate(c).tier, 0);
+            assert_eq!(layer.compute_delay(c), 0.0);
+        }
+        assert!(!layer.enabled());
+    }
+
+    #[test]
+    fn enabled_layer_with_identity_knobs_changes_nothing_but_draws() {
+        // tiers = 1 and dropout_p = 0: the factors collapse to the exact
+        // identity, but every dispatch still consumes one draw (stream
+        // stability: turning the probability knob must never shift later
+        // draws).
+        let c = FaultsConfig { enabled: true, dropout_p: 0.0, ..cfg(true) };
+        let mut layer = FaultLayer::new(&c, 4, Rng::new(9).split(stream::FAULTS));
+        for i in 0..4 {
+            let f = layer.fate(i);
+            assert_eq!(f.bw_mult.to_bits(), 1.0f64.to_bits());
+            assert_eq!(f.compute_s, 0.0);
+            assert_eq!(f.rel_mult.to_bits(), 1.0f64.to_bits());
+            assert!(!layer.draw_loss(i, 0.0));
+        }
+    }
+
+    #[test]
+    fn tier_factors_are_correlated_and_monotone() {
+        let c = FaultsConfig {
+            enabled: true,
+            tiers: 4,
+            tier_spread: 0.8,
+            tier_compute_s: 0.1,
+            ..cfg(true)
+        };
+        let layer = FaultLayer::new(&c, 64, Rng::new(7).split(stream::FAULTS));
+        let again = FaultLayer::new(&c, 64, Rng::new(7).split(stream::FAULTS));
+        let mut seen = [false; 4];
+        for (f, g) in layer.fates().iter().zip(again.fates()) {
+            assert_eq!(f.tier, g.tier, "tier assignment must replay from the seed");
+            seen[f.tier] = true;
+            // Worse tier ⇒ slower link AND slower compute AND flakier,
+            // together: each factor is monotone in the tier index.
+            let u = f.tier as f64 / 3.0;
+            assert!((f.bw_mult - 1.0 / (1.0 + 3.0 * 0.8 * u)).abs() < 1e-15);
+            assert!((f.compute_s - 0.1 * 0.8 * u).abs() < 1e-15);
+            assert!((f.rel_mult - (1.0 + 2.0 * 0.8 * u)).abs() < 1e-15);
+        }
+        assert!(seen.iter().all(|&s| s), "64 draws should hit all 4 tiers");
+    }
+
+    #[test]
+    fn triangle_wave_peaks_mid_period() {
+        let c = FaultsConfig {
+            enabled: true,
+            diurnal_amp: 0.5,
+            diurnal_period_s: 4.0,
+            ..cfg(true)
+        };
+        let layer = FaultLayer::new(&c, 1, Rng::new(1).split(stream::FAULTS));
+        assert!((layer.wave(0.0) - 0.5).abs() < 1e-15, "trough at t = 0");
+        assert!((layer.wave(1.0) - 1.0).abs() < 1e-15);
+        assert!((layer.wave(2.0) - 1.5).abs() < 1e-15, "peak at mid-period");
+        assert!((layer.wave(3.0) - 1.0).abs() < 1e-15);
+        assert!((layer.wave(4.0) - 0.5).abs() < 1e-15, "periodic");
+        assert!((layer.wave(6.0) - 1.5).abs() < 1e-15);
+    }
+
+    #[test]
+    fn loss_probability_clamps_and_certain_loss_always_fires() {
+        let c = FaultsConfig { enabled: true, dropout_p: 1.0, ..cfg(true) };
+        let mut layer = FaultLayer::new(&c, 2, Rng::new(3).split(stream::FAULTS));
+        layer.set_reliability(0, 100.0);
+        assert_eq!(layer.loss_probability(0, 0.0), 1.0, "clamped to 1");
+        for _ in 0..20 {
+            assert!(layer.draw_loss(0, 0.0), "p = 1 must always lose");
+        }
+        layer.set_reliability(1, 0.0);
+        assert_eq!(layer.loss_probability(1, 0.0), 0.0);
+        for _ in 0..20 {
+            assert!(!layer.draw_loss(1, 0.0), "rel_mult = 0 never loses");
+        }
+    }
+
+    #[test]
+    fn crash_windows_open_and_close() {
+        let mut layer = FaultLayer::new(&cfg(true), 2, Rng::new(5).split(stream::FAULTS));
+        assert!(!layer.is_down(0, 0.0));
+        layer.mark_down(0, 3.5);
+        assert!(layer.is_down(0, 0.0));
+        assert!(layer.is_down(0, 3.49));
+        assert!(!layer.is_down(0, 3.5), "window is half-open: up exactly at its end");
+        assert!(!layer.is_down(1, 0.0), "other clients unaffected");
+        assert_eq!(layer.lost(), 1);
+        layer.mark_up(0);
+        assert!(!layer.is_down(0, 0.0));
+        assert_eq!(layer.recovered(), 1);
+    }
+}

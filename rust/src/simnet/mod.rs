@@ -24,6 +24,10 @@ use crate::util::rng::Rng;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
+pub mod faults;
+
+pub use faults::{ClientFate, FaultLayer, FaultsConfig};
+
 /// A symmetric-per-client link model.
 #[derive(Clone, Copy, Debug)]
 pub struct NetworkModel {

@@ -193,6 +193,13 @@ pub mod stream {
     pub const CLIENT_LOCAL_BASE: u64 = 0xC11EFF;
     /// Dataset synthesis, xor-mixed with the split index.
     pub const DATA_SPLIT: u64 = 0xDA7A;
+    /// Adversarial fault layer (`simnet::faults`): device-class tier
+    /// assignment and per-dispatch dropout draws share this one stream —
+    /// tier factors are *correlated by construction* (one draw decides
+    /// compute × bandwidth × reliability together), and a disabled layer
+    /// consumes zero draws so `[faults]`-off trajectories are bit-identical
+    /// to runs built before the layer existed.
+    pub const FAULTS: u64 = 0xFA_0175;
 }
 
 #[cfg(test)]

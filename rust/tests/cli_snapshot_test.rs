@@ -1,0 +1,86 @@
+//! Snapshot tests for the CLI surface: every `bench` scenario and
+//! `report` rendering is pinned byte-for-byte against a committed golden
+//! in `tests/snapshots/` (see `tests/common/snapshot.rs` for the
+//! record/review workflow).
+//!
+//! These are the acceptance gate for the adversarial scenario pack: the
+//! byzantine-envelope rejection table, the faults-vs-policies matrix,
+//! the tier fate table, the `[faults]` preset, and the NaN-sentinel
+//! (`-`) rendering of `report` all live here.
+
+mod common;
+
+use common::snapshot::assert_cli_snapshot;
+
+#[test]
+fn help_screen() {
+    assert_cli_snapshot("help", &["--help"]);
+}
+
+#[test]
+fn unknown_subcommand_is_a_clean_error() {
+    assert_cli_snapshot("unknown_subcommand", &["frobnicate"]);
+}
+
+#[test]
+fn unknown_bench_scenario_is_a_clean_error() {
+    assert_cli_snapshot("bench_unknown", &["bench", "frobnicate"]);
+}
+
+#[test]
+fn bench_byzantine_pins_the_envelope_boundary() {
+    assert_cli_snapshot("bench_byzantine", &["bench", "byzantine"]);
+}
+
+#[test]
+fn bench_faults_pins_the_policy_matrix() {
+    assert_cli_snapshot("bench_faults", &["bench", "faults"]);
+}
+
+#[test]
+fn bench_tiers_pins_the_device_class_fates() {
+    assert_cli_snapshot("bench_tiers", &["bench", "tiers"]);
+}
+
+#[test]
+fn bench_new_emits_the_faults_preset() {
+    assert_cli_snapshot("bench_new", &["bench", "new"]);
+}
+
+#[test]
+fn report_renders_nan_sentinels_as_dashes() {
+    assert_cli_snapshot("report_demo", &["report", "--metrics", "tests/fixtures/report_demo.jsonl"]);
+}
+
+#[test]
+fn report_of_an_empty_run_is_not_an_error() {
+    assert_cli_snapshot(
+        "report_empty",
+        &["report", "--metrics", "tests/fixtures/report_empty.jsonl"],
+    );
+}
+
+#[test]
+fn report_missing_file_is_a_stable_error() {
+    assert_cli_snapshot(
+        "report_missing",
+        &["report", "--metrics", "tests/fixtures/nope.jsonl"],
+    );
+}
+
+/// Not a snapshot: `bench new --out` must write a file that round-trips
+/// through the real TOML config parser with the fault layer enabled.
+#[test]
+fn bench_new_out_writes_a_valid_preset() {
+    let path = std::env::temp_dir().join(format!("fed3sfc_preset_{}.toml", std::process::id()));
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_fed3sfc"))
+        .args(["bench", "new", "--out", path.to_str().unwrap()])
+        .output()
+        .expect("spawn fed3sfc");
+    assert!(out.status.success(), "bench new --out failed: {out:?}");
+    let cfg = fed3sfc::config::ExperimentConfig::from_toml_file(path.to_str().unwrap())
+        .expect("emitted preset must parse and validate");
+    assert!(cfg.faults, "preset must enable the fault layer");
+    assert_eq!(cfg.fault_tiers, 3);
+    std::fs::remove_file(&path).ok();
+}

@@ -15,6 +15,8 @@
 
 #![allow(dead_code)] // each integration-test binary uses a subset
 
+pub mod snapshot;
+
 use std::sync::{Mutex, MutexGuard, OnceLock};
 
 use fed3sfc::runtime::{Backend, NativeBackend};

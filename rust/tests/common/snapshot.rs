@@ -1,0 +1,77 @@
+//! Zero-dependency CLI snapshot harness (insta_cmd-style, hand-rolled:
+//! the container is offline, so no `insta`/`insta-cmd` crates).
+//!
+//! Each assertion spawns the real `fed3sfc` binary, renders argv + exit
+//! status + stdout + stderr into one canonical text block, and
+//! byte-compares it against the committed golden in `tests/snapshots/`.
+//!
+//! Review workflow on a mismatch: the harness writes the fresh render
+//! next to the golden as `<name>.snap.new` and panics with both paths —
+//! diff them, then either fix the regression or bless the new output by
+//! re-running with `FED3SFC_SNAP=update` (which rewrites the goldens
+//! in-place; commit the diff). CI fails if any `.snap.new` files exist
+//! after the test run, so an un-reviewed mismatch can never land.
+//!
+//! Scenario commands must keep their stdout machine-independent: virtual
+//! clock only (no wall time), fixed seeds, no thread-count dependence,
+//! no absolute paths.
+
+use std::path::PathBuf;
+use std::process::{Command, Output};
+
+fn snapshot_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/snapshots")
+}
+
+/// Render one CLI invocation the way the `.snap` goldens store it.
+fn render(args: &[&str], out: &Output) -> String {
+    format!(
+        "---\nsource: tests/cli_snapshot_test.rs\nexpression: \"fed3sfc {}\"\n---\n\
+         success: {}\nexit_code: {}\n----- stdout -----\n{}----- stderr -----\n{}",
+        args.join(" "),
+        out.status.success(),
+        out.status
+            .code()
+            .map(|c| c.to_string())
+            .unwrap_or_else(|| "signal".to_string()),
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr),
+    )
+}
+
+/// Run `fed3sfc <args>` (from the crate root, so relative fixture paths
+/// are stable) and compare the rendered transcript against
+/// `tests/snapshots/<name>.snap`.
+pub fn assert_cli_snapshot(name: &str, args: &[&str]) {
+    let exe = env!("CARGO_BIN_EXE_fed3sfc");
+    let out = Command::new(exe)
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .unwrap_or_else(|e| panic!("failed to spawn {exe}: {e}"));
+    let rendered = render(args, &out);
+    let dir = snapshot_dir();
+    let snap = dir.join(format!("{name}.snap"));
+    if std::env::var("FED3SFC_SNAP").as_deref() == Ok("update") {
+        std::fs::create_dir_all(&dir).expect("create tests/snapshots");
+        std::fs::write(&snap, rendered.as_bytes()).expect("write snapshot");
+        return;
+    }
+    let expected = std::fs::read_to_string(&snap).unwrap_or_else(|_| {
+        panic!(
+            "missing snapshot {} — record it with FED3SFC_SNAP=update and commit it",
+            snap.display()
+        )
+    });
+    if rendered != expected {
+        let new = dir.join(format!("{name}.snap.new"));
+        std::fs::write(&new, rendered.as_bytes()).expect("write .snap.new");
+        panic!(
+            "CLI snapshot '{name}' changed.\n  golden: {}\n  fresh:  {}\n\
+             Diff the two; fix the regression, or bless the change with \
+             FED3SFC_SNAP=update and commit the updated golden.",
+            snap.display(),
+            new.display()
+        );
+    }
+}

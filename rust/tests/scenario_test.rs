@@ -1,0 +1,363 @@
+//! Adversarial-reality scenario tests: the `[faults]` layer end-to-end.
+//!
+//! The acceptance contract for the fault layer, pinned here:
+//!
+//! * with dropouts active, deadline and async experiments complete and
+//!   their trajectories are bit-identical across worker-thread counts;
+//! * the same faults under a synchronous barrier fail fast with the
+//!   typed [`UploadError::LossUnderBarrier`] diagnostic — never a hang;
+//! * a disabled layer consumes zero RNG draws, so `[faults]`-off runs
+//!   are bit-identical to configs that never mention the table;
+//! * fuzzed byzantine envelopes are all rejected with typed errors at
+//!   `submit_upload` and leave no residue in the server;
+//! * device-class tier fates are correlated by construction and the
+//!   diurnal wave stays inside its advertised bounds.
+
+mod common;
+
+use fed3sfc::compress::{DenseDownlink, Payload};
+use fed3sfc::config::{
+    CompressorKind, DatasetKind, ExperimentConfig, NetworkKind, SessionKind,
+};
+use fed3sfc::coordinator::{
+    ClientMsg, Directive, Experiment, FedServer, FullParticipation, RoundRecord, Server,
+    Synchronous, Upload, UploadError,
+};
+use fed3sfc::simnet::{FaultLayer, FaultsConfig, NetworkModel};
+use fed3sfc::util::rng::{stream, Rng};
+
+// ---------------------------------------------------------------------
+// Faulty experiment configs (SynthSmall keeps these tier-1 fast).
+
+fn faulty_deadline_cfg(threads: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        dataset: DatasetKind::SynthSmall,
+        compressor: CompressorKind::Dgc,
+        n_clients: 6,
+        rounds: 6,
+        k_local: 5,
+        lr: 0.05,
+        train_samples: 240,
+        test_samples: 50,
+        eval_every: 6,
+        seed: 42,
+        session: SessionKind::Deadline,
+        network: NetworkKind::Custom,
+        net_up_mbps: 0.1,
+        net_down_mbps: 1.0,
+        net_latency_ms: 1.0,
+        net_jitter: 0.5,
+        deadline_s: 0.08,
+        staleness_decay: 0.5,
+        threads,
+        // The full adversarial stack: dropouts, crash windows, a diurnal
+        // wave, and three correlated device-class tiers. Seed 42 dooms
+        // client 5's very first upload (checked below), so the loss path
+        // is exercised deterministically.
+        faults: true,
+        fault_dropout_p: 0.3,
+        fault_recover_s: 0.5,
+        fault_diurnal_amp: 0.5,
+        fault_diurnal_period_s: 5.0,
+        fault_tiers: 3,
+        fault_tier_spread: 0.6,
+        fault_tier_compute_s: 0.02,
+        ..ExperimentConfig::default()
+    }
+}
+
+fn faulty_async_cfg(threads: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        dataset: DatasetKind::SynthSmall,
+        compressor: CompressorKind::Dgc,
+        n_clients: 4,
+        rounds: 6,
+        k_local: 5,
+        lr: 0.05,
+        train_samples: 200,
+        test_samples: 50,
+        eval_every: 6,
+        seed: 42,
+        session: SessionKind::Async,
+        buffer_k: 2,
+        staleness_decay: 0.5,
+        net_jitter: 0.3,
+        threads,
+        faults: true,
+        fault_dropout_p: 0.25,
+        fault_recover_s: 0.3,
+        ..ExperimentConfig::default()
+    }
+}
+
+/// Run to completion; return the records plus the fault-layer ledger.
+fn run_faulty(cfg: ExperimentConfig) -> (Vec<RoundRecord>, u64, u64) {
+    let be = common::native();
+    let mut exp = Experiment::new(cfg, &be).unwrap();
+    let recs = exp.run().unwrap();
+    let lost = exp.fed.lost_uploads();
+    let recovered = exp.fed.recovered_clients();
+    (recs, lost, recovered)
+}
+
+fn assert_records_bit_identical(a: &[RoundRecord], b: &[RoundRecord]) {
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b.iter()) {
+        assert_eq!(x.round, y.round);
+        assert_eq!(x.n_selected, y.n_selected, "round {}", x.round);
+        assert_eq!(x.test_acc.to_bits(), y.test_acc.to_bits(), "round {}", x.round);
+        assert_eq!(x.up_bytes_cum, y.up_bytes_cum, "round {}", x.round);
+        assert_eq!(x.down_bytes_cum, y.down_bytes_cum, "round {}", x.round);
+        assert_eq!(x.sim_time_s.to_bits(), y.sim_time_s.to_bits(), "round {}", x.round);
+        assert_eq!(x.stale_mean.to_bits(), y.stale_mean.to_bits(), "round {}", x.round);
+        assert_eq!(x.comm_time_s.to_bits(), y.comm_time_s.to_bits(), "round {}", x.round);
+    }
+}
+
+#[test]
+fn deadline_session_absorbs_dropouts_and_completes() {
+    let (recs, lost, recovered) = run_faulty(faulty_deadline_cfg(1));
+    assert_eq!(recs.len(), 6, "every round completes despite the faults");
+    assert!(lost >= 1, "seed 42 dooms an upload in the first cycle");
+    assert!(recovered <= lost, "a client recovers at most once per loss");
+    assert!(recs.iter().all(|r| r.test_acc.is_finite() && r.test_loss.is_finite()));
+    // Lost uploads thin at least one cycle's aggregation.
+    assert!(recs.iter().any(|r| r.n_selected < 6), "no step ever missed a casualty");
+}
+
+#[test]
+fn deadline_faults_are_thread_count_independent() {
+    let (a, lost_a, rec_a) = run_faulty(faulty_deadline_cfg(1));
+    let (b, lost_b, rec_b) = run_faulty(faulty_deadline_cfg(4));
+    assert_records_bit_identical(&a, &b);
+    assert_eq!((lost_a, rec_a), (lost_b, rec_b), "fault ledger must not see threads");
+}
+
+#[test]
+fn async_session_absorbs_dropouts_and_completes() {
+    let (recs, lost, _) = run_faulty(faulty_async_cfg(1));
+    assert_eq!(recs.len(), 6);
+    assert!(lost >= 1, "seed 42's fault stream dooms the fifth dispatch");
+    assert!(recs.iter().all(|r| r.n_selected == 2), "async still steps every K arrivals");
+}
+
+#[test]
+fn async_faults_are_thread_count_independent() {
+    let (a, lost_a, rec_a) = run_faulty(faulty_async_cfg(1));
+    let (b, lost_b, rec_b) = run_faulty(faulty_async_cfg(4));
+    assert_records_bit_identical(&a, &b);
+    assert_eq!((lost_a, rec_a), (lost_b, rec_b), "fault ledger must not see threads");
+}
+
+#[test]
+fn sync_barrier_under_faults_fails_with_the_typed_diagnostic() {
+    // dropout_p = 1.0 clamps every effective loss probability to 1: the
+    // very first submitted upload is doomed, and a barrier cannot absorb
+    // it — the run must fail fast with the typed diagnostic, not hang.
+    let cfg = ExperimentConfig {
+        dataset: DatasetKind::SynthSmall,
+        compressor: CompressorKind::Dgc,
+        n_clients: 4,
+        rounds: 3,
+        k_local: 5,
+        lr: 0.05,
+        train_samples: 200,
+        test_samples: 50,
+        eval_every: 3,
+        seed: 42,
+        faults: true,
+        fault_dropout_p: 1.0,
+        ..ExperimentConfig::default()
+    };
+    let be = common::native();
+    let mut exp = Experiment::new(cfg, &be).unwrap();
+    let err = exp.run().expect_err("a barrier cannot survive certain dropouts");
+    let typed = err
+        .downcast_ref::<UploadError>()
+        .unwrap_or_else(|| panic!("diagnostic must stay typed through the stack: {err:#}"));
+    assert!(
+        matches!(typed, UploadError::LossUnderBarrier { round: 0, .. }),
+        "wrong variant: {typed:?}"
+    );
+    assert!(err.to_string().contains("disable [faults]"), "diagnostic must name the fix");
+}
+
+#[test]
+fn disabled_faults_consume_zero_draws_and_change_nothing() {
+    // `enabled = false` with every other knob cranked must be
+    // bit-identical to a config that never mentions the `[faults]`
+    // table: the layer draws nothing when off.
+    let plain = ExperimentConfig {
+        dataset: DatasetKind::SynthSmall,
+        compressor: CompressorKind::ThreeSfc,
+        n_clients: 4,
+        rounds: 4,
+        k_local: 5,
+        lr: 0.05,
+        train_samples: 200,
+        test_samples: 50,
+        eval_every: 4,
+        seed: 7,
+        net_jitter: 0.4,
+        ..ExperimentConfig::default()
+    };
+    let mut off = plain.clone();
+    off.faults = false;
+    off.fault_dropout_p = 0.9;
+    off.fault_recover_s = 0.1;
+    off.fault_diurnal_amp = 1.0;
+    off.fault_tiers = 7;
+    off.fault_tier_spread = 1.0;
+    off.fault_tier_compute_s = 3.0;
+    let (a, lost_a, _) = run_faulty(plain);
+    let (b, lost_b, _) = run_faulty(off);
+    assert_records_bit_identical(&a, &b);
+    assert_eq!(lost_a, 0);
+    assert_eq!(lost_b, 0);
+}
+
+// ---------------------------------------------------------------------
+// The envelope boundary under fuzz.
+
+fn honest_upload(client: usize, sent_at: f64) -> Upload {
+    Upload {
+        client,
+        round: 0,
+        sent_at,
+        payload: Payload::Sign { n: 8, bits: vec![0u8], scale: 1.0 },
+        recon: vec![0.1; 8],
+        weight: 1.0,
+        efficiency: 1.0,
+        ratio: 32.0,
+    }
+}
+
+#[test]
+fn fuzzed_byzantine_envelopes_never_corrupt_the_server() {
+    let links =
+        NetworkModel::custom(2.0, 20.0, 10.0).client_links(4, 0.0, &mut Rng::new(3));
+    let mut fed = FedServer::new(
+        Server::new(vec![0.0f32; 8]),
+        Box::new(FullParticipation),
+        Box::new(Synchronous),
+        links,
+        vec![true; 4],
+        8,
+    );
+    let mut dl = DenseDownlink::new();
+    let Directive::Dispatch(bcasts) = fed.next_directive(&mut dl).unwrap() else {
+        panic!("expected the opening dispatch");
+    };
+    let w_before: Vec<u32> = fed.server.w.iter().map(|v| v.to_bits()).collect();
+
+    let mut rng = Rng::new(0xB12A);
+    for i in 0..300 {
+        let c = rng.below(4);
+        let mut up = honest_upload(c, bcasts[c].recv_at);
+        match rng.below(8) {
+            0 => up.round = 1 + rng.below(1000),
+            1 => up.recon.truncate(rng.below(8)),
+            2 => up.recon[rng.below(8)] = f32::NAN,
+            3 => {
+                up.weight =
+                    if rng.below(2) == 0 { -1.0 - rng.f32() } else { f32::INFINITY };
+            }
+            4 => up.payload = Payload::Sign { n: 8, bits: vec![0u8; 3], scale: 1.0 },
+            5 => up.payload = Payload::Sign { n: 8, bits: vec![0u8], scale: f32::NAN },
+            6 => up.sent_at = -0.001 - rng.f64(),
+            _ => up.client = 4 + rng.below(1000),
+        }
+        let err = fed
+            .submit_upload(ClientMsg::Upload(up))
+            .expect_err("every mutation must be rejected");
+        assert!(
+            err.downcast_ref::<UploadError>().is_some(),
+            "fuzz case {i}: rejection lost its type: {err:#}"
+        );
+    }
+
+    // No residue: the model never moved, and the honest cohort still
+    // completes its barrier as if nothing happened.
+    let w_after: Vec<u32> = fed.server.w.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(w_before, w_after, "a rejected envelope moved the model");
+    for bc in &bcasts {
+        fed.submit_upload(ClientMsg::Upload(honest_upload(bc.client, bc.recv_at))).unwrap();
+    }
+    let Directive::Step(s) = fed.next_directive(&mut dl).unwrap() else {
+        panic!("expected the barrier step");
+    };
+    assert_eq!(s.round, 1);
+    assert_eq!(s.clients, vec![0, 1, 2, 3]);
+}
+
+// ---------------------------------------------------------------------
+// Fate correlation and the diurnal wave.
+
+#[test]
+fn tier_fates_are_correlated_and_monotone() {
+    let cfg = FaultsConfig {
+        enabled: true,
+        dropout_p: 0.1,
+        tiers: 4,
+        tier_spread: 0.8,
+        tier_compute_s: 0.1,
+        ..FaultsConfig::default()
+    };
+    let layer = FaultLayer::new(&cfg, 32, Rng::new(5).split(stream::FAULTS));
+    let fates = layer.fates();
+    assert!(fates.iter().any(|f| f.tier > 0), "32 draws over 4 tiers hit a slow tier");
+    for a in fates {
+        for b in fates {
+            if a.tier <= b.tier {
+                // One draw decides everything: a worse tier is worse on
+                // every axis at once, never a mix.
+                assert!(a.bw_mult >= b.bw_mult);
+                assert!(a.compute_s <= b.compute_s);
+                assert!(a.rel_mult <= b.rel_mult);
+            }
+            if a.tier == b.tier {
+                assert_eq!(a.bw_mult.to_bits(), b.bw_mult.to_bits());
+            }
+        }
+    }
+    // Best tier is undegraded; loss probability respects its clamp even
+    // for the worst tier under a cranked base rate.
+    let best = fates.iter().min_by_key(|f| f.tier).unwrap();
+    assert_eq!(best.tier, 0);
+    assert_eq!(best.bw_mult.to_bits(), 1.0f64.to_bits());
+    assert_eq!(best.compute_s.to_bits(), 0.0f64.to_bits());
+    let cranked = FaultsConfig { dropout_p: 0.9, ..cfg };
+    let hot = FaultLayer::new(&cranked, 32, Rng::new(5).split(stream::FAULTS));
+    for c in 0..32 {
+        let p = hot.loss_probability(c, 0.0);
+        assert!((0.0..=1.0).contains(&p), "client {c}: p={p} escaped the clamp");
+    }
+}
+
+#[test]
+fn diurnal_wave_stays_inside_its_advertised_bounds() {
+    let cfg = FaultsConfig {
+        enabled: true,
+        diurnal_amp: 0.4,
+        diurnal_period_s: 60.0,
+        ..FaultsConfig::default()
+    };
+    let layer = FaultLayer::new(&cfg, 1, Rng::new(6).split(stream::FAULTS));
+    // Trough at each period boundary, crest at each half period.
+    assert!((layer.wave(0.0) - 0.6).abs() < 1e-12);
+    assert!((layer.wave(30.0) - 1.4).abs() < 1e-12);
+    assert!((layer.wave(60.0) - 0.6).abs() < 1e-12);
+    for i in 0..600 {
+        let w = layer.wave(i as f64 * 0.73);
+        assert!((0.6..=1.4).contains(&w), "t={}: wave {w} out of bounds", i as f64 * 0.73);
+    }
+    // amp = 0 means a flat wave — and zero perturbation of loss rates.
+    let flat = FaultLayer::new(
+        &FaultsConfig { enabled: true, ..FaultsConfig::default() },
+        1,
+        Rng::new(6).split(stream::FAULTS),
+    );
+    for i in 0..10 {
+        assert_eq!(flat.wave(i as f64 * 13.7).to_bits(), 1.0f64.to_bits());
+    }
+}
