@@ -1,0 +1,97 @@
+//! Byzantine content attacks vs robust aggregation, end to end: a
+//! sign-flipping minority (`[faults] byzantine_frac`) poisons its
+//! decoded recons inside an *async* session, and the same workload runs
+//! under the plain weighted mean, the coordinate-wise trimmed mean and
+//! Krum. The reliability gate rides along, quarantining clients that
+//! keep losing uploads.
+//!
+//! The point to watch: under attack the plain mean's loss drifts (or
+//! diverges outright) while the robust estimators track the attack-free
+//! trajectory, paying only their detection overhead (`trim_frac`,
+//! `rejected`). Runs on the pure-Rust native backend in a bare
+//! container.
+//!
+//!     cargo run --release --example byzantine_edge
+//!
+//! Scale knobs (env): ROUNDS (default 6), CLIENTS (6), TRAIN (300),
+//! THREADS (0 = all cores).
+
+use fed3sfc::bench::env_usize;
+use fed3sfc::config::{AggregatorKind, CompressorKind, DatasetKind, SessionKind};
+use fed3sfc::coordinator::experiment::Experiment;
+use fed3sfc::simnet::ByzantineMode;
+
+use fed3sfc::runtime::open_backend;
+
+fn main() -> anyhow::Result<()> {
+    let rounds = env_usize("ROUNDS", 6);
+    let clients = env_usize("CLIENTS", 6);
+    let train = env_usize("TRAIN", 300);
+    let threads = env_usize("THREADS", 0);
+
+    println!(
+        "== byzantine minority on the edge link ({clients} clients, {rounds} async steps, \
+         sign-flip frac 0.34, dropout 0.15, reliability gate on) =="
+    );
+    let defenses = [
+        (AggregatorKind::WeightedMean, "the undefended baseline"),
+        (AggregatorKind::TrimmedMean, "coordinate-wise beta-trim"),
+        (AggregatorKind::Krum, "geometric selection, f attackers assumed"),
+    ];
+    for (kind, blurb) in defenses {
+        let builder = Experiment::builder()
+            .name(format!("byzantine_edge-{}", kind.name()))
+            .dataset(DatasetKind::SynthSmall)
+            .compressor(CompressorKind::ThreeSfc)
+            .clients(clients)
+            .rounds(rounds)
+            .lr(0.05)
+            .train_samples(train)
+            .test_samples(100)
+            .threads(threads)
+            .session(SessionKind::Async)
+            .buffer_k(2)
+            .staleness_decay(0.5)
+            .faults(true)
+            .dropout_p(0.15)
+            .fault_recovery(0.5)
+            .byzantine(0.34, ByzantineMode::SignFlip)
+            .aggregator(kind)
+            .trim_beta(0.34)
+            .krum(clients.div_ceil(3), 1)
+            .reliability(true)
+            .quarantine_rounds(2)
+            .reliability_ewma(0.5, 0.7);
+        let backend = open_backend(builder.config())?;
+        let mut exp = builder.build(backend.as_ref())?;
+        let recs = exp.run()?;
+        let last = recs.last().unwrap();
+        println!(
+            "aggregator={:<13} ({blurb})\n  steps {:>3}  loss {:.4}  acc {:.3}  \
+             rejected(last) {:>2}  trim_frac(last) {:.2}  lost {:>3}  \
+             quarantine events {:>2}  quarantined now {:?}",
+            exp.fed.aggregator_name(),
+            recs.len(),
+            last.test_loss,
+            last.test_acc,
+            last.rejected_clients,
+            last.trim_frac,
+            exp.fed.lost_uploads(),
+            exp.fed.quarantine_events(),
+            exp.fed.quarantined_now(),
+        );
+    }
+
+    println!(
+        "\nReading the table: every run sees the *same* attack — the last \
+         ceil(0.34*n) client indices flip the sign of their decoded recon at \
+         the server boundary. The weighted mean averages the poison in; the \
+         trimmed mean drops each coordinate's extremes (trim_frac is the \
+         influence it discards); Krum forwards only the most centrally \
+         located contribution and reports everyone else as rejected. The \
+         reliability gate is orthogonal: clients whose uploads keep dying \
+         accumulate EWMA loss mass and sit out quarantine_rounds dispatches. \
+         See EXPERIMENTS.md §Defenses."
+    );
+    Ok(())
+}

@@ -8,16 +8,19 @@
 //!
 //! * `bench byzantine` — fires one of every malformed upload envelope at
 //!   a live [`FedServer`] and tabulates the typed rejections
-//!   ([`crate::coordinator::UploadError`]); the session then completes on the honest
-//!   envelopes alone, proving rejections leave no residue.
+//!   ([`crate::coordinator::UploadError`]); then runs the content-attack
+//!   defense matrix: every `[faults]` byzantine mode × every
+//!   [`crate::coordinator::RobustAggregator`] on a draw-free toy
+//!   quadratic, reporting final distance to the honest optimum and what
+//!   each estimator rejected or trimmed.
 //! * `bench faults` — replays *one* fault stream (same seed, same
 //!   dropout draws) through all three aggregation policies: deadline and
 //!   async absorb the losses, the synchronous barrier fails with its
 //!   diagnostic.
 //! * `bench tiers` — prints the correlated device-class fate table a
 //!   `[faults]` config draws (tier → bandwidth × compute × reliability).
-//! * `bench new` — emits a ready-to-run `[faults]` TOML preset
-//!   (self-validated through [`ExperimentConfig::from_toml_str`]).
+//! * `bench new` — emits a ready-to-run `[faults]`+`[defense]` TOML
+//!   preset (self-validated through [`ExperimentConfig::from_toml_str`]).
 //!
 //! `report` summarizes a metrics JSONL file written by `run --metrics`,
 //! rendering the ledger's NaN no-data sentinels (serialized as JSON
@@ -29,10 +32,11 @@ use crate::cli::Args;
 use crate::compress::{DenseDownlink, Payload};
 use crate::config::ExperimentConfig;
 use crate::coordinator::{
-    AggregationPolicy, BufferedAsync, ClientMsg, Deadline, Directive, FedServer,
-    FullParticipation, Server, ServerMsg, Synchronous, Upload,
+    AggregationPolicy, BufferedAsync, ClientMsg, CoordinateMedian, Deadline, Directive,
+    FedServer, FullParticipation, MultiKrum, NormClip, RobustAggregator, Server,
+    ServerMsg, Synchronous, TrimmedMean, Upload, WeightedMean,
 };
-use crate::simnet::{FaultLayer, FaultsConfig, NetworkModel};
+use crate::simnet::{ByzantineMode, FaultLayer, FaultsConfig, NetworkModel};
 use crate::util::json::{parse as parse_json, Value};
 use crate::util::rng::{stream, Rng};
 
@@ -43,16 +47,23 @@ fn scenario_rng(seed: u64) -> Rng {
     Rng::new(seed)
 }
 
+/// The bench scenario registry. `cmd_bench` dispatches over this one
+/// table *and* enumerates it in the unknown-scenario diagnostic, so a
+/// new scenario can never be missing from the error message.
+const SCENARIOS: &[(&str, fn(&Args) -> Result<String>)] = &[
+    ("byzantine", bench_byzantine),
+    ("faults", bench_faults),
+    ("tiers", bench_tiers),
+    ("new", bench_new),
+];
+
 pub fn cmd_bench(args: &Args) -> Result<()> {
     let which = args.positionals.first().map(|s| s.as_str()).unwrap_or("");
-    let out = match which {
-        "byzantine" => bench_byzantine()?,
-        "faults" => bench_faults()?,
-        "tiers" => bench_tiers(args)?,
-        "new" => bench_new(args)?,
-        other => bail!("unknown bench scenario '{other}' (try byzantine|faults|tiers|new)"),
+    let Some((_, scenario)) = SCENARIOS.iter().find(|(name, _)| *name == which) else {
+        let names: Vec<&str> = SCENARIOS.iter().map(|(name, _)| *name).collect();
+        bail!("unknown bench scenario '{which}' (valid: {})", names.join("|"));
     };
-    print!("{out}");
+    print!("{}", scenario(args)?);
     Ok(())
 }
 
@@ -80,7 +91,7 @@ fn envelope(
     })
 }
 
-fn bench_byzantine() -> Result<String> {
+fn bench_byzantine(args: &Args) -> Result<String> {
     // 3 clients on identical custom links (1 Mbps up / 10 Mbps down /
     // 25 ms), client 2 idle (zero samples): its envelope has no
     // broadcast to answer. P = 4 model, synchronous barrier.
@@ -153,6 +164,161 @@ fn bench_byzantine() -> Result<String> {
         "\nbarrier step: round {}, clients {:?}, t={:.6}s, w[0]={:.4}\n",
         s.round, s.clients, s.sim_time_s, fed.server.w[0]
     ));
+    out.push('\n');
+    out.push_str(&defense_matrix(args)?);
+    Ok(out)
+}
+
+/// One defense-matrix cell: final distance to the honest optimum plus
+/// the last step's detection counters.
+struct MatrixCell {
+    loss: f64,
+    rejected: usize,
+    trim_frac: f64,
+}
+
+/// Drive one (attack, aggregator) pair over the toy quadratic: client
+/// `i` pulls toward its own target, compromised recons pass through the
+/// real [`FaultLayer::corrupt`], the estimator's aggregate is applied by
+/// unit-lr GD. Fully draw-free for the non-gaussian modes, so the cell
+/// is a pure function of `(n, frac, mode, aggregator)`.
+fn defense_cell(
+    n: usize,
+    seed: u64,
+    frac: f64,
+    mode: ByzantineMode,
+    agg: &dyn RobustAggregator,
+) -> MatrixCell {
+    const P: usize = 8;
+    const ROUNDS: usize = 20;
+    const GAIN: f32 = 0.6;
+    let fcfg = FaultsConfig {
+        enabled: true,
+        byzantine_frac: frac,
+        byzantine_mode: mode,
+        ..FaultsConfig::default()
+    };
+    let mut layer = FaultLayer::new(&fcfg, n, scenario_rng(seed).split(stream::FAULTS));
+    // Heterogeneous targets: a shared ramp over the coordinates plus a
+    // per-client offset, so estimators that pick *one* contribution
+    // (Krum) still land near — not exactly on — the honest mean.
+    let mid = 0.5f32 * (n as f32 - 1.0);
+    let targets: Vec<Vec<f32>> = (0..n)
+        .map(|i| {
+            let off = 0.05f32 * (i as f32 - mid);
+            (0..P).map(|j| 0.1f32 * (j as f32 + 1.0) + off).collect()
+        })
+        .collect();
+    // Attackers are the top client indices; the honest optimum is the
+    // mean target of everyone else.
+    let honest = n - layer.byzantine_count();
+    let mut tbar = vec![0.0f64; P];
+    for t in targets.iter().take(honest) {
+        for (s, &v) in tbar.iter_mut().zip(t.iter()) {
+            *s += v as f64;
+        }
+    }
+    for s in tbar.iter_mut() {
+        *s /= honest as f64;
+    }
+
+    let clients: Vec<usize> = (0..n).collect();
+    let weights = vec![1.0f32; n];
+    let mut w = vec![0.0f32; P];
+    let mut cell = MatrixCell { loss: 0.0, rejected: 0, trim_frac: 0.0 };
+    for _ in 0..ROUNDS {
+        let mut recons: Vec<Vec<f32>> = (0..n)
+            .map(|i| (0..P).map(|j| GAIN * (w[j] - targets[i][j])).collect())
+            .collect();
+        for (c, recon) in recons.iter_mut().enumerate() {
+            layer.corrupt(c, recon);
+        }
+        let out = agg.aggregate(&clients, &recons, &weights, P);
+        if let Some(u) = &out.update {
+            for (wj, uj) in w.iter_mut().zip(u.iter()) {
+                *wj -= uj;
+            }
+        }
+        cell.rejected = out.rejected.len();
+        cell.trim_frac = out.trim_frac;
+    }
+    let mut l2 = 0.0f64;
+    for (wj, tj) in w.iter().zip(tbar.iter()) {
+        let d = *wj as f64 - tj;
+        l2 += d * d;
+    }
+    cell.loss = l2.sqrt();
+    cell
+}
+
+fn defense_matrix(args: &Args) -> Result<String> {
+    let n = args.get_usize("clients", 10)?;
+    let seed = args.get_u64("seed", 1)?;
+    if n < 4 {
+        bail!("the defense matrix needs at least 4 clients, got {n}");
+    }
+    let frac = 0.3;
+    let krum_f = ((frac * n as f64).round() as usize).max(1);
+    let attacks: [(&str, f64, ByzantineMode); 4] = [
+        ("none", 0.0, ByzantineMode::SignFlip),
+        ("sign_flip", frac, ByzantineMode::SignFlip),
+        ("scale_amplify", frac, ByzantineMode::ScaleAmplify),
+        ("collude", frac, ByzantineMode::Collude),
+    ];
+    let defenses: Vec<(&str, Box<dyn RobustAggregator>)> = vec![
+        ("weighted_mean", Box::new(WeightedMean)),
+        ("trimmed_mean", Box::new(TrimmedMean { beta: 0.3 })),
+        ("coordinate_median", Box::new(CoordinateMedian)),
+        ("krum", Box::new(MultiKrum { f: krum_f, m: 1 })),
+        ("norm_clip", Box::new(NormClip { tau: 1.0 })),
+    ];
+
+    let cells: Vec<Vec<MatrixCell>> = attacks
+        .iter()
+        .map(|&(_, f, mode)| {
+            defenses
+                .iter()
+                .map(|(_, agg)| defense_cell(n, seed, f, mode, agg.as_ref()))
+                .collect()
+        })
+        .collect();
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "defense matrix — toy quadratic, fleet {n}, P=8, 20 rounds, gain 0.6, unit-lr GD\n"
+    ));
+    out.push_str(&format!(
+        "attackers: byzantine_frac 0.3 (top client indices); defenses: trim_beta 0.3, \
+         krum_f {krum_f}, clip_tau 1.0\n(gaussian_noise omitted: the one draw-consuming \
+         mode; this table stays draw-free)\n\n",
+    ));
+    out.push_str("final ‖w − honest-target mean‖ (lower is better):\n");
+    out.push_str(&format!("{:<13}", "attack"));
+    for (name, _) in &defenses {
+        out.push_str(&format!("  {name:>17}"));
+    }
+    out.push('\n');
+    for (row, &(attack, _, _)) in cells.iter().zip(attacks.iter()) {
+        out.push_str(&format!("{attack:<13}"));
+        for cell in row {
+            out.push_str(&format!("  {:>17.4}", cell.loss));
+        }
+        out.push('\n');
+    }
+    out.push_str("\nlast-step detection, rejected clients / trimmed influence:\n");
+    out.push_str(&format!("{:<13}", "attack"));
+    for (name, _) in &defenses {
+        out.push_str(&format!("  {name:>17}"));
+    }
+    out.push('\n');
+    for (row, &(attack, _, _)) in cells.iter().zip(attacks.iter()) {
+        out.push_str(&format!("{attack:<13}"));
+        for cell in row {
+            let det = format!("{}/{:.2}", cell.rejected, cell.trim_frac);
+            out.push_str(&format!("  {det:>17}"));
+        }
+        out.push('\n');
+    }
     Ok(out)
 }
 
@@ -233,7 +399,7 @@ fn drive_session(policy: Box<dyn AggregationPolicy>, target_steps: usize) -> Res
     })
 }
 
-fn bench_faults() -> Result<String> {
+fn bench_faults(_args: &Args) -> Result<String> {
     let mut out = String::new();
     out.push_str("fed3sfc bench faults — one fault stream, three aggregation policies\n");
     out.push_str(
@@ -307,12 +473,14 @@ fn bench_tiers(args: &Args) -> Result<String> {
     Ok(out)
 }
 
-/// The preset `bench new` emits — kept in sync with the `[faults]`
-/// config table by the self-validation below and the snapshot test.
+/// The preset `bench new` emits — kept in sync with the `[faults]` and
+/// `[defense]` config tables by the self-validation below and the
+/// snapshot test.
 const FAULTS_PRESET: &str = "\
 # fed3sfc adversarial-reality preset: a deadline session that tolerates
-# mid-round dropouts, crash windows, a diurnal outage wave, and three
-# correlated device-class tiers. Run with:
+# mid-round dropouts, crash windows, a diurnal outage wave, three
+# correlated device-class tiers and a sign-flipping byzantine minority —
+# defended by a trimmed mean plus reliability quarantine. Run with:
 #   fed3sfc run --config faults.toml
 clients = 8
 rounds = 10
@@ -334,12 +502,23 @@ diurnal_period_s = 600.0
 tiers = 3
 tier_spread = 0.6
 tier_compute_s = 0.05
+byzantine_frac = 0.25
+byzantine_mode = \"sign_flip\"
+
+[defense]
+aggregator = \"trimmed_mean\"
+trim_beta = 0.25
+reliability = true
+quarantine_rounds = 3
+ewma_alpha = 0.3
+threshold = 0.5
 ";
 
 fn bench_new(args: &Args) -> Result<String> {
     let cfg = ExperimentConfig::from_toml_str(FAULTS_PRESET)
         .context("generated preset failed self-validation")?;
     debug_assert!(cfg.faults_config().enabled);
+    debug_assert!(cfg.reliability);
     if let Some(path) = args.get("out") {
         if path != "-" {
             std::fs::write(path, FAULTS_PRESET)

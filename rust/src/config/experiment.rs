@@ -143,6 +143,56 @@ impl ServerOptKind {
     }
 }
 
+/// Byzantine-robust aggregation rule applied to each step's decoded
+/// batch before the server-optimizer step (see `coordinator::robust`;
+/// `[defense]` table / `--aggregator`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AggregatorKind {
+    /// Plain weighted mean — bit-identical to the pre-defense path
+    /// (default).
+    WeightedMean,
+    /// Coordinate-wise β-trimmed mean (Yin et al.), `defense.trim_beta`.
+    TrimmedMean,
+    /// Coordinate-wise weighted median.
+    CoordinateMedian,
+    /// Classic Krum: keep the single best-scored recon under an assumed
+    /// `defense.krum_f` attackers (Blanchard et al.).
+    Krum,
+    /// Multi-Krum: keep the `defense.krum_m` best-scored recons
+    /// (0 = auto, n − f).
+    MultiKrum,
+    /// L2 norm clipping at `defense.clip_tau` before the weighted mean.
+    NormClip,
+}
+
+impl AggregatorKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "weighted_mean" | "mean" => AggregatorKind::WeightedMean,
+            "trimmed_mean" | "trimmed" => AggregatorKind::TrimmedMean,
+            "coordinate_median" | "median" => AggregatorKind::CoordinateMedian,
+            "krum" => AggregatorKind::Krum,
+            "multi_krum" | "multikrum" => AggregatorKind::MultiKrum,
+            "norm_clip" | "clip" => AggregatorKind::NormClip,
+            _ => bail!(
+                "unknown aggregator '{s}' (want weighted_mean|trimmed_mean|\
+                 coordinate_median|krum|multi_krum|norm_clip)"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AggregatorKind::WeightedMean => "weighted_mean",
+            AggregatorKind::TrimmedMean => "trimmed_mean",
+            AggregatorKind::CoordinateMedian => "coordinate_median",
+            AggregatorKind::Krum => "krum",
+            AggregatorKind::MultiKrum => "multi_krum",
+            AggregatorKind::NormClip => "norm_clip",
+        }
+    }
+}
+
 /// Link model preset for the in-loop round-time accounting.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum NetworkKind {
@@ -440,6 +490,36 @@ pub struct ExperimentConfig {
     pub fault_tier_spread: f64,
     /// Extra upload delay (seconds) of the worst tier at spread 1.
     pub fault_tier_compute_s: f64,
+    /// Fraction of the fleet the byzantine attacker controls, in [0, 1]
+    /// (`[faults] byzantine_frac`); the last `round(frac·n)` client
+    /// indices are compromised. Active only while `faults` is on.
+    pub byzantine_frac: f64,
+    /// The compromised clients' poisoning strategy
+    /// (`[faults] byzantine_mode`).
+    pub byzantine_mode: crate::simnet::ByzantineMode,
+    /// Availability-trace JSONL path (`faults.trace`); non-empty replays
+    /// the recorded log instead of the parametric dropout model.
+    pub fault_trace: String,
+    /// Robust aggregation rule (`[defense]` table / `--aggregator`).
+    pub aggregator: AggregatorKind,
+    /// Per-tail trim fraction β ∈ [0, 0.5) for the trimmed mean.
+    pub trim_beta: f64,
+    /// Assumed byzantine count f for (multi-)Krum scoring.
+    pub krum_f: usize,
+    /// Multi-Krum selection size; 0 = auto (`n − f`).
+    pub krum_m: usize,
+    /// L2 clip threshold τ for norm clipping; 0 disables the clip.
+    pub clip_tau: f64,
+    /// Reliability-aware cohort gating (`[defense] reliability`): wrap
+    /// the scheduler in an EWMA quarantine gate fed by observed upload
+    /// losses.
+    pub reliability: bool,
+    /// Selection rounds a quarantined client sits out.
+    pub quarantine_rounds: usize,
+    /// EWMA step α ∈ (0, 1] of the per-client loss estimate.
+    pub reliability_alpha: f64,
+    /// Quarantine trigger threshold on the loss EWMA, in (0, 1].
+    pub reliability_threshold: f64,
 }
 
 impl Default for ExperimentConfig {
@@ -500,6 +580,18 @@ impl Default for ExperimentConfig {
             fault_tiers: 1,
             fault_tier_spread: 0.5,
             fault_tier_compute_s: 0.05,
+            byzantine_frac: 0.0,
+            byzantine_mode: crate::simnet::ByzantineMode::SignFlip,
+            fault_trace: String::new(),
+            aggregator: AggregatorKind::WeightedMean,
+            trim_beta: 0.2,
+            krum_f: 0,
+            krum_m: 0,
+            clip_tau: 0.0,
+            reliability: false,
+            quarantine_rounds: 3,
+            reliability_alpha: 0.3,
+            reliability_threshold: 0.5,
         }
     }
 }
@@ -569,6 +661,8 @@ impl ExperimentConfig {
             tiers: self.fault_tiers,
             tier_spread: self.fault_tier_spread,
             tier_compute_s: self.fault_tier_compute_s,
+            byzantine_frac: self.byzantine_frac,
+            byzantine_mode: self.byzantine_mode,
         }
     }
 
@@ -663,6 +757,27 @@ impl ExperimentConfig {
                 self.fault_tier_compute_s
             );
         }
+        if !(0.0..=1.0).contains(&self.byzantine_frac) {
+            bail!("faults byzantine_frac must be in [0, 1], got {}", self.byzantine_frac);
+        }
+        if !(0.0..0.5).contains(&self.trim_beta) {
+            bail!("defense trim_beta must be in [0, 0.5), got {}", self.trim_beta);
+        }
+        if self.clip_tau.is_nan() || self.clip_tau < 0.0 {
+            bail!("defense clip_tau must be non-negative, got {}", self.clip_tau);
+        }
+        if !(self.reliability_alpha > 0.0 && self.reliability_alpha <= 1.0) {
+            bail!(
+                "defense ewma_alpha must be in (0, 1], got {}",
+                self.reliability_alpha
+            );
+        }
+        if !(self.reliability_threshold > 0.0 && self.reliability_threshold <= 1.0) {
+            bail!(
+                "defense threshold must be in (0, 1], got {}",
+                self.reliability_threshold
+            );
+        }
         Ok(())
     }
 
@@ -738,6 +853,26 @@ impl ExperimentConfig {
                 "faults.tiers" => self.fault_tiers = v.as_i64()? as usize,
                 "faults.tier_spread" => self.fault_tier_spread = v.as_f64()?,
                 "faults.tier_compute_s" => self.fault_tier_compute_s = v.as_f64()?,
+                "byzantine_frac" | "faults.byzantine_frac" => {
+                    self.byzantine_frac = v.as_f64()?
+                }
+                "byzantine_mode" | "faults.byzantine_mode" => {
+                    self.byzantine_mode = crate::simnet::ByzantineMode::parse(v.as_str()?)?
+                }
+                "faults.trace" => self.fault_trace = v.as_str()?.to_string(),
+                "aggregator" | "defense.aggregator" => {
+                    self.aggregator = AggregatorKind::parse(v.as_str()?)?
+                }
+                "trim_beta" | "defense.trim_beta" => self.trim_beta = v.as_f64()?,
+                "defense.krum_f" => self.krum_f = v.as_i64()? as usize,
+                "defense.krum_m" => self.krum_m = v.as_i64()? as usize,
+                "clip_tau" | "defense.clip_tau" => self.clip_tau = v.as_f64()?,
+                "reliability" | "defense.reliability" => self.reliability = v.as_bool()?,
+                "quarantine_rounds" | "defense.quarantine_rounds" => {
+                    self.quarantine_rounds = v.as_i64()? as usize
+                }
+                "defense.ewma_alpha" => self.reliability_alpha = v.as_f64()?,
+                "defense.threshold" => self.reliability_threshold = v.as_f64()?,
                 other => bail!("unknown config key '{other}'"),
             }
         }
@@ -936,6 +1071,86 @@ mod tests {
         assert!(cfg.validate().unwrap_err().to_string().contains("tier_compute_s"));
         cfg.fault_tier_compute_s = 0.0;
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn defense_table_parses_and_validates() {
+        let cfg = ExperimentConfig::from_toml_str(
+            r#"
+            rounds = 5
+
+            [faults]
+            enabled = true
+            byzantine_frac = 0.3
+            byzantine_mode = "scale_amplify"
+            trace = "fleet.jsonl"
+
+            [defense]
+            aggregator = "trimmed_mean"
+            trim_beta = 0.3
+            krum_f = 2
+            krum_m = 5
+            clip_tau = 1.5
+            reliability = true
+            quarantine_rounds = 4
+            ewma_alpha = 0.4
+            threshold = 0.6
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.byzantine_frac, 0.3);
+        assert_eq!(cfg.byzantine_mode, crate::simnet::ByzantineMode::ScaleAmplify);
+        assert_eq!(cfg.fault_trace, "fleet.jsonl");
+        assert_eq!(cfg.aggregator, AggregatorKind::TrimmedMean);
+        assert_eq!(cfg.trim_beta, 0.3);
+        assert_eq!(cfg.krum_f, 2);
+        assert_eq!(cfg.krum_m, 5);
+        assert_eq!(cfg.clip_tau, 1.5);
+        assert!(cfg.reliability);
+        assert_eq!(cfg.quarantine_rounds, 4);
+        assert_eq!(cfg.reliability_alpha, 0.4);
+        assert_eq!(cfg.reliability_threshold, 0.6);
+        // The faults table carries the attacker through to the simnet layer.
+        let fc = cfg.faults_config();
+        assert_eq!(fc.byzantine_frac, 0.3);
+        assert_eq!(fc.byzantine_mode, crate::simnet::ByzantineMode::ScaleAmplify);
+        // Bare keys work for CLI-style flat configs; defaults are benign.
+        let cfg = ExperimentConfig::from_toml_str(
+            "aggregator = \"krum\"\nbyzantine_frac = 0.2\nreliability = true\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.aggregator, AggregatorKind::Krum);
+        assert_eq!(cfg.byzantine_frac, 0.2);
+        assert!(cfg.reliability);
+        let d = ExperimentConfig::default();
+        assert_eq!(d.aggregator, AggregatorKind::WeightedMean);
+        assert_eq!(d.byzantine_frac, 0.0);
+        assert!(!d.reliability);
+        for kind in [
+            AggregatorKind::WeightedMean,
+            AggregatorKind::TrimmedMean,
+            AggregatorKind::CoordinateMedian,
+            AggregatorKind::Krum,
+            AggregatorKind::MultiKrum,
+            AggregatorKind::NormClip,
+        ] {
+            assert_eq!(AggregatorKind::parse(kind.name()).unwrap(), kind);
+        }
+    }
+
+    #[test]
+    fn defense_knobs_are_range_checked() {
+        assert!(ExperimentConfig::from_toml_str("byzantine_frac = 1.5").is_err());
+        assert!(ExperimentConfig::from_toml_str("byzantine_frac = -0.1").is_err());
+        assert!(ExperimentConfig::from_toml_str("byzantine_mode = \"subtle\"").is_err());
+        assert!(ExperimentConfig::from_toml_str("trim_beta = 0.5").is_err());
+        assert!(ExperimentConfig::from_toml_str("trim_beta = -0.1").is_err());
+        assert!(ExperimentConfig::from_toml_str("clip_tau = -1.0").is_err());
+        assert!(ExperimentConfig::from_toml_str("aggregator = \"average\"").is_err());
+        assert!(ExperimentConfig::from_toml_str("[defense]\newma_alpha = 0.0").is_err());
+        assert!(ExperimentConfig::from_toml_str("[defense]\newma_alpha = 1.5").is_err());
+        assert!(ExperimentConfig::from_toml_str("[defense]\nthreshold = 0.0").is_err());
+        assert!(ExperimentConfig::from_toml_str("[defense]\nthreshold = 1.1").is_err());
     }
 
     #[test]

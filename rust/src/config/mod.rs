@@ -5,7 +5,7 @@ pub mod experiment;
 pub mod toml;
 
 pub use experiment::{
-    BackendKind, CompressorKind, DatasetKind, DownlinkKind, ExperimentConfig, NetworkKind,
-    ScheduleKind, ServerOptKind, SessionKind,
+    AggregatorKind, BackendKind, CompressorKind, DatasetKind, DownlinkKind,
+    ExperimentConfig, NetworkKind, ScheduleKind, ServerOptKind, SessionKind,
 };
 pub use toml::{parse_toml, TomlValue};

@@ -33,19 +33,20 @@ use anyhow::Result;
 
 use crate::compress::{self, Compressor, DownlinkTx};
 use crate::config::{
-    BackendKind, CompressorKind, DatasetKind, DownlinkKind, ExperimentConfig, NetworkKind,
-    ScheduleKind, ServerOptKind, SessionKind,
+    AggregatorKind, BackendKind, CompressorKind, DatasetKind, DownlinkKind,
+    ExperimentConfig, NetworkKind, ScheduleKind, ServerOptKind, SessionKind,
 };
 use crate::coordinator::fedserver::{Directive, FedServer};
 use crate::coordinator::opt::build_server_opt;
 use crate::coordinator::parallel::{run_client, ClientJob, ClientUpdate, WorkerPool};
 use crate::coordinator::policy::build_policy;
 use crate::coordinator::protocol::{Broadcast, ClientMsg, Upload};
+use crate::coordinator::robust::build_aggregator;
 use crate::coordinator::schedule::build_scheduler;
 use crate::coordinator::{ClientState, MetricsSink, Server, Traffic};
 use crate::data::{dirichlet_partition, Dataset};
 use crate::runtime::{Backend, FedOps, RuntimeStats};
-use crate::simnet::FaultLayer;
+use crate::simnet::{load_trace, ByzantineMode, FaultLayer};
 use crate::util::rng::{stream, Rng};
 
 /// One aggregation step's observables ("round" in the synchronous
@@ -78,6 +79,12 @@ pub struct RoundRecord {
     /// Mean staleness (model versions) of the aggregated updates —
     /// always 0 in synchronous sessions.
     pub stale_mean: f64,
+    /// Uploads the robust aggregator rejected wholesale this step
+    /// ((Multi-)Krum non-selection; 0 for reweighting estimators).
+    pub rejected_clients: usize,
+    /// Fraction of the batch's influence the aggregator trimmed, clipped
+    /// or rejected (0 for the plain weighted mean).
+    pub trim_frac: f64,
     /// Wall-clock milliseconds of client compute + aggregation only;
     /// evaluation is reported separately in `eval_ms` so eval cadence
     /// (`eval_every`) never pollutes per-round throughput numbers.
@@ -177,7 +184,7 @@ impl<'a> Experiment<'a> {
             FaultLayer::new(&cfg.faults_config(), cfg.n_clients, root.split(stream::FAULTS));
         faults.scale_links(&mut links);
         let active: Vec<bool> = clients.iter().map(|c| c.n_samples > 0).collect();
-        let fed = FedServer::with_faults(
+        let mut fed = FedServer::with_faults(
             server,
             scheduler,
             build_policy(&cfg),
@@ -186,6 +193,12 @@ impl<'a> Experiment<'a> {
             model.params,
             faults,
         );
+        // Both defense hooks are draw-free, so installing them here
+        // leaves every RNG stream's draw order untouched.
+        fed.set_aggregator(build_aggregator(&cfg));
+        if !cfg.fault_trace.is_empty() {
+            fed.faults_mut().set_trace(load_trace(&cfg.fault_trace)?);
+        }
         let compressor = compress::build(&cfg, model);
         // The downlink encoder runs on the main thread (sequentially, in
         // dispatch order) with its own FedOps handle and RNG stream — so
@@ -300,6 +313,8 @@ impl<'a> Experiment<'a> {
             comm_time_s: summary.comm_time_s,
             sim_time_s: summary.sim_time_s,
             stale_mean: summary.stale_mean,
+            rejected_clients: summary.rejected_clients,
+            trim_frac: summary.trim_frac,
             wall_ms,
             eval_ms,
         };
@@ -732,6 +747,72 @@ impl ExperimentBuilder {
         self.cfg.fault_tiers = tiers;
         self.cfg.fault_tier_spread = spread;
         self.cfg.fault_tier_compute_s = compute_s;
+        self
+    }
+
+    /// Byzantine content attack (`[faults] byzantine_frac` /
+    /// `byzantine_mode`): the last `round(frac * n)` client indices
+    /// submit poisoned recons whenever the fault layer is enabled.
+    pub fn byzantine(mut self, frac: f64, mode: ByzantineMode) -> Self {
+        self.cfg.byzantine_frac = frac;
+        self.cfg.byzantine_mode = mode;
+        self
+    }
+
+    /// Trace-driven outage schedule (`[faults] trace`): a JSONL file of
+    /// per-client `[down_at, up_at)` windows that replaces the parametric
+    /// dropout draw entirely.
+    pub fn fault_trace(mut self, path: impl Into<String>) -> Self {
+        self.cfg.fault_trace = path.into();
+        self
+    }
+
+    /// Robust aggregation rule (`[defense] aggregator`).
+    pub fn aggregator(mut self, kind: AggregatorKind) -> Self {
+        self.cfg.aggregator = kind;
+        self
+    }
+
+    /// Per-side trim fraction for the trimmed mean (`[defense]
+    /// trim_beta`).
+    pub fn trim_beta(mut self, beta: f64) -> Self {
+        self.cfg.trim_beta = beta;
+        self
+    }
+
+    /// Krum parameters (`[defense] krum_f` / `krum_m`): assumed attacker
+    /// count `f` and Multi-Krum selection size `m` (0 = defaults).
+    pub fn krum(mut self, f: usize, m: usize) -> Self {
+        self.cfg.krum_f = f;
+        self.cfg.krum_m = m;
+        self
+    }
+
+    /// Norm-clip threshold (`[defense] clip_tau`; 0 = median-norm
+    /// auto-threshold).
+    pub fn clip_tau(mut self, tau: f64) -> Self {
+        self.cfg.clip_tau = tau;
+        self
+    }
+
+    /// Reliability-aware cohort gating (`[defense] reliability`):
+    /// quarantine chronically failing clients off the EWMA loss signal.
+    pub fn reliability(mut self, on: bool) -> Self {
+        self.cfg.reliability = on;
+        self
+    }
+
+    /// Rounds a quarantined client sits out (`[defense]
+    /// quarantine_rounds`).
+    pub fn quarantine_rounds(mut self, n: usize) -> Self {
+        self.cfg.quarantine_rounds = n;
+        self
+    }
+
+    /// Reliability EWMA tuning (`[defense] ewma_alpha` / `threshold`).
+    pub fn reliability_ewma(mut self, alpha: f64, threshold: f64) -> Self {
+        self.cfg.reliability_alpha = alpha;
+        self.cfg.reliability_threshold = threshold;
         self
     }
 

@@ -33,6 +33,7 @@ use crate::coordinator::policy::{AggTrigger, AggregationPolicy, PolicyCtx};
 use crate::coordinator::protocol::{
     Ack, Broadcast, ClientMsg, ServerMsg, Upload, UploadError,
 };
+use crate::coordinator::robust::{RobustAggregator, WeightedMean};
 use crate::coordinator::schedule::ClientScheduler;
 use crate::coordinator::{Server, Traffic};
 use crate::simnet::{ClientLink, FaultLayer, SimClock, SimEvent};
@@ -74,6 +75,12 @@ pub struct StepSummary {
     pub ratio: f64,
     /// Mean staleness (model versions) of the aggregated updates.
     pub stale_mean: f64,
+    /// Uploads the robust aggregator excluded from this step (Krum
+    /// rejections; 0 for estimators that reweight rather than reject).
+    pub rejected_clients: usize,
+    /// Fraction of the batch's influence the aggregator trimmed, clipped
+    /// or rejected (estimator-specific; 0 for the plain weighted mean).
+    pub trim_frac: f64,
     /// Virtual time consumed by this step (since the previous step).
     pub comm_time_s: f64,
     /// Virtual-clock time at which the step completed.
@@ -89,6 +96,10 @@ pub struct FedServer {
     pub traffic: Traffic,
     scheduler: Box<dyn ClientScheduler>,
     policy: Box<dyn AggregationPolicy>,
+    /// Byzantine-robust aggregation rule applied to each step's decoded
+    /// batch before the server-optimizer step. The default
+    /// [`WeightedMean`] reproduces `Server::apply_round` bit-for-bit.
+    robust: Box<dyn RobustAggregator>,
     clock: SimClock<SessionEvent>,
     links: Vec<ClientLink>,
     /// Clients with data; zero-sample clients are never dispatched.
@@ -172,6 +183,7 @@ impl FedServer {
             traffic: Traffic::default(),
             scheduler,
             policy,
+            robust: Box::new(WeightedMean),
             clock: SimClock::new(),
             links,
             active,
@@ -228,6 +240,29 @@ impl FedServer {
     /// The fault layer (drawn tiers, crash windows, counters).
     pub fn faults(&self) -> &FaultLayer {
         &self.faults
+    }
+
+    /// Swap the aggregation rule (see [`crate::coordinator::robust`]).
+    /// Call before the first step; the default is the bit-faithful
+    /// [`WeightedMean`].
+    pub fn set_aggregator(&mut self, robust: Box<dyn RobustAggregator>) {
+        self.robust = robust;
+    }
+
+    /// The active aggregation rule's name ("weighted_mean" / "krum" / …).
+    pub fn aggregator_name(&self) -> &'static str {
+        self.robust.name()
+    }
+
+    /// Quarantine windows the reliability gate has opened so far (0 when
+    /// the scheduler is not reliability-gated).
+    pub fn quarantine_events(&self) -> u64 {
+        self.scheduler.quarantine_events()
+    }
+
+    /// Clients the scheduler currently refuses to select (ascending).
+    pub fn quarantined_now(&self) -> Vec<usize> {
+        self.scheduler.quarantined(self.server.round)
     }
 
     /// Scenario-scripting access to the fault layer (e.g. pin a victim's
@@ -317,7 +352,7 @@ impl FedServer {
     /// [`UploadError::LossUnderBarrier`] diagnostic, because the cohort
     /// could otherwise never complete.
     pub fn submit_upload(&mut self, msg: ClientMsg) -> Result<ServerMsg> {
-        let ClientMsg::Upload(up) = msg;
+        let ClientMsg::Upload(mut up) = msg;
         let c = up.client;
         if c >= self.n_clients {
             return Err(UploadError::UnknownClient { client: c, n_clients: self.n_clients }.into());
@@ -362,21 +397,36 @@ impl FedServer {
             }
             .into());
         }
+        // The content attack happens *after* the envelope clears
+        // validation: a compromised client submits a perfectly
+        // well-formed envelope whose recon the fault layer poisons in
+        // place (gaussian draws in submit order, on the dedicated
+        // stream). Defeating this is the robust aggregator's job.
+        self.faults.corrupt(c, &mut up.recon);
         let link = self.links[c];
         let recv_at = up.sent_at
             + self.faults.compute_delay(c)
             + link.latency_s
             + link.up_time_s(up.payload.wire_bytes() as u64);
-        if self.doomed[c] {
+        let doom = if self.doomed[c] {
             // The dispatch-time Bernoulli said this upload dies on the
-            // wire: resolve the loss instead of scheduling the arrival.
-            // The client's in-flight slot frees NOW (the driver did its
-            // part) and its crash window runs from the would-be arrival.
+            // wire; its crash window runs from the would-be arrival.
             self.doomed[c] = false;
+            Some(recv_at + self.faults.recover_s())
+        } else {
+            // Trace replay: a logged outage overlapping the transfer
+            // kills it, with recovery at the window's logged end.
+            self.faults.trace_loss(c, up.sent_at, recv_at)
+        };
+        if let Some(back_at) = doom {
+            // Resolve the loss instead of scheduling the arrival. The
+            // client's in-flight slot frees NOW (the driver did its
+            // part), and the scheduler observes the loss — the
+            // reliability gate's quarantine signal.
             self.busy[c] = false;
             self.in_flight -= 1;
-            let back_at = recv_at + self.faults.recover_s();
             self.faults.mark_down(c, back_at);
+            self.scheduler.observe(c, self.server.round, true);
             if !self.policy.tolerates_loss() {
                 return Err(UploadError::LossUnderBarrier {
                     client: c,
@@ -474,6 +524,7 @@ impl FedServer {
                 self.busy[c] = false;
                 self.uploading[c] = false;
                 self.in_flight -= 1;
+                self.scheduler.observe(c, self.server.round, false);
                 self.traffic.record_upload(up.payload.wire_bytes());
                 self.pending.push(up);
                 let redispatch = self.policy.redispatch();
@@ -546,7 +597,8 @@ impl FedServer {
             weights.push((up.weight as f64 * self.policy.staleness_weight(staleness)) as f32);
             recons.push(up.recon);
         }
-        self.server.apply_round(&recons, &weights);
+        let outcome = self.robust.aggregate(&clients, &recons, &weights, self.n_params);
+        self.server.apply_update(outcome.update.as_deref());
         let comm_time_s = at - self.last_step_at;
         self.last_step_at = at;
         self.traffic.record_comm_time(comm_time_s);
@@ -565,6 +617,8 @@ impl FedServer {
             efficiency: if n == 0 { 0.0 } else { eff_sum / denom },
             ratio: if n == 0 { 0.0 } else { ratio_sum / denom },
             stale_mean: if n == 0 { 0.0 } else { stale_sum / denom },
+            rejected_clients: outcome.rejected.len(),
+            trim_frac: outcome.trim_frac,
             comm_time_s,
             sim_time_s: at,
         }));
@@ -577,7 +631,7 @@ mod tests {
     use crate::compress::{DenseDownlink, Payload};
     use crate::coordinator::policy::{BufferedAsync, Deadline, Synchronous};
     use crate::coordinator::schedule::FullParticipation;
-    use crate::simnet::{FaultsConfig, NetworkModel};
+    use crate::simnet::{ByzantineMode, FaultsConfig, NetworkModel, TraceWindow};
     use crate::util::rng::{stream, Rng};
 
     /// A tiny hand-driven session: n clients, 1-param model, uploads
@@ -1039,6 +1093,83 @@ mod tests {
         assert_eq!(b.len(), 1);
         assert_eq!(b[0].client, 0, "the crashed client sits out the next cycle");
         assert_eq!(b[0].round, 1);
+    }
+
+    #[test]
+    fn byzantine_recon_is_poisoned_at_submit_and_robust_aggregation_survives() {
+        use crate::coordinator::robust::TrimmedMean;
+        // n = 3 at frac 0.34 ⇒ exactly client 2 is compromised.
+        let cfg = FaultsConfig {
+            enabled: true,
+            dropout_p: 0.0,
+            byzantine_frac: 0.34,
+            byzantine_mode: ByzantineMode::SignFlip,
+            ..FaultsConfig::default()
+        };
+        let mut dl = DenseDownlink::new();
+        let mut fed = faulty_fed(3, Box::new(Synchronous), &cfg);
+        let Directive::Dispatch(bcasts) = fed.next_directive(&mut dl).unwrap() else {
+            panic!()
+        };
+        for bc in &bcasts {
+            fed.submit_upload(upload(bc, 1.0)).unwrap();
+        }
+        let Directive::Step(s) = fed.next_directive(&mut dl).unwrap() else { panic!() };
+        // Client 2's recon was flipped to −1 on submit: the default mean
+        // aggregates (1 + 1 − 1)/3.
+        assert_eq!(fed.aggregator_name(), "weighted_mean");
+        assert_eq!(s.rejected_clients, 0);
+        assert_eq!(s.trim_frac, 0.0);
+        assert!((fed.server.w[0] + 1.0 / 3.0).abs() < 1e-6, "{}", fed.server.w[0]);
+
+        // Same session under a β-trimmed mean: both per-coordinate
+        // extremes (the flipped −1 and one honest 1) are trimmed, and
+        // the surviving middle value neutralizes the attack.
+        let mut fed = faulty_fed(3, Box::new(Synchronous), &cfg);
+        fed.set_aggregator(Box::new(TrimmedMean { beta: 0.34 }));
+        let Directive::Dispatch(bcasts) = fed.next_directive(&mut dl).unwrap() else {
+            panic!()
+        };
+        for bc in &bcasts {
+            fed.submit_upload(upload(bc, 1.0)).unwrap();
+        }
+        let Directive::Step(s) = fed.next_directive(&mut dl).unwrap() else { panic!() };
+        assert_eq!(fed.aggregator_name(), "trimmed_mean");
+        assert!((s.trim_frac - 2.0 / 3.0).abs() < 1e-12);
+        assert!((fed.server.w[0] + 1.0).abs() < 1e-6, "{}", fed.server.w[0]);
+    }
+
+    #[test]
+    fn trace_outage_kills_the_overlapping_upload_and_is_draw_free() {
+        // dropout_p = 1 would doom everything — but installing a trace
+        // switches the loss model to replay, so only the logged window
+        // bites: client 1 goes down just after dispatch and its upload
+        // is lost mid-transfer.
+        let cfg = FaultsConfig { enabled: true, dropout_p: 1.0, ..FaultsConfig::default() };
+        let mut fed = faulty_fed(2, Box::new(Deadline::new(0.05, 0.5)), &cfg);
+        fed.faults_mut()
+            .set_trace(vec![TraceWindow { client: 1, down_at: 0.001, up_at: 10.0 }]);
+        let mut dl = DenseDownlink::new();
+        let Directive::Dispatch(bcasts) = fed.next_directive(&mut dl).unwrap() else {
+            panic!()
+        };
+        assert_eq!(bcasts.len(), 2, "the log says client 1 is still up at dispatch");
+        let ServerMsg::Ack(_) = fed.submit_upload(upload(&bcasts[0], 1.0)).unwrap() else {
+            panic!("client 0 has no logged outage")
+        };
+        let ServerMsg::Dropped { client: 1, round: 0 } =
+            fed.submit_upload(upload(&bcasts[1], 1.0)).unwrap()
+        else {
+            panic!("the logged outage must kill the in-flight upload")
+        };
+        assert_eq!(fed.lost_uploads(), 1);
+        let Directive::Step(s) = fed.next_directive(&mut dl).unwrap() else { panic!() };
+        assert_eq!(s.clients, vec![0], "the survivor aggregates alone");
+        // The next cycle, at the 50 ms deadline, still sits inside the
+        // logged window — client 1 is skipped by selection.
+        let Directive::Dispatch(b) = fed.next_directive(&mut dl).unwrap() else { panic!() };
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0].client, 0);
     }
 
     #[test]

@@ -41,6 +41,8 @@ impl MetricsSink {
                 .num("comm_time_s", rec.comm_time_s)
                 .num("sim_time_s", rec.sim_time_s)
                 .num("stale_mean", rec.stale_mean)
+                .int("rejected_clients", rec.rejected_clients as i64)
+                .num("trim_frac", rec.trim_frac)
                 .num("wall_ms", rec.wall_ms)
                 .num("eval_ms", rec.eval_ms)
                 .finish();
@@ -107,6 +109,8 @@ mod tests {
             comm_time_s: 0.1,
             sim_time_s: 0.1 * (round as f64 + 1.0),
             stale_mean: 0.0,
+            rejected_clients: 0,
+            trim_frac: 0.0,
             wall_ms: 1.0,
             eval_ms: 0.0,
         }

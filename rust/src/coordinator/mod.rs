@@ -29,6 +29,12 @@
 //! * a [`ServerOptimizer`] ([`opt`]) turns the aggregated pseudo-gradient
 //!   into the global step — plain GD (`server_lr = 1` reproduces the
 //!   paper's Eq. 3 bit-for-bit), server momentum, or FedAdam;
+//! * a [`RobustAggregator`] ([`robust`], `[defense]`) combines each
+//!   step's decoded batch before the optimizer sees it — the default
+//!   [`WeightedMean`] reproduces the classic weighted average
+//!   bit-for-bit; trimmed mean, coordinate median, (Multi-)Krum and
+//!   norm clipping survive byzantine content attacks
+//!   (`[faults] byzantine_frac`);
 //! * a [`crate::simnet::NetworkModel`] plus `[network] jitter` derive
 //!   per-client links; every envelope's delivery time comes from them,
 //!   and each [`RoundRecord`] carries the step's virtual-time cost.
@@ -56,6 +62,7 @@ pub mod opt;
 pub mod parallel;
 pub mod policy;
 pub mod protocol;
+pub mod robust;
 pub mod schedule;
 pub mod server;
 pub mod traffic;
@@ -71,8 +78,13 @@ pub use policy::{
     Synchronous,
 };
 pub use protocol::{Ack, Broadcast, ClientMsg, ServerMsg, Upload, UploadError};
+pub use robust::{
+    build_aggregator, AggOutcome, CoordinateMedian, MultiKrum, NormClip,
+    RobustAggregator, TrimmedMean, WeightedMean,
+};
 pub use schedule::{
-    build_scheduler, ClientScheduler, FullParticipation, RoundRobin, UniformSampler,
+    build_scheduler, ClientScheduler, FullParticipation, ReliabilityGate, RoundRobin,
+    UniformSampler,
 };
 pub use server::Server;
 pub use traffic::Traffic;

@@ -30,6 +30,13 @@
 //! mean a client can be sent several versions while holding an older
 //! one — exactly the gap the downlink ledger's keyframe fallback
 //! (`[downlink] gap`) resynchronizes.
+//!
+//! Policies are also content-agnostic: *what* the aggregate is — plain
+//! weighted mean or a byzantine-robust estimator — is the
+//! [`crate::coordinator::RobustAggregator`] seam downstream of every
+//! trigger. The staleness multiplier folds into the per-client weight
+//! *before* the estimator runs, so a robust aggregate discounts stale
+//! contributions exactly as the historical weighted mean did.
 
 use crate::config::{ExperimentConfig, SessionKind};
 

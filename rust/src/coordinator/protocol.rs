@@ -20,6 +20,14 @@
 //! the downlink encoder returns the client's exact reconstruction for
 //! broadcasts ([`Broadcast::w`]) — caches of the wire decode, not side
 //! channels.
+//!
+//! Threat-model note: envelope *integrity* faults (doomed transfers,
+//! outage windows — `simnet::faults`) attack whether a message arrives;
+//! byzantine *content* faults attack what it says. The latter are
+//! modeled as a corruption of [`Upload::recon`] at the server boundary
+//! ([`crate::simnet::FaultLayer::corrupt`]) — the wire payload is
+//! treated as already decoded, and the defense lives one layer up in
+//! [`crate::coordinator::RobustAggregator`].
 
 use std::sync::Arc;
 

@@ -1,0 +1,533 @@
+//! Byzantine-robust aggregation over decoded client recons.
+//!
+//! PR 8 hardened the upload *envelope*: malformed messages are rejected
+//! at `submit_upload` with typed errors. A well-formed, plausible-but-
+//! poisoned recon still sailed straight into the weighted mean. A
+//! [`RobustAggregator`] closes that gap: it sits between the batch an
+//! [`crate::coordinator::AggregationPolicy`] collected and the server
+//! optimizer step, replacing the plain weighted mean with an estimator
+//! that bounds the influence of any `f` compromised contributors
+//! (Blanchard et al., "Machine Learning with Adversaries"; Yin et al.,
+//! "Byzantine-Robust Distributed Learning"; Sattler et al.,
+//! arXiv 1903.02891 for the FL + compression co-design argument).
+//!
+//! Determinism contract (the repo's core invariant):
+//!
+//! * [`WeightedMean`] is **bit-identical** to the pre-defense path: the
+//!   same `f64` weight total, the same `weighted_add` accumulation in
+//!   the same batch order as [`crate::coordinator::Server::apply_round`].
+//! * Every robust estimator first sorts the batch by **client index**
+//!   (ties by batch position), so its output is invariant under upload
+//!   arrival order — deadline/async sessions aggregate in arrival order,
+//!   and the estimator must not inherit that nondeterminism. Score and
+//!   value ties everywhere break toward the **lowest client index**.
+//! * Staleness-discounted weights are folded in wherever the estimator
+//!   admits weights: the mean family weights survivors, the median is a
+//!   weighted median, Krum uses geometry only for *selection* and the
+//!   weights for the final combination.
+//!
+//! The aggregate handed back is the normalized convex combination the
+//! server optimizer expects (`None` = no survivor, no-op round).
+
+use crate::config::{AggregatorKind, ExperimentConfig};
+use crate::util::vecmath;
+
+/// Outcome of one robust aggregation step.
+pub struct AggOutcome {
+    /// Normalized aggregate for the optimizer; `None` when nothing
+    /// survived (empty batch or zero surviving weight) — the round
+    /// counter still advances, the weights stay put.
+    pub update: Option<Vec<f32>>,
+    /// Clients whose contribution was discarded *wholesale* this step
+    /// (Krum/Multi-Krum non-selection), ascending client index.
+    /// Coordinate-wise estimators trim per coordinate and report mass
+    /// through `trim_frac` instead.
+    pub rejected: Vec<usize>,
+    /// Fraction of the batch's contribution mass trimmed, clipped or
+    /// rejected: `2k/n` for the β-trimmed mean, `(n−1)/n` for the
+    /// median, `rejected/n` for Krum, `clipped/n` for norm-clipping,
+    /// `0` for the plain mean.
+    pub trim_frac: f64,
+}
+
+impl AggOutcome {
+    fn empty() -> AggOutcome {
+        AggOutcome { update: None, rejected: Vec::new(), trim_frac: 0.0 }
+    }
+}
+
+/// A robust estimator over one aggregation batch.
+///
+/// `clients[i]` / `recons[i]` / `weights[i]` describe upload `i` in the
+/// order the policy collected the batch (sync pre-sorts by client,
+/// deadline/async are arrival-ordered). Implementations must be pure
+/// functions of the batch (no RNG, no wall clock — detlint-enforced)
+/// and deterministic under batch permutation, except [`WeightedMean`]
+/// which deliberately preserves batch order to stay bit-identical to
+/// the historical path.
+pub trait RobustAggregator: Send {
+    /// Short name for logs/labels.
+    fn name(&self) -> &'static str;
+
+    fn aggregate(
+        &self,
+        clients: &[usize],
+        recons: &[Vec<f32>],
+        weights: &[f32],
+        n_params: usize,
+    ) -> AggOutcome;
+}
+
+/// Batch positions sorted by (client index, batch position) — the
+/// canonical order every robust estimator works in.
+fn client_order(clients: &[usize]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..clients.len()).collect();
+    idx.sort_by_key(|&i| (clients[i], i));
+    idx
+}
+
+/// Normalized weighted mean over the batch positions in `idx`, in `idx`
+/// order. With `idx = 0..n` this is arithmetic-identical (same op
+/// sequence, bit for bit) to [`crate::coordinator::Server::apply_round`].
+fn weighted_mean_of(
+    idx: &[usize],
+    recons: &[Vec<f32>],
+    weights: &[f32],
+    n_params: usize,
+) -> Option<Vec<f32>> {
+    let total: f64 = idx.iter().map(|&i| weights[i] as f64).sum();
+    if idx.is_empty() || total <= 0.0 {
+        return None;
+    }
+    let mut agg = vec![0.0f32; n_params];
+    for &i in idx {
+        vecmath::weighted_add(&mut agg, &recons[i], (weights[i] as f64 / total) as f32);
+    }
+    Some(agg)
+}
+
+fn sq_dist(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0f64;
+    for (x, y) in a.iter().zip(b.iter()) {
+        let d = *x as f64 - *y as f64;
+        s += d * d;
+    }
+    s
+}
+
+// ---------------------------------------------------------------------
+// WeightedMean — today's path, bit-identical.
+
+/// The pre-defense aggregate: normalized weighted mean in batch order.
+pub struct WeightedMean;
+
+impl RobustAggregator for WeightedMean {
+    fn name(&self) -> &'static str {
+        "weighted_mean"
+    }
+
+    fn aggregate(
+        &self,
+        clients: &[usize],
+        recons: &[Vec<f32>],
+        weights: &[f32],
+        n_params: usize,
+    ) -> AggOutcome {
+        let idx: Vec<usize> = (0..clients.len()).collect();
+        AggOutcome {
+            update: weighted_mean_of(&idx, recons, weights, n_params),
+            rejected: Vec::new(),
+            trim_frac: 0.0,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// TrimmedMean — coordinate-wise β-trim (Yin et al.).
+
+/// Coordinate-wise trimmed mean: per coordinate, drop the `⌊β·n⌋`
+/// smallest and largest values (value ties broken by client index) and
+/// take the weighted mean of the survivors. `β = 0` degenerates to the
+/// weighted mean over the client-sorted batch, bit for bit.
+pub struct TrimmedMean {
+    /// Trim fraction per tail, `0 ≤ β < 0.5`.
+    pub beta: f64,
+}
+
+impl RobustAggregator for TrimmedMean {
+    fn name(&self) -> &'static str {
+        "trimmed_mean"
+    }
+
+    fn aggregate(
+        &self,
+        clients: &[usize],
+        recons: &[Vec<f32>],
+        weights: &[f32],
+        n_params: usize,
+    ) -> AggOutcome {
+        let n = clients.len();
+        if n == 0 {
+            return AggOutcome::empty();
+        }
+        let order = client_order(clients);
+        let k = ((self.beta * n as f64).floor() as usize).min((n - 1) / 2);
+        if k == 0 {
+            return AggOutcome {
+                update: weighted_mean_of(&order, recons, weights, n_params),
+                rejected: Vec::new(),
+                trim_frac: 0.0,
+            };
+        }
+        let mut agg = vec![0.0f32; n_params];
+        let mut any = false;
+        let mut pairs: Vec<(f32, usize)> = Vec::with_capacity(n);
+        let mut survivors: Vec<usize> = Vec::with_capacity(n - 2 * k);
+        for j in 0..n_params {
+            pairs.clear();
+            for (rank, &i) in order.iter().enumerate() {
+                pairs.push((recons[i][j], rank));
+            }
+            pairs.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            survivors.clear();
+            survivors.extend(pairs[k..n - k].iter().map(|p| p.1));
+            // Accumulate survivors in client order so the result is a
+            // pure function of the (client → value) map.
+            survivors.sort_unstable();
+            let total: f64 = survivors.iter().map(|&r| weights[order[r]] as f64).sum();
+            if total <= 0.0 {
+                continue;
+            }
+            any = true;
+            for &r in &survivors {
+                let i = order[r];
+                agg[j] += (weights[i] as f64 / total) as f32 * recons[i][j];
+            }
+        }
+        AggOutcome {
+            update: if any { Some(agg) } else { None },
+            rejected: Vec::new(),
+            trim_frac: (2 * k) as f64 / n as f64,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// CoordinateMedian — coordinate-wise weighted median.
+
+/// Coordinate-wise weighted median: per coordinate, the smallest value
+/// whose cumulative weight reaches half the total (value ties broken by
+/// client index). The 50%-breakdown member of the family.
+pub struct CoordinateMedian;
+
+impl RobustAggregator for CoordinateMedian {
+    fn name(&self) -> &'static str {
+        "coordinate_median"
+    }
+
+    fn aggregate(
+        &self,
+        clients: &[usize],
+        recons: &[Vec<f32>],
+        weights: &[f32],
+        n_params: usize,
+    ) -> AggOutcome {
+        let n = clients.len();
+        if n == 0 {
+            return AggOutcome::empty();
+        }
+        let order = client_order(clients);
+        let total: f64 = order.iter().map(|&i| weights[i] as f64).sum();
+        if total <= 0.0 {
+            return AggOutcome::empty();
+        }
+        let half = total / 2.0;
+        let mut agg = vec![0.0f32; n_params];
+        let mut pairs: Vec<(f32, usize)> = Vec::with_capacity(n);
+        for (j, slot) in agg.iter_mut().enumerate() {
+            pairs.clear();
+            for (rank, &i) in order.iter().enumerate() {
+                pairs.push((recons[i][j], rank));
+            }
+            pairs.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            let mut cum = 0.0f64;
+            for &(v, rank) in &pairs {
+                cum += weights[order[rank]] as f64;
+                if cum >= half {
+                    *slot = v;
+                    break;
+                }
+            }
+        }
+        AggOutcome {
+            update: Some(agg),
+            rejected: Vec::new(),
+            trim_frac: (n - 1) as f64 / n as f64,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Krum / Multi-Krum (Blanchard et al.).
+
+/// Multi-Krum selection: score each candidate by the sum of its
+/// `n − f − 2` smallest squared distances to the others, keep the `m`
+/// best-scored (score ties broken by client index), weighted-mean the
+/// survivors. `m = 1` is classic Krum (the name reflects it); `m = 0`
+/// auto-sizes to `n − f`, which at `f = 0` keeps everyone and
+/// degenerates to the weighted mean over the client-sorted batch.
+pub struct MultiKrum {
+    /// Assumed number of byzantine contributors.
+    pub f: usize,
+    /// Selection size; `0` = auto (`n − f`, at least 1).
+    pub m: usize,
+}
+
+impl RobustAggregator for MultiKrum {
+    fn name(&self) -> &'static str {
+        if self.m == 1 {
+            "krum"
+        } else {
+            "multi_krum"
+        }
+    }
+
+    fn aggregate(
+        &self,
+        clients: &[usize],
+        recons: &[Vec<f32>],
+        weights: &[f32],
+        n_params: usize,
+    ) -> AggOutcome {
+        let n = clients.len();
+        if n == 0 {
+            return AggOutcome::empty();
+        }
+        let order = client_order(clients);
+        let m_eff = if self.m == 0 {
+            n.saturating_sub(self.f).max(1)
+        } else {
+            self.m.min(n)
+        };
+        let mut ranks: Vec<usize> = (0..n).collect();
+        if m_eff < n {
+            // Pairwise squared distances over the client-ordered batch.
+            let mut d = vec![0.0f64; n * n];
+            for a in 0..n {
+                for b in a + 1..n {
+                    let dist = sq_dist(&recons[order[a]], &recons[order[b]]);
+                    d[a * n + b] = dist;
+                    d[b * n + a] = dist;
+                }
+            }
+            let neigh = n.saturating_sub(self.f + 2).max(1).min(n - 1);
+            let mut scores = vec![0.0f64; n];
+            let mut row: Vec<f64> = Vec::with_capacity(n - 1);
+            for (a, score) in scores.iter_mut().enumerate() {
+                row.clear();
+                for b in 0..n {
+                    if b != a {
+                        row.push(d[a * n + b]);
+                    }
+                }
+                row.sort_by(f64::total_cmp);
+                *score = row[..neigh].iter().sum();
+            }
+            // Rank by (score, client index) — `order` is ascending by
+            // client, so the rank itself is the deterministic tie-break.
+            ranks.sort_by(|&a, &b| scores[a].total_cmp(&scores[b]).then(a.cmp(&b)));
+            ranks.truncate(m_eff);
+            ranks.sort_unstable();
+        }
+        let selected: Vec<usize> = ranks.iter().map(|&r| order[r]).collect();
+        let mut rejected: Vec<usize> = (0..n)
+            .filter(|r| !ranks.contains(r))
+            .map(|r| clients[order[r]])
+            .collect();
+        rejected.sort_unstable();
+        AggOutcome {
+            update: weighted_mean_of(&selected, recons, weights, n_params),
+            trim_frac: rejected.len() as f64 / n as f64,
+            rejected,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// NormClip — bound every contribution's L2 norm.
+
+/// Norm clipping: any recon with `‖g‖ > τ` is rescaled to norm `τ`
+/// before the weighted mean — scale-amplify attackers lose their
+/// leverage but keep their vote. `τ ≤ 0` disables clipping and
+/// degenerates to the weighted mean over the client-sorted batch.
+pub struct NormClip {
+    /// L2 clip threshold; `0` = disabled.
+    pub tau: f64,
+}
+
+impl RobustAggregator for NormClip {
+    fn name(&self) -> &'static str {
+        "norm_clip"
+    }
+
+    fn aggregate(
+        &self,
+        clients: &[usize],
+        recons: &[Vec<f32>],
+        weights: &[f32],
+        n_params: usize,
+    ) -> AggOutcome {
+        let n = clients.len();
+        if n == 0 {
+            return AggOutcome::empty();
+        }
+        let order = client_order(clients);
+        if self.tau <= 0.0 {
+            return AggOutcome {
+                update: weighted_mean_of(&order, recons, weights, n_params),
+                rejected: Vec::new(),
+                trim_frac: 0.0,
+            };
+        }
+        let total: f64 = order.iter().map(|&i| weights[i] as f64).sum();
+        if total <= 0.0 {
+            return AggOutcome::empty();
+        }
+        let mut agg = vec![0.0f32; n_params];
+        let mut clipped = 0usize;
+        for &i in &order {
+            let wnorm = (weights[i] as f64 / total) as f32;
+            let norm = vecmath::norm(&recons[i]);
+            if norm > self.tau {
+                clipped += 1;
+                let scale = (self.tau / norm) as f32;
+                for (slot, &x) in agg.iter_mut().zip(recons[i].iter()) {
+                    *slot += wnorm * (scale * x);
+                }
+            } else {
+                vecmath::weighted_add(&mut agg, &recons[i], wnorm);
+            }
+        }
+        AggOutcome {
+            update: Some(agg),
+            rejected: Vec::new(),
+            trim_frac: clipped as f64 / n as f64,
+        }
+    }
+}
+
+/// Build the aggregator an [`ExperimentConfig`] describes.
+pub fn build_aggregator(cfg: &ExperimentConfig) -> Box<dyn RobustAggregator> {
+    match cfg.aggregator {
+        AggregatorKind::WeightedMean => Box::new(WeightedMean),
+        AggregatorKind::TrimmedMean => Box::new(TrimmedMean { beta: cfg.trim_beta }),
+        AggregatorKind::CoordinateMedian => Box::new(CoordinateMedian),
+        AggregatorKind::Krum => Box::new(MultiKrum { f: cfg.krum_f, m: 1 }),
+        AggregatorKind::MultiKrum => Box::new(MultiKrum { f: cfg.krum_f, m: cfg.krum_m }),
+        AggregatorKind::NormClip => Box::new(NormClip { tau: cfg.clip_tau }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batch() -> (Vec<usize>, Vec<Vec<f32>>, Vec<f32>) {
+        let clients = vec![0usize, 1, 2, 3, 4];
+        let recons = vec![
+            vec![0.10f32, -0.20, 0.30],
+            vec![0.12f32, -0.18, 0.28],
+            vec![0.08f32, -0.22, 0.33],
+            vec![0.11f32, -0.19, 0.31],
+            vec![0.09f32, -0.21, 0.29],
+        ];
+        let weights = vec![1.0f32, 2.0, 1.0, 1.5, 1.0];
+        (clients, recons, weights)
+    }
+
+    #[test]
+    fn weighted_mean_matches_apply_round_bitwise() {
+        let (clients, recons, weights) = batch();
+        let out = WeightedMean.aggregate(&clients, &recons, &weights, 3);
+        let agg = out.update.unwrap();
+        // Independent replica of Server::apply_round's arithmetic.
+        let total: f64 = weights.iter().map(|&w| w as f64).sum();
+        let mut want = vec![0.0f32; 3];
+        for (g, &wt) in recons.iter().zip(weights.iter()) {
+            vecmath::weighted_add(&mut want, g, (wt as f64 / total) as f32);
+        }
+        for (a, b) in agg.iter().zip(want.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(out.rejected.is_empty());
+        assert_eq!(out.trim_frac, 0.0);
+    }
+
+    #[test]
+    fn trimmed_mean_drops_the_outlier() {
+        let (mut clients, mut recons, mut weights) = batch();
+        clients.push(5);
+        recons.push(vec![100.0f32, -100.0, 100.0]); // attacker
+        weights.push(1.0);
+        let out = TrimmedMean { beta: 0.2 }.aggregate(&clients, &recons, &weights, 3);
+        let agg = out.update.unwrap();
+        assert!(agg.iter().all(|v| v.abs() < 1.0), "outlier leaked: {agg:?}");
+        assert!((out.trim_frac - 2.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn coordinate_median_is_the_middle_value() {
+        let clients = vec![0usize, 1, 2];
+        let recons = vec![vec![1.0f32], vec![5.0f32], vec![2.0f32]];
+        let weights = vec![1.0f32, 1.0, 1.0];
+        let out = CoordinateMedian.aggregate(&clients, &recons, &weights, 1);
+        assert_eq!(out.update.unwrap(), vec![2.0f32]);
+    }
+
+    #[test]
+    fn krum_selects_the_cluster_center_and_reports_rejections() {
+        let clients = vec![0usize, 1, 2, 3];
+        let recons = vec![
+            vec![0.10f32, 0.10],
+            vec![0.11f32, 0.09],
+            vec![0.10f32, 0.11],
+            vec![9.0f32, -9.0], // attacker, far away
+        ];
+        let weights = vec![1.0f32; 4];
+        let out = MultiKrum { f: 1, m: 1 }.aggregate(&clients, &recons, &weights, 2);
+        let agg = out.update.unwrap();
+        assert!(agg[0] < 1.0 && agg[1] < 1.0, "krum picked the attacker: {agg:?}");
+        assert_eq!(out.rejected.len(), 3);
+        assert!(out.rejected.contains(&3));
+    }
+
+    #[test]
+    fn norm_clip_caps_the_amplified_recon() {
+        let clients = vec![0usize, 1];
+        let recons = vec![vec![3.0f32, 4.0], vec![0.3f32, 0.4]];
+        let weights = vec![1.0f32, 1.0];
+        let out = NormClip { tau: 0.5 }.aggregate(&clients, &recons, &weights, 2);
+        let agg = out.update.unwrap();
+        // Both end up at norm ≤ 0.5; the mean's norm is ≤ 0.5 too.
+        assert!(vecmath::norm(&agg) <= 0.5 + 1e-6);
+        assert!((out.trim_frac - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_and_zero_weight_batches_are_noop() {
+        let aggs: Vec<Box<dyn RobustAggregator>> = vec![
+            Box::new(WeightedMean),
+            Box::new(TrimmedMean { beta: 0.2 }),
+            Box::new(CoordinateMedian),
+            Box::new(MultiKrum { f: 0, m: 0 }),
+            Box::new(NormClip { tau: 1.0 }),
+        ];
+        for a in &aggs {
+            assert!(a.aggregate(&[], &[], &[], 4).update.is_none(), "{}", a.name());
+            // A zero surviving weight total is a no-op round everywhere.
+            let out = a.aggregate(&[0], &[vec![1.0f32; 4]], &[0.0], 4);
+            assert!(out.update.is_none(), "{}", a.name());
+        }
+    }
+}

@@ -16,6 +16,12 @@
 //!
 //! Clients skipped in a round keep all their state (in particular the
 //! error-feedback memory) untouched until their next participation.
+//!
+//! Any scheduler can be wrapped in a [`ReliabilityGate`]: an EWMA of
+//! observed per-client upload losses (fed by `FedServer` from the same
+//! signals behind `lost_uploads()`/`recovered_clients()`) that
+//! quarantines chronically failing clients for `quarantine_rounds`
+//! selection rounds before re-admitting them.
 
 use crate::config::{ExperimentConfig, ScheduleKind};
 use crate::util::rng::{stream, Rng};
@@ -29,6 +35,22 @@ pub trait ClientScheduler {
 
     /// Short name for logs/labels.
     fn name(&self) -> &'static str;
+
+    /// Observe the outcome of one dispatched upload: `lost = true` when
+    /// the fault layer killed it mid-transfer, `false` when it landed.
+    /// Base schedulers ignore outcomes; reliability decorators feed
+    /// their per-client estimate from here.
+    fn observe(&mut self, _client: usize, _round: usize, _lost: bool) {}
+
+    /// Clients this scheduler refuses to select at `round` (ascending).
+    fn quarantined(&self, _round: usize) -> Vec<usize> {
+        Vec::new()
+    }
+
+    /// Quarantine windows opened so far.
+    fn quarantine_events(&self) -> u64 {
+        0
+    }
 }
 
 /// Cohort size for a participation fraction: `⌈frac·n⌉`, clamped to [1, n].
@@ -113,19 +135,128 @@ impl ClientScheduler for RoundRobin {
     }
 }
 
+/// Reliability-aware cohort gate: wraps any scheduler and filters its
+/// selection through a per-client EWMA of observed upload losses.
+///
+/// * Each dispatched upload's outcome updates the client's estimate:
+///   `e ← (1 − α)·e + α·[lost]`.
+/// * When `e` crosses `threshold` the client is quarantined — skipped
+///   by `select` for the next `quarantine_rounds` rounds — and its
+///   estimate resets to 0 so re-admission starts from a clean slate.
+/// * If quarantine would empty the cohort entirely, the gate steps
+///   aside and returns the inner selection unfiltered: a starved
+///   session is worse than a flaky one.
+///
+/// Fully deterministic: no draws, pure function of the observed loss
+/// sequence, so gated trajectories stay bit-identical across thread
+/// counts.
+pub struct ReliabilityGate {
+    inner: Box<dyn ClientScheduler>,
+    alpha: f64,
+    threshold: f64,
+    quarantine_rounds: usize,
+    /// Per-client loss EWMA, sized lazily to the fleet.
+    ewma: Vec<f64>,
+    /// Per-client quarantine horizon: skipped while `round < until[c]`.
+    until: Vec<usize>,
+    events: u64,
+}
+
+impl ReliabilityGate {
+    pub fn new(
+        inner: Box<dyn ClientScheduler>,
+        alpha: f64,
+        threshold: f64,
+        quarantine_rounds: usize,
+        n_clients: usize,
+    ) -> ReliabilityGate {
+        ReliabilityGate {
+            inner,
+            alpha,
+            threshold,
+            quarantine_rounds,
+            ewma: vec![0.0; n_clients],
+            until: vec![0; n_clients],
+            events: 0,
+        }
+    }
+
+    fn ensure(&mut self, n: usize) {
+        if self.ewma.len() < n {
+            self.ewma.resize(n, 0.0);
+            self.until.resize(n, 0);
+        }
+    }
+
+    /// The current loss estimate for one client (diagnostics/tests).
+    pub fn estimate(&self, client: usize) -> f64 {
+        self.ewma.get(client).copied().unwrap_or(0.0)
+    }
+}
+
+impl ClientScheduler for ReliabilityGate {
+    fn select(&mut self, round: usize, n_clients: usize) -> Vec<usize> {
+        self.ensure(n_clients);
+        let base = self.inner.select(round, n_clients);
+        let kept: Vec<usize> =
+            base.iter().copied().filter(|&c| round >= self.until[c]).collect();
+        if kept.is_empty() {
+            return base;
+        }
+        kept
+    }
+
+    fn name(&self) -> &'static str {
+        "reliability"
+    }
+
+    fn observe(&mut self, client: usize, round: usize, lost: bool) {
+        self.ensure(client + 1);
+        self.inner.observe(client, round, lost);
+        let x = if lost { 1.0 } else { 0.0 };
+        self.ewma[client] = (1.0 - self.alpha) * self.ewma[client] + self.alpha * x;
+        if round >= self.until[client] && self.ewma[client] > self.threshold {
+            // Quarantine: skip rounds round+1 ..= round+quarantine_rounds.
+            self.until[client] = round + 1 + self.quarantine_rounds;
+            self.ewma[client] = 0.0;
+            self.events += 1;
+        }
+    }
+
+    fn quarantined(&self, round: usize) -> Vec<usize> {
+        (0..self.until.len()).filter(|&c| round < self.until[c]).collect()
+    }
+
+    fn quarantine_events(&self) -> u64 {
+        self.events
+    }
+}
+
 /// Build the scheduler an [`ExperimentConfig`] describes (via
 /// `effective_schedule`, so `client_frac < 1` alone selects uniform
 /// sampling). `root` is the experiment's root RNG; the uniform sampler
 /// splits its own stream off it so schedules replay bit-for-bit from the
-/// experiment seed.
+/// experiment seed. `[defense] reliability = true` wraps the result in a
+/// [`ReliabilityGate`].
 pub fn build_scheduler(cfg: &ExperimentConfig, root: &Rng) -> Box<dyn ClientScheduler> {
-    match cfg.effective_schedule() {
+    let base: Box<dyn ClientScheduler> = match cfg.effective_schedule() {
         ScheduleKind::Full => Box::new(FullParticipation),
         ScheduleKind::Uniform => Box::new(UniformSampler::new(
             cfg.client_frac,
             root.split(stream::SCHEDULE),
         )),
         ScheduleKind::RoundRobin => Box::new(RoundRobin::new(cfg.client_frac)),
+    };
+    if cfg.reliability {
+        Box::new(ReliabilityGate::new(
+            base,
+            cfg.reliability_alpha,
+            cfg.reliability_threshold,
+            cfg.quarantine_rounds,
+            cfg.n_clients,
+        ))
+    } else {
+        base
     }
 }
 
@@ -234,6 +365,56 @@ mod tests {
         // Single-client populations are served at any fraction.
         let mut one = UniformSampler::new(0.3, Rng::new(9));
         assert_eq!(one.select(0, 1), vec![0]);
+    }
+
+    #[test]
+    fn reliability_gate_quarantine_lifecycle() {
+        // α = 0.5, threshold = 0.5: two consecutive losses push the EWMA
+        // to 0.75 > 0.5 and open a 3-round quarantine.
+        let mut g =
+            ReliabilityGate::new(Box::new(FullParticipation), 0.5, 0.5, 3, 4);
+        assert_eq!(g.select(0, 4), vec![0, 1, 2, 3], "clean slate selects everyone");
+        g.observe(2, 0, true);
+        assert!((g.estimate(2) - 0.5).abs() < 1e-12);
+        assert_eq!(g.select(1, 4), vec![0, 1, 2, 3], "at the threshold, not past it");
+        g.observe(2, 1, true);
+        assert_eq!(g.quarantine_events(), 1);
+        assert_eq!(g.estimate(2), 0.0, "estimate resets on quarantine entry");
+        // Skipped for exactly quarantine_rounds = 3 selection rounds…
+        assert_eq!(g.select(2, 4), vec![0, 1, 3]);
+        assert_eq!(g.select(3, 4), vec![0, 1, 3]);
+        assert_eq!(g.select(4, 4), vec![0, 1, 3]);
+        assert_eq!(g.quarantined(4), vec![2]);
+        // …then re-admitted, and a healthy upload keeps it in.
+        assert_eq!(g.select(5, 4), vec![0, 1, 2, 3], "re-admitted after serving time");
+        g.observe(2, 5, false);
+        assert_eq!(g.select(6, 4), vec![0, 1, 2, 3]);
+        assert_eq!(g.quarantine_events(), 1, "no re-trigger from the clean upload");
+    }
+
+    #[test]
+    fn reliability_gate_never_starves_the_session() {
+        let mut g =
+            ReliabilityGate::new(Box::new(FullParticipation), 1.0, 0.5, 10, 2);
+        g.observe(0, 0, true);
+        g.observe(1, 0, true);
+        assert_eq!(g.quarantine_events(), 2, "α = 1 trips on a single loss");
+        // Everyone is quarantined — the gate must step aside.
+        assert_eq!(g.select(1, 2), vec![0, 1], "an empty cohort would hang the session");
+    }
+
+    #[test]
+    fn reliability_gate_losses_decay_without_quarantine() {
+        // Isolated losses between successes never cross a 0.6 threshold
+        // at α = 0.3: the gate tolerates background flakiness.
+        let mut g =
+            ReliabilityGate::new(Box::new(FullParticipation), 0.3, 0.6, 3, 3);
+        for round in 0..20 {
+            g.observe(1, round, round % 3 == 0);
+            assert!(g.estimate(1) < 0.6, "round {round}: {}", g.estimate(1));
+        }
+        assert_eq!(g.quarantine_events(), 0);
+        assert_eq!(g.select(20, 3), vec![0, 1, 2]);
     }
 
     #[test]

@@ -50,6 +50,17 @@ impl Server {
         self.opt.step(&mut self.w, &agg);
         self.round += 1;
     }
+
+    /// Apply a pre-aggregated update (the output of a
+    /// [`crate::coordinator::robust::RobustAggregator`]). `None` is the
+    /// no-op round: weights stay put, the round counter advances —
+    /// exactly [`Server::apply_round`]'s empty-cohort path.
+    pub fn apply_update(&mut self, agg: Option<&[f32]>) {
+        if let Some(agg) = agg {
+            self.opt.step(&mut self.w, agg);
+        }
+        self.round += 1;
+    }
 }
 
 #[cfg(test)]

@@ -16,12 +16,13 @@ use anyhow::{bail, Result};
 
 use fed3sfc::cli::Args;
 use fed3sfc::config::{
-    BackendKind, CompressorKind, DatasetKind, DownlinkKind, ExperimentConfig, NetworkKind,
-    ScheduleKind, ServerOptKind, SessionKind,
+    AggregatorKind, BackendKind, CompressorKind, DatasetKind, DownlinkKind,
+    ExperimentConfig, NetworkKind, ScheduleKind, ServerOptKind, SessionKind,
 };
 use fed3sfc::coordinator::experiment::Experiment;
 use fed3sfc::data::{dirichlet_partition, Dataset};
 use fed3sfc::runtime::{open_backend, open_backend_kind, Backend};
+use fed3sfc::simnet::ByzantineMode;
 use fed3sfc::util::rng::{stream, Rng};
 
 const USAGE: &str = "\
@@ -74,16 +75,30 @@ run options:
   --tiers N              correlated device-class tiers (1 = homogeneous)
   --tier-spread F        tier severity in [0,1]
   --tier-compute-s F     worst-tier extra compute delay, virtual seconds
+  --byzantine-frac F     compromised-client fraction in [0,1] (the attack
+                         fires only while --faults is on)
+  --byzantine-mode NAME  sign_flip|scale|gaussian|collude recon attack
+  --fault-trace PATH     JSONL outage trace; replaces the dropout draw
+  --aggregator NAME      weighted_mean|trimmed_mean|coordinate_median|
+                         krum|multi_krum|norm_clip robust aggregation
+  --trim-beta F          trimmed-mean per-side trim fraction in [0,0.5)
+  --krum-f N --krum-m N  Krum assumed attackers / Multi-Krum picks
+  --clip-tau F           norm-clip threshold (0 = median-norm auto)
+  --reliability          quarantine chronically failing clients
+  --quarantine-rounds N  rounds a quarantined client sits out (default 3)
+  --reliability-alpha F  dropout EWMA smoothing factor in (0,1]
+  --reliability-threshold F  EWMA level that triggers quarantine
   --backend NAME         auto|pjrt|native (default auto: PJRT when the
                          artifact dir exists, else the pure-Rust native
                          backend; FED3SFC_BACKEND overrides auto)
 
 bench scenarios (deterministic stdout, pinned by snapshot tests):
-  bench byzantine        malformed-envelope probes vs the server boundary
+  bench byzantine        attack x aggregator defense matrix on a toy
+                         objective [--clients --seed], plus envelope probes
   bench faults           one fault stream through sync|deadline|async
   bench tiers            device-class fate table [--clients --seed --tiers
                          --tier-spread --tier-compute-s --dropout-p]
-  bench new [--out PATH] emit a ready-to-run [faults] TOML preset
+  bench new [--out PATH] emit a ready-to-run [faults]+[defense] TOML preset
 
 report options: --metrics PATH   (JSONL written by run --metrics)
 partition-viz options: --dataset --clients --alpha --samples --seed
@@ -99,7 +114,7 @@ fn main() {
 }
 
 fn dispatch(argv: Vec<String>) -> Result<()> {
-    let args = Args::parse(argv, &["no-ef", "help", "verbose", "faults"])?;
+    let args = Args::parse(argv, &["no-ef", "help", "verbose", "faults", "reliability"])?;
     if args.has_flag("help") || args.subcommand.is_empty() {
         print!("{USAGE}");
         return Ok(());
@@ -200,6 +215,27 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     cfg.fault_tiers = args.get_usize("tiers", cfg.fault_tiers)?;
     cfg.fault_tier_spread = args.get_f64("tier-spread", cfg.fault_tier_spread)?;
     cfg.fault_tier_compute_s = args.get_f64("tier-compute-s", cfg.fault_tier_compute_s)?;
+    cfg.byzantine_frac = args.get_f64("byzantine-frac", cfg.byzantine_frac)?;
+    if let Some(v) = args.get("byzantine-mode") {
+        cfg.byzantine_mode = ByzantineMode::parse(v)?;
+    }
+    if let Some(v) = args.get("fault-trace") {
+        cfg.fault_trace = v.to_string();
+    }
+    if let Some(v) = args.get("aggregator") {
+        cfg.aggregator = AggregatorKind::parse(v)?;
+    }
+    cfg.trim_beta = args.get_f64("trim-beta", cfg.trim_beta)?;
+    cfg.krum_f = args.get_usize("krum-f", cfg.krum_f)?;
+    cfg.krum_m = args.get_usize("krum-m", cfg.krum_m)?;
+    cfg.clip_tau = args.get_f64("clip-tau", cfg.clip_tau)?;
+    if args.has_flag("reliability") {
+        cfg.reliability = true;
+    }
+    cfg.quarantine_rounds = args.get_usize("quarantine-rounds", cfg.quarantine_rounds)?;
+    cfg.reliability_alpha = args.get_f64("reliability-alpha", cfg.reliability_alpha)?;
+    cfg.reliability_threshold =
+        args.get_f64("reliability-threshold", cfg.reliability_threshold)?;
     cfg.threads = args.get_usize("threads", cfg.threads)?;
     if let Some(v) = args.get("backend") {
         cfg.backend = BackendKind::parse(v)?;

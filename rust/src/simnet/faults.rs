@@ -24,16 +24,87 @@
 //!   tier index: a slow device is slow, laggy and flaky together, never
 //!   independently.
 //!
+//! * **Byzantine content attacks** — the last `⌈byzantine_frac · n⌋`
+//!   clients are compromised: their decoded recons are perturbed at
+//!   submit time ([`FaultLayer::corrupt`]) by the configured
+//!   [`ByzantineMode`] — sign-flip, scale-amplify, gaussian-noise, or a
+//!   colluding shared vector. The envelopes stay *well-formed* (finite
+//!   values, honest shapes), so they sail past PR 8's validation
+//!   boundary — defeating them is the robust aggregator's job
+//!   (`coordinator::robust`).
+//! * **Trace-driven schedules** — `[faults] trace = "fleet.jsonl"`
+//!   replays a recorded availability log ([`TraceWindow`] per line)
+//!   instead of the parametric dropout model: a client is down inside
+//!   its logged windows, and an upload in flight when a window opens is
+//!   lost, with recovery at the window's logged end.
+//!
 //! Determinism contract: draws happen in dispatch order on the dedicated
-//! stream (tier assignment first, in client order, at construction), so
-//! fault trajectories replay bit-for-bit from the experiment seed and
-//! are independent of worker-thread count — the server is the only
-//! caller and it is single-threaded. A disabled layer consumes **zero**
-//! draws and scales nothing, so `[faults]`-off runs are bit-identical to
-//! builds that predate the layer.
+//! stream (tier assignment first, in client order, at construction; a
+//! gaussian-noise attacker draws per corrupted coordinate at submit
+//! time, in submit order), so fault trajectories replay bit-for-bit
+//! from the experiment seed and are independent of worker-thread count —
+//! the server is the only caller and it is single-threaded. A disabled
+//! layer consumes **zero** draws and scales nothing, so `[faults]`-off
+//! runs are bit-identical to builds that predate the layer; likewise
+//! `byzantine_frac = 0` perturbs nothing and draws nothing, and a trace
+//! replay is draw-free by construction.
 
 use crate::simnet::ClientLink;
 use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+
+/// How a compromised client poisons its recon (well-formed, plausible
+/// payloads — the envelope validator cannot catch these).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ByzantineMode {
+    /// `g ← −g`: push the mean uphill.
+    SignFlip,
+    /// `g ← 10·g`: dominate the mean by magnitude.
+    ScaleAmplify,
+    /// `g ← g + ε`, `ε ~ N(0, 1)` per coordinate: drown the signal.
+    GaussianNoise,
+    /// Every attacker submits the same fixed vector: a tight colluding
+    /// cluster that targets distance-based defenses like Krum.
+    Collude,
+}
+
+impl ByzantineMode {
+    pub fn parse(s: &str) -> Result<ByzantineMode> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "sign_flip" | "sign-flip" | "signflip" => ByzantineMode::SignFlip,
+            "scale_amplify" | "scale-amplify" | "scale" => ByzantineMode::ScaleAmplify,
+            "gaussian_noise" | "gaussian-noise" | "gaussian" => ByzantineMode::GaussianNoise,
+            "collude" | "colluding" => ByzantineMode::Collude,
+            other => bail!(
+                "unknown byzantine mode '{other}' \
+                 (try sign_flip|scale_amplify|gaussian_noise|collude)"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ByzantineMode::SignFlip => "sign_flip",
+            ByzantineMode::ScaleAmplify => "scale_amplify",
+            ByzantineMode::GaussianNoise => "gaussian_noise",
+            ByzantineMode::Collude => "collude",
+        }
+    }
+}
+
+/// Scale-amplify attack factor.
+const AMPLIFY: f32 = 10.0;
+/// The colluding attackers' shared per-coordinate value.
+const COLLUDE_VALUE: f32 = -0.1;
+
+/// One logged availability outage: `client` is down over
+/// `[down_at, up_at)` in virtual seconds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceWindow {
+    pub client: usize,
+    pub down_at: f64,
+    pub up_at: f64,
+}
 
 /// The `[faults]` config table (see `ExperimentConfig::faults_config`).
 #[derive(Clone, Copy, Debug)]
@@ -54,6 +125,12 @@ pub struct FaultsConfig {
     pub tier_spread: f64,
     /// Extra upload delay (seconds) of the worst tier at spread 1.
     pub tier_compute_s: f64,
+    /// Fraction of the fleet that is compromised, in [0, 1]; the last
+    /// `round(frac · n)` client indices are the attackers. 0 = honest
+    /// fleet (and zero attack draws).
+    pub byzantine_frac: f64,
+    /// The compromised clients' poisoning strategy.
+    pub byzantine_mode: ByzantineMode,
 }
 
 impl Default for FaultsConfig {
@@ -67,6 +144,8 @@ impl Default for FaultsConfig {
             tiers: 1,
             tier_spread: 0.5,
             tier_compute_s: 0.05,
+            byzantine_frac: 0.0,
+            byzantine_mode: ByzantineMode::SignFlip,
         }
     }
 }
@@ -100,6 +179,10 @@ pub struct FaultLayer {
     /// `None` only for [`FaultLayer::disabled`]; an enabled layer always
     /// carries its dedicated stream.
     rng: Option<Rng>,
+    /// Recorded availability log; non-empty switches the loss model from
+    /// parametric draws to deterministic replay (sorted by `down_at`,
+    /// then client).
+    trace: Vec<TraceWindow>,
     lost: u64,
     recovered: u64,
 }
@@ -111,6 +194,7 @@ impl FaultLayer {
             cfg: FaultsConfig { enabled: false, ..FaultsConfig::default() },
             fates: (0..n).map(|_| ClientFate::best()).collect(),
             rng: None,
+            trace: Vec::new(),
             lost: 0,
             recovered: 0,
         }
@@ -138,7 +222,35 @@ impl FaultLayer {
                 }
             })
             .collect();
-        FaultLayer { cfg: *cfg, fates, rng: Some(rng), lost: 0, recovered: 0 }
+        FaultLayer { cfg: *cfg, fates, rng: Some(rng), trace: Vec::new(), lost: 0, recovered: 0 }
+    }
+
+    /// Install a recorded availability log: the parametric dropout model
+    /// is replaced by a deterministic, draw-free replay of `windows`.
+    pub fn set_trace(&mut self, mut windows: Vec<TraceWindow>) {
+        windows.sort_by(|a, b| {
+            a.down_at.total_cmp(&b.down_at).then(a.client.cmp(&b.client))
+        });
+        self.trace = windows;
+    }
+
+    /// Is the layer replaying a trace instead of drawing losses?
+    pub fn trace_active(&self) -> bool {
+        self.cfg.enabled && !self.trace.is_empty()
+    }
+
+    /// The logged outage that kills an upload in flight over
+    /// `(sent_at, recv_at]` for client `c`, if any: the earliest window
+    /// overlapping the transfer. Returns the window's end (the client's
+    /// logged recovery time).
+    pub fn trace_loss(&self, c: usize, sent_at: f64, recv_at: f64) -> Option<f64> {
+        if !self.trace_active() {
+            return None;
+        }
+        self.trace
+            .iter()
+            .find(|w| w.client == c && w.down_at <= recv_at && w.up_at > sent_at)
+            .map(|w| w.up_at)
     }
 
     pub fn enabled(&self) -> bool {
@@ -195,9 +307,10 @@ impl FaultLayer {
     /// An enabled layer *always* consumes exactly one draw here — even
     /// at probability 0 — so the stream position depends only on the
     /// dispatch sequence, never on tier or wave values. Disabled layers
-    /// draw nothing.
+    /// draw nothing, and a trace replay draws nothing either (losses are
+    /// decided deterministically from the log at submit time).
     pub fn draw_loss(&mut self, c: usize, now: f64) -> bool {
-        if !self.cfg.enabled {
+        if !self.cfg.enabled || !self.trace.is_empty() {
             return false;
         }
         let p = self.loss_probability(c, now);
@@ -215,9 +328,15 @@ impl FaultLayer {
         self.cfg.recover_s
     }
 
-    /// Is client `c` inside a crash window at `now`?
+    /// Is client `c` inside a crash window at `now`? Under a trace
+    /// replay the logged outage windows count too, so cohort selection
+    /// skips clients the log says are offline.
     pub fn is_down(&self, c: usize, now: f64) -> bool {
-        self.fates[c].down_until > now
+        if self.fates[c].down_until > now {
+            return true;
+        }
+        self.trace_active()
+            && self.trace.iter().any(|w| w.client == c && w.down_at <= now && now < w.up_at)
     }
 
     /// Open a crash window for `c` until virtual time `until`.
@@ -243,6 +362,119 @@ impl FaultLayer {
     pub fn set_reliability(&mut self, c: usize, mult: f64) {
         self.fates[c].rel_mult = mult;
     }
+
+    /// Number of compromised clients: `round(byzantine_frac · n)`, 0
+    /// when the layer is disabled.
+    pub fn byzantine_count(&self) -> usize {
+        if !self.cfg.enabled {
+            return 0;
+        }
+        ((self.cfg.byzantine_frac * self.fates.len() as f64).round() as usize)
+            .min(self.fates.len())
+    }
+
+    /// Is client `c` compromised? The attackers are the **last**
+    /// `byzantine_count()` client indices — deterministic, draw-free,
+    /// and disjoint by construction from the low-index clients most
+    /// scenario assertions pin.
+    pub fn is_byzantine(&self, c: usize) -> bool {
+        let count = self.byzantine_count();
+        count > 0 && c >= self.fates.len() - count
+    }
+
+    /// Poison client `c`'s decoded recon in place, per the configured
+    /// [`ByzantineMode`]. No-op (and draw-free) for honest clients and
+    /// disabled layers; only the gaussian mode draws — one normal per
+    /// coordinate, on the dedicated stream, in submit order.
+    pub fn corrupt(&mut self, c: usize, recon: &mut [f32]) {
+        if !self.is_byzantine(c) {
+            return;
+        }
+        match self.cfg.byzantine_mode {
+            ByzantineMode::SignFlip => {
+                for v in recon.iter_mut() {
+                    *v = -*v;
+                }
+            }
+            ByzantineMode::ScaleAmplify => {
+                for v in recon.iter_mut() {
+                    *v *= AMPLIFY;
+                }
+            }
+            ByzantineMode::GaussianNoise => {
+                let rng =
+                    self.rng.as_mut().expect("enabled fault layer carries its stream");
+                for v in recon.iter_mut() {
+                    *v += rng.normal() as f32;
+                }
+            }
+            ByzantineMode::Collude => {
+                for v in recon.iter_mut() {
+                    *v = COLLUDE_VALUE;
+                }
+            }
+        }
+    }
+}
+
+/// Parse an availability-log JSONL file: one object per line with
+/// numeric `client`, `down_at`, `up_at` fields, e.g.
+///
+/// ```text
+/// {"client": 3, "down_at": 0.8, "up_at": 2.5}
+/// ```
+///
+/// Blank lines and `#` comment lines are skipped. Windows must be
+/// finite, non-negative and well-ordered (`up_at > down_at`).
+pub fn load_trace(path: &str) -> Result<Vec<TraceWindow>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading [faults] trace '{path}'"))?;
+    parse_trace(&text).with_context(|| format!("parsing [faults] trace '{path}'"))
+}
+
+/// [`load_trace`] on in-memory text (the testable core).
+pub fn parse_trace(text: &str) -> Result<Vec<TraceWindow>> {
+    let mut windows = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let n = lineno + 1;
+        let client = json_number(line, "client")
+            .with_context(|| format!("line {n}: missing numeric \"client\""))?;
+        let down_at = json_number(line, "down_at")
+            .with_context(|| format!("line {n}: missing numeric \"down_at\""))?;
+        let up_at = json_number(line, "up_at")
+            .with_context(|| format!("line {n}: missing numeric \"up_at\""))?;
+        if client < 0.0 || client.fract() != 0.0 {
+            bail!("line {n}: \"client\" must be a non-negative integer, got {client}");
+        }
+        if !down_at.is_finite() || !up_at.is_finite() || down_at < 0.0 || up_at <= down_at {
+            bail!("line {n}: need finite 0 <= down_at < up_at, got [{down_at}, {up_at})");
+        }
+        windows.push(TraceWindow { client: client as usize, down_at, up_at });
+    }
+    Ok(windows)
+}
+
+/// Extract `"key": <number>` from one JSON object line. A deliberately
+/// minimal scanner — the trace schema is flat numeric fields, and the
+/// container image bakes in no JSON dependency.
+fn json_number(line: &str, key: &str) -> Result<f64> {
+    let needle = format!("\"{key}\"");
+    let at = line.find(&needle).with_context(|| format!("no \"{key}\" key"))?;
+    let rest = &line[at + needle.len()..];
+    let rest = rest.trim_start();
+    let rest = rest.strip_prefix(':').with_context(|| format!("no ':' after \"{key}\""))?;
+    let rest = rest.trim_start();
+    let end = rest
+        .find(|ch: char| !(ch.is_ascii_digit() || ch == '-' || ch == '+' || ch == '.'
+            || ch == 'e' || ch == 'E'))
+        .unwrap_or(rest.len());
+    rest[..end]
+        .parse::<f64>()
+        .with_context(|| format!("bad number for \"{key}\": '{}'", &rest[..end]))
 }
 
 impl ClientFate {
@@ -360,6 +592,119 @@ mod tests {
         for _ in 0..20 {
             assert!(!layer.draw_loss(1, 0.0), "rel_mult = 0 never loses");
         }
+    }
+
+    #[test]
+    fn byzantine_marking_is_the_tail_of_the_fleet() {
+        let c = FaultsConfig { enabled: true, byzantine_frac: 0.3, ..cfg(true) };
+        let layer = FaultLayer::new(&c, 10, Rng::new(1).split(stream::FAULTS));
+        assert_eq!(layer.byzantine_count(), 3);
+        for i in 0..7 {
+            assert!(!layer.is_byzantine(i), "client {i} should be honest");
+        }
+        for i in 7..10 {
+            assert!(layer.is_byzantine(i), "client {i} should be compromised");
+        }
+        // Disabled layer: nobody is byzantine regardless of the knob.
+        let off = FaultLayer::disabled(10);
+        assert_eq!(off.byzantine_count(), 0);
+    }
+
+    #[test]
+    fn corrupt_applies_each_mode_and_only_gaussian_draws() {
+        let base = vec![0.5f32, -0.25, 0.125];
+        let mk = |mode| FaultsConfig {
+            enabled: true,
+            byzantine_frac: 1.0,
+            byzantine_mode: mode,
+            ..cfg(true)
+        };
+        let mut flip =
+            FaultLayer::new(&mk(ByzantineMode::SignFlip), 1, Rng::new(2).split(stream::FAULTS));
+        let mut v = base.clone();
+        flip.corrupt(0, &mut v);
+        assert_eq!(v, vec![-0.5, 0.25, -0.125]);
+
+        let mut amp = FaultLayer::new(
+            &mk(ByzantineMode::ScaleAmplify),
+            1,
+            Rng::new(2).split(stream::FAULTS),
+        );
+        let mut v = base.clone();
+        amp.corrupt(0, &mut v);
+        assert_eq!(v, vec![5.0, -2.5, 1.25]);
+
+        let mut col =
+            FaultLayer::new(&mk(ByzantineMode::Collude), 1, Rng::new(2).split(stream::FAULTS));
+        let mut v = base.clone();
+        col.corrupt(0, &mut v);
+        assert!(v.iter().all(|&x| x == -0.1));
+
+        // Draw-free modes leave the stream untouched: the next dropout
+        // draw matches a fresh layer's first draw.
+        let mut fresh =
+            FaultLayer::new(&mk(ByzantineMode::SignFlip), 1, Rng::new(2).split(stream::FAULTS));
+        flip.set_dropout_p(0.5);
+        fresh.set_dropout_p(0.5);
+        assert_eq!(flip.draw_loss(0, 0.0), fresh.draw_loss(0, 0.0));
+
+        // Gaussian perturbs with finite noise and consumes draws.
+        let mut gau = FaultLayer::new(
+            &mk(ByzantineMode::GaussianNoise),
+            1,
+            Rng::new(2).split(stream::FAULTS),
+        );
+        let mut v = base.clone();
+        gau.corrupt(0, &mut v);
+        assert!(v.iter().all(|x| x.is_finite()));
+        assert_ne!(v, base);
+
+        // Honest clients are untouched in every mode.
+        let c = FaultsConfig { enabled: true, byzantine_frac: 0.5, ..cfg(true) };
+        let mut half = FaultLayer::new(&c, 4, Rng::new(2).split(stream::FAULTS));
+        let mut v = base.clone();
+        half.corrupt(0, &mut v);
+        assert_eq!(v, base);
+    }
+
+    #[test]
+    fn trace_replay_is_draw_free_and_kills_overlapping_transfers() {
+        let mut layer = FaultLayer::new(&cfg(true), 2, Rng::new(4).split(stream::FAULTS));
+        layer.set_trace(vec![
+            TraceWindow { client: 0, down_at: 1.0, up_at: 2.0 },
+            TraceWindow { client: 1, down_at: 5.0, up_at: 6.0 },
+        ]);
+        assert!(layer.trace_active());
+        // Selection-time availability follows the log.
+        assert!(!layer.is_down(0, 0.5));
+        assert!(layer.is_down(0, 1.0));
+        assert!(layer.is_down(0, 1.99));
+        assert!(!layer.is_down(0, 2.0), "half-open: up exactly at up_at");
+        // A transfer overlapping the window is lost, with logged recovery.
+        assert_eq!(layer.trace_loss(0, 0.5, 1.5), Some(2.0));
+        assert_eq!(layer.trace_loss(0, 0.5, 0.9), None);
+        assert_eq!(layer.trace_loss(0, 2.0, 3.0), None);
+        assert_eq!(layer.trace_loss(1, 0.5, 1.5), None, "other client's window");
+        // No draws: dispatch-time losses never fire in replay mode.
+        layer.set_dropout_p(1.0);
+        assert!(!layer.draw_loss(0, 0.0));
+    }
+
+    #[test]
+    fn trace_jsonl_parses_and_rejects_malformed_lines() {
+        let text = "\
+# fleet availability log
+{\"client\": 0, \"down_at\": 1.0, \"up_at\": 2.5}
+
+{\"client\": 3, \"down_at\": 0.25, \"up_at\": 0.75}
+";
+        let windows = parse_trace(text).unwrap();
+        assert_eq!(windows.len(), 2);
+        assert_eq!(windows[0], TraceWindow { client: 0, down_at: 1.0, up_at: 2.5 });
+        assert_eq!(windows[1], TraceWindow { client: 3, down_at: 0.25, up_at: 0.75 });
+        assert!(parse_trace("{\"client\": 0, \"down_at\": 2.0, \"up_at\": 1.0}").is_err());
+        assert!(parse_trace("{\"client\": -1, \"down_at\": 0.0, \"up_at\": 1.0}").is_err());
+        assert!(parse_trace("{\"down_at\": 0.0, \"up_at\": 1.0}").is_err());
     }
 
     #[test]

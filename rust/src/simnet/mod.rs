@@ -26,7 +26,9 @@ use std::collections::BinaryHeap;
 
 pub mod faults;
 
-pub use faults::{ClientFate, FaultLayer, FaultsConfig};
+pub use faults::{
+    load_trace, parse_trace, ByzantineMode, ClientFate, FaultLayer, FaultsConfig, TraceWindow,
+};
 
 /// A symmetric-per-client link model.
 #[derive(Clone, Copy, Debug)]

@@ -194,11 +194,13 @@ pub mod stream {
     /// Dataset synthesis, xor-mixed with the split index.
     pub const DATA_SPLIT: u64 = 0xDA7A;
     /// Adversarial fault layer (`simnet::faults`): device-class tier
-    /// assignment and per-dispatch dropout draws share this one stream —
-    /// tier factors are *correlated by construction* (one draw decides
-    /// compute × bandwidth × reliability together), and a disabled layer
-    /// consumes zero draws so `[faults]`-off trajectories are bit-identical
-    /// to runs built before the layer existed.
+    /// assignment, per-dispatch dropout draws, and the gaussian-noise
+    /// byzantine attacker's per-coordinate perturbations share this one
+    /// stream — tier factors are *correlated by construction* (one draw
+    /// decides compute × bandwidth × reliability together), draw-free
+    /// attack modes and trace replays consume nothing, and a disabled
+    /// layer consumes zero draws so `[faults]`-off trajectories are
+    /// bit-identical to runs built before the layer existed.
     pub const FAULTS: u64 = 0xFA_0175;
 }
 

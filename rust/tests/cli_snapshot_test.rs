@@ -4,9 +4,10 @@
 //! record/review workflow).
 //!
 //! These are the acceptance gate for the adversarial scenario pack: the
-//! byzantine-envelope rejection table, the faults-vs-policies matrix,
-//! the tier fate table, the `[faults]` preset, and the NaN-sentinel
-//! (`-`) rendering of `report` all live here.
+//! byzantine-envelope rejection table plus the attack × aggregator
+//! defense matrix, the faults-vs-policies matrix, the tier fate table,
+//! the `[faults]`+`[defense]` preset, and the NaN-sentinel (`-`)
+//! rendering of `report` all live here.
 
 mod common;
 
@@ -28,7 +29,7 @@ fn unknown_bench_scenario_is_a_clean_error() {
 }
 
 #[test]
-fn bench_byzantine_pins_the_envelope_boundary() {
+fn bench_byzantine_pins_the_envelope_boundary_and_defense_matrix() {
     assert_cli_snapshot("bench_byzantine", &["bench", "byzantine"]);
 }
 
@@ -82,5 +83,8 @@ fn bench_new_out_writes_a_valid_preset() {
         .expect("emitted preset must parse and validate");
     assert!(cfg.faults, "preset must enable the fault layer");
     assert_eq!(cfg.fault_tiers, 3);
+    assert_eq!(cfg.aggregator, fed3sfc::config::AggregatorKind::TrimmedMean);
+    assert!(cfg.reliability, "preset must enable the reliability gate");
+    assert!((cfg.byzantine_frac - 0.25).abs() < 1e-12);
     std::fs::remove_file(&path).ok();
 }

@@ -1,0 +1,253 @@
+//! Defense-stack integration tests: byzantine content attacks, robust
+//! aggregation, trace-driven fault schedules and the reliability
+//! quarantine, end to end through [`Experiment`] on the native backend.
+//!
+//! The acceptance contract pinned here:
+//!
+//! * under a sign-flip attack (`byzantine_frac = 0.3`) the trimmed mean
+//!   and (Multi-)Krum finish within 10% of the attack-free baseline's
+//!   final loss, while the undefended weighted mean measurably diverges;
+//! * defense-on trajectories are bit-identical for 1 vs 4 worker
+//!   threads in all three session modes;
+//! * `weighted_mean` with `[faults]` off is bit-identical to a config
+//!   that never mentions the `[defense]` table — the robust seam adds
+//!   zero arithmetic to the historical path;
+//! * a trace-driven outage quarantines the chronically failing client,
+//!   sits it out for `quarantine_rounds`, re-admits it, and its first
+//!   post-quarantine upload aggregates normally.
+
+mod common;
+
+use fed3sfc::config::{
+    AggregatorKind, CompressorKind, DatasetKind, ExperimentConfig, NetworkKind,
+    SessionKind,
+};
+use fed3sfc::coordinator::{Experiment, RoundRecord};
+use fed3sfc::simnet::ByzantineMode;
+
+fn assert_records_bit_identical(a: &[RoundRecord], b: &[RoundRecord]) {
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b.iter()) {
+        assert_eq!(x.round, y.round);
+        assert_eq!(x.n_selected, y.n_selected, "round {}", x.round);
+        assert_eq!(x.test_acc.to_bits(), y.test_acc.to_bits(), "round {}", x.round);
+        assert_eq!(x.test_loss.to_bits(), y.test_loss.to_bits(), "round {}", x.round);
+        assert_eq!(x.up_bytes_cum, y.up_bytes_cum, "round {}", x.round);
+        assert_eq!(x.sim_time_s.to_bits(), y.sim_time_s.to_bits(), "round {}", x.round);
+        assert_eq!(x.stale_mean.to_bits(), y.stale_mean.to_bits(), "round {}", x.round);
+        assert_eq!(x.rejected_clients, y.rejected_clients, "round {}", x.round);
+        assert_eq!(x.trim_frac.to_bits(), y.trim_frac.to_bits(), "round {}", x.round);
+    }
+}
+
+/// The fig-1-shaped workload scaled to tier-1 size: 3SFC uplink, sync
+/// barrier, near-iid partition (`alpha = 100`) so a Krum-selected
+/// single contribution tracks the cohort mean.
+fn attack_cfg(frac: f64, aggregator: AggregatorKind) -> ExperimentConfig {
+    ExperimentConfig {
+        dataset: DatasetKind::SynthSmall,
+        compressor: CompressorKind::ThreeSfc,
+        n_clients: 6,
+        rounds: 12,
+        k_local: 5,
+        lr: 0.05,
+        alpha: 100.0,
+        train_samples: 240,
+        test_samples: 60,
+        eval_every: 1,
+        seed: 42,
+        faults: true,
+        byzantine_frac: frac,
+        byzantine_mode: ByzantineMode::SignFlip,
+        aggregator,
+        trim_beta: 0.34, // floor(0.34·6) = 2 per side — covers the 2 attackers
+        krum_f: 2,
+        ..ExperimentConfig::default()
+    }
+}
+
+fn final_loss(cfg: ExperimentConfig) -> f64 {
+    let be = common::native();
+    let mut exp = Experiment::new(cfg, &be).unwrap();
+    let recs = exp.run().unwrap();
+    let last = recs.last().unwrap();
+    assert!(last.test_loss.is_finite(), "loss diverged to non-finite");
+    last.test_loss
+}
+
+#[test]
+fn robust_aggregators_survive_the_sign_flip_attack_the_mean_does_not() {
+    let base = final_loss(attack_cfg(0.0, AggregatorKind::WeightedMean));
+    let mean = final_loss(attack_cfg(0.3, AggregatorKind::WeightedMean));
+    let trimmed = final_loss(attack_cfg(0.3, AggregatorKind::TrimmedMean));
+    let krum = final_loss(attack_cfg(0.3, AggregatorKind::Krum));
+    // The defenses track the attack-free baseline within 10%.
+    assert!(
+        trimmed <= base * 1.10,
+        "trimmed mean lost the baseline: {trimmed:.4} vs {base:.4}"
+    );
+    assert!(krum <= base * 1.10, "krum lost the baseline: {krum:.4} vs {base:.4}");
+    // The undefended mean measurably diverges: outside the 10% band and
+    // strictly worse than both defenses.
+    assert!(
+        mean > base * 1.10,
+        "sign-flip should hurt the plain mean: {mean:.4} vs {base:.4}"
+    );
+    assert!(mean > trimmed && mean > krum, "defenses must beat the mean under attack");
+}
+
+fn defended_cfg(session: SessionKind, threads: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig {
+        dataset: DatasetKind::SynthSmall,
+        compressor: CompressorKind::Dgc,
+        n_clients: 6,
+        rounds: 6,
+        k_local: 5,
+        lr: 0.05,
+        train_samples: 240,
+        test_samples: 50,
+        eval_every: 6,
+        seed: 42,
+        session,
+        threads,
+        faults: true,
+        byzantine_frac: 0.3,
+        byzantine_mode: ByzantineMode::SignFlip,
+        aggregator: AggregatorKind::TrimmedMean,
+        trim_beta: 0.34,
+        reliability: true,
+        quarantine_rounds: 2,
+        reliability_alpha: 0.5,
+        reliability_threshold: 0.7,
+        ..ExperimentConfig::default()
+    };
+    match session {
+        // The barrier cannot absorb losses: content attack only.
+        SessionKind::Sync => {}
+        SessionKind::Deadline => {
+            cfg.network = NetworkKind::Custom;
+            cfg.net_up_mbps = 0.1;
+            cfg.net_down_mbps = 1.0;
+            cfg.net_latency_ms = 1.0;
+            cfg.net_jitter = 0.5;
+            cfg.deadline_s = 0.08;
+            cfg.staleness_decay = 0.5;
+            cfg.fault_dropout_p = 0.3;
+            cfg.fault_recover_s = 0.5;
+        }
+        SessionKind::Async => {
+            cfg.buffer_k = 2;
+            cfg.staleness_decay = 0.5;
+            cfg.net_jitter = 0.3;
+            cfg.fault_dropout_p = 0.25;
+            cfg.fault_recover_s = 0.3;
+        }
+    }
+    cfg
+}
+
+#[test]
+fn defended_trajectories_are_thread_count_independent_in_all_session_modes() {
+    for session in [SessionKind::Sync, SessionKind::Deadline, SessionKind::Async] {
+        let be = common::native();
+        let mut one = Experiment::new(defended_cfg(session, 1), &be).unwrap();
+        let a = one.run().unwrap();
+        let mut four = Experiment::new(defended_cfg(session, 4), &be).unwrap();
+        let b = four.run().unwrap();
+        assert_records_bit_identical(&a, &b);
+        assert_eq!(
+            one.fed.quarantine_events(),
+            four.fed.quarantine_events(),
+            "{session:?}: quarantine ledger must not see threads"
+        );
+    }
+}
+
+#[test]
+fn default_defense_table_is_bit_identical_to_a_config_that_never_mentions_it() {
+    // weighted_mean + faults off must reproduce the pre-defense
+    // trajectory bit for bit, even with every inert defense knob set.
+    let plain = ExperimentConfig {
+        dataset: DatasetKind::SynthSmall,
+        compressor: CompressorKind::ThreeSfc,
+        n_clients: 4,
+        rounds: 4,
+        k_local: 5,
+        lr: 0.05,
+        train_samples: 200,
+        test_samples: 50,
+        eval_every: 4,
+        seed: 7,
+        net_jitter: 0.4,
+        ..ExperimentConfig::default()
+    };
+    let mut inert = plain.clone();
+    inert.byzantine_frac = 0.9; // faults off ⇒ zero compromised clients
+    inert.byzantine_mode = ByzantineMode::Collude;
+    inert.trim_beta = 0.4;
+    inert.krum_f = 3;
+    inert.clip_tau = 0.001;
+    let be = common::native();
+    let a = Experiment::new(plain, &be).unwrap().run().unwrap();
+    let b = Experiment::new(inert, &be).unwrap().run().unwrap();
+    assert_records_bit_identical(&a, &b);
+    assert!(a.iter().all(|r| r.rejected_clients == 0 && r.trim_frac == 0.0));
+}
+
+#[test]
+fn trace_outage_quarantines_then_readmits_the_failing_client() {
+    // Client 2 is down over [0, 1.2) virtual seconds: its round-0 upload
+    // dies (trace-driven, draw-free), the reliability gate quarantines
+    // it for 2 rounds, and its first post-quarantine upload aggregates
+    // normally once the outage window has passed.
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("fed3sfc_trace_{}.jsonl", std::process::id()));
+    std::fs::write(
+        &path,
+        "# client 2: one outage window over its first upload\n\
+         {\"client\": 2, \"down_at\": 0.0, \"up_at\": 1.2}\n",
+    )
+    .unwrap();
+    let cfg = ExperimentConfig {
+        dataset: DatasetKind::SynthSmall,
+        compressor: CompressorKind::Dgc,
+        n_clients: 3,
+        rounds: 5,
+        k_local: 5,
+        lr: 0.05,
+        train_samples: 150,
+        test_samples: 50,
+        eval_every: 5,
+        seed: 11,
+        session: SessionKind::Deadline,
+        deadline_s: 5.0,
+        staleness_decay: 0.5,
+        faults: true,
+        fault_dropout_p: 1.0, // would doom everything — the trace replaces it
+        fault_trace: path.to_str().unwrap().to_string(),
+        reliability: true,
+        quarantine_rounds: 2,
+        reliability_alpha: 1.0,
+        reliability_threshold: 0.5,
+        ..ExperimentConfig::default()
+    };
+    let be = common::native();
+    let mut exp = Experiment::new(cfg, &be).unwrap();
+    let recs = exp.run().unwrap();
+    std::fs::remove_file(&path).ok();
+
+    assert_eq!(recs.len(), 5);
+    // Round 0: the outage kills client 2's upload mid-transfer.
+    assert_eq!(recs[0].n_selected, 2, "round 0 must lose client 2");
+    assert_eq!(exp.fed.lost_uploads(), 1, "the trace dooms exactly one upload");
+    // Rounds 1–2: quarantined (EWMA 1.0 > 0.5), not even dispatched.
+    assert_eq!(recs[1].n_selected, 2, "round 1: client 2 quarantined");
+    assert_eq!(recs[2].n_selected, 2, "round 2: client 2 quarantined");
+    // Round 3+: re-admitted; the window is long gone, the upload lands
+    // and aggregates like any other.
+    assert_eq!(recs[3].n_selected, 3, "round 3: client 2 re-admitted");
+    assert_eq!(recs[4].n_selected, 3, "round 4: client 2 stays");
+    assert_eq!(exp.fed.quarantine_events(), 1);
+    assert!(exp.fed.quarantined_now().is_empty(), "quarantine must have expired");
+    assert!(recs.iter().all(|r| r.test_loss.is_finite()));
+}

@@ -1,0 +1,148 @@
+//! Property tests for the byzantine-robust aggregators
+//! (`coordinator::robust`): the determinism contract every estimator
+//! must honor, pinned independently of any session.
+//!
+//! * disabled thresholds (`β = 0`, `f = 0, m = 0`, `τ = 0`) degenerate
+//!   to the plain weighted mean **bitwise** on a client-sorted batch;
+//! * robust estimators are invariant under batch permutation (arrival
+//!   order must not leak into deadline/async aggregates);
+//! * Krum breaks score ties toward the lowest client index, so tied
+//!   geometries cannot make two runs disagree.
+
+use fed3sfc::coordinator::{
+    AggOutcome, CoordinateMedian, MultiKrum, NormClip, RobustAggregator, TrimmedMean,
+    WeightedMean,
+};
+
+/// A heterogeneous client-sorted batch: 5 clients, 6 params, distinct
+/// weights — every estimator has something to chew on.
+fn batch() -> (Vec<usize>, Vec<Vec<f32>>, Vec<f32>) {
+    let clients = vec![0usize, 1, 2, 3, 4];
+    let recons = vec![
+        vec![0.10f32, -0.20, 0.30, 0.01, -0.05, 0.40],
+        vec![0.12f32, -0.18, 0.28, 0.02, -0.04, 0.38],
+        vec![0.08f32, -0.22, 0.33, 0.00, -0.06, 0.41],
+        vec![0.11f32, -0.19, 0.31, 0.015, -0.045, 0.39],
+        vec![2.50f32, 2.50, -2.50, 2.50, -2.50, 2.50], // outlier
+    ];
+    let weights = vec![1.0f32, 2.0, 1.0, 1.5, 1.0];
+    (clients, recons, weights)
+}
+
+/// Apply `perm` to the batch: position `i` of the result holds what was
+/// at position `perm[i]` — the same (client → recon, weight) map in a
+/// different arrival order.
+fn permute(
+    perm: &[usize],
+    clients: &[usize],
+    recons: &[Vec<f32>],
+    weights: &[f32],
+) -> (Vec<usize>, Vec<Vec<f32>>, Vec<f32>) {
+    (
+        perm.iter().map(|&i| clients[i]).collect(),
+        perm.iter().map(|&i| recons[i].clone()).collect(),
+        perm.iter().map(|&i| weights[i]).collect(),
+    )
+}
+
+fn assert_update_bits_equal(a: &AggOutcome, b: &AggOutcome, what: &str) {
+    let (ua, ub) = (a.update.as_ref().unwrap(), b.update.as_ref().unwrap());
+    assert_eq!(ua.len(), ub.len(), "{what}: length mismatch");
+    for (j, (x, y)) in ua.iter().zip(ub.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: coord {j}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn disabled_thresholds_degenerate_to_the_weighted_mean_bitwise() {
+    let (clients, recons, weights) = batch();
+    let want = WeightedMean.aggregate(&clients, &recons, &weights, 6);
+    let disabled: Vec<(&str, Box<dyn RobustAggregator>)> = vec![
+        ("trimmed beta=0", Box::new(TrimmedMean { beta: 0.0 })),
+        ("krum f=0 m=0", Box::new(MultiKrum { f: 0, m: 0 })),
+        ("clip tau=0", Box::new(NormClip { tau: 0.0 })),
+    ];
+    for (what, agg) in &disabled {
+        let got = agg.aggregate(&clients, &recons, &weights, 6);
+        assert_update_bits_equal(&got, &want, what);
+        assert!(got.rejected.is_empty(), "{what}: rejected without a threshold");
+        assert_eq!(got.trim_frac, 0.0, "{what}: trimmed without a threshold");
+    }
+}
+
+#[test]
+fn robust_estimators_are_permutation_invariant() {
+    let (clients, recons, weights) = batch();
+    // Every cyclic shift plus a hand-picked scramble: if arrival order
+    // leaks anywhere, one of these catches it.
+    let perms: Vec<Vec<usize>> = vec![
+        vec![0, 1, 2, 3, 4],
+        vec![4, 3, 2, 1, 0],
+        vec![2, 4, 0, 3, 1],
+        vec![1, 2, 3, 4, 0],
+        vec![3, 0, 4, 1, 2],
+    ];
+    let estimators: Vec<(&str, Box<dyn RobustAggregator>)> = vec![
+        ("trimmed beta=0.2", Box::new(TrimmedMean { beta: 0.2 })),
+        ("median", Box::new(CoordinateMedian)),
+        ("krum f=1", Box::new(MultiKrum { f: 1, m: 1 })),
+        ("multi_krum f=1 m=3", Box::new(MultiKrum { f: 1, m: 3 })),
+        ("clip tau=0.5", Box::new(NormClip { tau: 0.5 })),
+    ];
+    for (what, agg) in &estimators {
+        let want = agg.aggregate(&clients, &recons, &weights, 6);
+        for perm in &perms {
+            let (pc, pr, pw) = permute(perm, &clients, &recons, &weights);
+            let got = agg.aggregate(&pc, &pr, &pw, 6);
+            assert_update_bits_equal(&got, &want, &format!("{what} perm {perm:?}"));
+            assert_eq!(got.rejected, want.rejected, "{what} perm {perm:?}: rejected");
+            assert_eq!(
+                got.trim_frac.to_bits(),
+                want.trim_frac.to_bits(),
+                "{what} perm {perm:?}: trim_frac"
+            );
+        }
+    }
+}
+
+#[test]
+fn krum_breaks_score_ties_toward_the_lowest_client_index() {
+    // Two identical pairs: within-pair distance 0, across-pair distance
+    // 2, so with f=0 every candidate's neighbour sum ties at exactly the
+    // same score. The winner must be client 0 — the lowest index — no
+    // matter how the batch arrives.
+    let clients = vec![0usize, 1, 2, 3];
+    let recons = vec![
+        vec![1.0f32, 0.0],
+        vec![1.0f32, 0.0],
+        vec![0.0f32, 1.0],
+        vec![0.0f32, 1.0],
+    ];
+    let weights = vec![1.0f32; 4];
+    let krum = MultiKrum { f: 0, m: 1 };
+    for perm in [vec![0usize, 1, 2, 3], vec![3, 2, 1, 0], vec![2, 0, 3, 1]] {
+        let (pc, pr, pw) = permute(&perm, &clients, &recons, &weights);
+        let out = krum.aggregate(&pc, &pr, &pw, 2);
+        let u = out.update.unwrap();
+        assert_eq!(
+            (u[0].to_bits(), u[1].to_bits()),
+            (1.0f32.to_bits(), 0.0f32.to_bits()),
+            "perm {perm:?} did not select client 0's recon"
+        );
+        assert_eq!(out.rejected, vec![1, 2, 3], "perm {perm:?}");
+        assert!((out.trim_frac - 0.75).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn weighted_median_follows_the_dominant_weight() {
+    // One client holds more than half the total weight: the weighted
+    // median is its value on every coordinate, wherever it sorts.
+    let clients = vec![0usize, 1, 2];
+    let recons = vec![vec![-1.0f32, 5.0], vec![0.0f32, -3.0], vec![1.0f32, 0.5]];
+    let weights = vec![1.0f32, 4.0, 1.0];
+    let out = CoordinateMedian.aggregate(&clients, &recons, &weights, 2);
+    let u = out.update.unwrap();
+    assert_eq!(u[0].to_bits(), 0.0f32.to_bits());
+    assert_eq!(u[1].to_bits(), (-3.0f32).to_bits());
+}
