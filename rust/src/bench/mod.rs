@@ -239,6 +239,32 @@ pub fn env_usize(name: &str, default: usize) -> usize {
         .unwrap_or(default)
 }
 
+/// Peak resident set size of this process in bytes (`VmHWM` from
+/// `/proc/self/status`), or `None` where the probe does not exist
+/// (non-Linux, or a hardened procfs). The high-water mark — not the
+/// current RSS — is what `bench scale` reports: it is monotone over the
+/// run, so it captures the worst cohort the process ever held.
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest.trim().trim_end_matches("kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
+/// Render an optional byte count for bench tables: `12.3 MiB`, or the
+/// `-` sentinel when the probe is unavailable (keeps snapshot goldens
+/// platform-independent).
+pub fn fmt_bytes_opt(bytes: Option<u64>) -> String {
+    match bytes {
+        Some(b) => format!("{:.1} MiB", b as f64 / (1024.0 * 1024.0)),
+        None => "-".to_string(),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -317,5 +343,19 @@ mod tests {
     #[test]
     fn env_knob_defaults() {
         assert_eq!(env_usize("FED3SFC_DEFINITELY_UNSET", 7), 7);
+    }
+
+    #[test]
+    #[cfg(target_os = "linux")]
+    fn peak_rss_probe_reads_vmhwm() {
+        let peak = peak_rss_bytes().expect("Linux exposes VmHWM");
+        // Any running process has touched at least a page.
+        assert!(peak >= 4096, "implausible peak RSS {peak}");
+    }
+
+    #[test]
+    fn byte_formatter_has_a_portable_sentinel() {
+        assert_eq!(fmt_bytes_opt(None), "-");
+        assert_eq!(fmt_bytes_opt(Some(12 * 1024 * 1024)), "12.0 MiB");
     }
 }

@@ -21,6 +21,14 @@
 //!   `[faults]` config draws (tier → bandwidth × compute × reliability).
 //! * `bench new` — emits a ready-to-run `[faults]`+`[defense]` TOML
 //!   preset (self-validated through [`ExperimentConfig::from_toml_str`]).
+//! * `bench scale` — drives the `[scale]` machinery (lazy
+//!   [`crate::coordinator::ClientStore`] + sharded
+//!   [`crate::coordinator::EdgeAggregator`]) over disjoint cohorts of a
+//!   large synthetic fleet: per-round shard occupancy and spill
+//!   accounting, a drain-order invariance check across shard counts, a
+//!   spill round-trip bit-exactness count, and an eager-store contrast.
+//!   `--measure` adds wall-clock rounds/s and peak RSS (deliberately
+//!   excluded from the snapshot golden: timing is machine-local).
 //!
 //! `report` summarizes a metrics JSONL file written by `run --metrics`,
 //! rendering the ledger's NaN no-data sentinels (serialized as JSON
@@ -28,13 +36,15 @@
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::bench::{fmt_bytes_opt, peak_rss_bytes, time_it};
 use crate::cli::Args;
 use crate::compress::{DenseDownlink, Payload};
-use crate::config::ExperimentConfig;
+use crate::config::{ExperimentConfig, SpillKind};
 use crate::coordinator::{
-    AggregationPolicy, BufferedAsync, ClientMsg, CoordinateMedian, Deadline, Directive,
-    FedServer, FullParticipation, MultiKrum, NormClip, RobustAggregator, Server,
-    ServerMsg, Synchronous, TrimmedMean, Upload, WeightedMean,
+    AggregationPolicy, BufferedAsync, ClientMsg, ClientStore, CoordinateMedian,
+    Deadline, Directive, EdgeAggregator, FedServer, FullParticipation, MultiKrum,
+    NormClip, RobustAggregator, Server, ServerMsg, Synchronous, TrimmedMean, Upload,
+    WeightedMean,
 };
 use crate::simnet::{ByzantineMode, FaultLayer, FaultsConfig, NetworkModel};
 use crate::util::json::{parse as parse_json, Value};
@@ -55,6 +65,7 @@ const SCENARIOS: &[(&str, fn(&Args) -> Result<String>)] = &[
     ("faults", bench_faults),
     ("tiers", bench_tiers),
     ("new", bench_new),
+    ("scale", bench_scale),
 ];
 
 pub fn cmd_bench(args: &Args) -> Result<()> {
@@ -527,6 +538,200 @@ fn bench_new(args: &Args) -> Result<String> {
         }
     }
     Ok(FAULTS_PRESET.to_string())
+}
+
+/// The deterministic EF residual `bench scale` writes into client `id`
+/// — a pure function of the id, so restore-after-spill is checkable
+/// without keeping the originals around.
+fn scale_ef(id: usize, n_params: usize) -> Vec<f32> {
+    (0..n_params).map(|j| ((id * 31 + j) % 97) as f32 * 0.125).collect()
+}
+
+/// A fabricated upload for `bench scale`: the edge tree only inspects
+/// `client` (routing) and `weight` (partial sums), so the payload is a
+/// one-coordinate stand-in.
+fn scale_upload(id: usize, round: usize) -> Upload {
+    Upload {
+        client: id,
+        round,
+        sent_at: round as f64,
+        payload: Payload::Dense { g: vec![id as f32] },
+        recon: vec![id as f32],
+        weight: 1.0,
+        efficiency: 1.0,
+        ratio: 32.0,
+    }
+}
+
+/// One round's store/edge accounting in the `bench scale` table.
+struct ScaleRow {
+    arrivals: usize,
+    occ_max: usize,
+    res_now: usize,
+    res_peak: usize,
+    spilled: usize,
+    spill_b: usize,
+}
+
+/// Drive `rounds` disjoint cohorts of `cohort` clients through a
+/// [`ClientStore`] + [`EdgeAggregator`] pair — materialize, write a
+/// deterministic EF, push an upload, drain, release. No training, no
+/// clock: the numbers are a pure function of the knobs.
+fn run_scale(
+    n_clients: usize,
+    cohort: usize,
+    n_shards: usize,
+    rounds: usize,
+    n_params: usize,
+    lazy: bool,
+    seed: u64,
+) -> (ClientStore, Vec<ScaleRow>, Vec<f64>) {
+    let parts: Vec<Vec<u32>> = (0..n_clients).map(|i| vec![i as u32]).collect();
+    let root = scenario_rng(seed);
+    let mut store = ClientStore::new(parts, n_params, &root, lazy, SpillKind::Slab);
+    let mut edge = EdgeAggregator::new(n_shards);
+    let mut rows = Vec::with_capacity(rounds);
+    let mut last_weights = Vec::new();
+    for r in 0..rounds {
+        let ids: Vec<usize> = (r * cohort..(r + 1) * cohort).collect();
+        for &id in &ids {
+            let c = store.client(id);
+            c.ef = scale_ef(id, n_params);
+            c.rounds_participated += 1;
+            edge.push(scale_upload(id, r));
+        }
+        let occ_max = edge.occupancy().into_iter().max().unwrap_or(0);
+        last_weights = edge.weight_totals();
+        let batch = edge.drain_ordered();
+        for &id in &ids {
+            store.release(id);
+        }
+        rows.push(ScaleRow {
+            arrivals: batch.len(),
+            occ_max,
+            res_now: store.resident_count(),
+            res_peak: store.peak_resident(),
+            spilled: store.spilled_count(),
+            spill_b: store.spilled_bytes(),
+        });
+    }
+    (store, rows, last_weights)
+}
+
+fn bench_scale(args: &Args) -> Result<String> {
+    let n_clients = args.get_usize("clients", 100_000)?;
+    let cohort = args.get_usize("cohort", 64)?;
+    let n_shards = args.get_usize("shards", 8)?;
+    let rounds = args.get_usize("rounds", 5)?;
+    let n_params = args.get_usize("params", 32)?;
+    let seed = args.get_u64("seed", 17)?;
+    if cohort == 0 || n_shards == 0 || rounds == 0 || n_params == 0 {
+        bail!("bench scale needs cohort, shards, rounds and params all >= 1");
+    }
+    if n_clients < cohort * rounds {
+        bail!(
+            "bench scale walks disjoint cohorts: needs clients >= cohort*rounds, \
+             got {n_clients} < {}",
+            cohort * rounds
+        );
+    }
+
+    let (store, rows, last_weights) =
+        run_scale(n_clients, cohort, n_shards, rounds, n_params, true, seed);
+
+    let mut out = String::new();
+    out.push_str("fed3sfc bench scale — sharded edge aggregation with lazy client state\n");
+    out.push_str(&format!(
+        "fleet {n_clients}, cohort {cohort}, shards {n_shards}, rounds {rounds}, \
+         P={n_params}, spill slab, seed {seed}\n\n"
+    ));
+    out.push_str(&format!(
+        "{:>5}  {:>8}  {:>7}  {:>7}  {:>8}  {:>7}  {:>8}\n",
+        "round", "arrivals", "occ_max", "res_now", "res_peak", "spilled", "spill_B"
+    ));
+    for (r, row) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "{:>5}  {:>8}  {:>7}  {:>7}  {:>8}  {:>7}  {:>8}\n",
+            r, row.arrivals, row.occ_max, row.res_now, row.res_peak, row.spilled,
+            row.spill_b
+        ));
+    }
+    out.push_str(&format!(
+        "\nshard weight partials, last round pre-drain: {last_weights:?}\n"
+    ));
+
+    // Bitwise K-invariance: the same arrival stream drained through 1,
+    // 2, 7 and `n_shards` shards must come back in the identical order
+    // (it is the *reduction order* — the whole trajectory contract).
+    let mut flat: Option<Vec<(usize, usize)>> = None;
+    let mut invariant = true;
+    for k in [1usize, 2, 7, n_shards] {
+        let mut e = EdgeAggregator::new(k);
+        let mut got = Vec::new();
+        for r in 0..rounds {
+            for id in r * cohort..(r + 1) * cohort {
+                e.push(scale_upload(id, r));
+            }
+            got.extend(e.drain_ordered().into_iter().map(|u| (u.client, u.round)));
+        }
+        match &flat {
+            None => flat = Some(got),
+            Some(f) => invariant &= *f == got,
+        }
+    }
+    out.push_str(&format!(
+        "drain order invariant across shards {{1,2,7,{n_shards}}}: {}\n",
+        if invariant { "yes" } else { "NO" }
+    ));
+
+    // Spill round-trip: every participant's restored EF must equal the
+    // deterministic pattern bit-for-bit.
+    let participants = rounds * cohort;
+    let exact = (0..participants)
+        .filter(|&id| {
+            let want: Vec<u32> =
+                scale_ef(id, n_params).iter().map(|x| x.to_bits()).collect();
+            let got: Vec<u32> = store.ef_of(id).iter().map(|x| x.to_bits()).collect();
+            want == got
+        })
+        .count();
+    out.push_str(&format!(
+        "spill round-trip: {exact}/{participants} EF vectors bit-exact\n"
+    ));
+
+    // Eager contrast: lazy off keeps everyone resident, spills nothing,
+    // and holds the same EF bits.
+    let (eager, _, _) =
+        run_scale(n_clients, cohort, n_shards, rounds, n_params, false, seed);
+    let ef_equal = (0..participants)
+        .filter(|&id| {
+            store.ef_of(id).iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+                == eager.ef_of(id).iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        })
+        .count();
+    out.push_str(&format!(
+        "eager contrast (lazy_state=false): resident {}, spilled {} B, \
+         EF bit-equal {ef_equal}/{participants}\n",
+        eager.resident_count(),
+        eager.spilled_bytes()
+    ));
+
+    if args.has_flag("measure") {
+        // Wall-clock + RSS are machine-local, so they live behind the
+        // flag and stay out of the snapshot golden.
+        let t = time_it(0, 1, || {
+            let _ = run_scale(n_clients, cohort, n_shards, rounds, n_params, true, seed);
+        });
+        let secs = t.median() / 1e3;
+        let rps = if secs > 0.0 { rounds as f64 / secs } else { f64::INFINITY };
+        out.push_str(&format!(
+            "peak RSS: {}  ({rps:.0} rounds/s over {rounds} rounds)\n",
+            fmt_bytes_opt(peak_rss_bytes())
+        ));
+    } else {
+        out.push_str("peak RSS: - (pass --measure for wall-clock rounds/s and VmHWM)\n");
+    }
+    Ok(out)
 }
 
 /// Numeric field of one JSONL record; `None` for JSON `null` (the NaN

@@ -22,6 +22,7 @@ pub mod fedsynth;
 pub mod identity;
 pub mod payload;
 pub mod signsgd;
+pub mod spill;
 pub mod stc;
 pub mod threesfc;
 pub mod topk;
@@ -33,6 +34,7 @@ pub use fedsynth::FedSynth;
 pub use identity::Identity;
 pub use payload::Payload;
 pub use signsgd::SignSgd;
+pub use spill::{restore, spill, SpilledEf};
 pub use stc::Stc;
 pub use threesfc::ThreeSfc;
 pub use topk::TopK;

@@ -1,0 +1,141 @@
+//! EF-residual spill codec for the lazy client store
+//! ([`crate::coordinator::ClientStore`]).
+//!
+//! Between participations a lazy store evicts each client's dense
+//! error-feedback vector and keeps only a compact slab, keyed by client
+//! index. The codec must be **bit-exact**: EF memory feeds straight
+//! back into the compressor's input (Eq. 6), so a single flipped bit in
+//! a restored residual would fork the trajectory and break the store's
+//! `lazy_state = false` ≡ `lazy_state = true` equivalence contract
+//! (pinned by `tests/shard_test.rs`).
+//!
+//! Two slab encodings, selected by `[scale] spill`:
+//!
+//! * [`SpillKind::Boxed`] — the f32 vector moved off the hot path as-is
+//!   (4 bytes/param, zero transcoding);
+//! * [`SpillKind::Slab`] — the vector run through the dense wire codec
+//!   ([`crate::compress::Payload::Dense`] `serialize`/`deserialize`):
+//!   flat little-endian f32 bytes, the same machinery the uplink uses,
+//!   so the spill format is exercised by the payload property suite.
+//!
+//! Both are lossless by construction; on top of either, an **all-zero
+//! EF is elided entirely** ([`SpilledEf::Zero`]) — the common case for
+//! clients that never accumulated error (EF disabled, or a compressor
+//! with zero residual). Zero-detection compares *bit patterns*
+//! (`to_bits() == 0`), not values: `-0.0 == 0.0` numerically, but
+//! restoring `-0.0` as `+0.0` would not be bit-exact.
+
+use crate::compress::Payload;
+use crate::config::SpillKind;
+
+/// A client's EF residual in its evicted (spilled) form.
+#[derive(Clone, Debug)]
+pub enum SpilledEf {
+    /// All `n_params` coordinates are bit-pattern `+0.0` — nothing
+    /// stored; restore synthesizes the zero vector.
+    Zero,
+    /// The exact f32 vector, boxed off the resident path.
+    Boxed(Vec<f32>),
+    /// Dense-payload wire bytes (flat little-endian f32).
+    Slab(Vec<u8>),
+}
+
+impl SpilledEf {
+    /// Heap bytes this spilled residual occupies (the store's memory
+    /// accounting; 0 for an elided zero vector).
+    pub fn spilled_bytes(&self) -> usize {
+        match self {
+            SpilledEf::Zero => 0,
+            SpilledEf::Boxed(v) => 4 * v.len(),
+            SpilledEf::Slab(b) => b.len(),
+        }
+    }
+}
+
+/// Encode an EF vector into its spill form.
+pub fn spill(ef: &[f32], kind: SpillKind) -> SpilledEf {
+    if ef.iter().all(|x| x.to_bits() == 0) {
+        return SpilledEf::Zero;
+    }
+    match kind {
+        SpillKind::Boxed => SpilledEf::Boxed(ef.to_vec()),
+        SpillKind::Slab => {
+            SpilledEf::Slab(Payload::Dense { g: ef.to_vec() }.serialize())
+        }
+    }
+}
+
+/// Decode a spill back to the dense EF vector. Bit-exact inverse of
+/// [`spill`] for every f32 bit pattern (±0, subnormals, NaN payloads).
+pub fn restore(spilled: &SpilledEf, n_params: usize) -> Vec<f32> {
+    match spilled {
+        SpilledEf::Zero => vec![0.0f32; n_params],
+        SpilledEf::Boxed(v) => {
+            debug_assert_eq!(v.len(), n_params, "boxed spill length drifted");
+            v.clone()
+        }
+        SpilledEf::Slab(bytes) => {
+            let p = Payload::deserialize("dense", bytes, n_params, 0, 0)
+                .expect("slab spill is store-internal and framed at encode time");
+            match p {
+                Payload::Dense { g } => g,
+                _ => unreachable!("'dense' deserializes to Payload::Dense"),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact_for_hostile_patterns() {
+        // Negative zero, subnormals, and a payload-carrying NaN all
+        // survive both encodings bit-for-bit.
+        let ef = vec![
+            1.5f32,
+            -0.0,
+            f32::from_bits(1),          // smallest subnormal
+            f32::from_bits(0x7FC0_1234), // NaN with payload bits
+            -3.25e-38,
+            0.0,
+        ];
+        for kind in [SpillKind::Boxed, SpillKind::Slab] {
+            let s = spill(&ef, kind);
+            let back = restore(&s, ef.len());
+            assert_eq!(bits(&back), bits(&ef), "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn all_zero_ef_is_elided() {
+        let ef = vec![0.0f32; 64];
+        for kind in [SpillKind::Boxed, SpillKind::Slab] {
+            let s = spill(&ef, kind);
+            assert!(matches!(s, SpilledEf::Zero), "{}", kind.name());
+            assert_eq!(s.spilled_bytes(), 0);
+            assert_eq!(restore(&s, 64), ef);
+        }
+    }
+
+    #[test]
+    fn negative_zero_defeats_elision() {
+        // -0.0 == 0.0 numerically but its bit pattern must survive.
+        let ef = vec![0.0f32, -0.0, 0.0];
+        let s = spill(&ef, SpillKind::Slab);
+        assert!(!matches!(s, SpilledEf::Zero));
+        assert_eq!(bits(&restore(&s, 3)), bits(&ef));
+    }
+
+    #[test]
+    fn spilled_bytes_accounts_for_the_slab() {
+        let ef = vec![1.0f32; 10];
+        assert_eq!(spill(&ef, SpillKind::Boxed).spilled_bytes(), 40);
+        assert_eq!(spill(&ef, SpillKind::Slab).spilled_bytes(), 40);
+    }
+}

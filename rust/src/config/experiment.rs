@@ -376,6 +376,35 @@ impl DownlinkKind {
     }
 }
 
+/// How a lazy client store encodes an evicted client's EF residual
+/// (`[scale] spill` / `--spill`; see `compress::spill`). Both encodings
+/// are bit-exact — the knob trades transcoding work against slab layout.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SpillKind {
+    /// The f32 vector moved off the resident path as-is.
+    Boxed,
+    /// Dense-payload byte slab (flat little-endian f32 through the wire
+    /// codec; default).
+    Slab,
+}
+
+impl SpillKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "boxed" | "box" => SpillKind::Boxed,
+            "slab" | "bytes" => SpillKind::Slab,
+            _ => bail!("unknown spill encoding '{s}' (want boxed|slab)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpillKind::Boxed => "boxed",
+            SpillKind::Slab => "slab",
+        }
+    }
+}
+
 /// Full experiment description. Defaults mirror the paper's §6.1 settings
 /// (lr=0.01, K=5, λ=0, EF on) at the scaled-down workload sizes of DESIGN §3.
 #[derive(Clone, Debug)]
@@ -520,6 +549,17 @@ pub struct ExperimentConfig {
     pub reliability_alpha: f64,
     /// Quarantine trigger threshold on the loss EWMA, in (0, 1].
     pub reliability_threshold: f64,
+    /// Edge-aggregator shard count (`[scale] n_shards` / `--n-shards`):
+    /// uploads buffer per shard (`client % n_shards`) and drain in exact
+    /// global arrival order — any value is bit-identical to 1.
+    pub n_shards: usize,
+    /// Lazy client state (`[scale] lazy_state` / `--lazy-state`): evict
+    /// each client after participation, spilling its EF residual, so
+    /// resident dense state is `O(cohort)` instead of `O(n_clients)`.
+    /// Trajectories are bit-identical either way.
+    pub lazy_state: bool,
+    /// EF spill slab encoding for the lazy store (`[scale] spill`).
+    pub spill: SpillKind,
 }
 
 impl Default for ExperimentConfig {
@@ -592,6 +632,9 @@ impl Default for ExperimentConfig {
             quarantine_rounds: 3,
             reliability_alpha: 0.3,
             reliability_threshold: 0.5,
+            n_shards: 1,
+            lazy_state: false,
+            spill: SpillKind::Slab,
         }
     }
 }
@@ -778,6 +821,9 @@ impl ExperimentConfig {
                 self.reliability_threshold
             );
         }
+        if self.n_shards == 0 {
+            bail!("scale n_shards must be >= 1");
+        }
         Ok(())
     }
 
@@ -873,6 +919,9 @@ impl ExperimentConfig {
                 }
                 "defense.ewma_alpha" => self.reliability_alpha = v.as_f64()?,
                 "defense.threshold" => self.reliability_threshold = v.as_f64()?,
+                "n_shards" | "scale.n_shards" => self.n_shards = v.as_i64()? as usize,
+                "lazy_state" | "scale.lazy_state" => self.lazy_state = v.as_bool()?,
+                "spill" | "scale.spill" => self.spill = SpillKind::parse(v.as_str()?)?,
                 other => bail!("unknown config key '{other}'"),
             }
         }
@@ -1240,6 +1289,43 @@ mod tests {
         ] {
             assert_eq!(DownlinkKind::parse(kind.name()).unwrap(), kind);
         }
+    }
+
+    #[test]
+    fn scale_toml_table() {
+        // Defaults: unsharded, eager, slab spill — the historical path.
+        let cfg = ExperimentConfig::default();
+        assert_eq!(cfg.n_shards, 1);
+        assert!(!cfg.lazy_state);
+        assert_eq!(cfg.spill, SpillKind::Slab);
+        let cfg = ExperimentConfig::from_toml_str(
+            r#"
+            [scale]
+            n_shards = 8
+            lazy_state = true
+            spill = "boxed"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.n_shards, 8);
+        assert!(cfg.lazy_state);
+        assert_eq!(cfg.spill, SpillKind::Boxed);
+        // Bare keys (CLI-style flat configs) and every alias.
+        let cfg =
+            ExperimentConfig::from_toml_str("n_shards = 4\nlazy_state = true\nspill = \"bytes\"\n")
+                .unwrap();
+        assert_eq!(cfg.n_shards, 4);
+        assert!(cfg.lazy_state);
+        assert_eq!(cfg.spill, SpillKind::Slab);
+        for kind in [SpillKind::Boxed, SpillKind::Slab] {
+            assert_eq!(SpillKind::parse(kind.name()).unwrap(), kind);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_scale_values() {
+        assert!(ExperimentConfig::from_toml_str("[scale]\nn_shards = 0").is_err());
+        assert!(ExperimentConfig::from_toml_str("[scale]\nspill = \"gzip\"").is_err());
     }
 
     #[test]

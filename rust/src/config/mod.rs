@@ -7,5 +7,6 @@ pub mod toml;
 pub use experiment::{
     AggregatorKind, BackendKind, CompressorKind, DatasetKind, DownlinkKind,
     ExperimentConfig, NetworkKind, ScheduleKind, ServerOptKind, SessionKind,
+    SpillKind,
 };
 pub use toml::{parse_toml, TomlValue};

@@ -1,4 +1,12 @@
 //! Per-client state: local data sampler, error-feedback memory, RNG.
+//!
+//! Lifecycle note: experiments never hold a dense `Vec<ClientState>` —
+//! states are materialized on demand by the
+//! [`crate::coordinator::ClientStore`] (and, under `[scale]
+//! lazy_state`, spilled back out between participations). Construction
+//! here must therefore be a pure function of `(id, indices, n_params,
+//! root_rng)`: [`Rng::split`] is deterministic, so a client built at
+//! round 400 is bit-identical to one built at round 0.
 
 use crate::data::{ClientSampler, Dataset};
 use crate::util::rng::{stream, Rng};

@@ -17,6 +17,13 @@
 //! all state — in particular their error-feedback memory — untouched
 //! until their next participation.
 //!
+//! Scale: per-client state lives in a [`ClientStore`]
+//! (`coordinator::shard`) that materializes a client only when it is
+//! dispatched — construction never allocates `n_clients` dense EF
+//! vectors, and with `[scale] lazy_state = true` each client is evicted
+//! (EF spilled to a compact slab) right after its upload is submitted,
+//! so the driver holds `O(cohort)` dense vectors at any instant.
+//!
 //! Determinism: batches are sampled sequentially in dispatch order,
 //! per-client work fans out into dispatch-order slots (see
 //! [`crate::coordinator::parallel`]), and state write-back happens in
@@ -35,6 +42,7 @@ use crate::compress::{self, Compressor, DownlinkTx};
 use crate::config::{
     AggregatorKind, BackendKind, CompressorKind, DatasetKind, DownlinkKind,
     ExperimentConfig, NetworkKind, ScheduleKind, ServerOptKind, SessionKind,
+    SpillKind,
 };
 use crate::coordinator::fedserver::{Directive, FedServer};
 use crate::coordinator::opt::build_server_opt;
@@ -43,7 +51,7 @@ use crate::coordinator::policy::build_policy;
 use crate::coordinator::protocol::{Broadcast, ClientMsg, Upload};
 use crate::coordinator::robust::build_aggregator;
 use crate::coordinator::schedule::build_scheduler;
-use crate::coordinator::{ClientState, MetricsSink, Server, Traffic};
+use crate::coordinator::{ClientStore, MetricsSink, Server, Traffic};
 use crate::data::{dirichlet_partition, Dataset};
 use crate::runtime::{Backend, FedOps, RuntimeStats};
 use crate::simnet::{load_trace, ByzantineMode, FaultLayer};
@@ -101,7 +109,9 @@ pub struct Experiment<'a> {
     /// The event-driven server (global model, scheduler, aggregation
     /// policy, virtual clock, traffic accounting).
     pub fed: FedServer,
-    pub clients: Vec<ClientState>,
+    /// Per-client state, materialized on demand (and — under `[scale]
+    /// lazy_state` — evicted to spill slabs between participations).
+    pub clients: ClientStore,
     pub compressor: Box<dyn Compressor>,
     pub train: Dataset,
     pub test: Dataset,
@@ -150,11 +160,11 @@ impl<'a> Experiment<'a> {
         let test = Dataset::generate_split(cfg.dataset, cfg.test_samples, cfg.seed, 1);
         let mut part_rng = root.split(stream::PARTITION);
         let parts = dirichlet_partition(&train, cfg.n_clients, cfg.alpha, &mut part_rng);
-        let clients: Vec<ClientState> = parts
-            .into_iter()
-            .enumerate()
-            .map(|(i, idxs)| ClientState::new(i, idxs, model.params, &root))
-            .collect();
+        // No ClientState is built here: the store materializes each
+        // client on first dispatch (Rng::split is pure, so late
+        // construction is bit-identical to the old eager loop).
+        let clients =
+            ClientStore::new(parts, model.params, &root, cfg.lazy_state, cfg.spill);
 
         let w0 = match &cfg.init_weights {
             Some(w) => {
@@ -183,7 +193,7 @@ impl<'a> Experiment<'a> {
         let faults =
             FaultLayer::new(&cfg.faults_config(), cfg.n_clients, root.split(stream::FAULTS));
         faults.scale_links(&mut links);
-        let active: Vec<bool> = clients.iter().map(|c| c.n_samples > 0).collect();
+        let active: Vec<bool> = clients.active_mask();
         let mut fed = FedServer::with_faults(
             server,
             scheduler,
@@ -194,8 +204,10 @@ impl<'a> Experiment<'a> {
             faults,
         );
         // Both defense hooks are draw-free, so installing them here
-        // leaves every RNG stream's draw order untouched.
+        // leaves every RNG stream's draw order untouched — and so is
+        // re-sharding the (still empty) edge-aggregation tree.
         fed.set_aggregator(build_aggregator(&cfg));
+        fed.set_shards(cfg.n_shards);
         if !cfg.fault_trace.is_empty() {
             fed.faults_mut().set_trace(load_trace(&cfg.fault_trace)?);
         }
@@ -338,7 +350,7 @@ impl<'a> Experiment<'a> {
         // Arc so the classic path still clones nothing.
         let mut jobs: Vec<(Arc<Vec<f32>>, ClientJob)> = Vec::with_capacity(bcasts.len());
         for (slot, bc) in bcasts.iter().enumerate() {
-            let client = &mut self.clients[bc.client];
+            let client = self.clients.client(bc.client);
             let (xs, ys) = client.sample_round(&self.train, k, b);
             // Clone (don't take) the EF memory: if the batch errors out
             // mid-flight the client must keep its accumulated error, not
@@ -373,7 +385,7 @@ impl<'a> Experiment<'a> {
 
         for u in updates {
             let bc = &bcasts[u.slot];
-            let client = &mut self.clients[bc.client];
+            let client = self.clients.client(bc.client);
             if self.cfg.error_feedback {
                 client.ef = u.ef;
             }
@@ -390,6 +402,10 @@ impl<'a> Experiment<'a> {
                 efficiency: u.efficiency,
                 ratio: u.ratio,
             }))?;
+            // Participation over: a lazy store evicts the client here
+            // (EF spilled bit-exactly), bounding resident dense state
+            // to this dispatch batch.
+            self.clients.release(bc.client);
         }
         Ok(())
     }
@@ -813,6 +829,29 @@ impl ExperimentBuilder {
     pub fn reliability_ewma(mut self, alpha: f64, threshold: f64) -> Self {
         self.cfg.reliability_alpha = alpha;
         self.cfg.reliability_threshold = threshold;
+        self
+    }
+
+    /// Edge-aggregator shard count (`[scale] n_shards`): uploads buffer
+    /// per shard (`client % n_shards`) and drain in exact global arrival
+    /// order, so any value is bit-identical to the unsharded path.
+    pub fn n_shards(mut self, n: usize) -> Self {
+        self.cfg.n_shards = n;
+        self
+    }
+
+    /// Lazy client state (`[scale] lazy_state`): evict each client after
+    /// participation, spilling its EF residual to a compact slab —
+    /// resident dense state becomes `O(cohort)`, trajectories unchanged.
+    pub fn lazy_state(mut self, on: bool) -> Self {
+        self.cfg.lazy_state = on;
+        self
+    }
+
+    /// EF spill slab encoding (`[scale] spill`): boxed f32 vectors or
+    /// dense-payload byte slabs (both bit-exact).
+    pub fn spill(mut self, kind: SpillKind) -> Self {
+        self.cfg.spill = kind;
         self
     }
 

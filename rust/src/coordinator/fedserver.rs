@@ -23,6 +23,14 @@
 //! the experiment seed, and `Synchronous` sessions reproduce the classic
 //! blocking round loop exactly (aggregation in ascending-client order,
 //! staleness multiplier exactly 1).
+//!
+//! Scale: arrived uploads buffer in an [`EdgeAggregator`] — per-shard
+//! queues (`client % n_shards`) whose drain merges back to exact global
+//! arrival order, so `[scale] n_shards = K` is bit-identical to the
+//! single-queue path for every `K` (see `coordinator::shard`). The
+//! server itself holds `O(pending)` uploads plus one exact partial-sum
+//! per live shard, never anything proportional to `n_clients` beyond
+//! the per-client link/flag vectors.
 
 use std::collections::VecDeque;
 
@@ -35,6 +43,7 @@ use crate::coordinator::protocol::{
 };
 use crate::coordinator::robust::{RobustAggregator, WeightedMean};
 use crate::coordinator::schedule::ClientScheduler;
+use crate::coordinator::shard::EdgeAggregator;
 use crate::coordinator::{Server, Traffic};
 use crate::simnet::{ClientLink, FaultLayer, SimClock, SimEvent};
 
@@ -111,8 +120,9 @@ pub struct FedServer {
     /// (guards against duplicate submissions).
     uploading: Vec<bool>,
     in_flight: usize,
-    /// Arrived uploads awaiting aggregation, in arrival order.
-    pending: Vec<Upload>,
+    /// Arrived uploads awaiting aggregation, buffered per shard with
+    /// global arrival stamps (drains in exact arrival order).
+    edge: EdgeAggregator,
     outbox: VecDeque<Directive>,
     /// A broadcast cycle is in progress (async sessions leave their
     /// first cycle open forever).
@@ -190,7 +200,7 @@ impl FedServer {
             busy: vec![false; n_clients],
             uploading: vec![false; n_clients],
             in_flight: 0,
-            pending: Vec::new(),
+            edge: EdgeAggregator::new(1),
             outbox: VecDeque::new(),
             cycle_open: false,
             cycle_id: 0,
@@ -224,7 +234,30 @@ impl FedServer {
 
     /// Uploads arrived but not yet aggregated.
     pub fn pending(&self) -> usize {
-        self.pending.len()
+        self.edge.len()
+    }
+
+    /// Shard count of the edge-aggregation tree (1 = unsharded root).
+    pub fn n_shards(&self) -> usize {
+        self.edge.n_shards()
+    }
+
+    /// Re-shard the edge tree (`[scale] n_shards`). Call before the
+    /// first upload arrives — the tree refuses to re-route buffered
+    /// uploads. Any value is bit-identical to `n_shards = 1` (drain
+    /// order is global arrival order by construction).
+    pub fn set_shards(&mut self, n_shards: usize) {
+        self.edge.set_shards(n_shards);
+    }
+
+    /// Current per-shard queue depths (edge-tier diagnostics).
+    pub fn shard_occupancy(&self) -> Vec<usize> {
+        self.edge.occupancy()
+    }
+
+    /// Lifetime upload arrivals per shard (survives drains).
+    pub fn shard_arrivals(&self) -> Vec<u64> {
+        self.edge.arrivals()
     }
 
     /// Uploads the fault layer declared lost so far.
@@ -446,7 +479,7 @@ impl FedServer {
 
     fn ctx(&self) -> PolicyCtx {
         PolicyCtx {
-            pending: self.pending.len(),
+            pending: self.edge.len(),
             in_flight: self.in_flight,
             cohort: self.cohort,
         }
@@ -526,7 +559,7 @@ impl FedServer {
                 self.in_flight -= 1;
                 self.scheduler.observe(c, self.server.round, false);
                 self.traffic.record_upload(up.payload.wire_bytes());
-                self.pending.push(up);
+                self.edge.push(up);
                 let redispatch = self.policy.redispatch();
                 if self.policy.ready(AggTrigger::Upload, &self.ctx()) {
                     // Aggregate first: a re-dispatched client must train
@@ -567,7 +600,9 @@ impl FedServer {
     fn step(&mut self) {
         let at = self.clock.now();
         let round_before = self.server.round;
-        let mut batch = std::mem::take(&mut self.pending);
+        // Drain the edge tree in global arrival order — the canonical
+        // reduction order, identical for every shard count.
+        let mut batch = self.edge.drain_ordered();
         if self.policy.selection_order() {
             // Synchronous contract: aggregate in ascending-client order
             // regardless of arrival order (the whole cohort shares one

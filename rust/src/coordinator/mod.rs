@@ -37,7 +37,13 @@
 //!   (`[faults] byzantine_frac`);
 //! * a [`crate::simnet::NetworkModel`] plus `[network] jitter` derive
 //!   per-client links; every envelope's delivery time comes from them,
-//!   and each [`RoundRecord`] carries the step's virtual-time cost.
+//!   and each [`RoundRecord`] carries the step's virtual-time cost;
+//! * the `[scale]` table ([`shard`]) makes million-client federations
+//!   tractable: a [`ClientStore`] materializes per-client state only
+//!   while a client is in a cohort (EF residuals spilled to compact
+//!   slabs between participations), and an [`EdgeAggregator`] buffers
+//!   uploads per shard with an arrival-order-preserving drain — both
+//!   bit-identical to the dense/unsharded path by construction.
 //!
 //! [`FedServer`] ([`fedserver`]) owns the event loop and hands compute
 //! back to its driver as [`fedserver::Directive`]s; [`Experiment`] is
@@ -65,6 +71,7 @@ pub mod protocol;
 pub mod robust;
 pub mod schedule;
 pub mod server;
+pub mod shard;
 pub mod traffic;
 
 pub use client::ClientState;
@@ -87,4 +94,5 @@ pub use schedule::{
     UniformSampler,
 };
 pub use server::Server;
+pub use shard::{ClientStore, EdgeAggregator};
 pub use traffic::Traffic;

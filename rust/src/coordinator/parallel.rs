@@ -25,6 +25,13 @@
 //!
 //! Work distribution is a shared queue (`Mutex<Receiver>`), so stragglers
 //! (3SFC's S-step encoder dominates, Eq. 9) never idle the other workers.
+//!
+//! Because a [`ClientJob`] already carries *owned* EF memory and RNG
+//! (snapshots moved in, results moved back out), the pool is oblivious
+//! to where that state lives between rounds — the lazy
+//! [`crate::coordinator::ClientStore`] materializes it just before job
+//! construction and spills it right after the update lands, with no
+//! change to the worker protocol.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};

@@ -37,6 +37,14 @@
 //! trigger. The staleness multiplier folds into the per-client weight
 //! *before* the estimator runs, so a robust aggregate discounts stale
 //! contributions exactly as the historical weighted mean did.
+//!
+//! Scale note (`[scale]`, [`crate::coordinator::shard`]): no policy
+//! ever sees the full fleet — triggers consume the buffered-upload
+//! count and the pending batch, both `O(cohort)`. With `lazy_state`
+//! the streaming cohort path keeps only the dispatched clients' dense
+//! state plus one exact partial-sum per live shard resident, so a
+//! policy's memory footprint is bounded by its *own* barrier/buffer
+//! size even at `n_clients ~ 10⁶`.
 
 use crate::config::{ExperimentConfig, SessionKind};
 

@@ -21,6 +21,12 @@
 //! broadcasts ([`Broadcast::w`]) — caches of the wire decode, not side
 //! channels.
 //!
+//! Scale note: [`Upload::client`] doubles as the shard routing key —
+//! the server's edge tier ([`crate::coordinator::EdgeAggregator`])
+//! buffers envelopes per `client % n_shards` and drains them in global
+//! arrival order, so the envelope format needs no shard field and the
+//! wire bytes are identical for every shard count.
+//!
 //! Threat-model note: envelope *integrity* faults (doomed transfers,
 //! outage windows — `simnet::faults`) attack whether a message arrives;
 //! byzantine *content* faults attack what it says. The latter are

@@ -21,7 +21,11 @@
 //! observed per-client upload losses (fed by `FedServer` from the same
 //! signals behind `lost_uploads()`/`recovered_clients()`) that
 //! quarantines chronically failing clients for `quarantine_rounds`
-//! selection rounds before re-admitting them.
+//! selection rounds before re-admitting them. Quarantine composes with
+//! the lazy [`crate::coordinator::ClientStore`]: a quarantined client's
+//! spilled EF slab sits untouched for however long the gate holds it
+//! out, and re-admission restores it bit-exactly (pinned by
+//! `tests/shard_test.rs`).
 
 use crate::config::{ExperimentConfig, ScheduleKind};
 use crate::util::rng::{stream, Rng};

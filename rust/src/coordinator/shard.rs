@@ -1,0 +1,547 @@
+//! Million-client scale: lazy client state + sharded edge aggregation.
+//!
+//! Two pieces, both wired so that every scale knob degenerates to the
+//! historical path **bitwise** (the same contract [`WeightedMean`]
+//! honors in `robust.rs`):
+//!
+//! * [`ClientStore`] — owns all per-client state but materializes a
+//!   dense [`ClientState`] (EF memory, sampler, RNG) only when a client
+//!   is actually in a cohort. With `[scale] lazy_state = true` the
+//!   store evicts a client after each participation, spilling its EF
+//!   residual to a compact slab (`compress::spill`), so resident state
+//!   is `O(cohort)` instead of `O(n_clients)`. With `lazy_state =
+//!   false` materialized clients simply stay resident — but
+//!   construction is *always* on-demand, so building an experiment
+//!   never allocates `n_clients` dense EF vectors up front.
+//!
+//!   Lazy materialization is sound because [`crate::util::rng::Rng::split`]
+//!   is a pure function of the root seed and the stream tag: client `i`
+//!   built at round 40 is bit-identical to client `i` built at round 0.
+//!
+//! * [`EdgeAggregator`] — a two-level aggregation tree: uploads land in
+//!   per-shard buffers (shard = `client_index % n_shards`, the fixed
+//!   deterministic assignment) and the root drains them in one pass per
+//!   step. Bitwise invariance across shard counts is achieved by
+//!   **order-preserving grouping**: every push is stamped with a global
+//!   arrival sequence number, and [`EdgeAggregator::drain_ordered`]
+//!   merges the shard queues by minimum sequence — exactly
+//!   reconstructing flat arrival order, so the (non-associative) f32
+//!   reduction happens once at the root in a canonical order and
+//!   `shards = 1` vs `K` trajectories are bit-identical by
+//!   construction. Per-shard partial sums are kept only in exact
+//!   arithmetic (f64 weight totals, integer arrival counts) as
+//!   edge-tier diagnostics.
+//!
+//! The allocation contract — nothing on the shard path scales with
+//! `n_clients` except the store's own index-keyed slabs — is pinned by
+//! a targeted test in `tests/shard_test.rs` (a 10⁶-client store must
+//! stay `O(cohort)` resident).
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::compress::spill::{restore, spill, SpilledEf};
+use crate::config::SpillKind;
+use crate::coordinator::client::ClientState;
+use crate::coordinator::protocol::Upload;
+use crate::data::ClientSampler;
+use crate::util::rng::Rng;
+
+/// A client's state between participations: everything a re-admission
+/// needs to resume bit-identically, with the dense EF vector replaced
+/// by its spill slab.
+///
+/// The sampler travels **by value**: [`ClientSampler::new`] shuffles
+/// its index set at construction, so rebuilding it from the partition
+/// would re-draw the shuffle and fork the trajectory.
+#[derive(Clone, Debug)]
+struct SpilledClient {
+    sampler: ClientSampler,
+    rng: Rng,
+    ef: SpilledEf,
+    n_samples: usize,
+    rounds_participated: usize,
+    last_version: Option<usize>,
+}
+
+/// Lazy, index-keyed store of per-client federation state.
+pub struct ClientStore {
+    n_params: usize,
+    /// Experiment root RNG (cloned at construction): `split` is pure,
+    /// so late materialization draws the same per-client streams the
+    /// eager constructor would have.
+    root: Rng,
+    lazy: bool,
+    spill_kind: SpillKind,
+    /// Partition slots, taken on first materialization (`None` after).
+    parts: Vec<Option<Vec<u32>>>,
+    /// `|D_i|` per client — needed for the active mask and aggregation
+    /// weights without materializing anyone (4 bytes/client).
+    n_samples: Vec<u32>,
+    /// Materialized clients, keyed by index. `BTreeMap`, not `HashMap`:
+    /// deterministic iteration order (detlint DET002).
+    resident: BTreeMap<usize, ClientState>,
+    /// Evicted clients' compact state (lazy mode only).
+    spilled: BTreeMap<usize, SpilledClient>,
+    peak_resident: usize,
+    spill_events: u64,
+}
+
+impl ClientStore {
+    /// Build a store over a data partition. No [`ClientState`] is
+    /// constructed here — `parts` and the sample counts are the only
+    /// `O(n_clients)` allocations, and they are the partition itself.
+    pub fn new(
+        parts: Vec<Vec<u32>>,
+        n_params: usize,
+        root: &Rng,
+        lazy: bool,
+        spill_kind: SpillKind,
+    ) -> ClientStore {
+        let n_samples: Vec<u32> = parts.iter().map(|p| p.len() as u32).collect();
+        ClientStore {
+            n_params,
+            root: root.clone(),
+            lazy,
+            spill_kind,
+            parts: parts.into_iter().map(Some).collect(),
+            n_samples,
+            resident: BTreeMap::new(),
+            spilled: BTreeMap::new(),
+            peak_resident: 0,
+            spill_events: 0,
+        }
+    }
+
+    /// Total clients (materialized or not).
+    pub fn len(&self) -> usize {
+        self.parts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.parts.is_empty()
+    }
+
+    /// Whether released clients are evicted and spilled.
+    pub fn is_lazy(&self) -> bool {
+        self.lazy
+    }
+
+    /// `|D_i|` without materializing client `id`.
+    pub fn n_samples(&self, id: usize) -> usize {
+        self.n_samples[id] as usize
+    }
+
+    /// Per-client has-data mask (what the server's dispatch filter
+    /// consumes) — computable for a million clients without building
+    /// one of them.
+    pub fn active_mask(&self) -> Vec<bool> {
+        self.n_samples.iter().map(|&n| n > 0).collect()
+    }
+
+    /// Materialize (or fetch) client `id` for participation. First
+    /// touch constructs the state from the partition slot; a re-touch
+    /// after a lazy eviction restores the spilled EF bit-exactly.
+    pub fn client(&mut self, id: usize) -> &mut ClientState {
+        if !self.resident.contains_key(&id) {
+            let state = if let Some(s) = self.spilled.remove(&id) {
+                ClientState {
+                    id,
+                    sampler: s.sampler,
+                    ef: restore(&s.ef, self.n_params),
+                    rng: s.rng,
+                    n_samples: s.n_samples,
+                    rounds_participated: s.rounds_participated,
+                    last_version: s.last_version,
+                }
+            } else {
+                let indices = self.parts[id]
+                    .take()
+                    .expect("client slot taken but neither resident nor spilled");
+                ClientState::new(id, indices, self.n_params, &self.root)
+            };
+            self.resident.insert(id, state);
+            self.peak_resident = self.peak_resident.max(self.resident.len());
+        }
+        self.resident.get_mut(&id).expect("just inserted")
+    }
+
+    /// Participation over: in lazy mode, evict `id` and spill its EF;
+    /// otherwise a no-op (the client stays resident, matching the
+    /// historical dense-vector semantics exactly).
+    pub fn release(&mut self, id: usize) {
+        if !self.lazy {
+            return;
+        }
+        if let Some(c) = self.resident.remove(&id) {
+            self.spill_events += 1;
+            self.spilled.insert(
+                id,
+                SpilledClient {
+                    sampler: c.sampler,
+                    rng: c.rng,
+                    ef: spill(&c.ef, self.spill_kind),
+                    n_samples: c.n_samples,
+                    rounds_participated: c.rounds_participated,
+                    last_version: c.last_version,
+                },
+            );
+        }
+    }
+
+    /// Currently materialized clients.
+    pub fn resident_count(&self) -> usize {
+        self.resident.len()
+    }
+
+    /// High-water mark of simultaneous residents — the store's
+    /// `O(cohort)` claim, as a measured number.
+    pub fn peak_resident(&self) -> usize {
+        self.peak_resident
+    }
+
+    /// Clients currently evicted to spill slabs.
+    pub fn spilled_count(&self) -> usize {
+        self.spilled.len()
+    }
+
+    /// Total evictions performed (a client re-admitted and re-released
+    /// counts twice).
+    pub fn spill_events(&self) -> u64 {
+        self.spill_events
+    }
+
+    /// Heap bytes held by spill slabs (zero-elided residuals are free).
+    pub fn spilled_bytes(&self) -> usize {
+        self.spilled.values().map(|s| s.ef.spilled_bytes()).sum()
+    }
+
+    /// Client `id`'s EF residual wherever it lives: resident vector,
+    /// spill slab, or — for a never-materialized client — the all-zero
+    /// vector a fresh [`ClientState`] would carry.
+    pub fn ef_of(&self, id: usize) -> Vec<f32> {
+        if let Some(c) = self.resident.get(&id) {
+            c.ef.clone()
+        } else if let Some(s) = self.spilled.get(&id) {
+            restore(&s.ef, self.n_params)
+        } else {
+            vec![0.0f32; self.n_params]
+        }
+    }
+
+    /// All EF residuals, densified (tests/diagnostics — this is the one
+    /// deliberately `O(n_clients · n_params)` accessor; never on the
+    /// training path).
+    pub fn ef_snapshots(&self) -> Vec<Vec<f32>> {
+        (0..self.len()).map(|id| self.ef_of(id)).collect()
+    }
+
+    /// Rounds client `id` has participated in (0 if never materialized).
+    pub fn rounds_participated(&self, id: usize) -> usize {
+        if let Some(c) = self.resident.get(&id) {
+            c.rounds_participated
+        } else if let Some(s) = self.spilled.get(&id) {
+            s.rounds_participated
+        } else {
+            0
+        }
+    }
+
+    /// Per-client participation counts (partial-participation stats).
+    pub fn participation_counts(&self) -> Vec<usize> {
+        (0..self.len()).map(|id| self.rounds_participated(id)).collect()
+    }
+}
+
+/// One edge tier's buffer: a seq-stamped queue (always in increasing
+/// sequence order — pushes are monotone) plus exact-arithmetic partial
+/// aggregates.
+#[derive(Debug, Default)]
+struct ShardBuffer {
+    queue: VecDeque<(u64, Upload)>,
+    /// Σ upload weights since the last drain — f64, so the edge-tier
+    /// pre-combine is exact and shard count can never perturb it.
+    weight_total: f64,
+    /// Lifetime arrivals routed to this shard.
+    arrivals: u64,
+}
+
+/// Two-level aggregation tree: per-shard upload buffers pre-grouped at
+/// the edge, drained by the root in global arrival order.
+pub struct EdgeAggregator {
+    n_shards: usize,
+    /// Global arrival stamp — the canonical reduction order.
+    next_seq: u64,
+    shards: Vec<ShardBuffer>,
+}
+
+impl EdgeAggregator {
+    /// `n_shards = 1` is the degenerate single-queue path (today's
+    /// behavior, bitwise).
+    pub fn new(n_shards: usize) -> EdgeAggregator {
+        assert!(n_shards >= 1, "at least one shard");
+        EdgeAggregator {
+            n_shards,
+            next_seq: 0,
+            shards: (0..n_shards).map(|_| ShardBuffer::default()).collect(),
+        }
+    }
+
+    /// Re-shard an *empty* tree (call before any upload arrives —
+    /// re-routing buffered uploads would be an ordering hazard).
+    pub fn set_shards(&mut self, n_shards: usize) {
+        assert!(n_shards >= 1, "at least one shard");
+        assert!(
+            self.is_empty() && self.next_seq == 0,
+            "re-sharding a live aggregation tree"
+        );
+        self.n_shards = n_shards;
+        self.shards = (0..n_shards).map(|_| ShardBuffer::default()).collect();
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    /// Route one upload to its shard (`client % n_shards`), stamped
+    /// with the global arrival sequence.
+    pub fn push(&mut self, up: Upload) {
+        let shard = up.client % self.n_shards;
+        let buf = &mut self.shards[shard];
+        buf.weight_total += up.weight as f64;
+        buf.arrivals += 1;
+        buf.queue.push_back((self.next_seq, up));
+        self.next_seq += 1;
+    }
+
+    /// Buffered uploads across all shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.queue.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.iter().all(|s| s.queue.is_empty())
+    }
+
+    /// Current queue depth per shard (edge-tier diagnostics).
+    pub fn occupancy(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.queue.len()).collect()
+    }
+
+    /// Lifetime arrivals per shard.
+    pub fn arrivals(&self) -> Vec<u64> {
+        self.shards.iter().map(|s| s.arrivals).collect()
+    }
+
+    /// Exact pre-combined upload weight per shard since the last drain.
+    pub fn weight_totals(&self) -> Vec<f64> {
+        self.shards.iter().map(|s| s.weight_total).collect()
+    }
+
+    /// Drain every shard, merging by minimum sequence stamp — the
+    /// result is exactly the flat arrival order, independent of
+    /// `n_shards`. Resets the per-shard weight partial sums.
+    pub fn drain_ordered(&mut self) -> Vec<Upload> {
+        let total = self.len();
+        let mut out = Vec::with_capacity(total);
+        // Each queue is internally seq-sorted, so a K-way merge on the
+        // fronts reconstructs the global order. K is small (shard
+        // count), so the linear front-scan beats a heap here.
+        for _ in 0..total {
+            let winner = self
+                .shards
+                .iter()
+                .enumerate()
+                .filter_map(|(i, s)| s.queue.front().map(|(seq, _)| (*seq, i)))
+                .min()
+                .map(|(_, i)| i)
+                .expect("len() said an upload remains");
+            let (_, up) = self.shards[winner].queue.pop_front().expect("front just seen");
+            out.push(up);
+        }
+        for s in &mut self.shards {
+            s.weight_total = 0.0;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Payload;
+
+    fn up(client: usize, round: usize, weight: f32) -> Upload {
+        Upload {
+            client,
+            round,
+            sent_at: 0.0,
+            payload: Payload::Dense { g: vec![client as f32] },
+            recon: vec![client as f32],
+            weight,
+            efficiency: 1.0,
+            ratio: 1.0,
+        }
+    }
+
+    #[test]
+    fn drain_order_is_arrival_order_for_any_shard_count() {
+        // An adversarial arrival order (not sorted by client, with
+        // repeats) must come back verbatim for every shard count.
+        let arrivals = [7usize, 2, 9, 0, 7, 13, 1, 6, 5, 14, 3, 2];
+        let flat: Vec<usize> = {
+            let mut e = EdgeAggregator::new(1);
+            for (r, &c) in arrivals.iter().enumerate() {
+                e.push(up(c, r, 1.0));
+            }
+            e.drain_ordered().iter().map(|u| u.client).collect()
+        };
+        assert_eq!(flat, arrivals.to_vec());
+        for k in [2usize, 3, 7, 16] {
+            let mut e = EdgeAggregator::new(k);
+            for (r, &c) in arrivals.iter().enumerate() {
+                e.push(up(c, r, 1.0));
+            }
+            let rounds: Vec<usize> =
+                e.shards.iter().flat_map(|s| s.queue.iter().map(|(_, u)| u.round)).collect();
+            // Sanity: the shards really did split the stream.
+            assert_eq!(rounds.len(), arrivals.len());
+            let drained: Vec<usize> = e.drain_ordered().iter().map(|u| u.client).collect();
+            assert_eq!(drained, flat, "shards = {k}");
+            assert!(e.is_empty());
+        }
+    }
+
+    #[test]
+    fn shard_assignment_is_client_mod_k() {
+        let mut e = EdgeAggregator::new(4);
+        for c in 0..10 {
+            e.push(up(c, 0, 1.0));
+        }
+        assert_eq!(e.occupancy(), vec![3, 3, 2, 2]);
+        assert_eq!(e.arrivals(), vec![3, 3, 2, 2]);
+        assert_eq!(e.len(), 10);
+    }
+
+    #[test]
+    fn weight_partials_are_exact_and_reset_on_drain() {
+        let mut e = EdgeAggregator::new(2);
+        e.push(up(0, 0, 1.5));
+        e.push(up(1, 0, 2.0));
+        e.push(up(2, 0, 0.25));
+        assert_eq!(e.weight_totals(), vec![1.75, 2.0]);
+        e.drain_ordered();
+        assert_eq!(e.weight_totals(), vec![0.0, 0.0]);
+        assert_eq!(e.arrivals(), vec![2, 1], "arrivals are lifetime counters");
+    }
+
+    #[test]
+    fn reshard_requires_an_untouched_tree() {
+        let mut e = EdgeAggregator::new(1);
+        e.set_shards(8);
+        assert_eq!(e.n_shards(), 8);
+        e.push(up(3, 0, 1.0));
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            e.set_shards(2);
+        }));
+        assert!(r.is_err(), "re-sharding a live tree must panic");
+    }
+
+    fn store(n: usize, lazy: bool) -> ClientStore {
+        // detlint: allow(DET003) -- test-local root seed.
+        let root = Rng::new(7);
+        let parts: Vec<Vec<u32>> = (0..n).map(|i| vec![i as u32]).collect();
+        ClientStore::new(parts, 4, &root, lazy, SpillKind::Slab)
+    }
+
+    #[test]
+    fn lazy_materialization_matches_eager_construction() {
+        // Same root, same client id, materialized in different orders →
+        // identical sampler shuffles, RNG streams, and zero EF.
+        let mut a = store(6, false);
+        let mut b = store(6, true);
+        // a touches 0..6 in order; b in reverse.
+        for id in 0..6 {
+            a.client(id);
+        }
+        for id in (0..6).rev() {
+            let cb = b.client(id);
+            assert_eq!(cb.n_samples, 1);
+        }
+        for id in 0..6 {
+            let ra = a.client(id).rng.clone();
+            let rb = b.client(id).rng.clone();
+            // Drive both clones: identical draw sequences.
+            let mut ra = ra;
+            let mut rb = rb;
+            for _ in 0..8 {
+                assert_eq!(ra.next_u64(), rb.next_u64(), "client {id}");
+            }
+            assert_eq!(a.ef_of(id), b.ef_of(id));
+        }
+    }
+
+    #[test]
+    fn release_spills_and_readmission_restores_bitwise() {
+        let mut s = store(3, true);
+        {
+            let c = s.client(1);
+            c.ef = vec![1.0, -0.0, f32::from_bits(0x7FC0_0001), 2.5];
+            c.rounds_participated = 3;
+            c.last_version = Some(9);
+        }
+        s.release(1);
+        assert_eq!(s.resident_count(), 0);
+        assert_eq!(s.spilled_count(), 1);
+        assert_eq!(s.spill_events(), 1);
+        assert!(s.spilled_bytes() > 0);
+        // Readable without re-materializing…
+        let ef = s.ef_of(1);
+        assert_eq!(ef[1].to_bits(), (-0.0f32).to_bits());
+        assert_eq!(s.rounds_participated(1), 3);
+        // …and re-admission restores everything bit-for-bit.
+        let c = s.client(1);
+        assert_eq!(c.ef.iter().map(|x| x.to_bits()).collect::<Vec<_>>(), vec![
+            1.0f32.to_bits(),
+            (-0.0f32).to_bits(),
+            0x7FC0_0001,
+            2.5f32.to_bits(),
+        ]);
+        assert_eq!(c.rounds_participated, 3);
+        assert_eq!(c.last_version, Some(9));
+        assert_eq!(s.spilled_count(), 0);
+    }
+
+    #[test]
+    fn eager_store_never_evicts() {
+        let mut s = store(3, false);
+        s.client(0);
+        s.release(0);
+        assert_eq!(s.resident_count(), 1, "release is a no-op when not lazy");
+        assert_eq!(s.spill_events(), 0);
+    }
+
+    #[test]
+    fn peak_resident_tracks_the_high_water_mark() {
+        let mut s = store(8, true);
+        for id in 0..4 {
+            s.client(id);
+        }
+        for id in 0..4 {
+            s.release(id);
+        }
+        for id in 4..6 {
+            s.client(id);
+        }
+        assert_eq!(s.resident_count(), 2);
+        assert_eq!(s.peak_resident(), 4);
+        assert_eq!(s.spilled_count(), 4);
+    }
+
+    #[test]
+    fn zero_ef_spills_for_free() {
+        let mut s = store(2, true);
+        s.client(0);
+        s.release(0);
+        assert_eq!(s.spilled_bytes(), 0, "an untouched (all-zero) EF is elided");
+    }
+}

@@ -18,6 +18,7 @@ use fed3sfc::cli::Args;
 use fed3sfc::config::{
     AggregatorKind, BackendKind, CompressorKind, DatasetKind, DownlinkKind,
     ExperimentConfig, NetworkKind, ScheduleKind, ServerOptKind, SessionKind,
+    SpillKind,
 };
 use fed3sfc::coordinator::experiment::Experiment;
 use fed3sfc::data::{dirichlet_partition, Dataset};
@@ -88,6 +89,12 @@ run options:
   --quarantine-rounds N  rounds a quarantined client sits out (default 3)
   --reliability-alpha F  dropout EWMA smoothing factor in (0,1]
   --reliability-threshold F  EWMA level that triggers quarantine
+  --n-shards N           edge-aggregator shards (default 1; trajectories
+                         are bit-identical for every N)
+  --lazy-state           spill per-client EF state between participations
+                         (resident memory O(cohort), not O(clients))
+  --spill NAME           boxed|slab spilled-EF representation (default
+                         slab = compact wire-format bytes)
   --backend NAME         auto|pjrt|native (default auto: PJRT when the
                          artifact dir exists, else the pure-Rust native
                          backend; FED3SFC_BACKEND overrides auto)
@@ -99,6 +106,8 @@ bench scenarios (deterministic stdout, pinned by snapshot tests):
   bench tiers            device-class fate table [--clients --seed --tiers
                          --tier-spread --tier-compute-s --dropout-p]
   bench new [--out PATH] emit a ready-to-run [faults]+[defense] TOML preset
+  bench scale            million-client shard/spill accounting [--clients
+                         --cohort --shards --rounds --params --measure]
 
 report options: --metrics PATH   (JSONL written by run --metrics)
 partition-viz options: --dataset --clients --alpha --samples --seed
@@ -114,7 +123,10 @@ fn main() {
 }
 
 fn dispatch(argv: Vec<String>) -> Result<()> {
-    let args = Args::parse(argv, &["no-ef", "help", "verbose", "faults", "reliability"])?;
+    let args = Args::parse(
+        argv,
+        &["no-ef", "help", "verbose", "faults", "reliability", "lazy-state", "measure"],
+    )?;
     if args.has_flag("help") || args.subcommand.is_empty() {
         print!("{USAGE}");
         return Ok(());
@@ -236,6 +248,13 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     cfg.reliability_alpha = args.get_f64("reliability-alpha", cfg.reliability_alpha)?;
     cfg.reliability_threshold =
         args.get_f64("reliability-threshold", cfg.reliability_threshold)?;
+    cfg.n_shards = args.get_usize("n-shards", cfg.n_shards)?;
+    if args.has_flag("lazy-state") {
+        cfg.lazy_state = true;
+    }
+    if let Some(v) = args.get("spill") {
+        cfg.spill = SpillKind::parse(v)?;
+    }
     cfg.threads = args.get_usize("threads", cfg.threads)?;
     if let Some(v) = args.get("backend") {
         cfg.backend = BackendKind::parse(v)?;

@@ -60,11 +60,11 @@ fn run_both(
         .build(&native)
         .unwrap();
     let recs_n = exp_n.run().unwrap();
-    let efs_n: Vec<Vec<f32>> = exp_n.clients.iter().map(|c| c.ef.clone()).collect();
+    let efs_n: Vec<Vec<f32>> = exp_n.clients.ef_snapshots();
 
     let mut exp_p = builder(method).initial_weights(w0).build(pjrt).unwrap();
     let recs_p = exp_p.run().unwrap();
-    let efs_p: Vec<Vec<f32>> = exp_p.clients.iter().map(|c| c.ef.clone()).collect();
+    let efs_p: Vec<Vec<f32>> = exp_p.clients.ef_snapshots();
     (recs_n, recs_p, efs_n, efs_p)
 }
 

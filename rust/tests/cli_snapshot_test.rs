@@ -49,6 +49,13 @@ fn bench_new_emits_the_faults_preset() {
 }
 
 #[test]
+fn bench_scale_pins_the_shard_and_spill_accounting() {
+    // No --measure: the wall-clock/RSS line renders its deterministic
+    // sentinel form, so the golden stays byte-stable across machines.
+    assert_cli_snapshot("bench_scale", &["bench", "scale"]);
+}
+
+#[test]
 fn report_renders_nan_sentinels_as_dashes() {
     assert_cli_snapshot("report_demo", &["report", "--metrics", "tests/fixtures/report_demo.jsonl"]);
 }

@@ -122,7 +122,7 @@ fn run_full(cfg: ExperimentConfig) -> (Vec<RoundRecord>, Vec<f32>, Vec<Vec<f32>>
     let be = common::native();
     let mut exp = Experiment::new(cfg, &be).unwrap();
     let recs = exp.run().unwrap();
-    let efs = exp.clients.iter().map(|c| c.ef.clone()).collect();
+    let efs = exp.clients.ef_snapshots();
     (recs, exp.fed.server.w.clone(), efs)
 }
 

@@ -42,7 +42,7 @@ fn cfg(method: CompressorKind, threads: usize) -> ExperimentConfig {
 fn run_on(cfg: ExperimentConfig, backend: &dyn Backend) -> (Vec<RoundRecord>, Vec<Vec<f32>>) {
     let mut exp = Experiment::new(cfg, backend).unwrap();
     let recs = exp.run().unwrap();
-    let efs = exp.clients.iter().map(|c| c.ef.clone()).collect();
+    let efs = exp.clients.ef_snapshots();
     (recs, efs)
 }
 

@@ -68,7 +68,7 @@ fn round_robin_covers_every_client_e2e() {
     seen.extend(exp.last_selected.iter().copied());
     seen.sort_unstable();
     assert_eq!(seen, vec![0, 1, 2, 3]);
-    assert!(exp.clients.iter().all(|c| c.rounds_participated == 1));
+    assert!(exp.clients.participation_counts().iter().all(|&r| r == 1));
 }
 
 #[test]
@@ -82,13 +82,14 @@ fn skipped_clients_keep_error_feedback_untouched() {
     let mut pending_nonzero_ef: Vec<bool> = vec![false; n];
     let mut consumed_after_skip = 0usize;
     for _ in 0..20 {
-        let before: Vec<Vec<f32>> = exp.clients.iter().map(|c| c.ef.clone()).collect();
+        let before: Vec<Vec<f32>> = exp.clients.ef_snapshots();
         exp.run_round().unwrap();
         for id in 0..n {
             let selected = exp.last_selected.contains(&id);
             if !selected {
                 assert_eq!(
-                    exp.clients[id].ef, before[id],
+                    exp.clients.ef_of(id),
+                    before[id],
                     "client {id}: EF mutated while skipped"
                 );
                 if before[id].iter().any(|&v| v != 0.0) {
@@ -97,7 +98,7 @@ fn skipped_clients_keep_error_feedback_untouched() {
             } else {
                 // EF update e ← target − ĝ ran; with a lossy compressor the
                 // memory is (generically) rewritten every participation.
-                if pending_nonzero_ef[id] && exp.clients[id].ef != before[id] {
+                if pending_nonzero_ef[id] && exp.clients.ef_of(id) != before[id] {
                     consumed_after_skip += 1;
                     pending_nonzero_ef[id] = false;
                 }

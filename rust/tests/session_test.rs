@@ -169,10 +169,11 @@ fn check_golden(method: CompressorKind, threads: usize) {
     for (i, (a, b)) in exp.fed.server.w.iter().zip(legacy.weights.iter()).enumerate() {
         assert_eq!(a.to_bits(), b.to_bits(), "w[{i}] (threads={threads})");
     }
-    // Per-client error-feedback state bit-identical.
-    for (ci, (a, b)) in exp.clients.iter().zip(legacy.efs.iter()).enumerate() {
-        assert_eq!(a.ef.len(), b.len(), "client {ci}");
-        for (i, (x, y)) in a.ef.iter().zip(b.iter()).enumerate() {
+    // Per-client error-feedback state bit-identical (densified through
+    // the store, wherever each client's EF currently lives).
+    for (ci, (a, b)) in exp.clients.ef_snapshots().iter().zip(legacy.efs.iter()).enumerate() {
+        assert_eq!(a.len(), b.len(), "client {ci}");
+        for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
             assert_eq!(x.to_bits(), y.to_bits(), "client {ci} ef[{i}]");
         }
     }
@@ -259,7 +260,7 @@ fn run_records(cfg: ExperimentConfig) -> (Vec<RoundRecord>, Vec<Vec<f32>>) {
     let be = common::native();
     let mut exp = Experiment::new(cfg, &be).unwrap();
     let recs = exp.run().unwrap();
-    let efs = exp.clients.iter().map(|c| c.ef.clone()).collect();
+    let efs = exp.clients.ef_snapshots();
     (recs, efs)
 }
 
@@ -355,9 +356,10 @@ fn async_partial_schedule_fixes_the_inflight_set() {
     assert!(recs.iter().all(|r| r.n_selected == 2));
     // …but only the 3 clients of the initial cohort (⌈0.5·6⌉) ever
     // train; everyone else sits outside the in-flight set.
-    let participants = exp.clients.iter().filter(|c| c.rounds_participated > 0).count();
+    let counts = exp.clients.participation_counts();
+    let participants = counts.iter().filter(|&&r| r > 0).count();
     assert_eq!(participants, 3, "exactly the initial cohort participates");
-    let dispatched: usize = exp.clients.iter().map(|c| c.rounds_participated).sum();
+    let dispatched: usize = counts.iter().sum();
     // Every aggregated upload came from a dispatch (stragglers may still
     // be in flight at the end, so dispatches ≥ aggregations).
     let aggregated: usize = recs.iter().map(|r| r.n_selected).sum();

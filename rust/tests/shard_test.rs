@@ -1,0 +1,289 @@
+//! `[scale]` subsystem acceptance tests: lazy client store, EF spill,
+//! and the sharded edge-aggregation tree, end to end through
+//! [`Experiment`] on the native backend.
+//!
+//! The contract pinned here:
+//!
+//! * spill → restore is bit-exact for arbitrary f32 bit patterns, in
+//!   both slab encodings;
+//! * `shards ∈ {1, 2, 7}` × `lazy_state ∈ {false, true}` × `threads ∈
+//!   {1, 4}` all reproduce the `shards = 1, lazy_state = false,
+//!   threads = 1` trajectory **bit-for-bit** in all three session
+//!   modes — records, final weights, and every client's EF residual;
+//! * a quarantined client's spilled EF survives the quarantine and its
+//!   re-admission resumes bit-identically to an eager run;
+//! * a million-client store stays `O(cohort)` resident — nothing on
+//!   the shard path allocates dense per-client state up front.
+
+mod common;
+
+use fed3sfc::compress::{restore, spill, Payload};
+use fed3sfc::config::{
+    CompressorKind, DatasetKind, ExperimentConfig, NetworkKind, SessionKind, SpillKind,
+};
+use fed3sfc::coordinator::{ClientStore, EdgeAggregator, Experiment, RoundRecord, Upload};
+use fed3sfc::util::rng::Rng;
+
+fn assert_records_bit_identical(a: &[RoundRecord], b: &[RoundRecord], tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}");
+    for (x, y) in a.iter().zip(b.iter()) {
+        assert_eq!(x.round, y.round, "{tag}");
+        assert_eq!(x.n_selected, y.n_selected, "{tag} round {}", x.round);
+        assert_eq!(x.test_acc.to_bits(), y.test_acc.to_bits(), "{tag} round {}", x.round);
+        assert_eq!(x.test_loss.to_bits(), y.test_loss.to_bits(), "{tag} round {}", x.round);
+        assert_eq!(x.up_bytes_cum, y.up_bytes_cum, "{tag} round {}", x.round);
+        assert_eq!(x.down_bytes_cum, y.down_bytes_cum, "{tag} round {}", x.round);
+        assert_eq!(x.efficiency.to_bits(), y.efficiency.to_bits(), "{tag} round {}", x.round);
+        assert_eq!(x.sim_time_s.to_bits(), y.sim_time_s.to_bits(), "{tag} round {}", x.round);
+        assert_eq!(x.stale_mean.to_bits(), y.stale_mean.to_bits(), "{tag} round {}", x.round);
+    }
+}
+
+fn ef_bits(efs: &[Vec<f32>]) -> Vec<Vec<u32>> {
+    efs.iter().map(|ef| ef.iter().map(|x| x.to_bits()).collect()).collect()
+}
+
+// ---------------------------------------------------------------------
+// Spill codec properties.
+
+#[test]
+fn spill_roundtrip_is_bit_exact_for_random_bit_patterns() {
+    // Raw RNG words reinterpreted as f32 cover NaN payloads, infinities,
+    // subnormals and both zeros; every one must come back bit-for-bit.
+    let mut rng = Rng::new(0xE0F);
+    for len in [1usize, 7, 64, 1000] {
+        for kind in [SpillKind::Boxed, SpillKind::Slab] {
+            let ef: Vec<f32> =
+                (0..len).map(|_| f32::from_bits(rng.next_u64() as u32)).collect();
+            let back = restore(&spill(&ef, kind), len);
+            assert_eq!(
+                ef_bits(&[back]),
+                ef_bits(&[ef]),
+                "len {len}, kind {}",
+                kind.name()
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Trajectory invariance: shards × lazy × threads, per session mode.
+
+fn scale_cfg(
+    session: SessionKind,
+    shards: usize,
+    lazy: bool,
+    threads: usize,
+) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig {
+        dataset: DatasetKind::SynthSmall,
+        compressor: CompressorKind::Dgc,
+        n_clients: 6,
+        rounds: 6,
+        k_local: 5,
+        lr: 0.05,
+        train_samples: 240,
+        test_samples: 50,
+        eval_every: 6,
+        seed: 42,
+        session,
+        threads,
+        n_shards: shards,
+        lazy_state: lazy,
+        ..ExperimentConfig::default()
+    };
+    match session {
+        SessionKind::Sync => {}
+        SessionKind::Deadline => {
+            // Slow jittered links so the deadline genuinely splits the
+            // cohort and stragglers carry over (the interesting case for
+            // a store that evicts between participations).
+            cfg.network = NetworkKind::Custom;
+            cfg.net_up_mbps = 0.1;
+            cfg.net_down_mbps = 1.0;
+            cfg.net_latency_ms = 1.0;
+            cfg.net_jitter = 0.5;
+            cfg.deadline_s = 0.08;
+            cfg.staleness_decay = 0.5;
+        }
+        SessionKind::Async => {
+            cfg.buffer_k = 2;
+            cfg.staleness_decay = 0.5;
+            cfg.net_jitter = 0.3;
+        }
+    }
+    cfg
+}
+
+/// (records, final weights, EF snapshots, store spill events).
+fn run_full(cfg: ExperimentConfig) -> (Vec<RoundRecord>, Vec<f32>, Vec<Vec<f32>>, u64) {
+    let be = common::native();
+    let mut exp = Experiment::new(cfg, &be).unwrap();
+    let recs = exp.run().unwrap();
+    let efs = exp.clients.ef_snapshots();
+    let spills = exp.clients.spill_events();
+    (recs, exp.fed.server.w.clone(), efs, spills)
+}
+
+fn check_session(session: SessionKind) {
+    let (base_recs, base_w, base_efs, _) = run_full(scale_cfg(session, 1, false, 1));
+    let base_w: Vec<u32> = base_w.iter().map(|x| x.to_bits()).collect();
+    let base_efs = ef_bits(&base_efs);
+    for (shards, lazy, threads) in
+        [(1usize, true, 1usize), (2, true, 1), (7, false, 1), (7, true, 4)]
+    {
+        let tag = format!("{session:?} shards={shards} lazy={lazy} threads={threads}");
+        let (recs, w, efs, spills) = run_full(scale_cfg(session, shards, lazy, threads));
+        assert_records_bit_identical(&base_recs, &recs, &tag);
+        let w: Vec<u32> = w.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(base_w, w, "{tag}: final weights");
+        assert_eq!(base_efs, ef_bits(&efs), "{tag}: EF residuals");
+        if lazy {
+            assert!(spills > 0, "{tag}: lazy run never actually spilled");
+        } else {
+            assert_eq!(spills, 0, "{tag}: eager run must never spill");
+        }
+    }
+}
+
+#[test]
+fn sync_trajectory_is_invariant_to_shards_lazy_and_threads() {
+    check_session(SessionKind::Sync);
+}
+
+#[test]
+fn deadline_trajectory_is_invariant_to_shards_lazy_and_threads() {
+    check_session(SessionKind::Deadline);
+}
+
+#[test]
+fn async_trajectory_is_invariant_to_shards_lazy_and_threads() {
+    check_session(SessionKind::Async);
+}
+
+#[test]
+fn config_shard_count_reaches_the_edge_tree() {
+    let be = common::native();
+    let exp = Experiment::new(scale_cfg(SessionKind::Sync, 7, true, 1), &be).unwrap();
+    assert_eq!(exp.fed.n_shards(), 7);
+    assert_eq!(exp.fed.shard_occupancy().len(), 7);
+    assert!(exp.clients.is_lazy());
+}
+
+// ---------------------------------------------------------------------
+// Quarantine × lazy state: the spilled EF outlives the gate.
+
+#[test]
+fn quarantined_clients_spilled_ef_survives_readmission() {
+    // Client 2 is down over [0, 1.2) virtual seconds: the reliability
+    // gate quarantines it for 2 rounds and re-admits it. In the lazy
+    // run its EF sits in a spill slab the whole time; the trajectory —
+    // including its post-re-admission uploads — must be bit-identical
+    // to the eager run that kept everything resident.
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("fed3sfc_shard_trace_{}.jsonl", std::process::id()));
+    std::fs::write(
+        &path,
+        "# client 2: one outage window over its first upload\n\
+         {\"client\": 2, \"down_at\": 0.0, \"up_at\": 1.2}\n",
+    )
+    .unwrap();
+    let mk = |lazy: bool| ExperimentConfig {
+        dataset: DatasetKind::SynthSmall,
+        compressor: CompressorKind::Dgc,
+        n_clients: 3,
+        rounds: 5,
+        k_local: 5,
+        lr: 0.05,
+        train_samples: 150,
+        test_samples: 50,
+        eval_every: 5,
+        seed: 11,
+        session: SessionKind::Deadline,
+        deadline_s: 5.0,
+        staleness_decay: 0.5,
+        faults: true,
+        fault_dropout_p: 1.0, // would doom everything — the trace replaces it
+        fault_trace: path.to_str().unwrap().to_string(),
+        reliability: true,
+        quarantine_rounds: 2,
+        reliability_alpha: 1.0,
+        reliability_threshold: 0.5,
+        n_shards: 2,
+        lazy_state: lazy,
+        ..ExperimentConfig::default()
+    };
+    let be = common::native();
+    let mut lazy = Experiment::new(mk(true), &be).unwrap();
+    let a = lazy.run().unwrap();
+    let mut eager = Experiment::new(mk(false), &be).unwrap();
+    let b = eager.run().unwrap();
+    std::fs::remove_file(&path).ok();
+
+    assert_records_bit_identical(&a, &b, "quarantine lazy vs eager");
+    assert_eq!(lazy.fed.quarantine_events(), 1);
+    assert_eq!(eager.fed.quarantine_events(), 1);
+    // The gate really did sideline client 2 and re-admit it.
+    assert_eq!(a[1].n_selected, 2, "round 1: client 2 quarantined");
+    assert_eq!(a[3].n_selected, 3, "round 3: client 2 re-admitted");
+    // Its EF residual — spilled across the quarantine in the lazy run —
+    // is bit-identical to the eager twin's.
+    assert_eq!(
+        ef_bits(&[lazy.clients.ef_of(2)]),
+        ef_bits(&[eager.clients.ef_of(2)]),
+        "client 2 EF must survive the quarantine bit-exactly"
+    );
+    assert!(lazy.clients.spill_events() > 0, "lazy run must actually spill");
+    assert_eq!(eager.clients.spill_events(), 0);
+}
+
+// ---------------------------------------------------------------------
+// The allocation contract at a million clients.
+
+#[test]
+fn million_client_store_stays_cohort_resident() {
+    let n = 1_000_000usize;
+    let parts: Vec<Vec<u32>> = (0..n).map(|i| vec![i as u32]).collect();
+    let root = Rng::new(99);
+    let mut store = ClientStore::new(parts, 16, &root, true, SpillKind::Slab);
+    assert_eq!(store.len(), n);
+    assert_eq!(store.resident_count(), 0, "construction materializes nobody");
+    assert_eq!(store.peak_resident(), 0);
+    assert_eq!(store.active_mask().len(), n);
+
+    // A cohort's worth of touches — spread across the whole index
+    // range — is all that ever goes dense.
+    let cohort: Vec<usize> = (0..64).map(|i| i * (n / 64)).collect();
+    for &id in &cohort {
+        assert_eq!(store.client(id).n_samples, 1);
+    }
+    assert_eq!(store.resident_count(), 64);
+    assert_eq!(store.peak_resident(), 64);
+    for &id in &cohort {
+        store.release(id);
+    }
+    assert_eq!(store.resident_count(), 0);
+    assert_eq!(store.spilled_count(), 64);
+    // Untouched (all-zero) EF residuals spill for free.
+    assert_eq!(store.spilled_bytes(), 0);
+
+    // The edge tier scales with shards + buffered uploads, never with
+    // the fleet: route one cohort through 8 shards.
+    let mut edge = EdgeAggregator::new(8);
+    for (r, &id) in cohort.iter().enumerate() {
+        edge.push(Upload {
+            client: id,
+            round: r,
+            sent_at: 0.0,
+            payload: Payload::Dense { g: vec![1.0] },
+            recon: vec![1.0],
+            weight: 1.0,
+            efficiency: 1.0,
+            ratio: 1.0,
+        });
+    }
+    assert_eq!(edge.len(), 64);
+    assert_eq!(edge.occupancy().iter().sum::<usize>(), 64);
+    let drained: Vec<usize> = edge.drain_ordered().iter().map(|u| u.client).collect();
+    assert_eq!(drained, cohort, "drain order is arrival order");
+}
